@@ -1,0 +1,78 @@
+"""Data-structure operation microbenchmarks (paper Section 4 claims).
+
+Measures add/delete/find cost per operation for all three engines as
+the number of live records grows — the empirical counterpart of the
+paper's complexity analysis — plus the device engine's kernel-path scan
+throughput (candidates x slots x PEs per second).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.scheduler import make_scheduler
+from repro.core.types import ARRequest, Policy
+
+
+def _drive(engine: str, n_pe: int, n_jobs: int, seed: int = 0,
+           **kwargs) -> Dict[str, float]:
+    rng = np.random.default_rng(seed)
+    s = make_scheduler(n_pe, engine=engine, **kwargs)
+    t_now = 0
+    active: List = []
+    t_find = t_add = t_del = 0.0
+    n_find = n_add = n_del = 0
+    max_records = 0
+    for _ in range(n_jobs):
+        t_now += int(rng.integers(0, 30))
+        for job in [j for j in active if j[1] <= t_now]:
+            t0 = time.perf_counter()
+            s.delete_allocation(job[0], job[1], job[2])
+            t_del += time.perf_counter() - t0
+            n_del += 1
+            active.remove(job)
+        du = int(rng.integers(60, 3600))
+        tr = t_now + int(rng.integers(0, 600))
+        req = ARRequest(t_a=t_now, t_r=tr, t_du=du,
+                        t_dl=tr + du + int(rng.integers(0, 3 * du)),
+                        n_pe=int(rng.integers(1, n_pe // 2)))
+        t0 = time.perf_counter()
+        alloc = s.find_allocation(req, Policy.PE_W, t_now=t_now)
+        t_find += time.perf_counter() - t0
+        n_find += 1
+        if alloc is not None:
+            pes = (set(alloc.pe_ids) if engine == "list"
+                   else list(alloc.pe_ids))
+            t0 = time.perf_counter()
+            s.add_allocation(alloc.t_s, alloc.t_e, pes)
+            t_add += time.perf_counter() - t0
+            n_add += 1
+            active.append((alloc.t_s, alloc.t_e, pes))
+        max_records = max(max_records, len(s.records()))
+    return {
+        "engine": engine,
+        "n_pe": n_pe,
+        "find_us": 1e6 * t_find / max(n_find, 1),
+        "add_us": 1e6 * t_add / max(n_add, 1),
+        "delete_us": 1e6 * t_del / max(n_del, 1),
+        "max_records": max_records,
+    }
+
+
+def op_costs(n_jobs: int = 400) -> List[Dict]:
+    rows = []
+    for engine, kw in (("list", {}), ("host", {}),
+                       ("device", {"capacity": 256}),
+                       ("device-kernel", {"capacity": 256,
+                                          "use_kernel": True})):
+        eng = "device" if engine.startswith("device") else engine
+        rows.append(_drive(eng, 1024, n_jobs, **kw))
+        rows[-1]["engine"] = engine
+    return rows
+
+
+def scaling_with_pe_count(n_jobs: int = 250) -> List[Dict]:
+    """Host engine op cost as the machine grows 256 -> 4096 PEs."""
+    return [_drive("host", n, n_jobs) for n in (256, 1024, 4096)]

@@ -1,0 +1,51 @@
+"""Paper Section 6 experiments: Figures 2-7.
+
+Three sweeps over the seven policies, each workload shared across
+policies exactly as the paper does.  ``n_jobs`` defaults to a reduced
+size for the benchmark harness; ``examples/reproduce_paper.py`` runs
+the full 10^4-job version with per-seed 95% CIs.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core.types import ALL_POLICIES
+from repro.sim import SimResult, WorkloadParams, generate, run_policies
+
+N_PE = 1024
+
+
+def _sweep(param_sets: List[Dict], n_jobs: int, seed: int
+           ) -> List[Dict]:
+    rows = []
+    for ps in param_sets:
+        jobs = generate(WorkloadParams(n_jobs=n_jobs, seed=seed,
+                                       **ps))
+        for r in run_policies(jobs, N_PE, ALL_POLICIES):
+            rows.append({**ps, "policy": r.policy,
+                         "acceptance": round(r.acceptance_rate, 4),
+                         "slowdown": round(r.avg_slowdown, 4),
+                         "util": round(r.utilization, 4),
+                         "sched_wall_s": round(r.wall_seconds, 3)})
+    return rows
+
+
+def umed_sweep(n_jobs: int = 2000, seed: int = 0) -> List[Dict]:
+    """Figures 2-3: acceptance/slowdown vs UMed in {5..9}."""
+    return _sweep([{"u_med": float(u)} for u in (5, 6, 7, 8, 9)],
+                  n_jobs, seed)
+
+
+def load_sweep(n_jobs: int = 2000, seed: int = 0) -> List[Dict]:
+    """Figures 4-5: acceptance/slowdown vs arrival factor."""
+    return _sweep(
+        [{"arrival_factor": f} for f in (0.5, 0.75, 1.0, 1.25, 1.5)],
+        n_jobs, seed)
+
+
+def flex_sweep(n_jobs: int = 2000, seed: int = 0) -> List[Dict]:
+    """Figures 6-7: acceptance/slowdown vs {artime, deadline} factor."""
+    return _sweep(
+        [{"artime_factor": float(f), "deadline_factor": float(f)}
+         for f in (1, 2, 3, 4, 5)],
+        n_jobs, seed)

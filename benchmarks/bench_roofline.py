@@ -1,0 +1,44 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads ``artifacts/dryrun/*__single.json`` and emits one row per
+(arch x shape): the three roofline terms, the dominant bottleneck, the
+6*N*D model FLOPs and the useful-compute ratio.  Rerun
+``python -m repro.launch.dryrun`` to refresh the artifacts.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List
+
+ART = Path("artifacts/dryrun")
+ART_OPT = Path("artifacts/dryrun_opt")
+
+
+def roofline_rows(mesh: str = "single", art: Path = None) -> List[Dict]:
+    rows = []
+    art = ART if art is None else art
+    if not art.exists():
+        return []
+    for path in sorted(art.glob(f"*__{mesh}.json")):
+        rec = json.loads(path.read_text())
+        if rec["status"] != "OK":
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "status": rec["status"]})
+            continue
+        r = rec["roofline"]
+        a = rec["analytic"]
+        rows.append({
+            "arch": rec["arch"],
+            "shape": rec["shape"],
+            "status": "OK",
+            "compute_s": f"{r['compute_s']:.3e}",
+            "memory_s": f"{r['memory_s']:.3e}",
+            "collective_s": f"{r['collective_s']:.3e}",
+            "dominant": r["dominant"],
+            "model_flops": f"{a['model_flops']:.3e}",
+            "useful_ratio": round(r["useful_ratio"], 3),
+            "fits_hbm": rec["memory"]["model_fits_16g_hbm"],
+            "compile_s": rec["compile_s"],
+        })
+    return rows

@@ -1,0 +1,70 @@
+"""Benchmark harness: one section per paper table/figure + roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+
+Prints CSV blocks: ``name,...columns`` per section.  ``--full`` uses
+the paper's 10^4-job workloads (slow); default is a reduced size that
+preserves every reported ordering.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _emit(name: str, rows) -> None:
+    print(f"\n== {name} ==")
+    if not rows:
+        print("(no rows)")
+        return
+    cols = list(rows[0].keys())
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(str(r.get(c, "")) for c in cols))
+    sys.stdout.flush()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale 10^4-job sweeps")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    n_jobs = 10_000 if args.full else 2_000
+    t0 = time.time()
+
+    from benchmarks import bench_datastructure, bench_policies
+    from benchmarks.bench_roofline import ART_OPT, roofline_rows
+
+    sections = {
+        "fig2_3_umed_sweep":
+            lambda: bench_policies.umed_sweep(n_jobs=n_jobs),
+        "fig4_5_load_sweep":
+            lambda: bench_policies.load_sweep(n_jobs=n_jobs),
+        "fig6_7_flex_sweep":
+            lambda: bench_policies.flex_sweep(n_jobs=n_jobs),
+        "datastructure_op_costs":
+            lambda: bench_datastructure.op_costs(
+                n_jobs=800 if args.full else 300),
+        "datastructure_pe_scaling":
+            lambda: bench_datastructure.scaling_with_pe_count(
+                n_jobs=400 if args.full else 200),
+        "roofline_single_pod":
+            lambda: roofline_rows("single"),
+        "roofline_multi_pod":
+            lambda: roofline_rows("multi"),
+        "roofline_optimized_single_pod":
+            lambda: roofline_rows("single", ART_OPT),
+    }
+    for name, fn in sections.items():
+        if args.only and args.only != name:
+            continue
+        t = time.time()
+        _emit(name, fn())
+        print(f"# {name}: {time.time()-t:.1f}s")
+    print(f"\n# total {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

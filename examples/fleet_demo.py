@@ -1,0 +1,90 @@
+"""Fleet demo: the paper's AR scheduler running a 512-chip TPU fleet.
+
+Submits a mixed stream of training/serving jobs over the assigned
+architectures, then injects the failure modes the runtime must absorb:
+chip failures (checkpoint-granular migration), stragglers (deadline-
+slack stretching), and elastic rescaling.
+
+    PYTHONPATH=src python examples/fleet_demo.py [--policy PE_W]
+"""
+from __future__ import annotations
+
+import argparse
+import random
+
+from repro.core import Policy
+from repro.runtime import FleetScheduler, JobState
+
+WORKLOAD = [
+    # (arch, shape, chips, steps)
+    ("kimi-k2-1t-a32b", "train_4k", 512, 200),
+    ("qwen3-4b", "train_4k", 256, 1500),
+    ("minitron-8b", "train_4k", 256, 800),
+    ("granite-moe-1b-a400m", "train_4k", 128, 3000),
+    ("stablelm-1.6b", "train_4k", 64, 2000),
+    ("starcoder2-7b", "prefill_32k", 128, 20_000),
+    ("llama-3.2-vision-11b", "decode_32k", 128, 50_000),
+    ("zamba2-7b", "long_500k", 64, 100_000),
+    ("xlstm-1.3b", "decode_32k", 32, 80_000),
+    ("seamless-m4t-medium", "decode_32k", 32, 60_000),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--policy", default="PE_W",
+                    choices=[p.value for p in Policy])
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    random.seed(args.seed)
+    fleet = FleetScheduler(n_chips=512, policy=Policy(args.policy))
+
+    print(f"=== submitting {len(WORKLOAD)} jobs "
+          f"(policy={args.policy}) ===")
+    jobs = []
+    for i, (arch, shape, chips, steps) in enumerate(WORKLOAD):
+        fleet.advance(fleet.now + random.randint(0, 300))
+        j = fleet.submit(arch, shape, chips, steps,
+                         deadline_slack=2.5)
+        jobs.append(j)
+        dur = j.t_end - j.t_start if j.t_start >= 0 else 0
+        print(f"  [{j.state.value:8s}] {arch:22s} {shape:12s} "
+              f"{chips:4d} chips  start={j.t_start:>7} "
+              f"dur={dur:>7}s")
+
+    running = [j for j in jobs if j.state != JobState.REJECTED]
+    print(f"\naccepted {len(running)}/{len(jobs)}; fleet utilisation "
+          f"(next 24h): {fleet.utilisation(86_400):.2f}")
+
+    print("\n=== fault injection ===")
+    victim = next(j for j in running if j.chips)
+    fleet.advance(max(fleet.now, victim.t_start) + 600)
+    chip = victim.chips[3]
+    migrated = fleet.fail_chip(chip)
+    print(f"chip {chip} failed at t={fleet.now}: migrated jobs "
+          f"{migrated} (victim preemptions={victim.preemptions})")
+
+    stragglers = [j for j in running
+                  if j.state in (JobState.RUNNING, JobState.RESERVED)]
+    if stragglers:
+        s = stragglers[-1]
+        ok = fleet.report_straggler(s.job_id, slowdown=1.4)
+        print(f"straggler {s.arch}: re-reserved within deadline "
+              f"slack -> {ok}")
+
+    big = [j for j in running if j.n_chips >= 256
+           and j.state in (JobState.RUNNING, JobState.RESERVED)]
+    if big:
+        b = big[-1]
+        ok = fleet.rescale(b.job_id, b.n_chips // 2)
+        print(f"elastic rescale {b.arch}: {b.n_chips * 2 if ok else b.n_chips}"
+              f" -> {b.n_chips} chips -> {ok}")
+
+    print(f"\nfinal states: {fleet.summary()}")
+    print(f"event log ({len(fleet.events)} events), last 8:")
+    for e in fleet.events[-8:]:
+        print(f"  t={e[0]:>7} {e[1]:14s} id={e[2]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Full reproduction of the paper's Section 6 experiments.
+
+    PYTHONPATH=src python examples/reproduce_paper.py [--n-jobs 10000]
+        [--seeds 3] [--sweep umed|load|flex|all]
+
+10^4 jobs per point with multi-seed 95% confidence intervals, as in the
+paper ("For each experiment, 10^4 jobs were submitted ... and we have
+obtained 95% confidence intervals").  Budget ~30-60 min for --sweep all
+at full size on one core; reduced sizes preserve the orderings.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from collections import defaultdict
+
+from repro.core.types import ALL_POLICIES
+from repro.sim import WorkloadParams, generate, mean_ci95, run_policies
+
+SWEEPS = {
+    "umed": [("u_med", float(v)) for v in (5, 6, 7, 8, 9)],
+    "load": [("arrival_factor", v) for v in (0.5, 0.75, 1.0, 1.25, 1.5)],
+    "flex": [("flex", float(v)) for v in (1, 2, 3, 4, 5)],
+}
+
+
+def run_sweep(name: str, n_jobs: int, seeds: int) -> None:
+    print(f"\n=== sweep: {name} (n_jobs={n_jobs}, {seeds} seeds) ===")
+    print(f"{'point':>8s} {'policy':8s} {'accept':>8s} {'±':>7s} "
+          f"{'slowdown':>9s} {'±':>7s}")
+    for key, value in SWEEPS[name]:
+        acc = defaultdict(list)
+        slow = defaultdict(list)
+        for seed in range(seeds):
+            kw = ({"artime_factor": value, "deadline_factor": value}
+                  if key == "flex" else {key: value})
+            jobs = generate(WorkloadParams(n_jobs=n_jobs, seed=seed,
+                                           **kw))
+            for r in run_policies(jobs, 1024, ALL_POLICIES):
+                acc[r.policy].append(r.acceptance_rate)
+                slow[r.policy].append(r.avg_slowdown)
+        for pol in ALL_POLICIES:
+            a, a_ci = mean_ci95(acc[pol.value])
+            s, s_ci = mean_ci95(slow[pol.value])
+            print(f"{value:>8} {pol.value:8s} {a:8.4f} {a_ci:7.4f} "
+                  f"{s:9.4f} {s_ci:7.4f}", flush=True)
+        best = max(acc, key=lambda p: sum(acc[p]) / len(acc[p]))
+        fastest = min(slow, key=lambda p: sum(slow[p]) / len(slow[p]))
+        print(f"         -> best acceptance: {best}, "
+              f"lowest slowdown: {fastest}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n-jobs", type=int, default=10_000)
+    ap.add_argument("--seeds", type=int, default=3)
+    ap.add_argument("--sweep", default="all",
+                    choices=["umed", "load", "flex", "all"])
+    args = ap.parse_args()
+    t0 = time.time()
+    names = list(SWEEPS) if args.sweep == "all" else [args.sweep]
+    for name in names:
+        run_sweep(name, args.n_jobs, args.seeds)
+    print(f"\ntotal {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Atomic async checkpointing."""
+from repro.checkpoint.manager import CheckpointManager  # noqa: F401

@@ -1,0 +1,19 @@
+"""Core library: the paper's advance-reservation scheduling technique.
+
+Three interchangeable engines implement the slot-based availability
+structure and the seven policies of the paper:
+
+* :mod:`repro.core.listsched`  — literal Python-set oracle (Section 4).
+* :mod:`repro.core.hostsched`  — vectorised numpy bitmask engine.
+* :mod:`repro.core.timeline` / :mod:`repro.core.search` — JAX device
+  engine (dense tensors, MXU contractions, optional Pallas kernel).
+"""
+from repro.core.types import (  # noqa: F401
+    ALL_POLICIES,
+    Allocation,
+    ARRequest,
+    Policy,
+    Rectangle,
+    T_INF,
+)
+from repro.core.scheduler import make_scheduler  # noqa: F401

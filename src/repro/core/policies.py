@@ -1,0 +1,67 @@
+"""Policy scoring for the device engine.
+
+Section 5 of the paper, vectorised: every policy minimises a primary
+score with an earliest-start tiebreak.  Scores are computed in *exact
+integer arithmetic* — float32 cannot distinguish durations near 2**31
+(spacing 256), which would silently turn Du/PEDu policies into FF among
+unbounded rectangles.  The PE x duration product (up to ~2**42) is kept
+exact by splitting it into two lexicographically ordered int32 keys.
+
+``policy_index`` gives the stable integer id used by the jitted search
+(traced, so switching policy does not trigger recompilation).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import ALL_POLICIES, Policy
+
+POLICY_IDS = {p: i for i, p in enumerate(ALL_POLICIES)}
+
+
+def policy_index(policy: Policy) -> int:
+    return POLICY_IDS[policy]
+
+
+def integer_keys(policy_id: jax.Array, n_free: jax.Array,
+                 duration: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Exact (key1, key2) minimisation keys for ``policy_id``.
+
+    The product ``n_free * duration`` is decomposed as
+    ``p_hi * 2**16 + p_lo`` with ``p_lo < 2**16`` so that ``(p_hi,
+    p_lo)`` compares identically to the true 42-bit product while both
+    components fit int32 (requires ``n_free < 2**11``, i.e. up to 2048
+    PEs — asserted by the scheduler facade).
+    """
+    nf = n_free.astype(jnp.int32)
+    du = duration.astype(jnp.int32)
+    du_hi = du >> 16
+    du_lo = du & 0xFFFF
+    p_lo_raw = nf * du_lo
+    p_hi = nf * du_hi + (p_lo_raw >> 16)
+    p_lo = p_lo_raw & 0xFFFF
+    zero = jnp.zeros_like(nf)
+    key1 = jnp.stack([zero, nf, -nf, du, -du, p_hi, -p_hi])
+    key2 = jnp.stack([zero, zero, zero, zero, zero, p_lo, -p_lo])
+    return key1[policy_id], key2[policy_id]
+
+
+def select(policy_id: jax.Array, n_free: jax.Array, duration: jax.Array,
+           starts: jax.Array, feasible: jax.Array) -> Tuple[jax.Array,
+                                                            jax.Array]:
+    """Pick the best feasible candidate for ``policy_id``.
+
+    Returns ``(best_index, found)``: lexicographic (key1, key2, t_s)
+    minimum over feasible candidates via a stable three-key sort.
+    """
+    big = jnp.iinfo(jnp.int32).max
+    key1, key2 = integer_keys(policy_id, n_free, duration)
+    key1 = jnp.where(feasible, key1, big)
+    key2 = jnp.where(feasible, key2, big)
+    tiebreak = jnp.where(feasible, starts, big)
+    order = jnp.lexsort((tiebreak, key2, key1))
+    best = order[0]
+    return best, feasible[best]

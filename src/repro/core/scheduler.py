@@ -1,0 +1,136 @@
+"""Engine facade: one API over the literal, host, and device engines.
+
+``make_scheduler(engine=...)`` returns an object with the paper's three
+operations.  The device engine keeps its state on the accelerator as a
+:class:`~repro.core.timeline.Timeline` pytree and runs the jitted
+search; capacity overflow triggers host-side growth (double and retry),
+so callers never see a fixed limit.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core import search as search_lib
+from repro.core import timeline as tl_lib
+from repro.core.hostsched import HostScheduler, ids_from_mask, mask_from_ids
+from repro.core.listsched import ListScheduler
+from repro.core.policies import policy_index
+from repro.core.types import Allocation, ARRequest, Policy, Rectangle, T_INF
+
+import jax.numpy as jnp
+
+
+class DeviceScheduler:
+    """Device-resident scheduler with the HostScheduler interface."""
+
+    def __init__(self, n_pe: int, capacity: int = 256,
+                 use_kernel: bool = False, bucketing: bool = True):
+        self.n_pe = n_pe
+        self.use_kernel = use_kernel
+        # §Perf iteration A3: the dense search costs O(P*S*n_pe) at the
+        # *capacity* S; slicing to the smallest power-of-two bucket
+        # covering the live records cuts the work ~quadratically when
+        # the timeline is mostly empty (each bucket jit-compiles once).
+        self.bucketing = bucketing
+        self._n_valid = 0
+        self.tl = tl_lib.empty(capacity, n_pe)
+
+    # -- helpers -------------------------------------------------------
+    def _mask32(self, pes: Sequence[int]) -> jnp.ndarray:
+        W = self.tl.words
+        bits = np.zeros(W * 32, dtype=np.uint32)
+        for i in pes:
+            bits[i] = 1
+        return jnp.asarray(tl_lib.pack_bits(bits[None, :])[0])
+
+    def _update(self, t_s: int, t_e: int, pes, is_add: bool) -> None:
+        mask = pes if not isinstance(pes, (list, tuple, set, range)) \
+            else self._mask32(sorted(pes))
+        new_tl, overflow = tl_lib.update(
+            self.tl, t_s, t_e, mask, is_add=is_add)
+        if bool(overflow):
+            # static-shape growth, then retry (rare; amortised O(1))
+            self.tl = tl_lib.grow(self.tl, 2 * self.tl.capacity)
+            new_tl, overflow = tl_lib.update(
+                self.tl, t_s, t_e, mask, is_add=is_add)
+            assert not bool(overflow)
+        self.tl = new_tl
+        self._n_valid = int(new_tl.n_valid())
+
+    def _search_view(self) -> tl_lib.Timeline:
+        """Smallest power-of-two prefix covering the valid records."""
+        if not self.bucketing:
+            return self.tl
+        k = 16
+        while k < self._n_valid:
+            k *= 2
+        k = min(k, self.tl.capacity)
+        return tl_lib.Timeline(times=self.tl.times[:k],
+                               occ=self.tl.occ[:k])
+
+    # -- the three operations ------------------------------------------
+    def add_allocation(self, t_s: int, t_e: int, pes) -> None:
+        self._update(t_s, t_e, pes, is_add=True)
+
+    def delete_allocation(self, t_s: int, t_e: int, pes) -> None:
+        self._update(t_s, t_e, pes, is_add=False)
+
+    def find_allocation(self, req: ARRequest, policy: Policy,
+                        t_now: Optional[int] = None) -> Optional[Allocation]:
+        t_now = req.t_a if t_now is None else t_now
+        res = search_lib.find_allocation(
+            self._search_view(),
+            jnp.int32(req.t_r), jnp.int32(req.t_du), jnp.int32(req.t_dl),
+            jnp.int32(req.n_pe), jnp.int32(policy_index(policy)),
+            jnp.int32(t_now), n_pe=self.n_pe, use_kernel=self.use_kernel)
+        if not bool(res.found):
+            return None
+        mask32 = np.asarray(res.pe_mask)
+        # repack uint32 words into uint64 for id extraction
+        W64 = (mask32.shape[0] + 1) // 2
+        m64 = np.zeros(W64, dtype=np.uint64)
+        for w in range(mask32.shape[0]):
+            m64[w // 2] |= np.uint64(mask32[w]) << np.uint64(32 * (w % 2))
+        return Allocation(
+            t_s=int(res.t_s), t_e=int(res.t_e),
+            pe_ids=ids_from_mask(m64),
+            rectangle=Rectangle(
+                t_s=int(res.t_s), t_begin=int(res.t_begin),
+                t_end=int(res.t_end), n_free=int(res.n_free)),
+        )
+
+    def records(self):
+        times = np.asarray(self.tl.times)
+        occ = np.asarray(self.tl.occ)
+        out = []
+        for t, row in zip(times, occ):
+            if t >= T_INF:
+                continue
+            ids = []
+            for w, word in enumerate(row):
+                word = int(word)
+                while word:
+                    b = word & -word
+                    ids.append(w * 32 + b.bit_length() - 1)
+                    word ^= b
+            out.append((int(t), frozenset(ids)))
+        return out
+
+
+ENGINES = {
+    "list": ListScheduler,
+    "host": HostScheduler,
+    "device": DeviceScheduler,
+}
+
+
+def make_scheduler(n_pe: int, engine: str = "host", **kwargs):
+    """Factory over the three interchangeable engines."""
+    try:
+        cls = ENGINES[engine]
+    except KeyError:
+        raise ValueError(
+            f"unknown engine {engine!r}; pick one of {sorted(ENGINES)}")
+    return cls(n_pe, **kwargs)

@@ -1,0 +1,151 @@
+"""Device-side ``findAllocation`` (Algorithm 3), fully vectorised.
+
+The paper's per-candidate scan — "for every optional start time, get the
+free PEs in the window, then expand to the maximum availability
+rectangle" — is reformulated as two dense matrix products over the
+bit-expanded occupancy (DESIGN.md §2):
+
+    busy[P, pe]     = (overlap[P, S] @ occ_bits[S, pe]) > 0
+    blocking[P, S]  = (free[P, pe]   @ occ_bits[S, pe]^T) > 0
+
+so the whole search maps onto the MXU.  The rectangle bounds are then
+masked min/max reductions over the slot axis.  ``kernels/availscan``
+implements the same contraction as a Pallas kernel; this module is the
+pure-jnp path (and the oracle the kernel is tested against).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import policies as policies_lib
+from repro.core import timeline as tl_lib
+from repro.core.timeline import Timeline
+from repro.core.types import T_INF
+
+
+class SearchResult(NamedTuple):
+    found: jax.Array      # bool
+    t_s: jax.Array        # int32 chosen start
+    t_e: jax.Array        # int32 chosen end
+    pe_mask: jax.Array    # uint32[W] chosen PEs
+    n_free: jax.Array     # int32 free PEs in the winning rectangle
+    t_begin: jax.Array    # int32 rectangle begin
+    t_end: jax.Array      # int32 rectangle end
+
+
+class Rectangles(NamedTuple):
+    """Per-candidate maximum availability rectangles."""
+
+    starts: jax.Array    # int32[P]
+    n_free: jax.Array    # int32[P]
+    t_begin: jax.Array   # int32[P]
+    t_end: jax.Array     # int32[P]
+    valid: jax.Array     # bool[P]
+
+
+def candidate_starts(tl: Timeline, t_r: jax.Array, t_du: jax.Array,
+                     t_dl: jax.Array) -> jax.Array:
+    """int32[2S+2] candidates; infeasible slots padded with T_INF.
+
+    Candidates are the ready time, the latest start, every boundary in
+    range, and every boundary shifted left by the duration (end-aligned
+    placements) — the paper's Section 4.2 enumeration.
+    """
+    lo = t_r
+    hi = t_dl - t_du
+
+    def in_range(x):
+        return (x >= lo) & (x <= hi) & (x < T_INF)
+
+    c_bound = jnp.where(in_range(tl.times), tl.times, T_INF)
+    shifted = jnp.where(tl.times < T_INF, tl.times - t_du, T_INF)
+    c_shift = jnp.where(in_range(shifted), shifted, T_INF)
+    ends = jnp.stack([lo, hi]).astype(jnp.int32)
+    return jnp.sort(jnp.concatenate([ends, c_bound, c_shift]))
+
+
+def availability_rectangles(
+    tl: Timeline, starts: jax.Array, t_du: jax.Array, t_now: jax.Array,
+    n_pe: int,
+) -> Rectangles:
+    """Maximum availability rectangle per candidate (Algorithm 3 l.6-9)."""
+    occ_bits = tl_lib.unpack_bits(tl.occ, n_pe).astype(jnp.float32)
+    nxt = tl_lib.next_times(tl)
+    valid = starts < T_INF
+    a = jnp.minimum(starts, T_INF - t_du)       # avoid int32 overflow
+    b = a + t_du
+    # window overlap and busy-PE union (first MXU contraction)
+    ov = ((tl.times[None, :] < b[:, None]) &
+          (nxt[None, :] > a[:, None])).astype(jnp.float32)      # [P, S]
+    busy = jax.lax.dot(ov, occ_bits) > 0.5                      # [P, pe]
+    free = ~busy                                                # [P, pe]
+    n_free = jnp.sum(free, axis=1).astype(jnp.int32)
+    # blocking slots: a slot blocks iff it occupies any free PE
+    # (second MXU contraction, contracting the PE axis)
+    blocking = jax.lax.dot_general(
+        free.astype(jnp.float32), occ_bits,
+        dimension_numbers=(((1,), (1,)), ((), ()))) > 0.5        # [P, S]
+    left = blocking & (nxt[None, :] <= a[:, None])
+    t_begin = jnp.max(jnp.where(left, nxt[None, :], -T_INF), axis=1)
+    t_begin = jnp.minimum(jnp.maximum(t_begin, t_now), a)
+    right = blocking & (tl.times[None, :] >= b[:, None])
+    t_end = jnp.min(jnp.where(right, tl.times[None, :], T_INF), axis=1)
+    return Rectangles(starts=starts, n_free=n_free, t_begin=t_begin,
+                      t_end=t_end, valid=valid)
+
+
+def _winning_pe_mask(tl: Timeline, t_s: jax.Array, t_du: jax.Array,
+                     n_req: jax.Array, n_pe: int) -> jax.Array:
+    """Lowest-index ``n_req`` free PEs over the winning window."""
+    a = jnp.minimum(t_s, T_INF - t_du)
+    busy = tl_lib.window_busy(tl, a, a + t_du)          # uint32[W]
+    free_bits = (1 - tl_lib.unpack_bits(busy[None, :], n_pe)[0]
+                 ).astype(jnp.int32)                    # [n_pe]
+    csum = jnp.cumsum(free_bits)
+    sel = (free_bits == 1) & (csum <= n_req)
+    W = tl.words
+    sel_padded = jnp.zeros((W * 32,), jnp.uint32).at[:n_pe].set(
+        sel.astype(jnp.uint32))
+    return tl_lib.pack_bits(sel_padded[None, :])[0]
+
+
+@functools.partial(jax.jit, static_argnames=("n_pe", "use_kernel"))
+def find_allocation(
+    tl: Timeline,
+    t_r: jax.Array,
+    t_du: jax.Array,
+    t_dl: jax.Array,
+    n_req: jax.Array,
+    policy_id: jax.Array,
+    t_now: jax.Array,
+    *,
+    n_pe: int,
+    use_kernel: bool = False,
+) -> SearchResult:
+    """Full Algorithm 3: candidates -> rectangles -> policy -> PE pick."""
+    starts = candidate_starts(tl, t_r, t_du, t_dl)
+    if use_kernel:
+        from repro.kernels import ops as kernel_ops
+        rects = kernel_ops.availability_rectangles(
+            tl, starts, t_du, t_now, n_pe=n_pe)
+    else:
+        rects = availability_rectangles(tl, starts, t_du, t_now, n_pe)
+    feasible = rects.valid & (rects.n_free >= n_req)
+    duration = rects.t_end - rects.t_begin
+    best, found = policies_lib.select(
+        policy_id, rects.n_free, duration, rects.starts, feasible)
+    t_s = rects.starts[best]
+    pe_mask = _winning_pe_mask(tl, t_s, t_du, n_req, n_pe)
+    return SearchResult(
+        found=found,
+        t_s=t_s,
+        t_e=t_s + t_du,
+        pe_mask=jnp.where(found, pe_mask, jnp.uint32(0)),
+        n_free=rects.n_free[best],
+        t_begin=rects.t_begin[best],
+        t_end=rects.t_end[best],
+    )

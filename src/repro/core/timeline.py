@@ -1,0 +1,194 @@
+"""JAX device engine: the availability timeline as a dense tensor.
+
+TPU adaptation of the paper's ``AvailRectList`` (see DESIGN.md §2): the
+linked list of ``{time, busy-PE-set}`` records becomes a fixed-capacity
+struct-of-arrays pytree.  All operations are functional, jit-compatible,
+and use ``jax.lax`` control flow only — no host round-trips.
+
+Layout
+------
+``times : int32[S]``      sorted boundaries; ``T_INF`` marks padding
+``occ   : uint32[S, W]``  busy-PE bitmask during ``[times[i], times[i+1])``
+
+Invariants (asserted in tests, preserved by ``update``):
+  * valid entries are strictly sorted and precede all padding;
+  * consecutive valid rows differ (merged records, paper's "clean");
+  * the first valid row is non-empty; occupancy after the last valid
+    boundary is empty (all free), as is before the first.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import T_INF
+
+_WORD = 32
+
+
+def n_words(n_pe: int) -> int:
+    return (n_pe + _WORD - 1) // _WORD
+
+
+class Timeline(NamedTuple):
+    """Fixed-capacity availability timeline (a JAX pytree)."""
+
+    times: jax.Array  # int32[S]
+    occ: jax.Array    # uint32[S, W]
+
+    @property
+    def capacity(self) -> int:
+        return self.times.shape[0]
+
+    @property
+    def words(self) -> int:
+        return self.occ.shape[1]
+
+    def n_valid(self) -> jax.Array:
+        return jnp.sum(self.times < T_INF).astype(jnp.int32)
+
+
+def empty(capacity: int, n_pe: int) -> Timeline:
+    return Timeline(
+        times=jnp.full((capacity,), T_INF, dtype=jnp.int32),
+        occ=jnp.zeros((capacity, n_words(n_pe)), dtype=jnp.uint32),
+    )
+
+
+def pe_valid_mask(n_pe: int) -> np.ndarray:
+    """uint32[W] with exactly the first ``n_pe`` bits set."""
+    W = n_words(n_pe)
+    bits = np.zeros(W * _WORD, dtype=np.uint32)
+    bits[:n_pe] = 1
+    return pack_bits(bits[None, :])[0]
+
+
+def pack_bits(bits: np.ndarray | jax.Array) -> jax.Array:
+    """[..., W*32] 0/1 -> uint32 [..., W] little-endian within words."""
+    xp = jnp if isinstance(bits, jax.Array) else np
+    *lead, nbits = bits.shape
+    assert nbits % _WORD == 0
+    b = bits.reshape(*lead, nbits // _WORD, _WORD).astype(xp.uint32)
+    shifts = xp.arange(_WORD, dtype=xp.uint32)
+    return (b << shifts).sum(axis=-1).astype(xp.uint32)
+
+
+def unpack_bits(words: jax.Array, n_pe: int) -> jax.Array:
+    """uint32 [..., W] -> 0/1 int8 [..., n_pe]."""
+    shifts = jnp.arange(_WORD, dtype=jnp.uint32)
+    bits = (words[..., :, None] >> shifts) & jnp.uint32(1)
+    return bits.reshape(*words.shape[:-1], words.shape[-1] * _WORD)[
+        ..., :n_pe].astype(jnp.int8)
+
+
+def occupancy_at(tl: Timeline, t: jax.Array) -> jax.Array:
+    """Busy bitmask in effect at instant ``t`` (zeros outside records)."""
+    idx = jnp.searchsorted(tl.times, t, side="right") - 1
+    in_range = (idx >= 0) & (jnp.take(tl.times, jnp.maximum(idx, 0)) < T_INF)
+    row = jnp.take(tl.occ, jnp.clip(idx, 0, tl.capacity - 1), axis=0)
+    return jnp.where(in_range, row, jnp.uint32(0))
+
+
+def next_times(tl: Timeline) -> jax.Array:
+    """End of each slot's interval; padding rows get ``T_INF``."""
+    return jnp.concatenate(
+        [tl.times[1:], jnp.array([T_INF], dtype=jnp.int32)])
+
+
+@functools.partial(jax.jit, static_argnames=("is_add",))
+def update(tl: Timeline, t_s: jax.Array, t_e: jax.Array,
+           mask: jax.Array, *, is_add: bool) -> Tuple[Timeline, jax.Array]:
+    """Functional ``addAllocation`` / ``deleteAllocation`` (Algorithms 1-2).
+
+    Inserts the two boundary records, ORs (or AND-NOTs) ``mask`` into
+    every record in ``[t_s, t_e)``, merges redundant records, and
+    re-compacts into the same capacity.  Returns ``(new_tl, overflow)``
+    where ``overflow`` flags that the compacted timeline needed more
+    than ``S`` records (callers must grow and retry — see scheduler).
+    """
+    S = tl.capacity
+    t_s = jnp.asarray(t_s, jnp.int32)
+    t_e = jnp.asarray(t_e, jnp.int32)
+    # 1. extend with the two (possibly duplicate) boundary records,
+    #    inheriting the occupancy in effect at each instant.
+    ext_t = jnp.concatenate([tl.times, jnp.stack([t_s, t_e])])
+    ext_o = jnp.concatenate(
+        [tl.occ, jnp.stack([occupancy_at(tl, t_s), occupancy_at(tl, t_e)])])
+    is_new = jnp.zeros(S + 2, jnp.int32).at[S:].set(1)
+    # 2. stable order: by time, originals before inserted duplicates so
+    #    that the merge pass removes the duplicate.
+    perm = jnp.lexsort((is_new, ext_t))
+    ext_t, ext_o = ext_t[perm], ext_o[perm]
+    # 3. apply the range update.
+    in_range = (ext_t >= t_s) & (ext_t < t_e)
+    if is_add:
+        upd = ext_o | mask[None, :]
+    else:
+        upd = ext_o & ~mask[None, :]
+    ext_o = jnp.where(in_range[:, None], upd, ext_o)
+    # 4. merge: keep rows whose occupancy differs from the previous kept
+    #    row.  Because duplicates carry identical occupancy after the
+    #    update, comparing against the immediate predecessor suffices.
+    prev = jnp.concatenate(
+        [jnp.zeros((1, tl.words), jnp.uint32), ext_o[:-1]])
+    keep = (ext_t < T_INF) & jnp.any(ext_o != prev, axis=1)
+    # 5. scatter-compact back to capacity S (+2 scratch rows).
+    pos = jnp.cumsum(keep) - 1
+    dest = jnp.where(keep, pos, S + 1)
+    out_t = jnp.full((S + 2,), T_INF, jnp.int32).at[dest].set(
+        jnp.where(keep, ext_t, T_INF))
+    out_o = jnp.zeros((S + 2, tl.words), jnp.uint32).at[dest].set(
+        jnp.where(keep[:, None], ext_o, jnp.uint32(0)))
+    n_keep = jnp.sum(keep)
+    overflow = n_keep > S
+    return Timeline(times=out_t[:S], occ=out_o[:S]), overflow
+
+
+@jax.jit
+def window_busy(tl: Timeline, a: jax.Array, b: jax.Array) -> jax.Array:
+    """Union of busy masks over records intersecting ``[a, b)``."""
+    nxt = next_times(tl)
+    ov = (tl.times < b) & (nxt > a)
+    masked = jnp.where(ov[:, None], tl.occ, jnp.uint32(0))
+    return jax.lax.reduce(masked, np.uint32(0), jax.lax.bitwise_or, (0,))
+
+
+def grow(tl: Timeline, new_capacity: int) -> Timeline:
+    """Host-side capacity growth (static shape change; not jitted)."""
+    assert new_capacity >= tl.capacity
+    pad = new_capacity - tl.capacity
+    return Timeline(
+        times=jnp.concatenate(
+            [tl.times, jnp.full((pad,), T_INF, jnp.int32)]),
+        occ=jnp.concatenate(
+            [tl.occ, jnp.zeros((pad, tl.words), jnp.uint32)]),
+    )
+
+
+def from_host(times: np.ndarray, occ64: np.ndarray, n_pe: int,
+              capacity: int) -> Timeline:
+    """Build a device timeline from the host engine's uint64 rows."""
+    S = times.shape[0]
+    assert S <= capacity, "host timeline exceeds device capacity"
+    bits = np.zeros((S, n_words(n_pe) * _WORD), dtype=np.uint32)
+    for w in range(occ64.shape[1]):
+        lo = (occ64[:, w] & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+        hi = (occ64[:, w] >> np.uint64(32)).astype(np.uint32)
+        if 2 * w * _WORD < bits.shape[1]:
+            bits[:, 2 * w * _WORD:(2 * w + 1) * _WORD] = _expand32(lo)
+        if (2 * w + 1) * _WORD < bits.shape[1]:
+            bits[:, (2 * w + 1) * _WORD:(2 * w + 2) * _WORD] = _expand32(hi)
+    tl = empty(capacity, n_pe)
+    return Timeline(
+        times=tl.times.at[:S].set(jnp.asarray(times, jnp.int32)),
+        occ=tl.occ.at[:S].set(pack_bits(bits)),
+    )
+
+
+def _expand32(words: np.ndarray) -> np.ndarray:
+    shifts = np.arange(_WORD, dtype=np.uint32)
+    return ((words[:, None] >> shifts) & np.uint32(1)).astype(np.uint32)

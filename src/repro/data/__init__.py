@@ -1,0 +1,2 @@
+"""Deterministic synthetic data pipeline."""
+from repro.data.pipeline import TokenPipeline  # noqa: F401

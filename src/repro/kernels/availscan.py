@@ -1,0 +1,125 @@
+"""Pallas TPU kernel for the availability-rectangle scan.
+
+This is the paper's computational hot spot: ``findAllocation`` spends
+``O(p * u * v)`` testing every candidate start against every slot
+(Section 4.2 complexity analysis).  The TPU formulation turns the scan
+into two MXU contractions per candidate tile (DESIGN.md §2):
+
+    busy[Pt, pe]    = overlap[Pt, S] @ occ_bits[S, pe]      (window union)
+    blocking[Pt, S] = free[Pt, pe]   @ occ_bits[S, pe]^T    (rect expansion)
+
+Grid: one program per tile of ``Pt`` candidate start times.  The
+occupancy matrix (the shared operand) is mapped to a single grid-
+invariant VMEM block, so it is DMA'd from HBM once and reused by every
+candidate tile — the TPU analogue of the paper's "organise availability
+for efficient search".  All comparisons stay in exact int32; only the
+0/1 contraction operands are f32 (counts < 2**24, exact).
+
+VMEM budget per program (defaults Pt=128, S<=1024, n_pe<=2048):
+occ_bits f32[S, pe] = 8 MiB worst case + tiles ~1.5 MiB < 16 MiB.
+The ops.py wrapper falls back to the pure-jnp path beyond these bounds.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.types import T_INF
+
+# Tile of candidate start times evaluated by one program instance.
+DEFAULT_PT = 128
+# TPU lane width; S and n_pe are padded to multiples of this.
+_LANE = 128
+
+
+def _availscan_kernel(a_ref, b_ref, times_ref, nxt_ref, occ_ref,
+                      nfree_ref, tb_ref, te_ref):
+    a = a_ref[:, 0]            # i32[Pt]
+    b = b_ref[:, 0]            # i32[Pt]
+    times = times_ref[0, :]    # i32[S]
+    nxt = nxt_ref[0, :]        # i32[S]
+    occ = occ_ref[...]         # f32[S, n_pe] 0/1
+
+    # --- window overlap and busy-PE union (MXU contraction 1) --------
+    ov = ((times[None, :] < b[:, None]) &
+          (nxt[None, :] > a[:, None])).astype(jnp.float32)     # [Pt, S]
+    busy = jax.lax.dot(ov, occ,
+                       preferred_element_type=jnp.float32)     # [Pt, pe]
+    free = (busy < 0.5)
+    nfree_ref[:, 0] = jnp.sum(free.astype(jnp.int32), axis=1)
+
+    # --- blocking slots (MXU contraction 2, contracting the PE axis) -
+    blocking = jax.lax.dot_general(
+        free.astype(jnp.float32), occ,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) > 0.5              # [Pt, S]
+
+    # --- rectangle bounds: masked max/min over the slot axis ---------
+    left = blocking & (nxt[None, :] <= a[:, None])
+    tb_ref[:, 0] = jnp.max(
+        jnp.where(left, nxt[None, :], -T_INF), axis=1)
+    right = blocking & (times[None, :] >= b[:, None])
+    te_ref[:, 0] = jnp.min(
+        jnp.where(right, times[None, :], T_INF), axis=1)
+
+
+def _pad_to(x: jax.Array, size: int, fill) -> jax.Array:
+    pad = size - x.shape[0]
+    if pad == 0:
+        return x
+    widths = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, widths, constant_values=fill)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("pt", "interpret"))
+def availscan(
+    occ_bits: jax.Array,   # f32[S, n_pe_padded] 0/1 occupancy
+    times: jax.Array,      # i32[S]
+    nxt: jax.Array,        # i32[S]
+    a: jax.Array,          # i32[P] window starts (overflow-clamped)
+    b: jax.Array,          # i32[P] window ends
+    *,
+    pt: int = DEFAULT_PT,
+    interpret: bool = True,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Tiled scan over candidates.
+
+    Returns raw ``(n_free, t_begin_raw, t_end_raw)`` — ``n_free`` still
+    counts PE-axis padding (caller subtracts) and the bounds carry
+    ``-T_INF`` / ``T_INF`` sentinels when unblocked (caller clamps).
+    """
+    S, n_pe_p = occ_bits.shape
+    assert S % _LANE == 0 and n_pe_p % _LANE == 0, (S, n_pe_p)
+    P = a.shape[0]
+    P_pad = -(-P // pt) * pt
+    a_p = _pad_to(a, P_pad, T_INF - 1)[:, None]
+    b_p = _pad_to(b, P_pad, T_INF)[:, None]
+    grid = (P_pad // pt,)
+    nfree, tb, te = pl.pallas_call(
+        _availscan_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((pt, 1), lambda i: (i, 0)),       # a
+            pl.BlockSpec((pt, 1), lambda i: (i, 0)),       # b
+            pl.BlockSpec((1, S), lambda i: (0, 0)),        # times
+            pl.BlockSpec((1, S), lambda i: (0, 0)),        # nxt
+            pl.BlockSpec((S, n_pe_p), lambda i: (0, 0)),   # occ_bits
+        ],
+        out_specs=[
+            pl.BlockSpec((pt, 1), lambda i: (i, 0)),
+            pl.BlockSpec((pt, 1), lambda i: (i, 0)),
+            pl.BlockSpec((pt, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((P_pad, 1), jnp.int32),
+            jax.ShapeDtypeStruct((P_pad, 1), jnp.int32),
+            jax.ShapeDtypeStruct((P_pad, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(a_p, b_p, times[None, :], nxt[None, :], occ_bits)
+    return nfree[:P, 0], tb[:P, 0], te[:P, 0]

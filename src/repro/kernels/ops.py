@@ -1,0 +1,67 @@
+"""Jit'd public wrapper around the availscan Pallas kernel.
+
+Prepares the dense operands from a :class:`~repro.core.timeline.Timeline`
+(bit-expansion, lane padding), invokes the kernel, and post-processes
+the raw tile outputs back into the exact semantics of the pure-jnp
+reference (:func:`repro.core.search.availability_rectangles`).
+
+On shapes beyond the kernel's single-block VMEM budget the wrapper
+transparently falls back to the reference path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import search as search_lib
+from repro.core import timeline as tl_lib
+from repro.core.timeline import Timeline
+from repro.core.types import T_INF
+from repro.kernels import availscan as _k
+
+# Single-block VMEM budget: S * n_pe f32 occupancy <= 8 MiB.
+_MAX_OCC_ELEMS = 2 * 1024 * 1024
+
+
+def _interpret_mode() -> bool:
+    # Real TPU executes the compiled kernel; anywhere else (this
+    # container is CPU-only) runs the kernel body in interpret mode.
+    return jax.default_backend() != "tpu"
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def availability_rectangles(
+    tl: Timeline, starts: jax.Array, t_du: jax.Array, t_now: jax.Array,
+    n_pe: int,
+) -> search_lib.Rectangles:
+    """Kernel-backed drop-in for ``search.availability_rectangles``."""
+    S = tl.capacity
+    S_pad = _round_up(max(S, _k._LANE), _k._LANE)
+    n_pe_pad = _round_up(max(n_pe, _k._LANE), _k._LANE)
+    if S_pad * n_pe_pad > _MAX_OCC_ELEMS:
+        return search_lib.availability_rectangles(
+            tl, starts, t_du, t_now, n_pe)
+
+    occ_bits = tl_lib.unpack_bits(tl.occ, n_pe).astype(jnp.float32)
+    occ_bits = jnp.pad(
+        occ_bits, ((0, S_pad - S), (0, n_pe_pad - n_pe)))
+    times = jnp.pad(tl.times, (0, S_pad - S), constant_values=T_INF)
+    nxt = jnp.pad(tl_lib.next_times(tl), (0, S_pad - S),
+                  constant_values=T_INF)
+
+    valid = starts < T_INF
+    a = jnp.minimum(starts, T_INF - t_du)   # avoid int32 overflow
+    b = a + t_du
+
+    nfree_raw, tb_raw, te_raw = _k.availscan(
+        occ_bits, times, nxt, a, b, interpret=_interpret_mode())
+
+    n_free = nfree_raw - (n_pe_pad - n_pe)   # padded PE bits are never busy
+    t_begin = jnp.minimum(jnp.maximum(tb_raw, t_now), a)
+    t_end = te_raw
+    return search_lib.Rectangles(
+        starts=starts, n_free=n_free, t_begin=t_begin, t_end=t_end,
+        valid=valid)

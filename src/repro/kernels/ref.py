@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the availscan kernel.
+
+The reference semantics live in
+:func:`repro.core.search.availability_rectangles`; this module re-exports
+them under the conventional ``kernels/ref.py`` name so kernel tests
+sweep shapes/dtypes against one canonical implementation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import search as search_lib
+from repro.core.timeline import Timeline
+
+
+def availability_rectangles(
+    tl: Timeline, starts: jax.Array, t_du: jax.Array, t_now: jax.Array,
+    n_pe: int,
+) -> search_lib.Rectangles:
+    return search_lib.availability_rectangles(tl, starts, t_du, t_now, n_pe)
+
+
+def window_busy_dense(occ_bits: jax.Array, times: jax.Array,
+                      nxt: jax.Array, a: jax.Array,
+                      b: jax.Array) -> jax.Array:
+    """Slot-loop oracle for the kernel's first contraction (tests)."""
+    ov = (times[None, :] < b[:, None]) & (nxt[None, :] > a[:, None])
+    return jnp.einsum("ps,se->pe", ov.astype(jnp.float32), occ_bits) > 0.5

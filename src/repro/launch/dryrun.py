@@ -1,0 +1,309 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver builds the production mesh, constructs
+ShapeDtypeStruct stand-ins for every input (no device allocation),
+lowers the appropriate step function with explicit in/out shardings,
+compiles it, and records:
+
+* ``memory_analysis()``  — per-device argument/output/temp bytes
+  (proves the program fits, or quantifies by how much it does not);
+* ``cost_analysis()``    — raw HLO FLOPs/bytes (loop bodies counted
+  once; see roofline/analysis.py for why the analytic model is also
+  recorded);
+* collective bytes parsed from ``compiled.as_text()``;
+* the analytic roofline terms.
+
+Usage:
+    python -m repro.launch.dryrun --arch all --shape all --mesh both
+    python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import (
+    ALL_SHAPES,
+    ARCH_IDS,
+    applicable,
+    get_config,
+    shape_by_name,
+)
+from repro.launch import specs as specs_lib
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as tf_lib
+from repro.models.common import mesh_context
+from repro.roofline import analysis as roof
+from repro.serve import engine as serve_lib
+from repro.sharding import rules
+from repro.sharding.rules import fit_sharding
+from repro.train import optim as optim_lib
+from repro.train import step as step_lib
+
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _mesh_shape_dict(mesh) -> dict:
+    return {k: int(v) for k, v in mesh.shape.items()}
+
+
+def _sharded_bytes(structs, shardings) -> int:
+    """Exact per-device bytes of a pytree under its NamedShardings."""
+    total = 0
+    for leaf, sh in zip(jax.tree.leaves(structs),
+                        jax.tree.leaves(
+                            shardings,
+                            is_leaf=lambda x: isinstance(
+                                x, NamedSharding))):
+        shape = sh.shard_shape(leaf.shape)
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * leaf.dtype.itemsize
+    return total
+
+
+def _activation_estimate(cfg, shape, mesh, mb: int) -> float:
+    """Modeled per-device peak activation bytes (bf16, remat'd scan:
+    one residual per layer per microbatch + one layer's working set)."""
+    chips = 1
+    for v in mesh.shape.values():
+        chips *= int(v)
+    d = cfg.d_model
+    n_lay = cfg.n_layers + cfg.n_enc_layers
+    if shape.kind == "train":
+        toks_mb = shape.global_batch * shape.seq_len / mb
+        resid = n_lay * toks_mb * d * 2
+        work = 6 * toks_mb * d * 2 + toks_mb * max(cfg.d_ff, d) * 2
+        return (resid + work) / chips * 1.3
+    if shape.kind == "prefill":
+        toks = shape.global_batch * shape.seq_len
+        kv = (2 * n_lay * toks * cfg.n_kv_heads * cfg.hd * 2)
+        work = 8 * toks * d * 2
+        return (kv + work) / chips * 1.3
+    toks = shape.global_batch
+    return 4 * toks * d * max(cfg.n_layers, 1) * 2 / chips * 1.3
+
+
+OPT_OVERRIDES = dict(seq_parallel=True, moe_quant_dispatch=True,
+                     kv_cache_dtype="int8")
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               keep_hlo: bool = False, opt: bool = False) -> dict:
+    cfg = get_config(arch)
+    if opt:
+        cfg = dataclasses.replace(cfg, **OPT_OVERRIDES)
+    shape = shape_by_name(shape_name)
+    ok, why = applicable(cfg, shape)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "kind": shape.kind}
+    if not ok:
+        rec.update(status="SKIPPED", reason=why)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    key_s = jax.ShapeDtypeStruct((2,), jax.numpy.uint32)
+    params_s = jax.eval_shape(
+        lambda k: tf_lib.init_params(cfg, k), key_s)
+    p_specs = rules.to_named(mesh, rules.param_specs(params_s))
+    mb = specs_lib.default_microbatches(cfg, shape, mesh)
+    rec["microbatches"] = mb
+
+    with mesh_context(mesh):
+        if shape.kind == "train":
+            big = cfg.d_model >= 7000   # 1T-class: bf16 moments
+            opt_cfg = optim_lib.OptConfig(
+                state_dtype="bfloat16" if big else "float32")
+            opt_s = jax.eval_shape(
+                lambda p: optim_lib.init(p, opt_cfg), params_s)
+            z_specs = rules.to_named(mesh, rules.zero_specs(
+                rules.param_specs(params_s), params_s, mesh))
+            o_specs = optim_lib.OptState(
+                step=NamedSharding(mesh, P()), mu=z_specs, nu=z_specs)
+            batch_s, batch_sh = specs_lib.train_batch_specs(
+                cfg, shape, mesh, mb)
+            step = step_lib.make_train_step(
+                cfg, opt_cfg, mb,
+                accum_dtype=jax.numpy.bfloat16 if big
+                else jax.numpy.float32)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_specs, o_specs, batch_sh),
+                out_shardings=(p_specs, o_specs,
+                               NamedSharding(mesh, P())),
+                donate_argnums=(0, 1))
+            lowered = jitted.lower(params_s, opt_s, batch_s)
+        elif shape.kind == "prefill":
+            in_s, in_sh = specs_lib.serve_specs(cfg, shape, mesh)
+            step = serve_lib.make_prefill_step(cfg, max_len=shape.seq_len)
+            tokens_s = in_s.pop("tokens")
+            tokens_sh = in_sh.pop("tokens")
+            extra_s = in_s or None
+            extra_sh = in_sh or None
+            cache_sh = jax.eval_shape(
+                lambda p, t, e: step(p, t, e), params_s, tokens_s,
+                extra_s)
+            bd = tuple(a for a in ("pod", "data")
+                       if a in mesh.axis_names)
+            out_sh = (fit_sharding(mesh, cache_sh[0].shape, P(bd, None)),
+                      specs_lib.cache_shardings(cache_sh[1], mesh))
+            jitted = jax.jit(
+                step, in_shardings=(p_specs, tokens_sh, extra_sh),
+                out_shardings=out_sh)
+            lowered = jitted.lower(params_s, tokens_s, extra_s)
+        else:  # decode
+            in_s, in_sh = specs_lib.serve_specs(cfg, shape, mesh)
+            step = serve_lib.make_decode_step(cfg)
+            bd = tuple(a for a in ("pod", "data")
+                       if a in mesh.axis_names)
+            extra_keys = [k for k in in_s
+                          if k not in ("cache", "tokens")]
+            extra_s = {k: in_s[k] for k in extra_keys} or None
+            extra_sh = {k: in_sh[k] for k in extra_keys} or None
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_specs, in_sh["cache"], in_sh["tokens"],
+                              extra_sh),
+                out_shardings=(fit_sharding(
+                    mesh, (shape.global_batch, cfg.vocab), P(bd, None)),
+                               in_sh["cache"]),
+                donate_argnums=(1,))
+            lowered = jitted.lower(params_s, in_s["cache"],
+                                   in_s["tokens"], extra_s)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    colls = roof.parse_collectives(hlo)
+    # exact per-device argument bytes at the *intended* dtypes (the CPU
+    # backend upconverts bf16 dots to f32, inflating memory_analysis;
+    # see EXPERIMENTS.md §Methodology)
+    args_dev = _sharded_bytes(params_s, p_specs)
+    if shape.kind == "train":
+        args_dev += _sharded_bytes(
+            (opt_s.mu, opt_s.nu), (o_specs.mu, o_specs.nu))
+        args_dev += _sharded_bytes(batch_s, batch_sh)
+    elif shape.kind == "decode":
+        args_dev += _sharded_bytes(in_s["cache"], in_sh["cache"])
+    act_dev = _activation_estimate(cfg, shape, mesh, mb)
+    model_dev_total = args_dev + act_dev
+    costs = roof.step_costs(
+        cfg, shape, _mesh_shape_dict(mesh), microbatches=mb,
+        opt_state_bytes_per_param=(4 if cfg.d_model >= 7000 else 8))
+    chips = 512 if multi_pod else 256
+    terms = costs.terms(chips)
+    per_dev_bytes = (ma.argument_size_in_bytes
+                     + ma.temp_size_in_bytes
+                     + ma.output_size_in_bytes
+                     - ma.alias_size_in_bytes)
+    rec.update(
+        status="OK",
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        memory={
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "per_device_total": per_dev_bytes,
+            "fits_16g_hbm": bool(per_dev_bytes < 16e9),
+            # intended-dtype model (CPU backend inflates bf16 -> f32)
+            "model_args_bytes": args_dev,
+            "model_act_bytes": int(act_dev),
+            "model_per_device_total": int(model_dev_total),
+            "model_fits_16g_hbm": bool(model_dev_total < 16e9),
+        },
+        hlo_raw={
+            "flops": ca.get("flops", -1.0),
+            "bytes_accessed": ca.get("bytes accessed", -1.0),
+            "collectives": colls,
+            "n_hlo_lines": hlo.count("\n"),
+        },
+        analytic=dataclasses.asdict(costs),
+        roofline=terms,
+    )
+    if keep_hlo:
+        rec["hlo_text"] = hlo
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--opt", action="store_true",
+                    help="beyond-paper perf knobs: SP + int8 MoE a2a "
+                         "+ int8 KV cache (EXPERIMENTS.md §Perf)")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = [s.name for s in ALL_SHAPES] if args.shape == "all" \
+        else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    n_ok = n_skip = n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                tag = f"{arch}__{shape}__{'multi' if multi else 'single'}"
+                path = outdir / f"{tag}.json"
+                if path.exists() and not args.force:
+                    print(f"[cached] {tag}")
+                    continue
+                print(f"[dryrun] {tag} ...", flush=True)
+                try:
+                    rec = lower_cell(arch, shape, multi, opt=args.opt)
+                except Exception as e:           # noqa: BLE001
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if multi else "16x16",
+                           "status": "FAILED", "error": str(e),
+                           "traceback": traceback.format_exc()}
+                path.write_text(json.dumps(rec, indent=2))
+                st = rec["status"]
+                n_ok += st == "OK"
+                n_skip += st == "SKIPPED"
+                n_fail += st == "FAILED"
+                if st == "OK":
+                    r = rec["roofline"]
+                    print(f"  OK lower={rec['lower_s']}s "
+                          f"compile={rec['compile_s']}s "
+                          f"dom={r['dominant']} "
+                          f"comp={r['compute_s']:.2e}s "
+                          f"mem={r['memory_s']:.2e}s "
+                          f"coll={r['collective_s']:.2e}s "
+                          f"fits={rec['memory']['model_fits_16g_hbm']}"
+                          f"(raw={rec['memory']['fits_16g_hbm']})",
+                          flush=True)
+                elif st == "SKIPPED":
+                    print(f"  SKIPPED ({rec['reason'][:60]})")
+                else:
+                    print(f"  FAILED: {rec['error'][:200]}")
+    print(f"dry-run complete: {n_ok} ok, {n_skip} skipped, "
+          f"{n_fail} failed")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

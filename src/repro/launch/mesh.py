@@ -1,0 +1,32 @@
+"""Production mesh construction (single-pod and multi-pod).
+
+``make_production_mesh`` is a function (not a module constant) so that
+importing this module never touches jax device state; the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import to obtain the placeholder devices.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16x16 = 256 chips per pod; 2 pods = 512 chips when multi_pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh() -> Mesh:
+    """1x1 mesh on the single real CPU device (tests, smoke runs)."""
+    return jax.make_mesh(
+        (1, 1), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto, jax.sharding.AxisType.Auto))
+
+
+def data_shards(mesh: Mesh) -> int:
+    n = mesh.shape.get("data", 1)
+    return n * mesh.shape.get("pod", 1)

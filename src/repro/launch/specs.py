@@ -1,0 +1,145 @@
+"""ShapeDtypeStruct input stand-ins + shardings for every cell.
+
+``input_specs(cfg, shape, mesh)`` returns (args, in_shardings) for the
+step function that the cell lowers:
+
+* ``train``   -> ``train_step(params, opt_state, batch)`` with batch
+  leaves ``[mb, B/mb, ...]`` (microbatch axis scanned in the step);
+* ``prefill`` -> ``prefill(params, tokens, extra)``;
+* ``decode``  -> ``decode_step(params, cache, tokens, extra)`` with the
+  cache shaped for ``seq_len`` context (the decode cells' semantics:
+  one new token against a full KV cache / recurrent state).
+
+Weak-type-correct, shardable, zero device allocation.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.mesh import data_shards
+from repro.models import transformer as tf_lib
+from repro.sharding.rules import fit_sharding
+
+
+def default_microbatches(cfg: ModelConfig, shape: ShapeConfig,
+                         mesh: Optional[Mesh]) -> int:
+    if shape.kind != "train":
+        return 1
+    shards = data_shards(mesh) if mesh is not None else 1
+    per_shard = max(shape.global_batch // shards, 1)
+    # Larger models accumulate more to bound live activations.
+    want = 8 if cfg.d_model >= 3584 else (4 if cfg.d_model >= 2048 else 2)
+    return max(1, min(want, per_shard))
+
+
+def _extra_struct(cfg: ModelConfig, batch_dims: Tuple[int, ...]
+                  ) -> Dict[str, jax.ShapeDtypeStruct]:
+    extra: Dict[str, jax.ShapeDtypeStruct] = {}
+    if cfg.family == "encdec":
+        extra["enc_frames"] = jax.ShapeDtypeStruct(
+            (*batch_dims, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "vlm":
+        extra["image_embeds"] = jax.ShapeDtypeStruct(
+            (*batch_dims, cfg.vision_tokens, cfg.vision_dim),
+            jnp.bfloat16)
+    return extra
+
+
+def _bd(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                      microbatches: int):
+    b_mb = shape.global_batch // microbatches
+    structs: Dict[str, jax.ShapeDtypeStruct] = {
+        "tokens": jax.ShapeDtypeStruct(
+            (microbatches, b_mb, shape.seq_len), jnp.int32),
+        "labels": jax.ShapeDtypeStruct(
+            (microbatches, b_mb, shape.seq_len), jnp.int32),
+    }
+    structs.update(_extra_struct(cfg, (microbatches, b_mb)))
+    bd = _bd(mesh)
+    shardings = {
+        k: fit_sharding(mesh, v.shape,
+                        P(None, bd, *([None] * (v.ndim - 2))))
+        for k, v in structs.items()
+    }
+    return structs, shardings
+
+
+def serve_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    bd = _bd(mesh)
+    b = shape.global_batch
+    if shape.kind == "prefill":
+        structs = {
+            "tokens": jax.ShapeDtypeStruct((b, shape.seq_len), jnp.int32),
+            **_extra_struct(cfg, (b,)),
+        }
+        shardings = {
+            k: fit_sharding(mesh, v.shape,
+                            P(bd, *([None] * (v.ndim - 1))))
+            for k, v in structs.items()
+        }
+        return structs, shardings
+    # decode: cache for seq_len context + one token
+    cache = jax.eval_shape(
+        lambda: tf_lib.init_decode_cache(cfg, b, shape.seq_len))
+    if cfg.family in ("encdec", "vlm"):
+        src = cfg.enc_seq if cfg.family == "encdec" else cfg.vision_tokens
+        n_cl = (cfg.n_layers if cfg.family == "encdec"
+                else cfg.n_layers // cfg.cross_attn_every)
+        kv = jax.ShapeDtypeStruct(
+            (n_cl, b, src, cfg.n_kv_heads, cfg.hd), jnp.bfloat16)
+        cache["cross_kv"] = (kv, kv)
+    structs = {
+        "cache": cache,
+        "tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        **_extra_struct(cfg, (b,)),
+    }
+    shardings = {
+        "cache": cache_shardings(cache, mesh),
+        "tokens": fit_sharding(mesh, structs["tokens"].shape,
+                               P(bd, None)),
+    }
+    for k, v in structs.items():
+        if k not in shardings:
+            shardings[k] = fit_sharding(
+                mesh, v.shape, P(bd, *([None] * (v.ndim - 1))))
+    return structs, shardings
+
+
+def cache_shardings(cache, mesh: Mesh):
+    """Decode-cache shardings: batch over data axes; the first
+    divisible trailing axis over "model" (S for attention caches —
+    context-parallel decode — heads/state lanes for recurrent states).
+    Axes that do not divide the mesh extent are replicated, matching
+    the divisibility fallback inside the model code."""
+    bd = _bd(mesh)
+    bd_n = 1
+    for a in bd:
+        bd_n *= mesh.shape[a]
+    model_n = mesh.shape.get("model", 1)
+
+    def spec(path, leaf) -> NamedSharding:
+        names = [getattr(pe, "key", getattr(pe, "name", ""))
+                 for pe in path]
+        nd = leaf.ndim
+        if nd == 0 or "pos" in names:
+            return NamedSharding(mesh, P())
+        axes: list = [None] * nd
+        b_ax = 1 if nd >= 2 else 0
+        if leaf.shape[b_ax] % bd_n == 0:
+            axes[b_ax] = bd
+        for i in range(b_ax + 1, nd):
+            if leaf.shape[i] % model_n == 0:
+                axes[i] = "model"
+                break
+        return NamedSharding(mesh, P(*axes))
+
+    return jax.tree_util.tree_map_with_path(spec, cache)

@@ -1,0 +1,110 @@
+"""End-to-end training driver with checkpoint/restart fault tolerance.
+
+    PYTHONPATH=src python -m repro.launch.train \
+        --arch qwen3-4b --steps 200 --smoke
+
+``--smoke`` runs the reduced config on the local device (the CPU path
+used by tests and the quickstart); without it the full config is
+launched on the production mesh (requires real accelerators; on this
+box use dryrun.py instead).  Restart-safety: if the checkpoint
+directory already has state, training resumes from the latest step —
+kill the process at any point and rerun the same command.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.data import TokenPipeline
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models.common import mesh_context
+from repro.train import optim as optim_lib
+from repro.train import step as step_lib
+
+
+def run(arch: str, steps: int, smoke: bool, batch: int, seq: int,
+        ckpt_dir: str, ckpt_every: int, microbatches: int,
+        lr: float = 3e-4, log_every: int = 10, config=None,
+        use_mesh: bool = None) -> dict:
+    cfg = config if config is not None else get_config(arch)
+    if smoke:
+        cfg = cfg.reduced() if config is None else cfg
+        mesh = None
+    else:
+        mesh = make_production_mesh()
+    opt_cfg = optim_lib.OptConfig(lr=lr, warmup_steps=min(50, steps // 5),
+                                  total_steps=steps)
+    train_step = jax.jit(step_lib.make_train_step(
+        cfg, opt_cfg, microbatches))
+
+    extra_shapes = {}
+    if cfg.family == "encdec":
+        extra_shapes["enc_frames"] = ((cfg.enc_seq, cfg.d_model),
+                                      np.float32)
+    if cfg.family == "vlm":
+        extra_shapes["image_embeds"] = (
+            (cfg.vision_tokens, cfg.vision_dim), np.float32)
+    pipe = TokenPipeline(cfg.vocab, seq, batch,
+                         microbatches=microbatches,
+                         extra_shapes=extra_shapes, seed=0)
+    mgr = CheckpointManager(ckpt_dir, keep=2)
+
+    with mesh_context(mesh):
+        params, opt_state = step_lib.init_train_state(
+            cfg, opt_cfg, jax.random.PRNGKey(0))
+        start = 0
+        if mgr.latest_step() is not None:
+            (params, opt_state), start, meta = mgr.restore(
+                (params, opt_state))
+            print(f"[restore] resumed from step {start} "
+                  f"(loss was {meta.get('loss')})")
+        losses = []
+        t0 = time.time()
+        for s in range(start, steps):
+            batch_np = pipe.batch_at(s)
+            batch_dev = {k: jnp.asarray(v) for k, v in batch_np.items()}
+            params, opt_state, metrics = train_step(
+                params, opt_state, batch_dev)
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            if (s + 1) % log_every == 0:
+                dt = (time.time() - t0) / log_every
+                print(f"step {s+1:5d} loss={loss:.4f} "
+                      f"gnorm={float(metrics['grad_norm']):.3f} "
+                      f"{dt*1e3:.0f} ms/step", flush=True)
+                t0 = time.time()
+            if (s + 1) % ckpt_every == 0 or s + 1 == steps:
+                mgr.save_async(s + 1, (params, opt_state),
+                               {"loss": loss, "arch": arch})
+        mgr.wait()
+    return {"first_loss": losses[0] if losses else None,
+            "last_loss": losses[-1] if losses else None,
+            "steps_run": len(losses), "resumed_from": start}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--microbatches", type=int, default=2)
+    ap.add_argument("--ckpt-dir", default="artifacts/ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+    out = run(args.arch, args.steps, args.smoke, args.batch, args.seq,
+              str(Path(args.ckpt_dir) / args.arch), args.ckpt_every,
+              args.microbatches)
+    print(f"done: {out}")
+
+
+if __name__ == "__main__":
+    main()

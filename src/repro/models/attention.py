@@ -1,0 +1,303 @@
+"""Grouped-query attention: training, prefill, and cached decode paths.
+
+Covers the needs of the assigned pool: GQA with arbitrary kv-head
+counts (MHA when ``n_kv_heads == n_heads``), optional qk-norm (qwen3),
+RoPE, cross-attention (seamless decoder, llama-vision), and a sliding-
+window cached path used by the hybrid family at 500k context.
+
+Softmax runs in f32; logits are scaled by ``1/sqrt(hd)``.  All einsums
+keep the head axis explicit so TP sharding (heads over "model") applies
+without reshapes.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.common import (
+    KeyGen,
+    apply_rope,
+    dense_init,
+    rms_norm,
+    rope_freqs,
+    shard,
+)
+
+NEG_INF = -1e30
+
+
+def init_attention(kg: KeyGen, cfg: ModelConfig, dtype,
+                   cross: bool = False) -> Dict:
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    p = {
+        "wq": dense_init(kg(), (d, hq, hd), d, dtype),
+        "wk": dense_init(kg(), (d, hkv, hd), d, dtype),
+        "wv": dense_init(kg(), (d, hkv, hd), d, dtype),
+        "wo": dense_init(kg(), (hq, hd, d), hq * hd, dtype),
+    }
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _project_q(p: Dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"])
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+    return shard(q, "batch", None, "heads", None)
+
+
+def _project_kv(p: Dict, x: jax.Array, cfg: ModelConfig) -> Tuple[
+        jax.Array, jax.Array]:
+    k = jnp.einsum("btd,dhk->bthk", x, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", x, p["wv"])
+    if "k_norm" in p:
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    k = shard(k, "batch", None, "kv_heads", None)
+    v = shard(v, "batch", None, "kv_heads", None)
+    return k, v
+
+
+def _expand_kv(x: jax.Array, n_rep: int) -> jax.Array:
+    """Repeat KV heads to the full query-head count.
+
+    Keeps every attention einsum head-local under TP even when the KV
+    head count does not divide the model axis (the repeated tensor has
+    Hq heads, which the rules shard); the repeat of a replicated or
+    head-sharded input is local.
+    """
+    if n_rep == 1:
+        return x
+    # no explicit constraint: GSPMD propagates the right layout from
+    # the surrounding einsum (heads-sharded in train/prefill, context-
+    # sharded in decode); forcing "heads" here fights the decode layout.
+    return jnp.repeat(x, n_rep, axis=2)
+
+
+def _sdpa(q: jax.Array, k: jax.Array, v: jax.Array,
+          mask: Optional[jax.Array], n_rep: int) -> jax.Array:
+    """q: [B,T,Hq,hd]; k,v: [B,S,Hkv,hd]; mask broadcastable [B,1,T,S]."""
+    b, t, hq, hd = q.shape
+    k = _expand_kv(k, n_rep)
+    v = _expand_kv(v, n_rep)
+    logits = jnp.einsum("bthk,bshk->bhts", q, k).astype(jnp.float32)
+    logits = logits / jnp.sqrt(hd).astype(jnp.float32)
+    if mask is not None:
+        logits = logits + jnp.where(mask, 0.0, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhts,bshk->bthk", probs, v)
+    return out
+
+
+# Above this many query positions, the full [T, S] score matrix is
+# replaced by the blockwise online-softmax path (flash-style in XLA).
+BLOCKWISE_THRESHOLD = 8192
+Q_BLOCK = 1024
+KV_BLOCK = 1024
+
+
+def _blockwise_sdpa(q: jax.Array, k: jax.Array, v: jax.Array,
+                    n_rep: int, window: int = 0) -> jax.Array:
+    """Causal online-softmax attention, O(Lq * S) memory per block.
+
+    ``lax.map`` over query blocks; inner ``fori_loop`` visits only the
+    KV blocks at or before the query block (plus the window bound), so
+    runtime work matches the causal triangle.
+    """
+    b, t, hq, hd = q.shape
+    s = k.shape[1]
+    lq, lkv = min(Q_BLOCK, t), min(KV_BLOCK, s)
+    nq = t // lq
+    scale = 1.0 / np.sqrt(hd)
+
+    def one_q_block(iq):
+        q_i = jax.lax.dynamic_slice_in_dim(q, iq * lq, lq, axis=1)
+        q_pos = iq * lq + jnp.arange(lq)
+
+        def body(jk, carry):
+            m, den, acc = carry
+            k_j = _expand_kv(
+                jax.lax.dynamic_slice_in_dim(k, jk * lkv, lkv, axis=1),
+                n_rep)
+            v_j = _expand_kv(
+                jax.lax.dynamic_slice_in_dim(v, jk * lkv, lkv, axis=1),
+                n_rep)
+            kv_pos = jk * lkv + jnp.arange(lkv)
+            logits = jnp.einsum("bthk,bshk->bhts", q_i,
+                                k_j).astype(jnp.float32) * scale
+            mask = q_pos[:, None] >= kv_pos[None, :]
+            if window:
+                mask &= q_pos[:, None] - kv_pos[None, :] < window
+            logits = logits + jnp.where(mask, 0.0, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            den_new = den * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None].astype(acc.dtype) + jnp.einsum(
+                "bhts,bshk->bhtk", p.astype(v.dtype), v_j)
+            return m_new, den_new, acc_new
+
+        shape = (b, hq, lq)
+        init = (jnp.full(shape, -jnp.inf, jnp.float32),
+                jnp.zeros(shape, jnp.float32),
+                jnp.zeros(shape + (hd,), v.dtype))
+        n_blocks = (iq * lq + lq + lkv - 1) // lkv  # causal upper bound
+        m, den, acc = jax.lax.fori_loop(0, n_blocks, body, init)
+        out = acc / jnp.maximum(den, 1e-30)[..., None].astype(acc.dtype)
+        return out                                 # [B,H,Lq,hd]
+
+    outs = jax.lax.map(one_q_block, jnp.arange(nq))   # [nq,B,H,Lq,hd]
+    out = jnp.moveaxis(outs, 0, 2)                    # [B,H,nq,Lq,hd]
+    return out.reshape(b, hq, t, hd).transpose(0, 2, 1, 3)
+
+
+def self_attention(p: Dict, x: jax.Array, cfg: ModelConfig,
+                   rope: Tuple[jax.Array, jax.Array],
+                   positions: Optional[jax.Array] = None,
+                   window: int = 0, return_kv: bool = False):
+    """Causal self-attention over a full sequence (train / prefill)."""
+    b, t, _ = x.shape
+    q = _project_q(p, x, cfg)
+    k, v = _project_kv(p, x, cfg)
+    cos, sin = rope
+    q = apply_rope(q, cos, sin, positions)
+    k = apply_rope(k, cos, sin, positions)
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    if t > BLOCKWISE_THRESHOLD and t % Q_BLOCK == 0:
+        out = _blockwise_sdpa(q, k, v, n_rep, window)
+    else:
+        idx = jnp.arange(t)
+        mask = idx[None, :, None] >= idx[None, None, :]
+        if window:
+            mask = mask & (idx[None, :, None] - idx[None, None, :] < window)
+        out = _sdpa(q, k, v, mask[:, None], n_rep)
+    out = jnp.einsum("bthk,hkd->btd", out, p["wo"])
+    out = shard(out, "batch", None, "model")
+    if return_kv:
+        # collected for the decode cache, which is context-sharded
+        k = shard(k, "batch", "seq_sp", None, None)
+        v = shard(v, "batch", "seq_sp", None, None)
+        return out, (k, v)
+    return out
+
+
+def cross_attention(p: Dict, x: jax.Array, kv_cache: Tuple[jax.Array,
+                                                           jax.Array],
+                    cfg: ModelConfig,
+                    enc_mask: Optional[jax.Array] = None) -> jax.Array:
+    """Attend from decoder states to precomputed encoder K/V."""
+    k, v = kv_cache
+    q = _project_q(p, x, cfg)
+    mask = None if enc_mask is None else enc_mask[:, None, None, :]
+    out = _sdpa(q, k, v, mask, cfg.n_heads // cfg.n_kv_heads)
+    out = jnp.einsum("bthk,hkd->btd", out, p["wo"])
+    return shard(out, "batch", None, "model")
+
+
+def encoder_kv(p: Dict, enc_out: jax.Array, cfg: ModelConfig) -> Tuple[
+        jax.Array, jax.Array]:
+    return _project_kv(p, enc_out, cfg)
+
+
+# ---------------------------------------------------------------------------
+# cached decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype) -> Dict[str, jax.Array]:
+    hkv, hd = cfg.n_kv_heads, cfg.hd
+    store = jnp.int8 if cfg.kv_cache_dtype == "int8" else dtype
+    mk = lambda: shard(jnp.zeros((batch, max_len, hkv, hd), store),
+                       "batch", "seq_sp", None, None)
+    cache = {"k": mk(), "v": mk()}
+    if cfg.kv_cache_dtype == "int8":
+        # per-(position, head) dequantisation scales
+        mks = lambda: shard(
+            jnp.zeros((batch, max_len, hkv), jnp.bfloat16),
+            "batch", "seq_sp", None)
+        cache["k_scale"] = mks()
+        cache["v_scale"] = mks()
+    return cache
+
+
+def quantize_kv(x: jax.Array):
+    """bf16 [.., S, H, hd] -> (int8 values, bf16 per-(S,H) scales)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0 \
+        + 1e-9
+    q = jnp.round(x.astype(jnp.float32)
+                  / scale[..., None]).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def dequant_kv(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (q.astype(jnp.float32)
+            * scale.astype(jnp.float32)[..., None]).astype(dtype)
+
+
+def decode_attention(p: Dict, x: jax.Array, cache: Dict[str, jax.Array],
+                     pos: jax.Array, cfg: ModelConfig,
+                     rope: Tuple[jax.Array, jax.Array],
+                     window: int = 0) -> Tuple[jax.Array, Dict]:
+    """One-token decode: update the KV cache at ``pos`` and attend.
+
+    x: [B, 1, d]; cache k/v: [B, S, Hkv, hd]; pos: scalar int32.
+    With ``window > 0`` the cache is a ring buffer of ``window`` slots
+    (sliding-window attention for the 500k hybrid decode).
+    """
+    b = x.shape[0]
+    s_max = cache["k"].shape[1]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q = _project_q(p, x, cfg)
+    k_new, v_new = _project_kv(p, x, cfg)
+    cos, sin = rope
+    q = apply_rope(q, cos, sin, positions)
+    k_new = apply_rope(k_new, cos, sin, positions)
+    slot = jnp.where(window > 0, pos % jnp.maximum(s_max, 1), pos)
+    # decode KV caches shard the *sequence* axis over the model axis
+    # (context-parallel decode): softmax/combine reductions over S then
+    # lower to psums, and head-count divisibility never matters.
+    new_cache = {}
+    if cfg.kv_cache_dtype == "int8":
+        kq, ks = quantize_kv(k_new)
+        vq, vs = quantize_kv(v_new)
+        k_store = jax.lax.dynamic_update_slice(
+            cache["k"], kq, (0, slot, 0, 0))
+        v_store = jax.lax.dynamic_update_slice(
+            cache["v"], vq, (0, slot, 0, 0))
+        k_sc = jax.lax.dynamic_update_slice(
+            cache["k_scale"], ks, (0, slot, 0))
+        v_sc = jax.lax.dynamic_update_slice(
+            cache["v_scale"], vs, (0, slot, 0))
+        k_store = shard(k_store, "batch", "seq_sp", None, None)
+        v_store = shard(v_store, "batch", "seq_sp", None, None)
+        new_cache = {"k": k_store, "v": v_store,
+                     "k_scale": k_sc, "v_scale": v_sc}
+        k = dequant_kv(k_store, k_sc, x.dtype)
+        v = dequant_kv(v_store, v_sc, x.dtype)
+    else:
+        k = jax.lax.dynamic_update_slice(
+            cache["k"], k_new, (0, slot, 0, 0))
+        v = jax.lax.dynamic_update_slice(
+            cache["v"], v_new, (0, slot, 0, 0))
+        k = shard(k, "batch", "seq_sp", None, None)
+        v = shard(v, "batch", "seq_sp", None, None)
+        new_cache = {"k": k, "v": v}
+    idx = jnp.arange(s_max)
+    if window:
+        valid = (idx[None, :] <= slot) | (pos >= s_max)
+    else:
+        valid = idx[None, :] <= pos
+    mask = valid[:, None, None, :]   # [1,1,1,S] broadcast over batch
+    out = _sdpa(q, k, v, mask, cfg.n_heads // cfg.n_kv_heads)
+    out = jnp.einsum("bthk,hkd->btd", out, p["wo"])
+    return shard(out, "batch", None, "model"), new_cache
+
+
+def make_rope(cfg: ModelConfig, max_pos: int) -> Tuple[jax.Array,
+                                                       jax.Array]:
+    return rope_freqs(cfg.hd, max_pos, cfg.rope_theta)

@@ -1,0 +1,196 @@
+"""Shared model building blocks: norms, RoPE, init, sharding helpers.
+
+No flax/optax on this box — modules are (init, apply) function pairs
+over plain dict pytrees.  Sharding is expressed through logical
+constraints: model code calls ``shard(x, *logical_axes)`` and the
+active :class:`MeshContext` maps logical axes to mesh axes (or is a
+no-op on a single device), so the same model runs in unit tests and on
+the 512-chip production mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# logical-axis sharding context
+# ---------------------------------------------------------------------------
+
+_STATE = threading.local()
+
+# logical axis -> mesh axis (None = replicated).  "data" composes the
+# pod axis on multi-pod meshes so that the batch shards across pods too.
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "seq": None,            # sequence (sharded only under SP configs)
+    "seq_sp": "model",      # sequence under sequence/context parallelism
+    "model": None,          # d_model / residual: replicated
+    "heads": "model",       # attention heads (TP)
+    "kv_heads": "model",
+    "ff": "model",          # MLP hidden (TP)
+    "vocab": "model",       # embedding / logits (TP)
+    "experts": "model",     # MoE experts (EP)
+    "expert_cap": None,
+    "ssm_heads": "model",   # SSM / mLSTM heads (TP)
+    "state": None,
+}
+
+
+class MeshContext:
+    def __init__(self, mesh: Optional[Mesh], rules: Optional[dict] = None):
+        self.mesh = mesh
+        self.rules = dict(DEFAULT_RULES)
+        if rules:
+            self.rules.update(rules)
+
+    def spec(self, *logical: Optional[str]) -> P:
+        axes = []
+        used = set()
+        for name in logical:
+            if name is None:
+                axes.append(None)
+                continue
+            mesh_axis = self.rules.get(name)
+            # drop mesh axes that are unavailable or already used
+            if isinstance(mesh_axis, tuple):
+                mesh_axis = tuple(
+                    a for a in mesh_axis
+                    if self.mesh is not None and a in self.mesh.axis_names
+                    and a not in used)
+                for a in mesh_axis:
+                    used.add(a)
+                axes.append(mesh_axis if mesh_axis else None)
+            else:
+                if (mesh_axis is None or self.mesh is None
+                        or mesh_axis not in self.mesh.axis_names
+                        or mesh_axis in used):
+                    axes.append(None)
+                else:
+                    used.add(mesh_axis)
+                    axes.append(mesh_axis)
+        return P(*axes)
+
+
+def current_ctx() -> MeshContext:
+    return getattr(_STATE, "ctx", None) or MeshContext(None)
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Optional[Mesh], rules: Optional[dict] = None):
+    prev = getattr(_STATE, "ctx", None)
+    _STATE.ctx = MeshContext(mesh, rules)
+    try:
+        yield _STATE.ctx
+    finally:
+        _STATE.ctx = prev
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Constrain ``x``'s sharding by logical axis names.
+
+    No-op off-mesh; per-dimension, axes whose mesh extent does not
+    divide the array dimension are dropped (replicated fallback — e.g.
+    8 KV heads on a 16-way model axis).
+    """
+    ctx = current_ctx()
+    if ctx.mesh is None:
+        return x
+    spec = ctx.spec(*logical)
+    fixed = tuple(
+        s if x.shape[i] % _axis_size(ctx.mesh, s) == 0 else None
+        for i, s in enumerate(spec))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, P(*fixed)))
+
+
+def named_sharding(*logical: Optional[str]) -> Optional[NamedSharding]:
+    ctx = current_ctx()
+    if ctx.mesh is None:
+        return None
+    return NamedSharding(ctx.mesh, ctx.spec(*logical))
+
+
+# ---------------------------------------------------------------------------
+# numerics
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, weight: jax.Array,
+             eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32)).astype(dtype)
+
+
+def rope_freqs(head_dim: int, max_pos: int, theta: float) -> Tuple[
+        jax.Array, jax.Array]:
+    inv = 1.0 / (theta ** (
+        jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    pos = jnp.arange(max_pos, dtype=jnp.float32)
+    ang = pos[:, None] * inv[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array,
+               positions: Optional[jax.Array] = None) -> jax.Array:
+    """x: [B, T, H, hd]; cos/sin: [max_pos, hd/2]; positions: [B, T]."""
+    if positions is None:
+        cos_t = cos[: x.shape[1]][None, :, None, :]
+        sin_t = sin[: x.shape[1]][None, :, None, :]
+    else:
+        cos_t = cos[positions][:, :, None, :]
+        sin_t = sin[positions][:, :, None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    out = jnp.concatenate(
+        [x1 * cos_t - x2 * sin_t, x2 * cos_t + x1 * sin_t], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# initialisation
+# ---------------------------------------------------------------------------
+
+def dense_init(key: jax.Array, shape: Sequence[int], fan_in: int,
+               dtype=jnp.bfloat16) -> jax.Array:
+    scale = 1.0 / np.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, tuple(shape), jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key: jax.Array, shape: Sequence[int],
+               dtype=jnp.bfloat16) -> jax.Array:
+    return (jax.random.normal(key, tuple(shape), jnp.float32)
+            * 0.02).astype(dtype)
+
+
+class KeyGen:
+    """Split-on-demand PRNG key source for init code."""
+
+    def __init__(self, key: jax.Array):
+        self._key = key
+
+    def __call__(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+
+def count_params(params) -> int:
+    return int(sum(np.prod(p.shape) for p in jax.tree.leaves(params)))

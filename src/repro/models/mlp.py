@@ -1,0 +1,26 @@
+"""Gated (SwiGLU) feed-forward block with TP sharding on the hidden axis."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import KeyGen, dense_init, shard
+
+
+def init_mlp(kg: KeyGen, d_model: int, d_ff: int, dtype) -> Dict:
+    return {
+        "w_gate": dense_init(kg(), (d_model, d_ff), d_model, dtype),
+        "w_up": dense_init(kg(), (d_model, d_ff), d_model, dtype),
+        "w_down": dense_init(kg(), (d_ff, d_model), d_ff, dtype),
+    }
+
+
+def mlp(p: Dict, x: jax.Array) -> jax.Array:
+    h = jax.nn.silu(jnp.einsum("btd,df->btf", x, p["w_gate"]))
+    h = h * jnp.einsum("btd,df->btf", x, p["w_up"])
+    h = shard(h, "batch", None, "ff")
+    out = jnp.einsum("btf,fd->btd", h, p["w_down"])
+    return shard(out, "batch", None, "model")

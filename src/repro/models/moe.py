@@ -1,0 +1,129 @@
+"""Mixture-of-experts layer with capacity-based sparse dispatch.
+
+Sort-based dispatch (Megablocks-style, adapted to static shapes): the
+(token, k) assignments are ranked per expert via one stable sort, then
+scattered into an ``[E, C]`` index table — no ``[T, E, C]`` one-hot is
+ever materialised, so the per-device activation footprint stays
+``O(E_local * C * d)``.  Experts are sharded over the "model" axis
+(expert parallelism); the scatter/gather pair lowers to all-to-all
+collectives on the production mesh.
+
+Aux losses: standard load-balancing loss (Switch) + router z-loss.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import KeyGen, dense_init, shard
+
+
+def init_moe(kg: KeyGen, cfg: ModelConfig, dtype) -> Dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "router": dense_init(kg(), (d, e), d, jnp.float32),
+        "w_gate": dense_init(kg(), (e, d, f), d, dtype),
+        "w_up": dense_init(kg(), (e, d, f), d, dtype),
+        "w_down": dense_init(kg(), (e, f, d), f, dtype),
+    }
+
+
+def _capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    cap = int(cfg.capacity_factor * n_tokens * cfg.top_k / cfg.n_experts)
+    return max(cap, cfg.top_k)
+
+
+def moe(p: Dict, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, Dict]:
+    """x: [B, T, d] -> (out [B, T, d], aux losses)."""
+    b, t, d = x.shape
+    n = b * t
+    e, k = cfg.n_experts, cfg.top_k
+    cap = _capacity(n, cfg)
+    xf = x.reshape(n, d)
+
+    logits = jnp.einsum("nd,de->ne", xf.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)          # [n, k]
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    # ---- rank of each assignment within its expert (stable sort) ----
+    flat_e = expert_ids.reshape(-1)                          # [n*k]
+    order = jnp.argsort(flat_e, stable=True)                 # group by expert
+    ranked = jnp.zeros_like(flat_e).at[order].set(
+        jnp.arange(n * k, dtype=flat_e.dtype))
+    seg_start = jnp.searchsorted(flat_e[order], jnp.arange(e))
+    pos_in_expert = ranked - seg_start[flat_e]               # [n*k]
+    keep = pos_in_expert < cap                               # drop overflow
+
+    # ---- dispatch: scatter token rows into the [E, C] table ----------
+    slot = jnp.where(keep, flat_e * cap + pos_in_expert, e * cap)
+    token_of = jnp.repeat(jnp.arange(n), k)
+    table = jnp.full((e * cap + 1,), n, jnp.int32).at[slot].set(
+        token_of.astype(jnp.int32), mode="drop")
+    table = table[:-1].reshape(e, cap)                       # [E, C]
+    if cfg.moe_quant_dispatch:
+        # int8 all-to-all payloads (EXPERIMENTS.md §Perf B2): the
+        # gather that crosses the EP boundary moves 1 byte/element +
+        # one bf16 scale per token instead of 2 bytes/element.
+        scale = jnp.max(jnp.abs(xf.astype(jnp.float32)), axis=-1,
+                        keepdims=True) / 127.0 + 1e-9
+        xq = jnp.round(xf.astype(jnp.float32) / scale).astype(jnp.int8)
+        xq = jnp.concatenate([xq, jnp.zeros((1, d), jnp.int8)])
+        sq = jnp.concatenate(
+            [scale.astype(jnp.bfloat16), jnp.ones((1, 1), jnp.bfloat16)])
+        ex_q = xq[table]                                     # [E, C, d]
+        ex_q = shard(ex_q, "experts", None, None)
+        ex_s = shard(sq[table], "experts", None, None)       # [E, C, 1]
+        ex_in = (ex_q.astype(jnp.float32)
+                 * ex_s.astype(jnp.float32)).astype(x.dtype)
+    else:
+        xpad = jnp.concatenate([xf, jnp.zeros((1, d), xf.dtype)])
+        ex_in = xpad[table]                                  # [E, C, d]
+        ex_in = shard(ex_in, "experts", None, None)
+
+    # ---- expert computation (dense einsum over local experts) --------
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", ex_in, p["w_gate"]))
+    h = h * jnp.einsum("ecd,edf->ecf", ex_in, p["w_up"])
+    ex_out = jnp.einsum("ecf,efd->ecd", h, p["w_down"])      # [E, C, d]
+    ex_out = shard(ex_out, "experts", None, None)
+
+    # ---- combine: gather back and weight by the gates -----------------
+    if cfg.moe_quant_dispatch:
+        s_out = jnp.max(jnp.abs(ex_out.astype(jnp.float32)), axis=-1,
+                        keepdims=True) / 127.0 + 1e-9
+        oq = jnp.round(ex_out.astype(jnp.float32) / s_out).astype(
+            jnp.int8)
+        oq = shard(oq, "experts", None, None)
+        vals = (oq.reshape(-1, d).astype(jnp.float32)
+                * s_out.reshape(-1, 1))
+    else:
+        vals = ex_out.reshape(-1, d).astype(jnp.float32)
+    weighted = vals * _slot_gate(gate_vals, keep, slot, e, cap)[..., None]
+    flat_out = jnp.zeros((n + 1, d), jnp.float32).at[
+        table.reshape(-1)].add(weighted, mode="drop")
+    out = flat_out[:n].reshape(b, t, d)
+    out = shard(out, "batch", None, "model")
+
+    # ---- aux losses ----------------------------------------------------
+    me = jnp.mean(probs, axis=0)                              # [e]
+    ce = jnp.mean(
+        jax.nn.one_hot(expert_ids[:, 0], e, dtype=jnp.float32), axis=0)
+    aux = {
+        "load_balance": e * jnp.sum(me * ce),
+        "router_z": jnp.mean(
+            jnp.square(jax.nn.logsumexp(logits, axis=-1))),
+        "dropped_frac": 1.0 - jnp.mean(keep.astype(jnp.float32)),
+    }
+    return out.astype(x.dtype), aux
+
+
+def _slot_gate(gate_vals: jax.Array, keep: jax.Array, slot: jax.Array,
+               e: int, cap: int) -> jax.Array:
+    """Gate weight aligned with the [E*C] slot table rows."""
+    flat_g = gate_vals.reshape(-1)
+    g = jnp.zeros((e * cap + 1,), flat_g.dtype).at[slot].set(
+        jnp.where(keep, flat_g, 0.0), mode="drop")
+    return g[:-1].reshape(e, cap).reshape(-1)

@@ -1,0 +1,175 @@
+"""Mamba2 (SSD) block: chunked-parallel training, O(1) recurrent decode.
+
+The selective state-space recurrence with scalar-per-head decay
+
+    h_t = exp(dt_t * A_h) h_{t-1} + dt_t * (B_t (x) x_t)
+    y_t = C_t . h_t + D_h x_t
+
+is computed chunk-parallel for training/prefill (intra-chunk
+quasi-attention + inter-chunk state carry via ``lax.scan``) and as the
+plain recurrence for decode.  B/C are a single shared group (G=1).
+This is the sub-quadratic path that makes the hybrid family runnable at
+524k context.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import KeyGen, dense_init, rms_norm, shard
+
+CHUNK = 256
+
+
+class SSMState(NamedTuple):
+    h: jax.Array        # [B, H, P, N] state
+    conv: jax.Array     # [B, W-1, d_conv] conv tail
+
+
+def dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    return d_inner, n_heads, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def init_ssm(kg: KeyGen, cfg: ModelConfig, dtype) -> Dict:
+    d = cfg.d_model
+    d_in, h, p_dim, n = dims(cfg)
+    d_conv = d_in + 2 * n          # conv runs over [x, B, C]
+    return {
+        "w_in": dense_init(kg(), (d, 2 * d_in + 2 * n + h), d, dtype),
+        "conv_w": dense_init(kg(), (cfg.conv_width, d_conv),
+                             cfg.conv_width, dtype),
+        "conv_b": jnp.zeros((d_conv,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": jnp.ones((d_in,), dtype),
+        "w_out": dense_init(kg(), (d_in, d), d_in, dtype),
+    }
+
+
+def _split_proj(p: Dict, u: jax.Array, cfg: ModelConfig):
+    d_in, h, p_dim, n = dims(cfg)
+    zxbcdt = jnp.einsum("btd,de->bte", u, p["w_in"])
+    z, xbc, dt = jnp.split(zxbcdt, [d_in, 2 * d_in + 2 * n], axis=-1)
+    return z, xbc, dt
+
+
+def _conv(p: Dict, xbc: jax.Array, tail: jax.Array) -> Tuple[jax.Array,
+                                                             jax.Array]:
+    """Causal depthwise conv over time; returns output and new tail."""
+    w = p["conv_w"]                          # [W, C]
+    width = w.shape[0]
+    padded = jnp.concatenate([tail, xbc], axis=1)
+    out = sum(
+        padded[:, i:padded.shape[1] - (width - 1 - i)] * w[i]
+        for i in range(width))
+    out = jax.nn.silu(out + p["conv_b"])
+    new_tail = padded[:, -(width - 1):]
+    return out, new_tail
+
+
+def _gates(p: Dict, dt: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])                 # [H], negative decay rates
+    return dt, a
+
+
+def ssm_forward(p: Dict, u: jax.Array, cfg: ModelConfig,
+                state: SSMState | None = None
+                ) -> Tuple[jax.Array, SSMState]:
+    """Full-sequence chunked forward.  u: [B, T, d]."""
+    b, t, _ = u.shape
+    d_in, h, p_dim, n = dims(cfg)
+    z, xbc, dt = _split_proj(p, u, cfg)
+    if state is None:
+        tail = jnp.zeros((b, cfg.conv_width - 1, xbc.shape[-1]), xbc.dtype)
+        h0 = jnp.zeros((b, h, p_dim, n), jnp.float32)
+    else:
+        tail, h0 = state.conv, state.h
+    xbc, new_tail = _conv(p, xbc, tail)
+    x, bmat, cmat = jnp.split(xbc, [d_in, d_in + n], axis=-1)
+    x = x.reshape(b, t, h, p_dim)
+    x = shard(x, "batch", None, "ssm_heads", None)
+    dtv, a = _gates(p, dt)
+
+    L = min(CHUNK, t)
+    assert t % L == 0, (t, L)
+    nc = t // L
+
+    def chunk(x_c, b_c, c_c, dt_c, h_in):
+        """One chunk: x [B,L,H,P], b/c [B,L,N], dt [B,L,H], h [B,H,P,N]."""
+        da = dt_c * a                                    # [B,L,H]
+        cum = jnp.cumsum(da, axis=1)                     # log-decay prefix
+        # intra-chunk quasi-attention
+        cb = jnp.einsum("bln,bsn->bls", c_c, b_c)        # [B,L,L]
+        rel = cum[:, :, None] - cum[:, None]             # [B,L,L,H]
+        tri = jnp.tril(jnp.ones((L, L), bool))
+        w_att = jnp.where(tri[None, :, :, None], jnp.exp(rel), 0.0)
+        w_att = w_att * cb[..., None]                    # [B,L,L,H]
+        dx = x_c * dt_c[..., None]                       # [B,L,H,P]
+        y_intra = jnp.einsum("blsh,bshp->blhp",
+                             w_att.astype(x_c.dtype), dx)
+        # inter-chunk contribution from the carried state
+        y_inter = jnp.einsum("bln,bhpn->blhp", c_c, h_in) \
+            * jnp.exp(cum).transpose(0, 1, 2)[..., None]
+        # state update
+        dec_end = jnp.exp(cum[:, -1])                    # [B,H]
+        w_state = jnp.exp(cum[:, -1:, :] - cum)          # [B,L,H]
+        h_out = h_in * dec_end[:, :, None, None] + jnp.einsum(
+            "blhp,bln,blh->bhpn", dx.astype(jnp.float32),
+            b_c.astype(jnp.float32), w_state)
+        return (y_intra + y_inter).astype(x_c.dtype), h_out
+
+    def scan_body(h_c, inp):
+        x_c, b_c, c_c, dt_c = inp
+        y, h_next = chunk(x_c, b_c, c_c, dt_c, h_c)
+        return h_next, y
+
+    resh = lambda v, feat: v.reshape(b, nc, L, *feat).swapaxes(0, 1)
+    xs = (resh(x, (h, p_dim)), resh(bmat, (n,)), resh(cmat, (n,)),
+          resh(dtv, (h,)))
+    h_fin, ys = jax.lax.scan(scan_body, h0, xs)
+    y = ys.swapaxes(0, 1).reshape(b, t, h, p_dim)
+    y = y + x * p["d_skip"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(b, t, d_in) * jax.nn.silu(z)
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bte,ed->btd", y, p["w_out"])
+    return shard(out, "batch", None, "model"), SSMState(h=h_fin,
+                                                        conv=new_tail)
+
+
+def ssm_decode(p: Dict, u: jax.Array, cfg: ModelConfig,
+               state: SSMState) -> Tuple[jax.Array, SSMState]:
+    """Single-token recurrent step.  u: [B, 1, d]."""
+    b = u.shape[0]
+    d_in, h, p_dim, n = dims(cfg)
+    z, xbc, dt = _split_proj(p, u, cfg)
+    xbc, new_tail = _conv(p, xbc, state.conv)
+    x, bmat, cmat = jnp.split(xbc, [d_in, d_in + n], axis=-1)
+    x = x.reshape(b, 1, h, p_dim)[:, 0]                  # [B,H,P]
+    dtv, a = _gates(p, dt)
+    dtv = dtv[:, 0]                                      # [B,H]
+    decay = jnp.exp(dtv * a)                             # [B,H]
+    h_new = state.h * decay[:, :, None, None] + jnp.einsum(
+        "bhp,bn,bh->bhpn", x.astype(jnp.float32),
+        bmat[:, 0].astype(jnp.float32), dtv)
+    y = jnp.einsum("bn,bhpn->bhp", cmat[:, 0], h_new.astype(x.dtype))
+    y = y + x * p["d_skip"][None, :, None].astype(x.dtype)
+    y = y.reshape(b, 1, d_in) * jax.nn.silu(z)
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bte,ed->btd", y, p["w_out"])
+    return shard(out, "batch", None, "model"), SSMState(h=h_new,
+                                                        conv=new_tail)
+
+
+def init_state(cfg: ModelConfig, batch: int, dtype) -> SSMState:
+    d_in, h, p_dim, n = dims(cfg)
+    return SSMState(
+        h=jnp.zeros((batch, h, p_dim, n), jnp.float32),
+        conv=jnp.zeros((batch, cfg.conv_width - 1, d_in + 2 * n), dtype),
+    )

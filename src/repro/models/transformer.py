@@ -1,0 +1,688 @@
+"""Model assembly for the assigned architecture pool.
+
+One functional API over six families (dense / moe / hybrid / ssm /
+encdec / vlm):
+
+    params = init_params(cfg, key)
+    loss, metrics = loss_fn(params, cfg, batch)          # training
+    logits, cache = prefill(params, cfg, tokens, extra)  # serving
+    logits, cache = decode_step(params, cfg, cache, tokens)
+
+Homogeneous layer stacks are stacked ``[L, ...]`` and executed with
+``lax.scan`` (compact HLO, fast 512-device compiles).  Heterogeneous
+interleaves run as grouped scans: zamba2 is 14 groups of [shared-attn;
+6 x mamba2], xLSTM is groups of [7 x mLSTM; sLSTM].  Prefill collects
+per-layer roped K/V as scan outputs; decode carries per-layer caches as
+scanned xs/ys.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import mlp as mlp_lib
+from repro.models import ssm as ssm_lib
+from repro.models import xlstm as xlstm_lib
+from repro.models.common import (
+    KeyGen,
+    dense_init,
+    embed_init,
+    rms_norm,
+    shard,
+)
+
+MAX_ROPE_POS = 1 << 20    # covers 524k decode with headroom
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_layer(kg: KeyGen, cfg: ModelConfig, kind: str, dt) -> Dict:
+    p: Dict[str, Any] = {"ln1": jnp.ones((cfg.d_model,), dt)}
+    if kind == "attn_mlp":
+        p["attn"] = attn_lib.init_attention(kg, cfg, dt)
+        p["ln2"] = jnp.ones((cfg.d_model,), dt)
+        p["mlp"] = mlp_lib.init_mlp(kg, cfg.d_model, cfg.d_ff, dt)
+    elif kind == "attn_moe":
+        p["attn"] = attn_lib.init_attention(kg, cfg, dt)
+        p["ln2"] = jnp.ones((cfg.d_model,), dt)
+        p["moe"] = moe_lib.init_moe(kg, cfg, dt)
+    elif kind == "mamba":
+        p["ssm"] = ssm_lib.init_ssm(kg, cfg, dt)
+    elif kind == "mlstm":
+        p["mlstm"] = xlstm_lib.init_mlstm(kg, cfg, dt)
+    elif kind == "slstm":
+        p["slstm"] = xlstm_lib.init_slstm(kg, cfg, dt)
+    elif kind == "cross":
+        p["attn"] = attn_lib.init_attention(kg, cfg, dt, cross=True)
+        p["ln2"] = jnp.ones((cfg.d_model,), dt)
+        p["mlp"] = mlp_lib.init_mlp(kg, cfg.d_model, cfg.d_ff, dt)
+        p["gate_attn"] = jnp.zeros((), jnp.float32)
+        p["gate_mlp"] = jnp.zeros((), jnp.float32)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def _stack_layers(kg: KeyGen, cfg: ModelConfig, kind: str, n: int,
+                  dt) -> Dict:
+    layers = [_init_layer(kg, cfg, kind, dt) for _ in range(n)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+
+
+def _hybrid_groups(cfg: ModelConfig) -> Tuple[int, int, int]:
+    """(n_full_groups, group_size, remainder) for the zamba2 stack."""
+    g = cfg.attn_every
+    return cfg.n_layers // g, g, cfg.n_layers % g
+
+
+def _xlstm_groups(cfg: ModelConfig) -> Tuple[int, int]:
+    """(n_slstm, mlstm_per_group)."""
+    every = cfg.slstm_every or (cfg.n_layers + 1)
+    n_s = cfg.n_layers // every
+    return n_s, every - 1
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Dict:
+    kg = KeyGen(key)
+    dt = _dtype(cfg)
+    p: Dict[str, Any] = {
+        "tok_embed": embed_init(kg(), (cfg.vocab, cfg.d_model), dt),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(
+            kg(), (cfg.d_model, cfg.vocab), cfg.d_model, dt)
+
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        kind = "attn_moe" if fam == "moe" else "attn_mlp"
+        p["layers"] = _stack_layers(kg, cfg, kind, cfg.n_layers, dt)
+    elif fam == "hybrid":
+        p["layers"] = _stack_layers(kg, cfg, "mamba", cfg.n_layers, dt)
+        p["shared_attn"] = _init_layer(kg, cfg, "attn_mlp", dt)
+    elif fam == "ssm":
+        n_s, _ = _xlstm_groups(cfg)
+        p["layers"] = _stack_layers(
+            kg, cfg, "mlstm", cfg.n_layers - n_s, dt)
+        if n_s:
+            p["slstm_layers"] = _stack_layers(kg, cfg, "slstm", n_s, dt)
+    elif fam == "encdec":
+        p["enc_embed_proj"] = dense_init(
+            kg(), (cfg.d_model, cfg.d_model), cfg.d_model, dt)
+        p["enc_layers"] = _stack_layers(
+            kg, cfg, "attn_mlp", cfg.n_enc_layers, dt)
+        p["enc_norm"] = jnp.ones((cfg.d_model,), dt)
+        p["layers"] = _stack_layers(kg, cfg, "attn_mlp", cfg.n_layers, dt)
+        p["cross_layers"] = _stack_layers(
+            kg, cfg, "cross", cfg.n_layers, dt)
+    elif fam == "vlm":
+        p["img_proj"] = dense_init(
+            kg(), (cfg.vision_dim, cfg.d_model), cfg.vision_dim, dt)
+        p["layers"] = _stack_layers(kg, cfg, "attn_mlp", cfg.n_layers, dt)
+        n_cross = cfg.n_layers // cfg.cross_attn_every
+        p["cross_layers"] = _stack_layers(kg, cfg, "cross", n_cross, dt)
+    else:
+        raise ValueError(fam)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# layer bodies
+# ---------------------------------------------------------------------------
+
+def _attn_block(pl: Dict, x, cfg, rope, window=0, return_kv=False):
+    res = attn_lib.self_attention(
+        pl["attn"], rms_norm(x, pl["ln1"], cfg.norm_eps), cfg, rope,
+        window=window, return_kv=return_kv)
+    h, kv = res if return_kv else (res, None)
+    x = x + h
+    if "moe" in pl:
+        h, aux = moe_lib.moe(pl["moe"],
+                             rms_norm(x, pl["ln2"], cfg.norm_eps), cfg)
+    else:
+        h = mlp_lib.mlp(pl["mlp"], rms_norm(x, pl["ln2"], cfg.norm_eps))
+        aux = {}
+    out = x + h
+    if cfg.seq_parallel:
+        # Megatron-SP: the residual stream lives sequence-sharded, so
+        # the per-block psums lower to reduce-scatter (+ all-gather at
+        # the next projection) — half the all-reduce ring bytes.
+        out = shard(out, "batch", "seq_sp", None)
+    return out, aux, kv
+
+
+def _attn_block_decode(pl: Dict, x, cache, pos, cfg, rope, window=0):
+    h, cache = attn_lib.decode_attention(
+        pl["attn"], rms_norm(x, pl["ln1"], cfg.norm_eps), cache, pos,
+        cfg, rope, window=window)
+    x = x + h
+    if "moe" in pl:
+        h, _ = moe_lib.moe(pl["moe"],
+                           rms_norm(x, pl["ln2"], cfg.norm_eps), cfg)
+    else:
+        h = mlp_lib.mlp(pl["mlp"], rms_norm(x, pl["ln2"], cfg.norm_eps))
+    return x + h, cache
+
+
+def _cross_block(pl: Dict, x, enc_kv, cfg, gated: bool):
+    h = attn_lib.cross_attention(
+        pl["attn"], rms_norm(x, pl["ln1"], cfg.norm_eps), enc_kv, cfg)
+    if gated:
+        h = h * jnp.tanh(pl["gate_attn"]).astype(h.dtype)
+    x = x + h
+    h = mlp_lib.mlp(pl["mlp"], rms_norm(x, pl["ln2"], cfg.norm_eps))
+    if gated:
+        h = h * jnp.tanh(pl["gate_mlp"]).astype(h.dtype)
+    return x + h
+
+
+def _remat(fn):
+    return jax.checkpoint(
+        fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+
+# ---------------------------------------------------------------------------
+# full-sequence forward
+# ---------------------------------------------------------------------------
+
+class ForwardOut(NamedTuple):
+    hidden: jax.Array
+    aux: Dict[str, jax.Array]
+    kv: Any           # per-layer roped K/V (prefill mode) or None
+    states: Any       # recurrent states (hybrid/ssm prefill) or None
+
+
+def forward(params: Dict, cfg: ModelConfig, tokens: jax.Array,
+            extra: Optional[Dict[str, jax.Array]] = None,
+            collect: bool = False) -> ForwardOut:
+    """Full-sequence forward.  ``collect=True`` gathers decode caches."""
+    extra = extra or {}
+    dt = _dtype(cfg)
+    b, t = tokens.shape
+    x = params["tok_embed"][tokens]
+    x = shard(x, "batch", None, "model")
+    rope = attn_lib.make_rope(cfg, max(t, 1))
+    fam = cfg.family
+    aux: Dict[str, jax.Array] = {}
+    kv_out, states_out = None, None
+
+    if fam in ("dense", "moe"):
+        def body(carry, pl):
+            y, a, kv = _attn_block(pl, carry, cfg, rope,
+                                   return_kv=collect)
+            return y, (a, kv) if collect else a
+        x, ys = jax.lax.scan(_remat(body), x, params["layers"])
+        auxs = ys[0] if collect else ys
+        if collect:
+            kv_out = ys[1]
+        if fam == "moe":
+            aux = {k: jnp.mean(v) for k, v in auxs.items()}
+
+    elif fam == "hybrid":
+        x, kv_out, states_out = _hybrid_forward(
+            params, cfg, x, rope, collect)
+
+    elif fam == "ssm":
+        x, states_out = _xlstm_forward(params, cfg, x, collect)
+
+    elif fam == "encdec":
+        rope = attn_lib.make_rope(cfg, max(t, cfg.enc_seq))
+        enc_out = _encode(params, cfg, extra["enc_frames"], rope)
+        enc_kvs = _cross_kvs(params["cross_layers"], enc_out, cfg)
+
+        def body(carry, inp):
+            pl, cl, ekv = inp
+            y, _, kv = _attn_block(pl, carry, cfg, rope,
+                                   return_kv=collect)
+            y = _cross_block(cl, y, ekv, cfg, gated=False)
+            return y, kv
+        x, kv_out = jax.lax.scan(
+            _remat(body), x,
+            (params["layers"], params["cross_layers"], enc_kvs))
+        states_out = enc_kvs
+
+    elif fam == "vlm":
+        img = jnp.einsum("bnv,vd->bnd",
+                         extra["image_embeds"].astype(dt),
+                         params["img_proj"])
+        img_kvs = _cross_kvs(params["cross_layers"], img, cfg)
+        every = cfg.cross_attn_every
+
+        def body(carry, inp):
+            i, pl = inp
+            y, _, kv = _attn_block(pl, carry, cfg, rope,
+                                   return_kv=collect)
+
+            def with_cross(z):
+                ci = i // every
+                cl = jax.tree.map(lambda a: a[ci],
+                                  params["cross_layers"])
+                ckv = jax.tree.map(lambda a: a[ci], img_kvs)
+                return _cross_block(cl, z, ckv, cfg, gated=True)
+            y = jax.lax.cond((i + 1) % every == 0, with_cross,
+                             lambda z: z, y)
+            return y, kv
+        idx = jnp.arange(cfg.n_layers)
+        x, kv_out = jax.lax.scan(_remat(body), x,
+                                 (idx, params["layers"]))
+        states_out = img_kvs
+    else:
+        raise ValueError(fam)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return ForwardOut(hidden=x, aux=aux, kv=kv_out, states=states_out)
+
+
+def _hybrid_forward(params, cfg, x, rope, collect):
+    """Grouped scan: [shared-attn; G x mamba] x n_groups (+ remainder)."""
+    n_g, g, rem = _hybrid_groups(cfg)
+    shared = params["shared_attn"]
+    window = cfg.window if cfg.long_attention == "window" else 0
+
+    def mamba_body(carry, pl):
+        y, st = ssm_lib.ssm_forward(pl["ssm"], carry, cfg)
+        out = carry + y
+        if cfg.seq_parallel:
+            out = shard(out, "batch", "seq_sp", None)
+        return out, st
+
+    def group_body(carry, grp_params):
+        y, _, kv = _attn_block(shared, carry, cfg, rope, window=window,
+                               return_kv=collect)
+        y, sts = jax.lax.scan(_remat(mamba_body), y, grp_params)
+        return y, (kv, sts)
+
+    main = jax.tree.map(
+        lambda a: a[:n_g * g].reshape(n_g, g, *a.shape[1:]),
+        params["layers"])
+    x, (kvs, states) = jax.lax.scan(_remat(group_body), x, main)
+    states = jax.tree.map(
+        lambda a: a.reshape(n_g * g, *a.shape[2:]), states)
+    all_states = [states]
+    kv_list = [kvs] if collect else None
+    if rem:
+        x, _, kv = _attn_block(shared, x, cfg, rope, window=window,
+                               return_kv=collect)
+        tail = jax.tree.map(lambda a: a[n_g * g:], params["layers"])
+        x, sts = jax.lax.scan(_remat(mamba_body), x, tail)
+        all_states.append(sts)
+        if collect:
+            kv_list.append(jax.tree.map(lambda a: a[None], kv))
+    states = jax.tree.map(lambda *xs: jnp.concatenate(xs), *all_states) \
+        if len(all_states) > 1 else all_states[0]
+    kvs = (jax.tree.map(lambda *xs: jnp.concatenate(xs), *kv_list)
+           if collect and len(kv_list) > 1 else
+           (kv_list[0] if collect else None))
+    return x, kvs, states
+
+
+def _xlstm_forward(params, cfg, x, collect):
+    n_s, per_group = _xlstm_groups(cfg)
+
+    def m_body(carry, pl):
+        out = xlstm_lib.mlstm_parallel(
+            pl["mlstm"], rms_norm(carry, pl["ln1"], cfg.norm_eps), cfg,
+            return_state=collect)
+        h, st = out if collect else (out, None)
+        y = carry + h
+        if cfg.seq_parallel:
+            y = shard(y, "batch", "seq_sp", None)
+        return y, st
+
+    if n_s == 0:
+        x, sts = jax.lax.scan(_remat(m_body), x, params["layers"])
+        return x, {"mlstm": sts, "slstm": None}
+    m_states, s_states = [], []
+    for gidx in range(n_s):
+        grp = jax.tree.map(
+            lambda a: a[gidx * per_group:(gidx + 1) * per_group],
+            params["layers"])
+        x, sts = jax.lax.scan(_remat(m_body), x, grp)
+        m_states.append(sts)
+        sl = jax.tree.map(lambda a: a[gidx], params["slstm_layers"])
+        h, s_st = xlstm_lib.slstm_forward(
+            sl["slstm"], rms_norm(x, sl["ln1"], cfg.norm_eps), cfg)
+        x = x + h
+        s_states.append(s_st)
+    n_used = n_s * per_group
+    if (cfg.n_layers - n_s) - n_used > 0:
+        rest = jax.tree.map(lambda a: a[n_used:], params["layers"])
+        x, sts = jax.lax.scan(_remat(m_body), x, rest)
+        m_states.append(sts)
+    if not collect:
+        return x, None
+    return x, {
+        "mlstm": jax.tree.map(lambda *xs: jnp.concatenate(xs), *m_states)
+        if len(m_states) > 1 else m_states[0],
+        "slstm": _stack_tree(s_states) if s_states else None,
+    }
+
+
+def _encode(params, cfg, frames, rope):
+    """Bidirectional encoder over (stub) audio frame embeddings."""
+    x = jnp.einsum("btd,de->bte", frames.astype(_dtype(cfg)),
+                   params["enc_embed_proj"])
+    x = shard(x, "batch", None, "model")
+
+    def body(carry, pl):
+        xn = rms_norm(carry, pl["ln1"], cfg.norm_eps)
+        q = attn_lib._project_q(pl["attn"], xn, cfg)
+        k, v = attn_lib._project_kv(pl["attn"], xn, cfg)
+        cos, sin = rope
+        q = attn_lib.apply_rope(q, cos, sin)
+        k = attn_lib.apply_rope(k, cos, sin)
+        h = attn_lib._sdpa(q, k, v, None, cfg.n_heads // cfg.n_kv_heads)
+        h = jnp.einsum("bthk,hkd->btd", h, pl["attn"]["wo"])
+        y = carry + h
+        h = mlp_lib.mlp(pl["mlp"], rms_norm(y, pl["ln2"], cfg.norm_eps))
+        return y + h, None
+
+    x, _ = jax.lax.scan(_remat(body), x, params["enc_layers"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _cross_kvs(cross_layers, states, cfg):
+    """Precompute encoder/image K,V for every cross-attention layer."""
+    def kv(pl):
+        return attn_lib.encoder_kv(pl["attn"], states, cfg)
+    return jax.vmap(kv)(cross_layers)
+
+
+def _stack_tree(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+# ---------------------------------------------------------------------------
+# training loss
+# ---------------------------------------------------------------------------
+
+def loss_fn(params: Dict, cfg: ModelConfig, batch: Dict[str, jax.Array]
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    out = forward(params, cfg, batch["tokens"],
+                  {k: v for k, v in batch.items()
+                   if k not in ("tokens", "labels")})
+    head = params.get("lm_head")
+    head = params["tok_embed"].T if head is None else head
+    logits = jnp.einsum("btd,dv->btv", out.hidden, head)
+    logits = shard(logits, "batch", None, "vocab").astype(jnp.float32)
+    labels = batch["labels"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[..., None],
+                               axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    nll = jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    loss = nll
+    metrics = {"nll": nll}
+    if "load_balance" in out.aux:
+        loss = loss + 0.01 * out.aux["load_balance"] \
+            + 1e-3 * out.aux["router_z"]
+        metrics.update(out.aux)
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + single-token decode
+# ---------------------------------------------------------------------------
+
+def _attn_cache_len(cfg: ModelConfig, max_len: int) -> int:
+    if cfg.long_attention == "window":
+        return min(max_len, cfg.window)
+    return max_len
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    """Allocate the family-appropriate decode cache (zeros)."""
+    dt = _dtype(cfg)
+    cache: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    fam = cfg.family
+    kv_len = _attn_cache_len(cfg, max_len)
+    if fam in ("dense", "moe", "encdec", "vlm"):
+        cache["attn"] = _stack_tree(
+            [attn_lib.init_cache(cfg, batch, kv_len, dt)
+             for _ in range(cfg.n_layers)])
+    if fam == "hybrid":
+        n_g, g, rem = _hybrid_groups(cfg)
+        n_apps = n_g + (1 if rem else 0)
+        cache["attn"] = _stack_tree(
+            [attn_lib.init_cache(cfg, batch, min(kv_len, cfg.window)
+                                 if cfg.long_attention == "window"
+                                 else kv_len, dt)
+             for _ in range(n_apps)])
+        cache["ssm"] = _stack_tree(
+            [ssm_lib.init_state(cfg, batch, dt)
+             for _ in range(cfg.n_layers)])
+    if fam == "ssm":
+        n_s, _ = _xlstm_groups(cfg)
+        cache["mlstm"] = _stack_tree(
+            [xlstm_lib.init_mlstm_state(cfg, batch)
+             for _ in range(cfg.n_layers - n_s)])
+        if n_s:
+            cache["slstm"] = _stack_tree(
+                [xlstm_lib.init_slstm_state(cfg, batch)
+                 for _ in range(n_s)])
+    return cache
+
+
+def prefill(params: Dict, cfg: ModelConfig, tokens: jax.Array,
+            extra: Optional[Dict[str, jax.Array]] = None,
+            max_len: Optional[int] = None) -> Tuple[jax.Array, Dict]:
+    """Process the prompt, build the decode cache, return last logits."""
+    extra = extra or {}
+    b, t = tokens.shape
+    max_len = max_len or t
+    out = forward(params, cfg, tokens, extra, collect=True)
+    head = params.get("lm_head")
+    head = params["tok_embed"].T if head is None else head
+    logits = jnp.einsum("bd,dv->bv", out.hidden[:, -1], head)
+    cache = init_decode_cache(cfg, b, max_len)
+    cache["pos"] = jnp.full((), t, jnp.int32)
+    fam = cfg.family
+    if out.kv is not None and "attn" in cache:
+        k, v = out.kv
+        kv_len = cache["attn"]["k"].shape[2]
+        take = min(t, kv_len)
+        dus = lambda c, u: jax.lax.dynamic_update_slice_in_dim(
+            c, u, 0, axis=2)
+        if cfg.kv_cache_dtype == "int8":
+            kq, ks = attn_lib.quantize_kv(k)
+            vq, vs = attn_lib.quantize_kv(v)
+            cache["attn"] = {
+                "k": dus(cache["attn"]["k"], kq[:, :, t - take:t]),
+                "v": dus(cache["attn"]["v"], vq[:, :, t - take:t]),
+                "k_scale": dus(cache["attn"]["k_scale"],
+                               ks[:, :, t - take:t]),
+                "v_scale": dus(cache["attn"]["v_scale"],
+                               vs[:, :, t - take:t]),
+            }
+        else:
+            cache["attn"] = {
+                "k": dus(cache["attn"]["k"], k[:, :, t - take:t]),
+                "v": dus(cache["attn"]["v"], v[:, :, t - take:t]),
+            }
+    if fam == "hybrid":
+        cache["ssm"] = out.states
+    if fam == "ssm":
+        cache["mlstm"] = out.states["mlstm"]
+        if out.states["slstm"] is not None:
+            cache["slstm"] = out.states["slstm"]
+    if fam in ("encdec", "vlm"):
+        cache["cross_kv"] = out.states
+    return logits.astype(jnp.float32), cache
+
+
+def decode_step(params: Dict, cfg: ModelConfig, cache: Dict,
+                tokens: jax.Array,
+                extra: Optional[Dict[str, jax.Array]] = None
+                ) -> Tuple[jax.Array, Dict]:
+    """One decode step.  tokens: [B, 1] -> logits [B, vocab]."""
+    extra = extra or {}
+    pos = cache["pos"]
+    x = params["tok_embed"][tokens]
+    x = shard(x, "batch", None, "model")
+    rope = attn_lib.make_rope(cfg, MAX_ROPE_POS)
+    fam = cfg.family
+    new_cache = dict(cache)
+    window = cfg.window if cfg.long_attention == "window" else 0
+
+    if fam in ("dense", "moe"):
+        def body(carry, inp):
+            pl, c = inp
+            y, c2 = _attn_block_decode(pl, carry, c, pos, cfg, rope,
+                                       window=window)
+            return y, c2
+        x, new_attn = jax.lax.scan(
+            body, x, (params["layers"], cache["attn"]))
+        new_cache["attn"] = new_attn
+
+    elif fam == "hybrid":
+        x, new_cache = _hybrid_decode(params, cfg, x, cache, new_cache,
+                                      pos, rope)
+    elif fam == "ssm":
+        x, new_cache = _xlstm_decode(params, cfg, x, cache, new_cache)
+    elif fam in ("encdec", "vlm"):
+        x, new_cache = _crossdec_step(params, cfg, x, cache, new_cache,
+                                      pos, rope, window)
+    else:
+        raise ValueError(fam)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head")
+    head = params["tok_embed"].T if head is None else head
+    logits = jnp.einsum("btd,dv->btv", x, head)
+    logits = shard(logits, "batch", None, "vocab")
+    new_cache["pos"] = pos + 1
+    return logits[:, 0].astype(jnp.float32), new_cache
+
+
+def _hybrid_decode(params, cfg, x, cache, new_cache, pos, rope):
+    n_g, g, rem = _hybrid_groups(cfg)
+    shared = params["shared_attn"]
+    window = cfg.window if cfg.long_attention == "window" else 0
+
+    def mamba_body(carry, inp):
+        pl, st = inp
+        y, st2 = ssm_lib.ssm_decode(pl["ssm"], carry, cfg, st)
+        return carry + y, st2
+
+    def group_body(carry, inp):
+        grp_params, attn_c, ssm_c = inp
+        y, attn_c2 = _attn_block_decode(shared, carry, attn_c, pos, cfg,
+                                        rope, window=window)
+        y, ssm_c2 = jax.lax.scan(mamba_body, y, (grp_params, ssm_c))
+        return y, (attn_c2, ssm_c2)
+
+    main_p = jax.tree.map(
+        lambda a: a[:n_g * g].reshape(n_g, g, *a.shape[1:]),
+        params["layers"])
+    main_s = jax.tree.map(
+        lambda a: a[:n_g * g].reshape(n_g, g, *a.shape[1:]),
+        cache["ssm"])
+    main_attn = jax.tree.map(lambda a: a[:n_g], cache["attn"])
+    x, (new_attn, new_ssm) = jax.lax.scan(
+        group_body, x, (main_p, main_attn, main_s))
+    new_ssm = jax.tree.map(
+        lambda a: a.reshape(n_g * g, *a.shape[2:]), new_ssm)
+    if rem:
+        attn_c = jax.tree.map(lambda a: a[n_g], cache["attn"])
+        x, attn_c2 = _attn_block_decode(shared, x, attn_c, pos, cfg,
+                                        rope, window=window)
+        tail_p = jax.tree.map(lambda a: a[n_g * g:], params["layers"])
+        tail_s = jax.tree.map(lambda a: a[n_g * g:], cache["ssm"])
+        x, tail_s2 = jax.lax.scan(mamba_body, x, (tail_p, tail_s))
+        new_attn = jax.tree.map(
+            lambda a, u: jnp.concatenate([a, u[None]]), new_attn,
+            attn_c2)
+        new_ssm = jax.tree.map(
+            lambda a, u: jnp.concatenate([a, u]), new_ssm, tail_s2)
+    new_cache["attn"] = new_attn
+    new_cache["ssm"] = new_ssm
+    return x, new_cache
+
+
+def _xlstm_decode(params, cfg, x, cache, new_cache):
+    n_s, per_group = _xlstm_groups(cfg)
+
+    def m_body(carry, inp):
+        pl, st = inp
+        xn = rms_norm(carry, pl["ln1"], cfg.norm_eps)
+        h, st2 = xlstm_lib.mlstm_decode(pl["mlstm"], xn, cfg, st)
+        return carry + h, st2
+
+    if n_s == 0:
+        x, new_m = jax.lax.scan(m_body, x,
+                                (params["layers"], cache["mlstm"]))
+        new_cache["mlstm"] = new_m
+        return x, new_cache
+    new_m_states, new_s_states = [], []
+    for gidx in range(n_s):
+        sl_ = slice(gidx * per_group, (gidx + 1) * per_group)
+        grp = jax.tree.map(lambda a: a[sl_], params["layers"])
+        m_grp = jax.tree.map(lambda a: a[sl_], cache["mlstm"])
+        x, new_m = jax.lax.scan(m_body, x, (grp, m_grp))
+        new_m_states.append(new_m)
+        sl = jax.tree.map(lambda a: a[gidx], params["slstm_layers"])
+        s_st = jax.tree.map(lambda a: a[gidx], cache["slstm"])
+        h, s2 = xlstm_lib.slstm_forward(
+            sl["slstm"], rms_norm(x, sl["ln1"], cfg.norm_eps), cfg,
+            state=s_st)
+        x = x + h
+        new_s_states.append(s2)
+    n_used = n_s * per_group
+    if (cfg.n_layers - n_s) - n_used > 0:
+        rest = jax.tree.map(lambda a: a[n_used:], params["layers"])
+        m_rest = jax.tree.map(lambda a: a[n_used:], cache["mlstm"])
+        x, new_m = jax.lax.scan(m_body, x, (rest, m_rest))
+        new_m_states.append(new_m)
+    new_cache["mlstm"] = jax.tree.map(
+        lambda *xs: jnp.concatenate(xs), *new_m_states) \
+        if len(new_m_states) > 1 else new_m_states[0]
+    new_cache["slstm"] = _stack_tree(new_s_states)
+    return x, new_cache
+
+
+def _crossdec_step(params, cfg, x, cache, new_cache, pos, rope, window):
+    fam = cfg.family
+    if fam == "encdec":
+        def body(carry, inp):
+            pl, cl, ekv, c = inp
+            y, c2 = _attn_block_decode(pl, carry, c, pos, cfg, rope,
+                                       window=window)
+            y = _cross_block(cl, y, ekv, cfg, gated=False)
+            return y, c2
+        x, new_attn = jax.lax.scan(
+            body, x, (params["layers"], params["cross_layers"],
+                      cache["cross_kv"], cache["attn"]))
+        new_cache["attn"] = new_attn
+        return x, new_cache
+    every = cfg.cross_attn_every
+
+    def body(carry, inp):
+        i, pl, c = inp
+        y, c2 = _attn_block_decode(pl, carry, c, pos, cfg, rope,
+                                   window=window)
+
+        def with_cross(z):
+            ci = i // every
+            cl = jax.tree.map(lambda a: a[ci], params["cross_layers"])
+            ckv = jax.tree.map(lambda a: a[ci], cache["cross_kv"])
+            return _cross_block(cl, z, ckv, cfg, gated=True)
+        y = jax.lax.cond((i + 1) % every == 0, with_cross,
+                         lambda z: z, y)
+        return y, c2
+    idx = jnp.arange(cfg.n_layers)
+    x, new_attn = jax.lax.scan(
+        body, x, (idx, params["layers"], cache["attn"]))
+    new_cache["attn"] = new_attn
+    return x, new_cache

@@ -1,0 +1,236 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallel+recurrent) and sLSTM.
+
+mLSTM training/prefill uses the stabilised parallel (quadratic) form;
+decode uses the O(1) recurrence over the matrix memory ``C`` — the
+sub-quadratic path that makes 524k-token decode runnable.  sLSTM keeps
+per-unit scalar memory with recurrent mixing and is evaluated with
+``lax.scan`` over time.  Blocks follow the xLSTM paper's pre-LN
+up/down-projection structure with a multiplicative gate branch.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import KeyGen, dense_init, rms_norm, shard
+
+
+class MLSTMState(NamedTuple):
+    c: jax.Array    # [B, H, K, V] matrix memory
+    n: jax.Array    # [B, H, K]
+    m: jax.Array    # [B, H]
+
+
+class SLSTMState(NamedTuple):
+    h: jax.Array    # [B, H, D]
+    c: jax.Array
+    n: jax.Array
+    m: jax.Array
+
+
+def _heads(cfg: ModelConfig) -> Tuple[int, int]:
+    h = cfg.n_heads
+    return h, cfg.d_model // h
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(kg: KeyGen, cfg: ModelConfig, dtype) -> Dict:
+    d = cfg.d_model
+    h, hd = _heads(cfg)
+    return {
+        "w_qkv": dense_init(kg(), (d, h, 3 * hd), d, dtype),
+        "w_if": dense_init(kg(), (d, h, 2), d, jnp.float32),
+        "b_if": jnp.concatenate(
+            [jnp.zeros((h, 1)), 3.0 * jnp.ones((h, 1))], -1
+        ).astype(jnp.float32),
+        "w_gate": dense_init(kg(), (d, d), d, dtype),
+        "norm": jnp.ones((h, hd), dtype),
+        "w_out": dense_init(kg(), (d, d), d, dtype),
+    }
+
+
+def _mlstm_proj(p: Dict, x: jax.Array, cfg: ModelConfig):
+    h, hd = _heads(cfg)
+    qkv = jnp.einsum("btd,dhe->bthe", x, p["w_qkv"])
+    q, k, v = jnp.split(qkv, 3, axis=-1)                  # [B,T,H,hd]
+    gates = jnp.einsum("btd,dhg->bthg",
+                       x.astype(jnp.float32), p["w_if"]) + p["b_if"]
+    i_pre, f_pre = gates[..., 0], gates[..., 1]           # [B,T,H]
+    return (shard(q, "batch", None, "ssm_heads", None),
+            shard(k, "batch", None, "ssm_heads", None),
+            shard(v, "batch", None, "ssm_heads", None), i_pre, f_pre)
+
+
+MLSTM_CHUNK = 256
+_M_INIT = -1e30
+
+
+def mlstm_parallel(p: Dict, x: jax.Array, cfg: ModelConfig,
+                   state: Optional[MLSTMState] = None,
+                   return_state: bool = False):
+    """Chunkwise-parallel stabilised form.  x: [B,T,d].
+
+    Intra-chunk: quadratic decay-weighted attention (L x L).  Inter-
+    chunk: the matrix memory (C, n, m) is carried by ``lax.scan``, so
+    peak memory is O(T*L) instead of O(T^2) — required at 32k prefill.
+    """
+    b, t, d = x.shape
+    h, hd = _heads(cfg)
+    q, k, v, i_pre, f_pre = _mlstm_proj(p, x, cfg)
+    k = k / jnp.sqrt(hd).astype(k.dtype)
+    log_f = jax.nn.log_sigmoid(f_pre)                     # [B,T,H]
+    if state is None:
+        state = init_mlstm_state(cfg, b)
+
+    L = min(MLSTM_CHUNK, t)
+    assert t % L == 0, (t, L)
+    nc = t // L
+    tri = jnp.tril(jnp.ones((L, L), bool))[None, :, :, None]
+
+    def chunk(carry: MLSTMState, inp):
+        q_c, k_c, v_c, i_c, lf_c = inp          # [B,L,H,*] / [B,L,H]
+        fc = jnp.cumsum(lf_c, axis=1)           # inclusive prefix
+        # intra-chunk log weights D[t,s] = F_t - F_s + i_s   (s <= t)
+        dmat = jnp.where(tri, fc[:, :, None] - fc[:, None] + i_c[:, None],
+                         _M_INIT)               # [B,L,L,H]
+        m_intra = jnp.max(dmat, axis=2)         # [B,L,H]
+        m_inter = fc + carry.m[:, None]         # [B,L,H]
+        m_t = jnp.maximum(m_intra, m_inter)
+        w = jnp.exp(dmat - m_t[:, :, None])
+        scores = jnp.einsum("blhk,bshk->blsh", q_c,
+                            k_c).astype(jnp.float32) * w
+        inter_scale = jnp.exp(m_inter - m_t)    # [B,L,H]
+        num = jnp.einsum("blsh,bshv->blhv", scores,
+                         v_c.astype(jnp.float32))
+        num = num + jnp.einsum("blhk,bhkv->blhv", q_c.astype(jnp.float32),
+                               carry.c) * inter_scale[..., None]
+        den = jnp.sum(scores, axis=2) + jnp.einsum(
+            "blhk,bhk->blh", q_c.astype(jnp.float32),
+            carry.n) * inter_scale
+        y = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+        # ---- state carry ----
+        f_tot = fc[:, -1]                       # [B,H]
+        m_out = jnp.maximum(f_tot + carry.m,
+                            jnp.max(fc[:, -1:] - fc + i_c, axis=1))
+        c_scale = jnp.exp(f_tot + carry.m - m_out)
+        s_scale = jnp.exp((fc[:, -1:] - fc + i_c) - m_out[:, None])
+        c_new = carry.c * c_scale[..., None, None] + jnp.einsum(
+            "blhk,blhv,blh->bhkv", k_c.astype(jnp.float32),
+            v_c.astype(jnp.float32), s_scale)
+        n_new = carry.n * c_scale[..., None] + jnp.einsum(
+            "blhk,blh->bhk", k_c.astype(jnp.float32), s_scale)
+        return MLSTMState(c_new, n_new, m_out), y.astype(x.dtype)
+
+    resh = lambda a: a.reshape(b, nc, L, *a.shape[2:]).swapaxes(0, 1)
+    final, ys = jax.lax.scan(
+        chunk, state, (resh(q), resh(k), resh(v), resh(i_pre), resh(log_f)))
+    out = ys.swapaxes(0, 1).reshape(b, t, h, hd)
+    out = _mlstm_out(p, out, x, cfg)
+    if return_state:
+        return out, final
+    return out
+
+
+def mlstm_decode(p: Dict, x: jax.Array, cfg: ModelConfig,
+                 state: MLSTMState) -> Tuple[jax.Array, MLSTMState]:
+    """One-token recurrence.  x: [B,1,d]."""
+    h, hd = _heads(cfg)
+    q, k, v, i_pre, f_pre = _mlstm_proj(p, x, cfg)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]                   # [B,H,hd]
+    i_pre, f_pre = i_pre[:, 0], f_pre[:, 0]               # [B,H]
+    log_f = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(log_f + state.m, i_pre)
+    f_s = jnp.exp(log_f + state.m - m_new)[..., None]
+    i_s = jnp.exp(i_pre - m_new)[..., None]
+    kf = k.astype(jnp.float32) / jnp.sqrt(hd)
+    c_new = state.c * f_s[..., None] + i_s[..., None] * (
+        kf[..., :, None] * v.astype(jnp.float32)[..., None, :])
+    n_new = state.n * f_s + i_s * kf
+    num = jnp.einsum("bhk,bhkv->bhv", q.astype(jnp.float32), c_new)
+    den = jnp.maximum(
+        jnp.abs(jnp.einsum("bhk,bhk->bh", q.astype(jnp.float32), n_new)),
+        jnp.exp(-m_new))
+    out = (num / den[..., None]).astype(x.dtype)[:, None]  # [B,1,H,hd]
+    return _mlstm_out(p, out, x, cfg), MLSTMState(c_new, n_new, m_new)
+
+
+def _mlstm_out(p: Dict, heads_out: jax.Array, x: jax.Array,
+               cfg: ModelConfig) -> jax.Array:
+    b, t = x.shape[:2]
+    heads_out = rms_norm(heads_out, p["norm"], cfg.norm_eps)
+    flat = heads_out.reshape(b, t, cfg.d_model)
+    gate = jax.nn.silu(jnp.einsum("btd,de->bte", x, p["w_gate"]))
+    out = jnp.einsum("bte,ed->btd", flat * gate, p["w_out"])
+    return shard(out, "batch", None, "model")
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int) -> MLSTMState:
+    h, hd = _heads(cfg)
+    return MLSTMState(
+        c=jnp.zeros((batch, h, hd, hd), jnp.float32),
+        n=jnp.zeros((batch, h, hd), jnp.float32),
+        m=jnp.full((batch, h), -1e30, jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(kg: KeyGen, cfg: ModelConfig, dtype) -> Dict:
+    d = cfg.d_model
+    h, hd = _heads(cfg)
+    return {
+        "w_x": dense_init(kg(), (d, h, 4 * hd), d, jnp.float32),
+        "r_h": dense_init(kg(), (h, hd, 4 * hd), hd, jnp.float32),
+        "bias": jnp.zeros((h, 4 * hd), jnp.float32),
+        "norm": jnp.ones((h, hd), dtype),
+        "w_out": dense_init(kg(), (d, d), d, dtype),
+    }
+
+
+def slstm_forward(p: Dict, x: jax.Array, cfg: ModelConfig,
+                  state: Optional[SLSTMState] = None
+                  ) -> Tuple[jax.Array, SLSTMState]:
+    """Recurrent scan over time.  x: [B,T,d]."""
+    b, t, d = x.shape
+    h, hd = _heads(cfg)
+    if state is None:
+        state = init_slstm_state(cfg, b)
+    xg = jnp.einsum("btd,dhe->bthe", x.astype(jnp.float32),
+                    p["w_x"]) + p["bias"]                  # [B,T,H,4hd]
+
+    def step(s: SLSTMState, xg_t):
+        rg = jnp.einsum("bhk,hke->bhe", s.h, p["r_h"])
+        g = xg_t + rg                                      # [B,H,4hd]
+        zi, ii, fi, oi = jnp.split(g, 4, axis=-1)
+        z = jnp.tanh(zi)
+        o = jax.nn.sigmoid(oi)
+        log_f = jax.nn.log_sigmoid(fi)
+        m_new = jnp.maximum(log_f + s.m, ii)
+        i_s = jnp.exp(ii - m_new)
+        f_s = jnp.exp(log_f + s.m - m_new)
+        c_new = f_s * s.c + i_s * z
+        n_new = jnp.maximum(f_s * s.n + i_s, 1e-6)
+        h_new = o * c_new / n_new
+        return SLSTMState(h_new, c_new, n_new, m_new), h_new
+
+    xg_t = xg.swapaxes(0, 1)                               # [T,B,H,4hd]
+    final, hs = jax.lax.scan(step, state, xg_t)
+    hs = hs.swapaxes(0, 1)                                 # [B,T,H,hd]
+    hs = rms_norm(hs.astype(x.dtype), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bte,ed->btd", hs.reshape(b, t, d), p["w_out"])
+    return shard(out, "batch", None, "model"), final
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int) -> SLSTMState:
+    h, hd = _heads(cfg)
+    zero = jnp.zeros((batch, h, hd), jnp.float32)
+    return SLSTMState(h=zero, c=zero, n=zero + 1e-6,
+                      m=jnp.full((batch, h, hd), -1e30, jnp.float32))

@@ -1,0 +1,2 @@
+"""Fleet runtime: AR scheduling of ML jobs on the chip fleet."""
+from repro.runtime.fleet import FleetJob, FleetScheduler, JobState, estimate_duration  # noqa: F401

@@ -1,0 +1,299 @@
+"""FleetScheduler: the paper's AR core managing TPU chips for ML jobs.
+
+Integration of the reproduction with the training/serving framework:
+the production fleet (2 pods x 256 chips) is the paper's multiprocessor
+system — PEs are chips.  Every training or serving run of an assigned
+architecture is an AR request: ``n_pe`` = the job's chip footprint,
+``t_du`` = estimated steps x roofline step time (from
+:mod:`repro.roofline.analysis`), ``t_r``/``t_dl`` from the user's SLO.
+Admission, placement and policy choice reuse :mod:`repro.core`
+unchanged — the scheduler engine is the deliverable, the fleet is its
+first production consumer.
+
+Fault tolerance (the general-deadline slack is what makes this work —
+the paper's central observation):
+
+* ``fail_chip``: the chip gets a repair reservation; every job holding
+  it has its reservation deleted and its *remaining* work (back to the
+  last checkpoint) re-submitted as a new AR request within the original
+  deadline.
+* ``report_straggler``: a job running slower than its reservation is
+  re-reserved with the stretched duration while its deadline slack
+  absorbs the slip.
+* ``rescale``: elastic re-reservation of the remaining work on a
+  different chip count (duration rescaled by the roofline model).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import itertools
+from typing import Dict, List, Optional
+
+from repro.configs import get_config, shape_by_name
+from repro.core import ARRequest, Policy, make_scheduler
+from repro.roofline import analysis as roof
+
+
+class JobState(str, enum.Enum):
+    REJECTED = "rejected"
+    RESERVED = "reserved"
+    RUNNING = "running"
+    DONE = "done"
+    FAILED = "failed"
+
+
+@dataclasses.dataclass
+class FleetJob:
+    job_id: int
+    arch: str
+    shape: str
+    n_chips: int
+    n_steps: int
+    submit_time: int
+    ready: int
+    deadline: int
+    state: JobState = JobState.RESERVED
+    t_start: int = -1
+    t_end: int = -1
+    chips: tuple = ()
+    checkpoint_interval: int = 600        # seconds of work per ckpt
+    work_done: int = 0                    # seconds of completed work
+    preemptions: int = 0
+
+    @property
+    def step_time(self) -> float:
+        return (self.t_end - self.t_start) / max(self.n_steps, 1)
+
+
+def estimate_duration(arch: str, shape_name: str, n_chips: int,
+                      n_steps: int, efficiency: float = 0.5) -> int:
+    """Roofline-model duration estimate for ``n_steps`` on ``n_chips``.
+
+    ``efficiency`` discounts peak (achieved fraction of roofline).
+    """
+    cfg = get_config(arch)
+    shape = shape_by_name(shape_name)
+    model = min(16, n_chips)
+    mesh = {"data": max(n_chips // model, 1), "model": model}
+    costs = roof.step_costs(cfg, shape, mesh)
+    terms = costs.terms(n_chips)
+    step_s = max(terms["compute_s"], terms["memory_s"],
+                 terms["collective_s"]) / efficiency
+    return max(int(step_s * n_steps) + 1, 60)
+
+
+class FleetScheduler:
+    def __init__(self, n_chips: int = 512,
+                 policy: Policy = Policy.PE_W,
+                 engine: str = "host",
+                 repair_seconds: int = 1800,
+                 restart_overhead: int = 120):
+        self.n_chips = n_chips
+        self.policy = policy
+        self.core = make_scheduler(n_chips, engine=engine)
+        self.repair_seconds = repair_seconds
+        self.restart_overhead = restart_overhead
+        self.jobs: Dict[int, FleetJob] = {}
+        self._ids = itertools.count()
+        self.now = 0
+        self.events: List[tuple] = []     # (time, kind, job_id) log
+
+    # ------------------------------------------------------------------
+    def advance(self, t: int) -> None:
+        """Move the fleet clock; complete reservations that finished."""
+        assert t >= self.now
+        self.now = t
+        for job in self.jobs.values():
+            if job.state in (JobState.RESERVED, JobState.RUNNING):
+                if job.t_start <= t and job.state == JobState.RESERVED:
+                    job.state = JobState.RUNNING
+                if job.t_end <= t:
+                    job.work_done = job.t_end - job.t_start
+                    job.state = JobState.DONE
+                    self.core.delete_allocation(
+                        job.t_start, job.t_end, list(job.chips))
+                    self.events.append((t, "complete", job.job_id))
+
+    # ------------------------------------------------------------------
+    def submit(self, arch: str, shape: str, n_chips: int,
+               n_steps: int, ready: Optional[int] = None,
+               deadline_slack: float = 2.0,
+               policy: Optional[Policy] = None) -> FleetJob:
+        """Admission-control one job; returns it (possibly REJECTED)."""
+        dur = estimate_duration(arch, shape, n_chips, n_steps)
+        ready = self.now if ready is None else ready
+        deadline = ready + int(dur * (1.0 + deadline_slack))
+        job = FleetJob(
+            job_id=next(self._ids), arch=arch, shape=shape,
+            n_chips=n_chips, n_steps=n_steps, submit_time=self.now,
+            ready=ready, deadline=deadline)
+        req = ARRequest(t_a=self.now, t_r=ready, t_du=dur,
+                        t_dl=deadline, n_pe=n_chips)
+        alloc = self.core.find_allocation(
+            req, policy or self.policy, t_now=self.now)
+        if alloc is None:
+            job.state = JobState.REJECTED
+            self.events.append((self.now, "reject", job.job_id))
+        else:
+            self.core.add_allocation(alloc.t_s, alloc.t_e,
+                                     list(alloc.pe_ids))
+            job.t_start, job.t_end = alloc.t_s, alloc.t_e
+            job.chips = alloc.pe_ids
+            self.events.append((self.now, "reserve", job.job_id))
+        self.jobs[job.job_id] = job
+        return job
+
+    # ------------------------------------------------------------------
+    def submit_malleable(self, arch: str, shape: str,
+                         chip_options: List[int], n_steps: int,
+                         ready: Optional[int] = None,
+                         deadline: Optional[int] = None) -> FleetJob:
+        """Malleable AR job (paper Section 7): the request's PE count is
+        not fixed.  Per the paper's proposal, the malleable requirement
+        is *translated into a group of rigid requests* (one per chip
+        count, with the duration rescaled by the roofline model) and
+        ``findAllocation`` evaluates each; the completion-time-earliest
+        feasible allocation wins (the "new criterion" the paper leaves
+        open — earliest finish maximises remaining fleet flexibility).
+        Each rigid variant is searched with FF so that the cross-
+        variant earliest-finish comparison is coherent.
+        """
+        ready = self.now if ready is None else ready
+        best = None           # (finish_time, alloc, n_chips, dur)
+        durations = {n: estimate_duration(arch, shape, n, n_steps)
+                     for n in chip_options}
+        dl = deadline if deadline is not None else \
+            ready + int(2.0 * max(durations.values()))
+        for n_chips in sorted(chip_options):
+            dur = durations[n_chips]
+            if ready + dur > dl:
+                continue      # this rigid variant cannot meet the SLO
+            req = ARRequest(t_a=self.now, t_r=ready, t_du=dur,
+                            t_dl=dl, n_pe=n_chips)
+            alloc = self.core.find_allocation(req, Policy.FF,
+                                              t_now=self.now)
+            if alloc is None:
+                continue
+            finish = alloc.t_s + dur
+            if best is None or finish < best[0]:
+                best = (finish, alloc, n_chips, dur)
+        job = FleetJob(
+            job_id=next(self._ids), arch=arch, shape=shape,
+            n_chips=best[2] if best else min(chip_options),
+            n_steps=n_steps, submit_time=self.now, ready=ready,
+            deadline=dl)
+        if best is None:
+            job.state = JobState.REJECTED
+            self.events.append((self.now, "reject-malleable",
+                                job.job_id))
+        else:
+            _, alloc, n_chips, dur = best
+            self.core.add_allocation(alloc.t_s, alloc.t_e,
+                                     list(alloc.pe_ids))
+            job.t_start, job.t_end = alloc.t_s, alloc.t_e
+            job.chips = alloc.pe_ids
+            self.events.append((self.now, "reserve-malleable",
+                                job.job_id))
+        self.jobs[job.job_id] = job
+        return job
+
+    # ------------------------------------------------------------------
+    def _release(self, job: FleetJob) -> None:
+        self.core.delete_allocation(job.t_start, job.t_end,
+                                    list(job.chips))
+        job.chips = ()
+
+    def _resubmit_remainder(self, job: FleetJob, extra_duration: int = 0,
+                            n_chips: Optional[int] = None) -> bool:
+        """Re-reserve the job's remaining work within its deadline."""
+        done = max(0, min(self.now, job.t_end) - job.t_start)
+        ckpt_done = (done // job.checkpoint_interval) \
+            * job.checkpoint_interval
+        total = job.t_end - job.t_start
+        remaining = total - ckpt_done + self.restart_overhead \
+            + extra_duration
+        n_chips = n_chips or job.n_chips
+        if n_chips != job.n_chips:
+            frac = remaining / max(total, 1)
+            full = estimate_duration(job.arch, job.shape, n_chips,
+                                     job.n_steps)
+            remaining = int(full * frac) + self.restart_overhead
+        if self.now + remaining > job.deadline:
+            job.state = JobState.FAILED
+            self.events.append((self.now, "deadline-miss", job.job_id))
+            return False
+        req = ARRequest(t_a=self.now, t_r=self.now, t_du=remaining,
+                        t_dl=job.deadline, n_pe=n_chips)
+        alloc = self.core.find_allocation(req, self.policy,
+                                          t_now=self.now)
+        if alloc is None:
+            job.state = JobState.FAILED
+            self.events.append((self.now, "no-capacity", job.job_id))
+            return False
+        self.core.add_allocation(alloc.t_s, alloc.t_e,
+                                 list(alloc.pe_ids))
+        job.t_start, job.t_end = alloc.t_s, alloc.t_e
+        job.chips = alloc.pe_ids
+        job.n_chips = n_chips
+        job.preemptions += 1
+        job.state = JobState.RESERVED if alloc.t_s > self.now \
+            else JobState.RUNNING
+        self.events.append((self.now, "re-reserve", job.job_id))
+        return True
+
+    # ------------------------------------------------------------------
+    def fail_chip(self, chip_id: int) -> List[int]:
+        """Hardware failure: repair-reserve the chip, migrate its jobs."""
+        affected = [j for j in self.jobs.values()
+                    if chip_id in j.chips
+                    and j.state in (JobState.RESERVED, JobState.RUNNING)]
+        for job in affected:
+            self._release(job)
+        # the chip is unavailable while under repair
+        self.core.add_allocation(
+            self.now, self.now + self.repair_seconds, [chip_id])
+        self.events.append((self.now, "chip-fail", chip_id))
+        migrated = []
+        for job in affected:
+            if self._resubmit_remainder(job):
+                migrated.append(job.job_id)
+        return migrated
+
+    def report_straggler(self, job_id: int,
+                         slowdown: float = 1.5) -> bool:
+        """The job is running ``slowdown``x slower than reserved:
+        stretch its reservation into the deadline slack."""
+        job = self.jobs[job_id]
+        if job.state not in (JobState.RUNNING, JobState.RESERVED):
+            return False
+        remaining = max(job.t_end - self.now, 0)
+        extra = int(remaining * (slowdown - 1.0))
+        self._release(job)
+        self.events.append((self.now, "straggler", job_id))
+        return self._resubmit_remainder(job, extra_duration=extra)
+
+    def rescale(self, job_id: int, new_n_chips: int) -> bool:
+        """Elastic scaling: move the remaining work to a new footprint."""
+        job = self.jobs[job_id]
+        if job.state not in (JobState.RUNNING, JobState.RESERVED):
+            return False
+        self._release(job)
+        self.events.append((self.now, "rescale", job_id))
+        return self._resubmit_remainder(job, n_chips=new_n_chips)
+
+    # ------------------------------------------------------------------
+    def utilisation(self, horizon: int) -> float:
+        area = sum(
+            (min(j.t_end, self.now + horizon) - max(j.t_start, self.now))
+            * j.n_chips
+            for j in self.jobs.values()
+            if j.state in (JobState.RESERVED, JobState.RUNNING)
+            and j.t_end > self.now)
+        return area / (self.n_chips * horizon)
+
+    def summary(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for j in self.jobs.values():
+            out[j.state.value] = out.get(j.state.value, 0) + 1
+        return out

@@ -1,0 +1,56 @@
+"""Serving-step factories: batched prefill and single-token decode.
+
+``serve_step`` for the ``decode_*`` shapes is one new token against a
+populated KV cache / recurrent state of ``seq_len`` context — exactly
+what the assignment's decode cells lower.  A minimal batched engine
+(`generate`) drives prefill+decode loops for the examples and tests;
+production batching policy (continuous batching, eviction) lives in
+runtime/fleet.py at the job level.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tf_lib
+
+
+def make_prefill_step(cfg: ModelConfig,
+                      max_len: Optional[int] = None) -> Callable:
+    def prefill_step(params, tokens, extra=None):
+        return tf_lib.prefill(params, cfg, tokens, extra,
+                              max_len=max_len or tokens.shape[1])
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig) -> Callable:
+    def decode_step(params, cache, tokens, extra=None):
+        return tf_lib.decode_step(params, cfg, cache, tokens, extra)
+    return decode_step
+
+
+def greedy_token(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+
+
+def generate(params, cfg: ModelConfig, prompt: jax.Array,
+             n_tokens: int, extra: Optional[Dict] = None,
+             jit: bool = True) -> jax.Array:
+    """Greedy generation: prefill the prompt then decode ``n_tokens``."""
+    b, t = prompt.shape
+    prefill_fn = make_prefill_step(cfg, max_len=t + n_tokens)
+    decode_fn = make_decode_step(cfg)
+    if jit:
+        prefill_fn = jax.jit(prefill_fn)
+        decode_fn = jax.jit(decode_fn)
+    logits, cache = prefill_fn(params, prompt, extra)
+    tok = greedy_token(logits)
+    out = [tok]
+    for _ in range(n_tokens - 1):
+        logits, cache = decode_fn(params, cache, tok, extra)
+        tok = greedy_token(logits)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

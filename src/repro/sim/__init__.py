@@ -1,0 +1,4 @@
+"""Discrete-event simulation of the paper's Section 6 experiments."""
+from repro.sim.metrics import SimResult, mean_ci95  # noqa: F401
+from repro.sim.simulator import run_policies, simulate  # noqa: F401
+from repro.sim.workload import WorkloadParams, generate  # noqa: F401

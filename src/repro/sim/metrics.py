@@ -1,0 +1,53 @@
+"""Performance metrics of Section 6.1: acceptance rate and slowdown."""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Sequence
+
+
+@dataclasses.dataclass
+class SimResult:
+    """Outcome of one simulation run."""
+
+    policy: str
+    n_jobs: int
+    n_accepted: int
+    slowdowns: List[float] = dataclasses.field(default_factory=list)
+    busy_area: float = 0.0          # accepted PE-seconds
+    span: float = 0.0               # makespan of the arrival stream
+    n_pe: int = 0
+    wall_seconds: float = 0.0       # scheduler wall time (data-structure cost)
+
+    @property
+    def acceptance_rate(self) -> float:
+        return self.n_accepted / max(self.n_jobs, 1)
+
+    @property
+    def avg_slowdown(self) -> float:
+        if not self.slowdowns:
+            return float("nan")
+        return sum(self.slowdowns) / len(self.slowdowns)
+
+    @property
+    def utilization(self) -> float:
+        denom = self.n_pe * max(self.span, 1.0)
+        return self.busy_area / denom
+
+    def summary(self) -> str:
+        return (f"{self.policy:8s} accept={self.acceptance_rate:.3f} "
+                f"slowdown={self.avg_slowdown:.3f} "
+                f"util={self.utilization:.3f} "
+                f"sched_wall={self.wall_seconds:.2f}s")
+
+
+def mean_ci95(values: Sequence[float]) -> tuple:
+    """(mean, half-width of the normal-approx 95% CI)."""
+    n = len(values)
+    if n == 0:
+        return float("nan"), float("nan")
+    mean = sum(values) / n
+    if n == 1:
+        return mean, float("nan")
+    var = sum((v - mean) ** 2 for v in values) / (n - 1)
+    return mean, 1.96 * math.sqrt(var / n)

@@ -1,0 +1,141 @@
+"""Feitelson-Lublin workload model with LANL-CM5 parameters (Section 6.1).
+
+Generates deadline-constrained AR requests the way the paper does:
+
+* **Sizes** — the two-stage uniform distribution over ``log2(size)``
+  with ``(ULow, UMed, UHi, Uprob) = (4.5, UMed, 10, 0.82)``; all jobs
+  parallel, sizes powers of two in ``[32, 1024]`` (LANL-CM5 partitions).
+* **Runtimes** — hyper-Gamma over ``ln(runtime)`` whose mixture weight
+  decreases with job size (size/runtime correlation), snapped to the
+  paper's six discrete values ``{60, 300, 900, 1800, 3600, 10800}`` s.
+* **Arrivals** — Gamma inter-arrivals modulated by a daily cycle (the
+  "combined model"), with the base rate calibrated so the *offered
+  load* at ``arrival_factor = 1`` hits ``target_load`` of the machine.
+  The ``arrival factor`` then rescales arrival times ``t -> t / af``
+  exactly as in the paper.
+* **AR/deadline factors** — ``t_r = t_a + artime_factor * U * t_du`` and
+  ``t_dl = t_r + (1 + deadline_factor * U) * t_du``.
+
+Calibration note (EXPERIMENTS.md §Fidelity): the paper inherits exact
+hyper-Gamma and arrival constants from Lublin's model fitted to the
+LANL-CM5 log, then modifies runtimes to the six discrete values.  Those
+exact constants are not recoverable from the paper text, so this module
+keeps the distribution *families* and the size/runtime correlation and
+calibrates the base arrival rate to a target offered load; the paper's
+qualitative claims (policy orderings, monotone trends) are what the
+reproduction validates.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.types import ARRequest
+
+RUNTIME_VALUES = np.array([60, 300, 900, 1800, 3600, 10800], dtype=np.int64)
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadParams:
+    """Knobs of Section 6.1, defaults = the paper's defaults."""
+
+    n_jobs: int = 10_000
+    n_pe: int = 1024
+    # two-stage uniform over log2(size)
+    u_low: float = 4.5
+    u_med: float = 7.0
+    u_hi: float = 10.0
+    u_prob: float = 0.82
+    # hyper-Gamma over ln(runtime); mixture weight p(size) decreasing
+    g1_shape: float = 4.2
+    g1_scale: float = 0.94
+    g2_shape: float = 312.0
+    g2_scale: float = 0.03
+    p_slope: float = -0.075     # p = clip(p_slope * log2(size) + p_icept)
+    p_icept: float = 1.1
+    # arrivals
+    arrival_shape: float = 2.0  # Gamma shape of inter-arrival times
+    daily_cycle_amp: float = 0.4
+    target_load: float = 0.75   # offered load at arrival_factor == 1
+    arrival_factor: float = 1.0
+    # AR / deadline flexibility
+    artime_factor: float = 3.0
+    deadline_factor: float = 3.0
+    seed: int = 0
+
+    def replace(self, **kw) -> "WorkloadParams":
+        return dataclasses.replace(self, **kw)
+
+
+def sample_sizes(rng: np.random.Generator, p: WorkloadParams,
+                 n: int) -> np.ndarray:
+    stage = rng.random(n) < p.u_prob
+    lo = rng.uniform(p.u_low, p.u_med, size=n)
+    hi = rng.uniform(p.u_med, p.u_hi, size=n)
+    log2s = np.where(stage, lo, hi)
+    k = np.clip(np.rint(log2s), np.ceil(p.u_low), np.floor(p.u_hi))
+    return (2 ** k).astype(np.int64)
+
+
+def sample_runtimes(rng: np.random.Generator, p: WorkloadParams,
+                    sizes: np.ndarray) -> np.ndarray:
+    n = sizes.shape[0]
+    prob_short = np.clip(
+        p.p_slope * np.log2(sizes) + p.p_icept, 0.05, 0.95)
+    short = rng.random(n) < prob_short
+    ln_r = np.where(
+        short,
+        rng.gamma(p.g1_shape, p.g1_scale, size=n),
+        rng.gamma(p.g2_shape, p.g2_scale, size=n),
+    )
+    # snap to the paper's six values, nearest in log space
+    dist = np.abs(ln_r[:, None] - np.log(RUNTIME_VALUES)[None, :])
+    return RUNTIME_VALUES[np.argmin(dist, axis=1)]
+
+
+def mean_job_area(p: WorkloadParams, n_probe: int = 20_000) -> float:
+    """E[size * runtime] for calibrating the base arrival rate."""
+    rng = np.random.default_rng(10_000 + p.seed)
+    sizes = sample_sizes(rng, p, n_probe)
+    runtimes = sample_runtimes(rng, p, sizes)
+    return float(np.mean(sizes * runtimes))
+
+
+def sample_arrivals(rng: np.random.Generator, p: WorkloadParams,
+                    n: int) -> np.ndarray:
+    """Arrival times (seconds): Gamma inter-arrivals + daily cycle."""
+    mean_ia = mean_job_area(p) / (p.n_pe * p.target_load)
+    scale = mean_ia / p.arrival_shape
+    ia = rng.gamma(p.arrival_shape, scale, size=n)
+    # daily rhythm: stretch inter-arrivals at "night", compress at "day"
+    t = np.cumsum(ia)
+    cyc = 1.0 + p.daily_cycle_amp * np.sin(2 * np.pi * t / 86_400.0)
+    ia = ia / np.maximum(cyc, 0.1)
+    arrivals = np.cumsum(ia)
+    return arrivals / p.arrival_factor
+
+
+def generate(params: Optional[WorkloadParams] = None,
+             **overrides) -> List[ARRequest]:
+    """Generate the AR job stream for one experiment."""
+    p = (params or WorkloadParams()).replace(**overrides) \
+        if overrides else (params or WorkloadParams())
+    rng = np.random.default_rng(p.seed)
+    n = p.n_jobs
+    arrivals = np.rint(sample_arrivals(rng, p, n)).astype(np.int64)
+    sizes = sample_sizes(rng, p, n)
+    runtimes = sample_runtimes(rng, p, sizes)
+    u_ar = rng.random(n)
+    u_dl = rng.random(n)
+    t_r = arrivals + np.rint(p.artime_factor * u_ar * runtimes).astype(
+        np.int64)
+    t_dl = t_r + runtimes + np.rint(
+        p.deadline_factor * u_dl * runtimes).astype(np.int64)
+    return [
+        ARRequest(t_a=int(arrivals[i]), t_r=int(t_r[i]),
+                  t_du=int(runtimes[i]), t_dl=int(t_dl[i]),
+                  n_pe=int(sizes[i]))
+        for i in range(n)
+    ]

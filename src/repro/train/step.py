@@ -1,0 +1,69 @@
+"""Training-step factory: remat + microbatched gradient accumulation.
+
+``make_train_step`` closes over the config and returns a pure function
+``(params, opt_state, batch) -> (params, opt_state, metrics)`` suitable
+for ``jax.jit`` with explicit in/out shardings.  Batches arrive with a
+leading microbatch axis ``[mb, B/mb, ...]``; gradients accumulate in
+fp32 across a ``lax.scan`` over microbatches (one optimizer step per
+call, MaxText-style).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tf_lib
+from repro.train import optim as optim_lib
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: optim_lib.OptConfig,
+                    microbatches: int = 1,
+                    accum_dtype=jnp.float32) -> Callable:
+    grad_fn = jax.value_and_grad(
+        lambda p, b: tf_lib.loss_fn(p, cfg, b), has_aux=True)
+
+    def train_step(params, opt_state: optim_lib.OptState,
+                   batch: Dict[str, jax.Array]
+                   ) -> Tuple[Any, optim_lib.OptState, Dict]:
+        if microbatches == 1:
+            mb = jax.tree.map(lambda x: x[0], batch)
+            (loss, metrics), grads = grad_fn(params, mb)
+        else:
+            def accum(carry, mb):
+                g_acc, m_acc = carry
+                (loss, metrics), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(accum_dtype), g_acc, g)
+                m_acc = jax.tree.map(lambda a, b: a + b, m_acc, metrics)
+                return (g_acc, m_acc), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params)
+            m0 = {"loss": jnp.zeros((), jnp.float32),
+                  "nll": jnp.zeros((), jnp.float32)}
+            # probe metrics structure with a zero-grad eval of mb 0
+            m0 = jax.eval_shape(
+                lambda p, b: grad_fn(p, b)[0][1], params,
+                jax.tree.map(lambda x: x[0], batch))
+            m0 = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), m0)
+            (grads, msum), _ = jax.lax.scan(accum, (g0, m0), batch)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            metrics = jax.tree.map(lambda m: m / microbatches, msum)
+
+        new_params, new_opt, gnorm = optim_lib.update(
+            grads, opt_state, params, opt_cfg)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def init_train_state(cfg: ModelConfig, opt_cfg: optim_lib.OptConfig,
+                     key: jax.Array):
+    params = tf_lib.init_params(cfg, key)
+    opt_state = optim_lib.init(params, opt_cfg)
+    return params, opt_state

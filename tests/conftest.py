@@ -1,0 +1,27 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests run on the single
+real CPU device; only launch/dryrun.py forces 512 placeholder devices.
+"""
+import random
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(autouse=True)
+def _seed_everything():
+    random.seed(1234)
+    np.random.seed(1234)
+
+
+def pytest_addoption(parser):
+    parser.addoption("--run-slow", action="store_true", default=False,
+                     help="run slow end-to-end tests")
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--run-slow"):
+        return
+    skip = pytest.mark.skip(reason="slow; use --run-slow")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip)

@@ -1,0 +1,69 @@
+"""Checkpoint manager: exact roundtrip (incl. bf16), atomicity, GC."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+
+
+def _state(key):
+    return {
+        "w": jax.random.normal(key, (8, 16), jnp.float32),
+        "b16": jax.random.normal(key, (4, 4)).astype(jnp.bfloat16),
+        "step": jnp.int32(7),
+        "nested": {"u": jnp.arange(5, dtype=jnp.int32)},
+    }
+
+
+def test_roundtrip_exact(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    state = _state(jax.random.PRNGKey(0))
+    mgr.save(3, state, {"loss": 1.5})
+    restored, step, meta = mgr.restore(state)
+    assert step == 3 and meta["loss"] == 1.5
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_save_then_restore(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    state = _state(jax.random.PRNGKey(1))
+    mgr.save_async(5, state)
+    mgr.wait()
+    restored, step, _ = mgr.restore(state)
+    assert step == 5
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(state["w"]))
+
+
+def test_gc_keeps_latest(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    state = _state(jax.random.PRNGKey(2))
+    for s in (1, 2, 3, 4):
+        mgr.save(s, state)
+    assert mgr.all_steps() == [3, 4]
+    assert mgr.latest_step() == 4
+
+
+def test_tmp_dirs_never_visible(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    state = _state(jax.random.PRNGKey(3))
+    mgr.save(1, state)
+    assert not list(tmp_path.glob("*.tmp"))
+    # manifest must parse and carry dtype info for the bf16 leaf
+    man = json.loads(
+        (tmp_path / "step_00000001" / "manifest.json").read_text())
+    assert "bfloat16" in man["dtypes"]
+
+
+def test_structure_mismatch_raises(tmp_path):
+    import pytest
+    mgr = CheckpointManager(tmp_path)
+    state = _state(jax.random.PRNGKey(4))
+    mgr.save(1, state)
+    bad = {"only": jnp.zeros((2,))}
+    with pytest.raises(AssertionError):
+        mgr.restore(bad)

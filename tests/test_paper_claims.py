@@ -1,0 +1,91 @@
+"""Validation of the paper's Section 6 claims (reduced N for CI).
+
+The full 10^4-job sweeps live in benchmarks/; here 1500 jobs per point
+keep CI fast while the orderings the paper reports remain stable.
+"""
+import pytest
+
+from repro.core.types import ALL_POLICIES, Policy
+from repro.sim import WorkloadParams, generate, run_policies
+
+
+@pytest.fixture(scope="module")
+def default_results():
+    jobs = generate(WorkloadParams(n_jobs=1500, seed=11))
+    res = run_policies(jobs, 1024, ALL_POLICIES)
+    return {r.policy: r for r in res}
+
+
+def test_pe_worst_fit_highest_acceptance(default_results):
+    """Headline claim: 'the PE WorstFit algorithm becomes the best
+    algorithm for the scheduler with the highest acceptance rate'."""
+    acc = {k: v.acceptance_rate for k, v in default_results.items()}
+    best = max(acc, key=acc.get)
+    assert acc[Policy.PE_W.value] >= acc[best] - 0.01
+
+
+def test_ff_lowest_slowdown(default_results):
+    """'the jobs with the FirstFit algorithm experience the lowest
+    average slowdown'."""
+    sd = {k: v.avg_slowdown for k, v in default_results.items()}
+    assert sd[Policy.FF.value] == min(sd.values())
+
+
+def test_policy_pairings(default_results):
+    """Fig. 2: PE_W ~ Du_B and PE_B ~ Du_W on acceptance rate."""
+    acc = {k: v.acceptance_rate for k, v in default_results.items()}
+    assert abs(acc["PE_W"] - acc["Du_B"]) < 0.02
+    assert abs(acc["PE_B"] - acc["Du_W"]) < 0.02
+
+
+def test_pe_w_beats_ff_on_acceptance(default_results):
+    acc = {k: v.acceptance_rate for k, v in default_results.items()}
+    assert acc["PE_W"] > acc["FF"]
+
+
+def test_acceptance_degrades_with_load():
+    """Fig. 4: higher arrival factor -> lower acceptance."""
+    accs = []
+    for af in (0.75, 1.5):
+        jobs = generate(WorkloadParams(n_jobs=1200, seed=5,
+                                       arrival_factor=af))
+        r = run_policies(jobs, 1024, [Policy.PE_W])[0]
+        accs.append(r.acceptance_rate)
+    assert accs[1] < accs[0]
+
+
+def test_acceptance_degrades_with_umed():
+    """Fig. 2: larger jobs -> lower acceptance."""
+    accs = []
+    for umed in (5.0, 9.0):
+        jobs = generate(WorkloadParams(n_jobs=1200, seed=5,
+                                       u_med=umed))
+        r = run_policies(jobs, 1024, [Policy.PE_W])[0]
+        accs.append(r.acceptance_rate)
+    assert accs[1] < accs[0]
+
+
+def test_flexibility_raises_acceptance_and_slowdown():
+    """Fig. 6/7: more {artime, deadline} flexibility -> higher
+    acceptance for PE_W and higher slowdown."""
+    rows = []
+    for f in (1.0, 5.0):
+        jobs = generate(WorkloadParams(n_jobs=1200, seed=5,
+                                       artime_factor=f,
+                                       deadline_factor=f))
+        r = run_policies(jobs, 1024, [Policy.PE_W])[0]
+        rows.append((r.acceptance_rate, r.avg_slowdown))
+    assert rows[1][0] > rows[0][0]       # acceptance up
+    assert rows[1][1] > rows[0][1]       # slowdown up
+
+
+def test_device_engine_agrees_with_host_in_sim():
+    """The JAX engine is a drop-in for the host engine end-to-end."""
+    from repro.sim import simulate
+    jobs = generate(WorkloadParams(n_jobs=60, seed=2, n_pe=64))
+    jobs = [j for j in jobs if j.n_pe <= 64]
+    a = simulate(jobs, 64, Policy.PE_W, engine="host")
+    b = simulate(jobs, 64, Policy.PE_W, engine="device",
+                 engine_kwargs={"capacity": 128})
+    assert a.n_accepted == b.n_accepted
+    assert a.slowdowns == b.slowdowns

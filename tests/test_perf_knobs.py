@@ -1,0 +1,74 @@
+"""Numerical sanity of the beyond-paper perf knobs (§Perf B/C).
+
+The optimizations must not change semantics beyond quantisation noise:
+* int8 KV cache: decode still matches the full forward's top-1;
+* int8 MoE dispatch: loss within quantisation tolerance of baseline;
+* sequence parallelism: a sharding constraint only — bitwise no-op on
+  a single device.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import transformer as tf_lib
+
+
+def test_int8_kv_cache_decode_matches_forward():
+    cfg = dataclasses.replace(get_config("stablelm-1.6b").reduced(),
+                              kv_cache_dtype="int8")
+    key = jax.random.PRNGKey(3)
+    params = tf_lib.init_params(cfg, key)
+    B, T = 2, 16
+    tokens = jax.random.randint(key, (B, T + 1), 0, cfg.vocab)
+    out = tf_lib.forward(params, cfg, tokens)
+    ref = jnp.einsum("bd,dv->bv", out.hidden[:, -1], params["lm_head"])
+    _, cache = tf_lib.prefill(params, cfg, tokens[:, :T],
+                              max_len=T + 1)
+    assert cache["attn"]["k"].dtype == jnp.int8
+    got, _ = tf_lib.decode_step(params, cfg, cache, tokens[:, T:T + 1])
+    assert np.argmax(np.asarray(ref), -1).tolist() == \
+        np.argmax(np.asarray(got), -1).tolist()
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref,
+                               np.float32), rtol=0.25, atol=0.25)
+
+
+def test_int8_moe_dispatch_close_to_baseline():
+    base = dataclasses.replace(
+        get_config("granite-moe-1b-a400m").reduced(),
+        capacity_factor=100.0)
+    quant = dataclasses.replace(base, moe_quant_dispatch=True)
+    key = jax.random.PRNGKey(0)
+    params = tf_lib.init_params(base, key)
+    batch = {"tokens": jax.random.randint(key, (2, 32), 0, base.vocab),
+             "labels": jax.random.randint(key, (2, 32), 0, base.vocab)}
+    l0, _ = tf_lib.loss_fn(params, base, batch)
+    l1, _ = tf_lib.loss_fn(params, quant, batch)
+    assert abs(float(l0) - float(l1)) < 0.05 * float(l0)
+
+
+def test_seq_parallel_is_noop_on_single_device():
+    base = get_config("qwen3-4b").reduced()
+    sp = dataclasses.replace(base, seq_parallel=True)
+    key = jax.random.PRNGKey(1)
+    params = tf_lib.init_params(base, key)
+    batch = {"tokens": jax.random.randint(key, (2, 32), 0, base.vocab),
+             "labels": jax.random.randint(key, (2, 32), 0, base.vocab)}
+    l0, _ = tf_lib.loss_fn(params, base, batch)
+    l1, _ = tf_lib.loss_fn(params, sp, batch)
+    assert float(l0) == float(l1)
+
+
+def test_int8_cache_struct_halves_bytes():
+    from repro.launch.mesh import make_host_mesh
+    cfg = get_config("qwen3-4b")
+    c16 = jax.eval_shape(lambda: tf_lib.init_decode_cache(cfg, 8, 1024))
+    cfg8 = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    c8 = jax.eval_shape(lambda: tf_lib.init_decode_cache(cfg8, 8, 1024))
+    b16 = sum(np.prod(l.shape) * l.dtype.itemsize
+              for l in jax.tree.leaves(c16))
+    b8 = sum(np.prod(l.shape) * l.dtype.itemsize
+             for l in jax.tree.leaves(c8))
+    assert b8 < 0.55 * b16

@@ -1,0 +1,124 @@
+"""Hypothesis property tests on the system's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import timeline as tl_lib
+from repro.core.hostsched import (
+    HostScheduler,
+    ids_from_mask,
+    lowest_bits,
+    mask_from_ids,
+    popcount,
+)
+from repro.core.listsched import ListScheduler
+from repro.core.types import T_INF
+
+# ---------------------------------------------------------------------------
+# bitmask helpers
+# ---------------------------------------------------------------------------
+
+
+@given(st.sets(st.integers(0, 199), max_size=64))
+def test_mask_roundtrip(ids):
+    mask = mask_from_ids(ids, 200)
+    assert set(ids_from_mask(mask)) == ids
+    assert int(popcount(mask)) == len(ids)
+
+
+@given(st.sets(st.integers(0, 99), min_size=1, max_size=60),
+       st.data())
+def test_lowest_bits_picks_smallest(ids, data):
+    k = data.draw(st.integers(1, len(ids)))
+    mask = mask_from_ids(ids, 100)
+    sel = lowest_bits(mask, k)
+    chosen = set(ids_from_mask(sel))
+    assert len(chosen) == k
+    assert chosen == set(sorted(ids)[:k])
+
+
+@given(st.lists(st.integers(0, 2**32 - 1), min_size=1, max_size=8))
+@settings(deadline=None)
+def test_pack_unpack_roundtrip(words):
+    w = np.array(words, dtype=np.uint32)[None, :]
+    n_pe = w.shape[1] * 32
+    bits = tl_lib.unpack_bits(jnp.asarray(w), n_pe)
+    repacked = tl_lib.pack_bits(np.asarray(bits))
+    assert np.array_equal(np.asarray(repacked), w)
+
+
+# ---------------------------------------------------------------------------
+# timeline semantics vs the literal paper oracle
+# ---------------------------------------------------------------------------
+
+op_strategy = st.lists(
+    st.tuples(
+        st.integers(0, 80),        # t_s
+        st.integers(1, 20),        # duration
+        st.sets(st.integers(0, 30), min_size=1, max_size=12),
+    ),
+    min_size=1, max_size=12,
+)
+
+
+@given(op_strategy)
+@settings(max_examples=40, deadline=None)
+def test_host_matches_oracle_under_random_ops(ops):
+    n_pe = 31
+    oracle = ListScheduler(n_pe)
+    host = HostScheduler(n_pe)
+    added = []
+    for (t_s, du, pes) in ops:
+        busy = oracle.window_busy(t_s, t_s + du)
+        pes = pes - busy
+        if not pes:
+            continue
+        oracle.add_allocation(t_s, t_s + du, set(pes))
+        host.add_allocation(t_s, t_s + du, sorted(pes))
+        added.append((t_s, t_s + du, pes))
+        assert host.records() == oracle.records()
+    # interleaved deletions restore agreement at every step
+    for (t_s, t_e, pes) in added:
+        oracle.delete_allocation(t_s, t_e, set(pes))
+        host.delete_allocation(t_s, t_e, sorted(pes))
+        assert host.records() == oracle.records()
+    assert host.records() == []   # everything released -> empty
+
+
+@given(op_strategy)
+@settings(max_examples=30, deadline=None)
+def test_timeline_invariants(ops):
+    """Device timeline: sorted validity, merged neighbours, empty tail."""
+    n_pe = 31
+    oracle = ListScheduler(n_pe)
+    tl = tl_lib.empty(64, n_pe)
+    for (t_s, du, pes) in ops:
+        busy = oracle.window_busy(t_s, t_s + du)
+        pes = pes - busy
+        if not pes:
+            continue
+        oracle.add_allocation(t_s, t_s + du, set(pes))
+        mask_bits = np.zeros(tl.words * 32, np.uint32)
+        for i in pes:
+            mask_bits[i] = 1
+        mask = tl_lib.pack_bits(mask_bits[None, :])[0]
+        tl, overflow = tl_lib.update(tl, t_s, t_s + du, mask,
+                                     is_add=True)
+        assert not bool(overflow)
+        times = np.asarray(tl.times)
+        occ = np.asarray(tl.occ)
+        valid = times < T_INF
+        n_valid = int(valid.sum())
+        # 1. valid entries sorted strictly ascending, prefix-packed
+        assert np.all(valid[:n_valid])
+        assert np.all(np.diff(times[:n_valid]) > 0)
+        # 2. consecutive valid rows differ (paper's merge invariant)
+        if n_valid > 1:
+            assert np.all(
+                np.any(occ[1:n_valid] != occ[:n_valid - 1], axis=1))
+        # 3. last valid row empty (all free after the final boundary)
+        if n_valid:
+            assert not occ[n_valid - 1].any()
+        # 4. padding rows are zeroed
+        assert not occ[n_valid:].any()

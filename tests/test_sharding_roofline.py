@@ -1,0 +1,163 @@
+"""Sharding rules + roofline accounting.
+
+``test_analytic_flops_vs_hlo``: the analytic cost model is validated
+against ``compiled.cost_analysis()`` on a loop-free lowering (layers
+unrolled, short sequence, full attention) — the regime where XLA's HLO
+FLOP count is trustworthy (see EXPERIMENTS.md §Methodology).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.base import ShapeConfig
+from repro.models import transformer as tf_lib
+from repro.roofline import analysis as roof
+from repro.sharding import rules
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_specs_divisibility(arch):
+    """Every emitted spec must divide its dimension by 16 (the model
+    axis) — the rule's own fallback guarantees it."""
+    cfg = get_config(arch)
+    params_s = jax.eval_shape(
+        lambda k: tf_lib.init_params(cfg, k),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    specs = rules.param_specs(params_s)
+    leaves = jax.tree.leaves(params_s)
+    spec_leaves = jax.tree.leaves(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(leaves) == len(spec_leaves)
+    n_sharded = 0
+    for leaf, spec in zip(leaves, spec_leaves):
+        for i, ax in enumerate(spec):
+            if ax == "model":
+                assert leaf.shape[i] % rules.MODEL_AXIS_SIZE == 0, \
+                    (arch, leaf.shape, spec)
+                n_sharded += 1
+    assert n_sharded > 0, f"{arch}: nothing sharded at all"
+
+
+def test_big_weights_are_sharded_for_dense():
+    cfg = get_config("minitron-8b")
+    params_s = jax.eval_shape(
+        lambda k: tf_lib.init_params(cfg, k),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    specs = rules.param_specs(params_s)
+    assert specs["layers"]["mlp"]["w_gate"] == P(None, None, "model")
+    assert specs["layers"]["attn"]["wq"] == P(None, None, "model", None)
+    assert specs["tok_embed"] == P("model", None)
+
+
+def test_moe_experts_sharded():
+    cfg = get_config("kimi-k2-1t-a32b")
+    params_s = jax.eval_shape(
+        lambda k: tf_lib.init_params(cfg, k),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    specs = rules.param_specs(params_s)
+    # 2D expert sharding: experts over model, FFN dim over data axes
+    assert specs["layers"]["moe"]["w_gate"] == P(
+        None, "model", None, ("pod", "data"))
+    assert specs["layers"]["moe"]["w_down"] == P(
+        None, "model", ("pod", "data"), None)
+
+
+def test_indivisible_heads_fall_back_to_replication():
+    """starcoder2's 36 heads do not divide the 16-way model axis: the
+    rules must emit replicated specs rather than invalid shardings."""
+    cfg = get_config("starcoder2-7b")
+    params_s = jax.eval_shape(
+        lambda k: tf_lib.init_params(cfg, k),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    specs = rules.param_specs(params_s)
+    assert specs["layers"]["attn"]["wq"] == P(None, None, None, None)
+    # but the MLP still shards (18432 % 16 == 0)
+    assert specs["layers"]["mlp"]["w_gate"] == P(None, None, "model")
+
+
+# ---------------------------------------------------------------------------
+# roofline accounting
+# ---------------------------------------------------------------------------
+
+def test_parse_collectives():
+    hlo = """
+  %ag = bf16[16,128]{1,0} all-gather(bf16[1,128]{1,0} %x), dims={0}
+  %ar.1 = f32[256]{0} all-reduce(f32[256]{0} %y), to_apply=%add
+  %rs = (f32[8]{0}) reduce-scatter(f32[64]{0} %z), dimensions={0}
+    """
+    got = roof.parse_collectives(hlo)
+    assert got["all-gather"] == 16 * 128 * 2
+    assert got["all-reduce"] == 256 * 4
+    assert got["total"] > 0
+
+
+def test_model_flops_identity_dense():
+    """Train FLOPs ~ 6*N*D within 25% for a dense LM at short ctx
+    (attention adds the rest)."""
+    cfg = get_config("stablelm-1.6b")
+    shape = ShapeConfig("t", 512, 8, "train")
+    c = roof.step_costs(cfg, shape, {"data": 1, "model": 1})
+    # >1 is possible: 6*N*D counts the input-embedding gather as a
+    # matmul, which the executed program never performs.
+    assert 0.7 < c.model_flops / c.flops < 1.25
+
+
+def test_analytic_flops_vs_hlo():
+    """Loop-free lowering: analytic forward FLOPs within 15% of XLA."""
+    cfg = dataclasses.replace(
+        get_config("stablelm-1.6b").reduced(), n_layers=2)
+    params = tf_lib.init_params(cfg, jax.random.PRNGKey(0))
+    B, T = 4, 256
+
+    def fwd(p, tokens):
+        # unrolled layers: python loop instead of scan
+        x = p["tok_embed"][tokens]
+        from repro.models import attention as attn_lib
+        from repro.models import mlp as mlp_lib
+        from repro.models.common import rms_norm
+        rope = attn_lib.make_rope(cfg, T)
+        for i in range(cfg.n_layers):
+            pl = jax.tree.map(lambda a: a[i], p["layers"])
+            h = attn_lib.self_attention(
+                pl["attn"], rms_norm(x, pl["ln1"], cfg.norm_eps), cfg,
+                rope)
+            x = x + h
+            x = x + mlp_lib.mlp(
+                pl["mlp"], rms_norm(x, pl["ln2"], cfg.norm_eps))
+        x = rms_norm(x, p["final_norm"], cfg.norm_eps)
+        return jnp.einsum("btd,dv->btv", x, p["lm_head"])
+
+    tokens = jnp.zeros((B, T), jnp.int32)
+    compiled = jax.jit(fwd).lower(params, tokens).compile()
+    hlo_flops = compiled.cost_analysis()["flops"]
+    analytic = roof.forward_flops(cfg, B * T, T, "train")
+    assert abs(analytic - hlo_flops) / hlo_flops < 0.15, \
+        (analytic, hlo_flops)
+
+
+def test_param_count_against_init():
+    """Analytic parameter counts match the real init trees."""
+    from repro.models.common import count_params
+    for arch in ("stablelm-1.6b", "granite-moe-1b-a400m"):
+        cfg = get_config(arch).reduced()
+        params = tf_lib.init_params(cfg, jax.random.PRNGKey(0))
+        total, _ = roof.param_count(cfg)
+        real = count_params(params)
+        assert abs(total - real) / real < 0.05, (arch, total, real)
+
+
+def test_terms_dominance():
+    c = roof.Costs(flops=1e18, hbm_bytes=1e12, coll_intra_bytes=1e10,
+                   model_flops=9e17)
+    t = c.terms(256)
+    assert t["dominant"] == "compute"
+    assert 0 < t["useful_ratio"] <= 1

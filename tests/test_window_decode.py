@@ -1,0 +1,58 @@
+"""Sliding-window decode: the ring-buffer cache must match windowed
+full-sequence attention — including after the buffer wraps around.
+
+This is the mechanism behind the hybrid family's 524k-context cells
+(zamba2's shared attention at long_500k), so the wraparound path needs
+direct evidence, not just shape checks.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import attention as attn_lib
+from repro.models.common import KeyGen
+
+
+def _windowed_reference(p, xs, cfg, rope, window):
+    """Full-sequence attention with an explicit window mask."""
+    out = attn_lib.self_attention(p, xs, cfg, rope, window=window)
+    return out
+
+
+def test_ring_buffer_matches_windowed_attention_past_wraparound():
+    cfg = dataclasses.replace(
+        get_config("zamba2-7b").reduced(),
+        d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+        long_attention="window", window=8)
+    key = jax.random.PRNGKey(0)
+    p = attn_lib.init_attention(KeyGen(key), cfg, jnp.float32)
+    B, T, W = 1, 24, cfg.window          # T = 3x window: two wraps
+    xs = jax.random.normal(key, (B, T, cfg.d_model), jnp.float32) * 0.3
+    rope = attn_lib.make_rope(cfg, T + 1)
+
+    # reference: full-sequence windowed attention, last token's output
+    ref_full = _windowed_reference(p, xs, cfg, rope, W)
+
+    # decode path: feed tokens one by one through the ring buffer
+    cache = attn_lib.init_cache(cfg, B, W, jnp.float32)
+    outs = []
+    for t in range(T):
+        o, cache = attn_lib.decode_attention(
+            p, xs[:, t:t + 1], cache, jnp.int32(t), cfg, rope,
+            window=W)
+        outs.append(o)
+    dec = jnp.concatenate(outs, axis=1)
+
+    # before the first wrap the paths must agree; after wraps the ring
+    # holds exactly the last W keys, so they must *still* agree.
+    np.testing.assert_allclose(np.asarray(dec[:, :W]),
+                               np.asarray(ref_full[:, :W]),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(dec[:, -1]),
+                               np.asarray(ref_full[:, -1]),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(ref_full),
+                               rtol=2e-4, atol=2e-4)

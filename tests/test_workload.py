@@ -1,0 +1,72 @@
+"""Workload model: LANL-CM5 constraints of Section 6.1."""
+import numpy as np
+
+from repro.sim.workload import (
+    RUNTIME_VALUES,
+    WorkloadParams,
+    generate,
+    mean_job_area,
+)
+
+
+def _jobs(**kw):
+    return generate(WorkloadParams(n_jobs=1500, seed=3).replace(**kw))
+
+
+def test_sizes_are_powers_of_two_in_range():
+    sizes = np.array([j.n_pe for j in _jobs()])
+    assert np.all((sizes & (sizes - 1)) == 0)      # powers of two
+    assert sizes.min() >= 32 and sizes.max() <= 1024
+
+
+def test_runtimes_from_discrete_set():
+    durs = {j.t_du for j in _jobs()}
+    assert durs <= set(int(v) for v in RUNTIME_VALUES)
+    assert len(durs) >= 4          # several classes actually used
+
+
+def test_request_ordering_constraints():
+    for j in _jobs():
+        assert j.t_a <= j.t_r
+        assert j.t_dl >= j.t_r + j.t_du
+
+
+def test_umed_increases_mean_area():
+    areas = []
+    for umed in (5.0, 7.0, 9.0):
+        a = mean_job_area(WorkloadParams(u_med=umed, seed=0))
+        areas.append(a)
+    assert areas[0] < areas[1] < areas[2]
+
+
+def test_arrival_factor_compresses_time():
+    j1 = _jobs(arrival_factor=1.0)
+    j2 = _jobs(arrival_factor=2.0)
+    span1 = j1[-1].t_a - j1[0].t_a
+    span2 = j2[-1].t_a - j2[0].t_a
+    assert abs(span2 - span1 / 2) < span1 * 0.05
+
+
+def test_deadline_factor_zero_gives_immediate_deadlines():
+    for j in _jobs(deadline_factor=0.0):
+        assert j.t_dl == j.t_r + j.t_du
+
+
+def test_artime_factor_zero_gives_immediate_ready():
+    for j in _jobs(artime_factor=0.0):
+        assert j.t_r == j.t_a
+
+
+def test_size_runtime_correlation_negative_p():
+    jobs = _jobs()
+    sizes = np.array([j.n_pe for j in jobs], dtype=np.float64)
+    durs = np.array([j.t_du for j in jobs], dtype=np.float64)
+    big = durs[sizes >= 512].mean()
+    small = durs[sizes <= 64].mean()
+    assert big > small     # larger jobs run longer on average
+
+
+def test_determinism():
+    a = _jobs()
+    b = _jobs()
+    assert a == b
