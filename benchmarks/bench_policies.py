@@ -7,12 +7,26 @@ the full 10^4-job version with per-seed 95% CIs.
 """
 from __future__ import annotations
 
-from typing import Dict, List
+import json
+import pathlib
+from typing import Dict, List, Optional
 
 from repro.core.types import ALL_POLICIES
-from repro.sim import SimResult, WorkloadParams, generate, run_policies
+from repro.sim import (
+    WorkloadParams,
+    generate,
+    run_policies,
+    simulate,
+    simulate_batched,
+)
 
 N_PE = 1024
+
+# the tracked perf-trajectory artifact lives at the repo root,
+# independent of the benchmark's working directory
+BENCH_ADMISSION_PATH = str(
+    pathlib.Path(__file__).resolve().parent.parent
+    / "BENCH_admission.json")
 
 
 def _sweep(param_sets: List[Dict], n_jobs: int, seed: int
@@ -49,3 +63,56 @@ def flex_sweep(n_jobs: int = 2000, seed: int = 0) -> List[Dict]:
         [{"artime_factor": float(f), "deadline_factor": float(f)}
          for f in (1, 2, 3, 4, 5)],
         n_jobs, seed)
+
+
+def admission_throughput(n_jobs: int = 240, n_pe: int = 64,
+                         seed: int = 0,
+                         out_path: Optional[str] = BENCH_ADMISSION_PATH
+                         ) -> List[Dict]:
+    """Admissions/sec: per-request loops vs the scanned device path.
+
+    Three variants over the same workload and all seven policies: the
+    host numpy loop, the per-request device loop (one host round-trip
+    per job), and the fused ``admit_stream`` scan (DESIGN.md §3).  Each
+    variant runs twice and the steady-state (second) run is reported so
+    jit compilation does not distort the trajectory; results land in
+    ``out_path`` for future PRs to compare against.
+    """
+    jobs = generate(WorkloadParams(n_jobs=n_jobs, n_pe=n_pe, seed=seed,
+                                   u_low=2.0, u_med=4.0, u_hi=6.0))
+    jobs = [j for j in jobs if j.n_pe <= n_pe]
+    rows = []
+    for pol in ALL_POLICIES:
+        variants = {
+            "host_loop": lambda p=pol: simulate(
+                jobs, n_pe, p, engine="host"),
+            "device_loop": lambda p=pol: simulate(
+                jobs, n_pe, p, engine="device",
+                engine_kwargs={"capacity": 128}),
+            "device_stream": lambda p=pol: simulate_batched(
+                jobs, n_pe, p, capacity=128),
+        }
+        row: Dict = {"policy": pol.value}
+        for name, fn in variants.items():
+            fn()                      # warm-up: jit caches, buckets
+            res = fn()                # steady state
+            row[f"{name}_adm_per_s"] = round(
+                len(jobs) / max(res.wall_seconds, 1e-9), 1)
+            if name == "device_stream":
+                row["acceptance"] = round(res.acceptance_rate, 4)
+        row["stream_speedup_vs_device_loop"] = round(
+            row["device_stream_adm_per_s"]
+            / max(row["device_loop_adm_per_s"], 1e-9), 1)
+        rows.append(row)
+    if out_path:
+        payload = {
+            "bench": "admission_throughput",
+            "n_jobs": len(jobs), "n_pe": n_pe, "seed": seed,
+            "note": ("admissions/sec, steady state (second run); wall "
+                     "time counts scheduler work only"),
+            "rows": rows,
+        }
+        with open(out_path, "w") as fh:
+            json.dump(payload, fh, indent=2)
+            fh.write("\n")
+    return rows

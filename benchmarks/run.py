@@ -44,6 +44,9 @@ def main() -> None:
             lambda: bench_policies.load_sweep(n_jobs=n_jobs),
         "fig6_7_flex_sweep":
             lambda: bench_policies.flex_sweep(n_jobs=n_jobs),
+        "admission_throughput":
+            lambda: bench_policies.admission_throughput(
+                n_jobs=600 if args.full else 240),
         "datastructure_op_costs":
             lambda: bench_datastructure.op_costs(
                 n_jobs=800 if args.full else 300),

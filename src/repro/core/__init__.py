@@ -17,3 +17,11 @@ from repro.core.types import (  # noqa: F401
     T_INF,
 )
 from repro.core.scheduler import make_scheduler  # noqa: F401
+from repro.core.batch import (  # noqa: F401
+    Decision,
+    RequestBatch,
+    admit,
+    admit_stream,
+    requests_to_batch,
+)
+from repro.core.timeline import SchedulerState, init_state  # noqa: F401

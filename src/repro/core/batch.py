@@ -1,0 +1,315 @@
+"""Fused device-resident admission: ``(state, request) -> (state, decision)``.
+
+The per-request engine pays a host round-trip per job: ``find_allocation``
+syncs ``found``/the PE mask back to Python, which then issues ``update``
+as a second dispatch.  This module makes the scheduler core functional
+(DESIGN.md §3): :class:`~repro.core.timeline.SchedulerState` carries the
+dense timeline plus a pending-release buffer of committed reservations,
+:func:`admit` is one pure jitted step that fuses ``deleteAllocation`` of
+due completions, ``findAllocation`` (Algorithm 3) and ``addAllocation``,
+and :func:`admit_stream` scans a struct-of-arrays request batch through
+that step with ``jax.lax.scan`` — whole experiments admit on-device.
+
+Capacity overflow (timeline records or pending slots) latches
+``state.overflow``; every later step becomes a no-op so the truncated
+state is never consulted, and the host wrappers
+(:func:`admit_stream_auto`, :func:`admit_one`) grow the state and
+deterministically re-run the stream from its pre-run snapshot.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import search as search_lib
+from repro.core import timeline as tl_lib
+from repro.core.policies import policy_index
+from repro.core.timeline import SchedulerState
+from repro.core.types import Allocation, ARRequest, Rectangle, T_INF
+
+# Growth retries before the host wrappers give up (2**8 x the initial
+# capacity is far beyond any stream the int32 timeline can describe).
+MAX_DOUBLINGS = 8
+
+
+class RequestBatch(NamedTuple):
+    """Struct-of-arrays AR request stream, sorted by arrival time.
+
+    Each field is ``int32[N]``; a slice along the leading axis is a
+    single request, which is exactly what ``lax.scan`` feeds to the
+    fused step.
+    """
+
+    t_a: jax.Array
+    t_r: jax.Array
+    t_du: jax.Array
+    t_dl: jax.Array
+    n_pe: jax.Array
+
+
+class Decision(NamedTuple):
+    """Per-request admission outcome (scalar per step, ``[N]`` stacked)."""
+
+    accepted: jax.Array   # bool
+    t_s: jax.Array        # int32; -1 when rejected
+    t_e: jax.Array        # int32; -1 when rejected
+    pe_mask: jax.Array    # uint32[W]; 0 when rejected
+    n_free: jax.Array     # int32 winning-rectangle free PEs
+    t_begin: jax.Array    # int32 winning-rectangle begin
+    t_end: jax.Array      # int32 winning-rectangle end
+
+
+def requests_to_batch(jobs: Sequence[ARRequest]) -> RequestBatch:
+    """Pack host requests into the device struct-of-arrays layout."""
+    return RequestBatch(
+        t_a=jnp.asarray([j.t_a for j in jobs], jnp.int32),
+        t_r=jnp.asarray([j.t_r for j in jobs], jnp.int32),
+        t_du=jnp.asarray([j.t_du for j in jobs], jnp.int32),
+        t_dl=jnp.asarray([j.t_dl for j in jobs], jnp.int32),
+        n_pe=jnp.asarray([j.n_pe for j in jobs], jnp.int32),
+    )
+
+
+def request_struct(req: ARRequest) -> RequestBatch:
+    """A single request as a scalar struct (for :func:`admit`)."""
+    return RequestBatch(
+        t_a=jnp.int32(req.t_a), t_r=jnp.int32(req.t_r),
+        t_du=jnp.int32(req.t_du), t_dl=jnp.int32(req.t_dl),
+        n_pe=jnp.int32(req.n_pe))
+
+
+def _where_tree(pred, if_true, if_false):
+    return jax.tree_util.tree_map(
+        lambda a, b: jnp.where(pred, a, b), if_true, if_false)
+
+
+def release_due(state: SchedulerState, t_now: jax.Array) -> SchedulerState:
+    """Delete every pending reservation with ``t_e <= t_now``.
+
+    Mirrors the host simulator's completion heap: earliest end first.
+    Reservations never share a PE over overlapping intervals, so the
+    deletions commute and the loop order only has to be deterministic.
+    Amortised one iteration per admitted job.
+    """
+
+    def pending_due(s: SchedulerState):
+        return jnp.any(s.pend_te <= t_now) & ~s.overflow
+
+    def release_one(s: SchedulerState) -> SchedulerState:
+        i = jnp.argmin(s.pend_te)
+        new_tl, ovf = tl_lib.update(
+            s.tl, s.pend_ts[i], s.pend_te[i], s.pend_mask[i],
+            is_add=False)
+        # the slot is freed even on overflow so the loop always makes
+        # progress; an overflowed stream is re-run anyway.
+        return s._replace(
+            tl=_where_tree(ovf, s.tl, new_tl),
+            pend_ts=s.pend_ts.at[i].set(T_INF),
+            pend_te=s.pend_te.at[i].set(T_INF),
+            pend_mask=s.pend_mask.at[i].set(jnp.uint32(0)),
+            n_released=s.n_released
+            + jnp.where(ovf, 0, 1).astype(jnp.int32),
+            overflow=s.overflow | ovf,
+        )
+
+    return jax.lax.while_loop(pending_due, release_one, state)
+
+
+def _admit_impl(state: SchedulerState, req: RequestBatch,
+                policy_id: jax.Array, *, n_pe: int,
+                auto_release: bool,
+                use_kernel: bool = False) -> Tuple[SchedulerState, Decision]:
+    if auto_release:
+        state = release_due(state, req.t_a)
+    # NB: searches at full capacity S — the per-request engine's
+    # power-of-two bucketing needs the host-visible record count, which
+    # does not exist inside a fixed-shape scan.  The fusion win (no
+    # host round-trips) dominates; keep initial `capacity` modest and
+    # let overflow growth size S to the workload.
+    res = search_lib.search(
+        state.tl, req.t_r, req.t_du, req.t_dl, req.n_pe, policy_id,
+        req.t_a, n_pe=n_pe, use_kernel=use_kernel)
+    found = res.found & ~state.overflow
+
+    def commit(s: SchedulerState) -> SchedulerState:
+        new_tl, ovf = tl_lib.update(
+            s.tl, res.t_s, res.t_e, res.pe_mask, is_add=True)
+        if auto_release:
+            free = s.pend_te == T_INF
+            slot = jnp.argmax(free)
+            ovf = ovf | ~jnp.any(free)
+            pend_ts = jnp.where(
+                ovf, s.pend_ts, s.pend_ts.at[slot].set(res.t_s))
+            pend_te = jnp.where(
+                ovf, s.pend_te, s.pend_te.at[slot].set(res.t_e))
+            pend_mask = jnp.where(
+                ovf, s.pend_mask, s.pend_mask.at[slot].set(res.pe_mask))
+        else:
+            pend_ts, pend_te, pend_mask = \
+                s.pend_ts, s.pend_te, s.pend_mask
+        # an overflowing update returns a truncated timeline — keep the
+        # pre-commit state so the retry starts from consistent data.
+        return s._replace(
+            tl=_where_tree(ovf, s.tl, new_tl),
+            pend_ts=pend_ts, pend_te=pend_te, pend_mask=pend_mask,
+            n_accepted=s.n_accepted
+            + jnp.where(ovf, 0, 1).astype(jnp.int32),
+            overflow=s.overflow | ovf,
+        )
+
+    state = jax.lax.cond(found, commit, lambda s: s, state)
+    accepted = found & ~state.overflow
+    return state, Decision(
+        accepted=accepted,
+        t_s=jnp.where(accepted, res.t_s, jnp.int32(-1)),
+        t_e=jnp.where(accepted, res.t_e, jnp.int32(-1)),
+        pe_mask=jnp.where(accepted, res.pe_mask, jnp.uint32(0)),
+        n_free=res.n_free,
+        t_begin=res.t_begin,
+        t_end=res.t_end,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_pe", "auto_release", "use_kernel"))
+def admit(state: SchedulerState, req: RequestBatch,
+          policy_id: jax.Array, *, n_pe: int,
+          auto_release: bool = True,
+          use_kernel: bool = False) -> Tuple[SchedulerState, Decision]:
+    """One fused admission step: release due -> search -> commit.
+
+    ``auto_release=False`` skips the pending-release bookkeeping for
+    callers (e.g. the fleet) that manage completions themselves.
+    """
+    return _admit_impl(state, req, policy_id, n_pe=n_pe,
+                       auto_release=auto_release, use_kernel=use_kernel)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_pe", "auto_release", "use_kernel"))
+def admit_stream(state: SchedulerState, batch: RequestBatch,
+                 policy_id: jax.Array, *, n_pe: int,
+                 auto_release: bool = True,
+                 use_kernel: bool = False
+                 ) -> Tuple[SchedulerState, Decision]:
+    """Scan a whole arrival-ordered request stream on-device."""
+
+    def step(s, r):
+        return _admit_impl(s, r, policy_id, n_pe=n_pe,
+                           auto_release=auto_release,
+                           use_kernel=use_kernel)
+
+    return jax.lax.scan(step, state, batch)
+
+
+# ---------------------------------------------------------------------------
+# host wrappers: overflow -> grow -> deterministic re-run
+# ---------------------------------------------------------------------------
+
+
+def _grown(state: SchedulerState) -> SchedulerState:
+    return tl_lib.grow_state(
+        state, new_capacity=2 * state.tl.capacity,
+        new_pending_capacity=2 * state.pending_capacity)
+
+
+def admit_stream_auto(state: SchedulerState, batch: RequestBatch,
+                      policy, *, n_pe: int, auto_release: bool = True,
+                      use_kernel: bool = False
+                      ) -> Tuple[SchedulerState, Decision]:
+    """Run :func:`admit_stream`, growing capacity on overflow.
+
+    Each retry re-runs the *full* stream from the original (grown)
+    pre-run state; padding never changes decisions, so the result is
+    identical to a run that started with enough capacity.
+    """
+    pid = jnp.int32(
+        policy if isinstance(policy, (int, np.integer))
+        else policy_index(policy))
+    start = state
+    for attempt in range(MAX_DOUBLINGS + 1):
+        out, dec = admit_stream(start, batch, pid, n_pe=n_pe,
+                                auto_release=auto_release,
+                                use_kernel=use_kernel)
+        if not bool(out.overflow):
+            return out, dec
+        if attempt < MAX_DOUBLINGS:
+            start = _grown(start)
+    raise RuntimeError(
+        f"admit_stream still overflowing after {MAX_DOUBLINGS + 1} "
+        f"attempts (last tried capacity {start.tl.capacity}, "
+        f"pending {start.pending_capacity})")
+
+
+def admit_one(state: SchedulerState, req: ARRequest, policy, *,
+              n_pe: int, auto_release: bool = True,
+              use_kernel: bool = False
+              ) -> Tuple[SchedulerState, Optional[Allocation]]:
+    """Single fused admission with growth retry; host-typed result."""
+    pid = jnp.int32(policy_index(policy))
+    start = state
+    for attempt in range(MAX_DOUBLINGS + 1):
+        out, dec = admit(start, request_struct(req), pid, n_pe=n_pe,
+                         auto_release=auto_release,
+                         use_kernel=use_kernel)
+        if not bool(out.overflow):
+            return out, decision_to_allocation(dec)
+        if attempt < MAX_DOUBLINGS:
+            start = _grown(start)
+    raise RuntimeError(
+        f"admit still overflowing after {MAX_DOUBLINGS + 1} attempts "
+        f"(last tried capacity {start.tl.capacity}, "
+        f"pending {start.pending_capacity})")
+
+
+# ---------------------------------------------------------------------------
+# host-side decision unpacking
+# ---------------------------------------------------------------------------
+
+
+def mask32_to_ids(mask32: np.ndarray) -> Tuple[int, ...]:
+    """uint32[W] bitmask -> sorted tuple of PE ids."""
+    bits = np.unpackbits(
+        np.ascontiguousarray(mask32, dtype="<u4").view(np.uint8),
+        bitorder="little")
+    return tuple(int(i) for i in np.nonzero(bits)[0])
+
+
+def decision_to_allocation(dec: Decision) -> Optional[Allocation]:
+    """One scalar :class:`Decision` -> host :class:`Allocation`."""
+    if not bool(dec.accepted):
+        return None
+    return Allocation(
+        t_s=int(dec.t_s), t_e=int(dec.t_e),
+        pe_ids=mask32_to_ids(np.asarray(dec.pe_mask)),
+        rectangle=Rectangle(
+            t_s=int(dec.t_s), t_begin=int(dec.t_begin),
+            t_end=int(dec.t_end), n_free=int(dec.n_free)),
+    )
+
+
+def decisions_to_allocations(dec: Decision) -> List[Optional[Allocation]]:
+    """Stacked decisions -> one host allocation (or None) per request."""
+    accepted = np.asarray(dec.accepted)
+    t_s = np.asarray(dec.t_s)
+    t_e = np.asarray(dec.t_e)
+    masks = np.asarray(dec.pe_mask)
+    n_free = np.asarray(dec.n_free)
+    t_begin = np.asarray(dec.t_begin)
+    t_end = np.asarray(dec.t_end)
+    out: List[Optional[Allocation]] = []
+    for i in range(accepted.shape[0]):
+        if not accepted[i]:
+            out.append(None)
+            continue
+        out.append(Allocation(
+            t_s=int(t_s[i]), t_e=int(t_e[i]),
+            pe_ids=mask32_to_ids(masks[i]),
+            rectangle=Rectangle(
+                t_s=int(t_s[i]), t_begin=int(t_begin[i]),
+                t_end=int(t_end[i]), n_free=int(n_free[i]))))
+    return out

@@ -1,32 +1,38 @@
 """Engine facade: one API over the literal, host, and device engines.
 
 ``make_scheduler(engine=...)`` returns an object with the paper's three
-operations.  The device engine keeps its state on the accelerator as a
-:class:`~repro.core.timeline.Timeline` pytree and runs the jitted
-search; capacity overflow triggers host-side growth (double and retry),
-so callers never see a fixed limit.
+operations.  The device engine is a thin stateful wrapper over the
+functional core: its whole state is one
+:class:`~repro.core.timeline.SchedulerState` pytree and every mutation
+goes through the pure jitted functions in :mod:`repro.core.batch` /
+:mod:`repro.core.timeline`.  Capacity overflow triggers host-side
+growth (double and retry), so callers never see a fixed limit.  On top
+of the classic three operations it exposes the fused single-step
+``admit`` and the scanned ``admit_stream`` batched path (DESIGN.md §3).
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence
+from typing import Optional, Sequence, Union
 
 import numpy as np
 
+import jax.numpy as jnp
+
+from repro.core import batch as batch_lib
 from repro.core import search as search_lib
 from repro.core import timeline as tl_lib
-from repro.core.hostsched import HostScheduler, ids_from_mask, mask_from_ids
+from repro.core.hostsched import HostScheduler
 from repro.core.listsched import ListScheduler
 from repro.core.policies import policy_index
 from repro.core.types import Allocation, ARRequest, Policy, Rectangle, T_INF
-
-import jax.numpy as jnp
 
 
 class DeviceScheduler:
     """Device-resident scheduler with the HostScheduler interface."""
 
     def __init__(self, n_pe: int, capacity: int = 256,
-                 use_kernel: bool = False, bucketing: bool = True):
+                 use_kernel: bool = False, bucketing: bool = True,
+                 pending_capacity: int = 256):
         self.n_pe = n_pe
         self.use_kernel = use_kernel
         # §Perf iteration A3: the dense search costs O(P*S*n_pe) at the
@@ -35,9 +41,17 @@ class DeviceScheduler:
         # the timeline is mostly empty (each bucket jit-compiles once).
         self.bucketing = bucketing
         self._n_valid = 0
-        self.tl = tl_lib.empty(capacity, n_pe)
+        self.state = tl_lib.init_state(capacity, n_pe, pending_capacity)
 
     # -- helpers -------------------------------------------------------
+    @property
+    def tl(self) -> tl_lib.Timeline:
+        return self.state.tl
+
+    def _set_tl(self, new_tl: tl_lib.Timeline) -> None:
+        self.state = self.state._replace(tl=new_tl)
+        self._n_valid = int(new_tl.n_valid())
+
     def _mask32(self, pes: Sequence[int]) -> jnp.ndarray:
         W = self.tl.words
         bits = np.zeros(W * 32, dtype=np.uint32)
@@ -52,12 +66,12 @@ class DeviceScheduler:
             self.tl, t_s, t_e, mask, is_add=is_add)
         if bool(overflow):
             # static-shape growth, then retry (rare; amortised O(1))
-            self.tl = tl_lib.grow(self.tl, 2 * self.tl.capacity)
+            self.state = tl_lib.grow_state(
+                self.state, new_capacity=2 * self.tl.capacity)
             new_tl, overflow = tl_lib.update(
                 self.tl, t_s, t_e, mask, is_add=is_add)
             assert not bool(overflow)
-        self.tl = new_tl
-        self._n_valid = int(new_tl.n_valid())
+        self._set_tl(new_tl)
 
     def _search_view(self) -> tl_lib.Timeline:
         """Smallest power-of-two prefix covering the valid records."""
@@ -87,19 +101,48 @@ class DeviceScheduler:
             jnp.int32(t_now), n_pe=self.n_pe, use_kernel=self.use_kernel)
         if not bool(res.found):
             return None
-        mask32 = np.asarray(res.pe_mask)
-        # repack uint32 words into uint64 for id extraction
-        W64 = (mask32.shape[0] + 1) // 2
-        m64 = np.zeros(W64, dtype=np.uint64)
-        for w in range(mask32.shape[0]):
-            m64[w // 2] |= np.uint64(mask32[w]) << np.uint64(32 * (w % 2))
         return Allocation(
             t_s=int(res.t_s), t_e=int(res.t_e),
-            pe_ids=ids_from_mask(m64),
+            pe_ids=batch_lib.mask32_to_ids(np.asarray(res.pe_mask)),
             rectangle=Rectangle(
                 t_s=int(res.t_s), t_begin=int(res.t_begin),
                 t_end=int(res.t_end), n_free=int(res.n_free)),
         )
+
+    # -- the fused batched path (DESIGN.md §3) -------------------------
+    def admit(self, req: ARRequest, policy: Policy,
+              auto_release: bool = True) -> Optional[Allocation]:
+        """Fused find+commit in one device dispatch.
+
+        With ``auto_release`` (default) the committed reservation joins
+        the pending-release buffer and every earlier reservation ending
+        by ``req.t_a`` is deleted first — do not mix this mode with
+        manual ``delete_allocation`` of the same reservations.
+        """
+        self.state, alloc = batch_lib.admit_one(
+            self.state, req, policy, n_pe=self.n_pe,
+            auto_release=auto_release, use_kernel=self.use_kernel)
+        self._n_valid = int(self.state.tl.n_valid())
+        return alloc
+
+    def admit_stream(self,
+                     requests: Union[batch_lib.RequestBatch,
+                                     Sequence[ARRequest]],
+                     policy: Policy,
+                     auto_release: bool = True) -> batch_lib.Decision:
+        """Admit a whole arrival-ordered stream with one ``lax.scan``.
+
+        Returns the stacked per-request :class:`~repro.core.batch.Decision`
+        (convert with ``batch.decisions_to_allocations`` for host use).
+        Overflow mid-scan grows the state and re-runs deterministically.
+        """
+        if not isinstance(requests, batch_lib.RequestBatch):
+            requests = batch_lib.requests_to_batch(list(requests))
+        self.state, dec = batch_lib.admit_stream_auto(
+            self.state, requests, policy, n_pe=self.n_pe,
+            auto_release=auto_release, use_kernel=self.use_kernel)
+        self._n_valid = int(self.state.tl.n_valid())
+        return dec
 
     def records(self):
         times = np.asarray(self.tl.times)
@@ -108,14 +151,7 @@ class DeviceScheduler:
         for t, row in zip(times, occ):
             if t >= T_INF:
                 continue
-            ids = []
-            for w, word in enumerate(row):
-                word = int(word)
-                while word:
-                    b = word & -word
-                    ids.append(w * 32 + b.bit_length() - 1)
-                    word ^= b
-            out.append((int(t), frozenset(ids)))
+            out.append((int(t), frozenset(batch_lib.mask32_to_ids(row))))
         return out
 
 

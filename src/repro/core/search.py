@@ -113,8 +113,7 @@ def _winning_pe_mask(tl: Timeline, t_s: jax.Array, t_du: jax.Array,
     return tl_lib.pack_bits(sel_padded[None, :])[0]
 
 
-@functools.partial(jax.jit, static_argnames=("n_pe", "use_kernel"))
-def find_allocation(
+def search(
     tl: Timeline,
     t_r: jax.Array,
     t_du: jax.Array,
@@ -126,7 +125,12 @@ def find_allocation(
     n_pe: int,
     use_kernel: bool = False,
 ) -> SearchResult:
-    """Full Algorithm 3: candidates -> rectangles -> policy -> PE pick."""
+    """Full Algorithm 3: candidates -> rectangles -> policy -> PE pick.
+
+    Trace-time body, deliberately not jitted: :func:`find_allocation`
+    wraps it for standalone use, and :mod:`repro.core.batch` inlines it
+    into the fused ``admit`` step so find+commit compile as one program.
+    """
     starts = candidate_starts(tl, t_r, t_du, t_dl)
     if use_kernel:
         from repro.kernels import ops as kernel_ops
@@ -149,3 +153,7 @@ def find_allocation(
         t_begin=rects.t_begin[best],
         t_end=rects.t_end[best],
     )
+
+
+find_allocation = functools.partial(
+    jax.jit, static_argnames=("n_pe", "use_kernel"))(search)

@@ -59,6 +59,72 @@ def empty(capacity: int, n_pe: int) -> Timeline:
     )
 
 
+class SchedulerState(NamedTuple):
+    """Complete functional scheduler state (a JAX pytree, DESIGN.md §3).
+
+    The timeline plus the device-side pending-release buffer of
+    committed reservations (``pend_te == T_INF`` marks a free slot) and
+    run counters.  ``overflow`` latches when either the timeline or the
+    pending buffer ran out of capacity: from then on every further
+    fused-admission step is a no-op and the host wrapper must grow the
+    state and re-run (see :mod:`repro.core.batch`).
+    """
+
+    tl: Timeline
+    pend_ts: jax.Array    # int32[K] reservation starts
+    pend_te: jax.Array    # int32[K] reservation ends; T_INF = free slot
+    pend_mask: jax.Array  # uint32[K, W] reserved-PE bitmasks
+    n_accepted: jax.Array  # int32 scalar
+    n_released: jax.Array  # int32 scalar
+    overflow: jax.Array    # bool scalar
+
+    @property
+    def pending_capacity(self) -> int:
+        return self.pend_te.shape[0]
+
+
+def init_state(capacity: int, n_pe: int,
+               pending_capacity: int = 256) -> SchedulerState:
+    """Fresh all-free scheduler state."""
+    return SchedulerState(
+        tl=empty(capacity, n_pe),
+        pend_ts=jnp.full((pending_capacity,), T_INF, jnp.int32),
+        pend_te=jnp.full((pending_capacity,), T_INF, jnp.int32),
+        pend_mask=jnp.zeros((pending_capacity, n_words(n_pe)),
+                            jnp.uint32),
+        n_accepted=jnp.int32(0),
+        n_released=jnp.int32(0),
+        overflow=jnp.asarray(False),
+    )
+
+
+def grow_state(state: SchedulerState,
+               new_capacity: int | None = None,
+               new_pending_capacity: int | None = None) -> SchedulerState:
+    """Host-side capacity growth of timeline and/or pending buffer.
+
+    Padding rows never change decisions, so re-running a request stream
+    on a grown copy of the pre-stream state is deterministic.
+    """
+    out = state
+    if new_capacity is not None:
+        out = out._replace(tl=grow(out.tl, new_capacity))
+    if new_pending_capacity is not None:
+        K = out.pending_capacity
+        assert new_pending_capacity >= K
+        pad = new_pending_capacity - K
+        out = out._replace(
+            pend_ts=jnp.concatenate(
+                [out.pend_ts, jnp.full((pad,), T_INF, jnp.int32)]),
+            pend_te=jnp.concatenate(
+                [out.pend_te, jnp.full((pad,), T_INF, jnp.int32)]),
+            pend_mask=jnp.concatenate(
+                [out.pend_mask,
+                 jnp.zeros((pad, out.pend_mask.shape[1]), jnp.uint32)]),
+        )
+    return out
+
+
 def pe_valid_mask(n_pe: int) -> np.ndarray:
     """uint32[W] with exactly the first ``n_pe`` bits set."""
     W = n_words(n_pe)

@@ -187,6 +187,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
 
     ma = compiled.memory_analysis()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):   # pre-0.4.27 JAX: one dict per device
+        ca = ca[0] if ca else {}
     hlo = compiled.as_text()
     colls = roof.parse_collectives(hlo)
     # exact per-device argument bytes at the *intended* dtypes (the CPU

@@ -14,7 +14,7 @@ Weak-type-correct, shardable, zero device allocation.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -23,7 +23,7 @@ import numpy as np
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config
 from repro.data import TokenPipeline
-from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.mesh import make_production_mesh
 from repro.models.common import mesh_context
 from repro.train import optim as optim_lib
 from repro.train import step as step_lib

@@ -23,7 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 from repro.configs.base import ModelConfig, ShapeConfig
 

@@ -28,10 +28,11 @@ from __future__ import annotations
 import dataclasses
 import enum
 import itertools
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 from repro.configs import get_config, shape_by_name
 from repro.core import ARRequest, Policy, make_scheduler
+from repro.core import batch as batch_lib
 from repro.roofline import analysis as roof
 
 
@@ -116,11 +117,10 @@ class FleetScheduler:
                     self.events.append((t, "complete", job.job_id))
 
     # ------------------------------------------------------------------
-    def submit(self, arch: str, shape: str, n_chips: int,
-               n_steps: int, ready: Optional[int] = None,
-               deadline_slack: float = 2.0,
-               policy: Optional[Policy] = None) -> FleetJob:
-        """Admission-control one job; returns it (possibly REJECTED)."""
+    def _build_job(self, arch: str, shape: str, n_chips: int,
+                   n_steps: int, ready: Optional[int] = None,
+                   deadline_slack: float = 2.0):
+        """Shared job/request construction for submit and submit_batch."""
         dur = estimate_duration(arch, shape, n_chips, n_steps)
         ready = self.now if ready is None else ready
         deadline = ready + int(dur * (1.0 + deadline_slack))
@@ -130,19 +130,62 @@ class FleetScheduler:
             ready=ready, deadline=deadline)
         req = ARRequest(t_a=self.now, t_r=ready, t_du=dur,
                         t_dl=deadline, n_pe=n_chips)
-        alloc = self.core.find_allocation(
-            req, policy or self.policy, t_now=self.now)
+        return job, req
+
+    def _record_decision(self, job: FleetJob,
+                         alloc, committed: bool) -> FleetJob:
+        """Book-keep one admission outcome (alloc already committed
+        when ``committed``; otherwise commit it here)."""
         if alloc is None:
             job.state = JobState.REJECTED
             self.events.append((self.now, "reject", job.job_id))
         else:
-            self.core.add_allocation(alloc.t_s, alloc.t_e,
-                                     list(alloc.pe_ids))
+            if not committed:
+                self.core.add_allocation(alloc.t_s, alloc.t_e,
+                                         list(alloc.pe_ids))
             job.t_start, job.t_end = alloc.t_s, alloc.t_e
             job.chips = alloc.pe_ids
             self.events.append((self.now, "reserve", job.job_id))
         self.jobs[job.job_id] = job
         return job
+
+    def submit(self, arch: str, shape: str, n_chips: int,
+               n_steps: int, ready: Optional[int] = None,
+               deadline_slack: float = 2.0,
+               policy: Optional[Policy] = None) -> FleetJob:
+        """Admission-control one job; returns it (possibly REJECTED)."""
+        job, req = self._build_job(arch, shape, n_chips, n_steps,
+                                   ready, deadline_slack)
+        alloc = self.core.find_allocation(
+            req, policy or self.policy, t_now=self.now)
+        return self._record_decision(job, alloc, committed=False)
+
+    # ------------------------------------------------------------------
+    def submit_batch(self, specs: Sequence[Dict],
+                     policy: Optional[Policy] = None) -> List[FleetJob]:
+        """Bulk admission control: one device scan for many jobs.
+
+        Each spec is a dict with the keyword arguments of
+        :meth:`submit` (``arch``, ``shape``, ``n_chips``, ``n_steps``,
+        optional ``ready``/``deadline_slack``).  On a device-engine
+        core the whole batch goes through ``core.admit_stream`` — a
+        single jitted ``lax.scan`` with no per-job host round-trips;
+        decisions are identical to sequential submission because the
+        scan commits each accepted job before considering the next.
+        Completion release stays with :meth:`advance`
+        (``auto_release=False``).  Other engines fall back to the
+        sequential loop.
+        """
+        pol = policy or self.policy
+        if not hasattr(self.core, "admit_stream"):
+            return [self.submit(policy=pol, **spec) for spec in specs]
+        built = [self._build_job(**spec) for spec in specs]
+        decisions = self.core.admit_stream([req for _, req in built],
+                                           pol, auto_release=False)
+        return [
+            self._record_decision(job, alloc, committed=True)
+            for (job, _), alloc in zip(
+                built, batch_lib.decisions_to_allocations(decisions))]
 
     # ------------------------------------------------------------------
     def submit_malleable(self, arch: str, shape: str,

@@ -14,7 +14,7 @@ communication pattern.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+from typing import Any
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P

@@ -1,4 +1,8 @@
 """Discrete-event simulation of the paper's Section 6 experiments."""
 from repro.sim.metrics import SimResult, mean_ci95  # noqa: F401
-from repro.sim.simulator import run_policies, simulate  # noqa: F401
+from repro.sim.simulator import (  # noqa: F401
+    run_policies,
+    simulate,
+    simulate_batched,
+)
 from repro.sim.workload import WorkloadParams, generate  # noqa: F401

@@ -3,7 +3,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Sequence
+from typing import List, Optional, Sequence, Tuple
 
 
 @dataclasses.dataclass
@@ -18,6 +18,8 @@ class SimResult:
     span: float = 0.0               # makespan of the arrival stream
     n_pe: int = 0
     wall_seconds: float = 0.0       # scheduler wall time (data-structure cost)
+    # per-job (accepted, t_s) trace; populated on request only
+    decisions: Optional[List[Tuple[bool, int]]] = None
 
     @property
     def acceptance_rate(self) -> float:

@@ -15,6 +15,10 @@ import heapq
 import time as _time
 from typing import Iterable, List, Optional
 
+import numpy as np
+
+from repro.core import batch as batch_lib
+from repro.core import timeline as tl_lib
 from repro.core.scheduler import make_scheduler
 from repro.core.types import ARRequest, Policy
 from repro.sim.metrics import SimResult
@@ -26,6 +30,7 @@ def simulate(
     policy: Policy,
     engine: str = "host",
     engine_kwargs: Optional[dict] = None,
+    record_decisions: bool = False,
 ) -> SimResult:
     """Run one experiment: schedule every job, collect the metrics."""
     jobs = sorted(jobs, key=lambda j: j.t_a)
@@ -34,6 +39,8 @@ def simulate(
     seq = 0
     result = SimResult(policy=policy.value, n_jobs=len(jobs),
                        n_accepted=0, n_pe=n_pe)
+    if record_decisions:
+        result.decisions = []
     wall = 0.0
     for req in jobs:
         t_now = req.t_a
@@ -49,6 +56,9 @@ def simulate(
         if alloc is not None:
             sched.add_allocation(alloc.t_s, alloc.t_e, _as_pes(alloc, engine))
         wall += _time.perf_counter() - t0
+        if record_decisions:
+            result.decisions.append(
+                (alloc is not None, alloc.t_s if alloc else -1))
         if alloc is None:
             continue
         result.n_accepted += 1
@@ -67,6 +77,70 @@ def simulate(
 
 def _as_pes(alloc, engine: str):
     return set(alloc.pe_ids) if engine == "list" else list(alloc.pe_ids)
+
+
+def simulate_batched(
+    jobs: Iterable[ARRequest],
+    n_pe: int,
+    policy: Policy,
+    capacity: int = 128,
+    pending_capacity: int = 256,
+    cross_check: bool = False,
+    cross_check_engine: str = "host",
+) -> SimResult:
+    """On-device fast path: admit the whole stream with one ``lax.scan``.
+
+    Semantically identical to :func:`simulate` with the device engine —
+    completions are released before each arrival, then the fused step
+    searches and commits — but the entire experiment runs inside one
+    jitted scan (:mod:`repro.core.batch`), so there are zero host
+    round-trips between requests.  ``capacity``/``pending_capacity``
+    are starting sizes; overflow grows them and re-runs.
+
+    With ``cross_check=True`` the host-loop simulator is run on the
+    same workload and the per-job accept/reject decisions, start times
+    and metrics are asserted identical (the acceptance gate for the
+    batched path).
+    """
+    jobs = sorted(jobs, key=lambda j: j.t_a)
+    result = SimResult(policy=policy.value, n_jobs=len(jobs),
+                       n_accepted=0, n_pe=n_pe)
+    result.decisions = []
+    if not jobs:
+        return result
+    batch = batch_lib.requests_to_batch(jobs)
+    state = tl_lib.init_state(capacity, n_pe, pending_capacity)
+    t0 = _time.perf_counter()
+    state, dec = batch_lib.admit_stream_auto(
+        state, batch, policy, n_pe=n_pe)
+    accepted = np.asarray(dec.accepted)       # device sync
+    starts = np.asarray(dec.t_s)
+    result.wall_seconds = _time.perf_counter() - t0
+    result.n_accepted = int(accepted.sum())
+    result.decisions = [
+        (bool(a), int(t)) for a, t in zip(accepted, starts)]
+    for i, req in enumerate(jobs):
+        if not accepted[i]:
+            continue
+        wait = int(starts[i]) - req.t_r
+        result.slowdowns.append((wait + req.t_du) / req.t_du)
+        result.busy_area += req.n_pe * req.t_du
+    result.span = max(jobs[-1].t_a, 1) - jobs[0].t_a + 1
+    if cross_check:
+        ref = simulate(jobs, n_pe, policy, engine=cross_check_engine,
+                       record_decisions=True)
+        if ref.decisions != result.decisions:
+            diff = [i for i, (x, y) in
+                    enumerate(zip(ref.decisions, result.decisions))
+                    if x != y]
+            raise AssertionError(
+                f"batched decisions diverge from the {cross_check_engine} "
+                f"loop at job indices {diff[:10]} "
+                f"({len(diff)}/{len(jobs)} total)")
+        assert ref.n_accepted == result.n_accepted
+        assert ref.slowdowns == result.slowdowns
+        assert ref.busy_area == result.busy_area
+    return result
 
 
 def run_policies(jobs: List[ARRequest], n_pe: int,

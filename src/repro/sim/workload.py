@@ -28,7 +28,7 @@ reproduction validates.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from typing import List, Optional
 
 import numpy as np
 

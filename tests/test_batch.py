@@ -1,0 +1,201 @@
+"""Batched device admission: fused step, scan, overflow growth.
+
+Covers the functional core of DESIGN.md §3: the fused ``admit`` step
+against the classic find+add path, capacity overflow -> grow -> retry in
+both the three-op wrapper and the scanned stream, and end-to-end
+decision/metric identity of ``simulate_batched`` with the host loop.
+"""
+import numpy as np
+import pytest
+
+from repro.core import batch as batch_lib
+from repro.core.listsched import ListScheduler
+from repro.core.scheduler import DeviceScheduler
+from repro.core.types import ALL_POLICIES, ARRequest, Policy
+from repro.sim import WorkloadParams, generate, simulate, simulate_batched
+
+SMALL_SIZES = dict(u_low=2.0, u_med=4.0, u_hi=6.0)
+
+
+def _paper_example(s):
+    s.add_allocation(0, 300, list(range(0, 20)))
+    s.add_allocation(0, 100, list(range(20, 50)))
+    s.add_allocation(800, 1000, list(range(0, 25)))
+
+
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+def test_admit_matches_find_then_add(policy):
+    """One fused step == find_allocation + add_allocation."""
+    a = DeviceScheduler(100, capacity=64)
+    b = DeviceScheduler(100, capacity=64)
+    _paper_example(a)
+    _paper_example(b)
+    req = ARRequest(t_a=0, t_r=200, t_du=200, t_dl=900, n_pe=40)
+    alloc_a = a.find_allocation(req, policy)
+    a.add_allocation(alloc_a.t_s, alloc_a.t_e, list(alloc_a.pe_ids))
+    alloc_b = b.admit(req, policy)
+    assert (alloc_a.t_s, alloc_a.t_e, alloc_a.pe_ids) == \
+        (alloc_b.t_s, alloc_b.t_e, alloc_b.pe_ids)
+    assert alloc_a.rectangle == alloc_b.rectangle
+    assert a.records() == b.records()
+
+
+def test_admit_rejects_infeasible():
+    s = DeviceScheduler(100, capacity=64)
+    _paper_example(s)
+    req = ARRequest(t_a=0, t_r=0, t_du=250, t_dl=260, n_pe=90)
+    assert s.admit(req, Policy.FF) is None
+    assert int(s.state.n_accepted) == 0
+
+
+def test_admit_releases_due_completions():
+    """The pending buffer mirrors the simulator's completion heap."""
+    s = DeviceScheduler(8, capacity=32)
+    r1 = ARRequest(t_a=0, t_r=0, t_du=10, t_dl=10, n_pe=8)
+    assert s.admit(r1, Policy.FF) is not None
+    # all 8 PEs busy in [0, 10): a request arriving at t=20 releases
+    # the finished job first, so the full machine is free again
+    r2 = ARRequest(t_a=20, t_r=20, t_du=5, t_dl=25, n_pe=8)
+    alloc = s.admit(r2, Policy.FF)
+    assert alloc is not None and alloc.t_s == 20
+    assert int(s.state.n_released) == 1
+    # the released record is gone from the timeline
+    assert all(t >= 20 for t, _ in s.records())
+
+
+# ---------------------------------------------------------------------------
+# overflow -> grow -> retry
+# ---------------------------------------------------------------------------
+
+
+def test_update_overflow_grows_and_retries():
+    """`DeviceScheduler._update` doubles capacity when records overflow."""
+    dev = DeviceScheduler(8, capacity=4)
+    oracle = ListScheduler(8)
+    # disjoint windows: each allocation contributes two records
+    for i in range(4):
+        t0, t1 = 100 * i, 100 * i + 50
+        dev.add_allocation(t0, t1, [i])
+        oracle.add_allocation(t0, t1, {i})
+    assert dev.tl.capacity > 4          # grew (4 allocs -> 8 records)
+    assert dev.records() == oracle.records()
+    # deletions on the grown state stay exact
+    for i in range(4):
+        dev.delete_allocation(100 * i, 100 * i + 50, [i])
+        oracle.delete_allocation(100 * i, 100 * i + 50, {i})
+    assert dev.records() == oracle.records() == []
+
+
+def _piling_stream(n_jobs):
+    """Arrivals that pile up: every reservation is live at once."""
+    return [ARRequest(t_a=i, t_r=i, t_du=5000, t_dl=i + 5000, n_pe=1)
+            for i in range(n_jobs)]
+
+
+def test_admit_stream_overflow_mid_scan_retries_deterministically():
+    """Overflow inside the scan surfaces to the host wrapper, which
+    grows the state and re-runs; decisions match a big-capacity run."""
+    jobs = _piling_stream(12)           # 12 concurrent reservations
+    small = DeviceScheduler(16, capacity=8, pending_capacity=2)
+    big = DeviceScheduler(16, capacity=128, pending_capacity=64)
+    dec_small = small.admit_stream(jobs, Policy.FF)
+    dec_big = big.admit_stream(jobs, Policy.FF)
+    assert small.tl.capacity > 8        # timeline grew
+    assert small.state.pending_capacity > 2   # pending buffer grew
+    np.testing.assert_array_equal(np.asarray(dec_small.accepted),
+                                  np.asarray(dec_big.accepted))
+    np.testing.assert_array_equal(np.asarray(dec_small.t_s),
+                                  np.asarray(dec_big.t_s))
+    np.testing.assert_array_equal(np.asarray(dec_small.pe_mask),
+                                  np.asarray(dec_big.pe_mask))
+    assert small.records() == big.records()
+    # the retry is deterministic: running again from scratch agrees
+    again = DeviceScheduler(16, capacity=8, pending_capacity=2)
+    dec_again = again.admit_stream(jobs, Policy.FF)
+    np.testing.assert_array_equal(np.asarray(dec_small.t_s),
+                                  np.asarray(dec_again.t_s))
+
+
+def test_single_admit_overflow_grows():
+    """`admit_one` growth: tiny capacity, many live reservations."""
+    s = DeviceScheduler(16, capacity=4, pending_capacity=1)
+    for req in _piling_stream(6):
+        assert s.admit(req, Policy.FF) is not None
+    assert s.tl.capacity > 4
+    assert int(s.state.n_accepted) == 6
+
+
+# ---------------------------------------------------------------------------
+# end-to-end equivalence with the host event loop
+# ---------------------------------------------------------------------------
+
+
+def test_simulate_batched_matches_host_loop_quick():
+    jobs = generate(WorkloadParams(n_jobs=250, n_pe=64, seed=3,
+                                   **SMALL_SIZES))
+    jobs = [j for j in jobs if j.n_pe <= 64]
+    r = simulate_batched(jobs, 64, Policy.PE_W, capacity=64,
+                         cross_check=True)   # raises on any divergence
+    assert 0.0 < r.acceptance_rate < 1.0
+
+
+def test_simulate_batched_matches_host_loop_all_policies_1k():
+    """Acceptance gate: identical decisions/metrics on >=1000 jobs for
+    all seven policies (cross_check raises on the first divergence)."""
+    jobs = generate(WorkloadParams(n_jobs=1000, n_pe=64, seed=7,
+                                   **SMALL_SIZES))
+    jobs = [j for j in jobs if j.n_pe <= 64]
+    assert len(jobs) >= 1000
+    for policy in ALL_POLICIES:
+        r = simulate_batched(jobs, 64, policy, capacity=64,
+                             cross_check=True)
+        assert r.n_jobs == len(jobs)
+
+
+def test_admit_stream_kernel_matches_dense():
+    """use_kernel=True threads the Pallas scan into the fused step."""
+    jobs = [ARRequest(t_a=5 * i, t_r=5 * i, t_du=20, t_dl=5 * i + 80,
+                      n_pe=1 + i % 8) for i in range(20)]
+    dense = DeviceScheduler(48, capacity=32, use_kernel=False)
+    kern = DeviceScheduler(48, capacity=32, use_kernel=True)
+    d1 = dense.admit_stream(jobs, Policy.PE_W)
+    d2 = kern.admit_stream(jobs, Policy.PE_W)
+    np.testing.assert_array_equal(np.asarray(d1.accepted),
+                                  np.asarray(d2.accepted))
+    np.testing.assert_array_equal(np.asarray(d1.t_s),
+                                  np.asarray(d2.t_s))
+    assert dense.records() == kern.records()
+
+
+def test_requests_roundtrip_and_decision_unpack():
+    jobs = _piling_stream(3)
+    batch = batch_lib.requests_to_batch(jobs)
+    assert [int(x) for x in batch.t_a] == [0, 1, 2]
+    s = DeviceScheduler(16, capacity=32)
+    dec = s.admit_stream(jobs, Policy.FF)
+    allocs = batch_lib.decisions_to_allocations(dec)
+    assert all(a is not None for a in allocs)
+    assert sorted(sum((a.pe_ids for a in allocs), ())) == [0, 1, 2]
+
+
+# ---------------------------------------------------------------------------
+# fleet bulk submission
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_submit_batch_matches_sequential():
+    from repro.runtime import FleetScheduler
+
+    specs = [dict(arch="qwen3-4b", shape="train_4k", n_chips=64,
+                  n_steps=200) for _ in range(3)]
+    fa = FleetScheduler(n_chips=128, engine="device")
+    fb = FleetScheduler(n_chips=128, engine="device")
+    batch_jobs = fa.submit_batch(specs)
+    seq_jobs = [fb.submit(**s) for s in specs]
+    for x, y in zip(batch_jobs, seq_jobs):
+        assert (x.state, x.t_start, x.t_end, x.chips) == \
+            (y.state, y.t_start, y.t_end, y.chips)
+    assert fa.core.records() == fb.core.records()
+    # completions release through advance() (auto_release=False path)
+    fa.advance(max(j.t_end for j in batch_jobs) + 1)
+    assert fa.core.records() == []

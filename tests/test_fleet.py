@@ -3,12 +3,9 @@
 The invariant behind every scenario: the AR core never double-books a
 chip — verified directly on the availability records after each event.
 """
-import numpy as np
-import pytest
 
 from repro.core import Policy
 from repro.runtime import (
-    FleetJob,
     FleetScheduler,
     JobState,
     estimate_duration,

@@ -62,7 +62,6 @@ def test_seq_parallel_is_noop_on_single_device():
 
 
 def test_int8_cache_struct_halves_bytes():
-    from repro.launch.mesh import make_host_mesh
     cfg = get_config("qwen3-4b")
     c16 = jax.eval_shape(lambda: tf_lib.init_decode_cache(cfg, 8, 1024))
     cfg8 = dataclasses.replace(cfg, kv_cache_dtype="int8")

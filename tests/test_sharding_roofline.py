@@ -138,7 +138,10 @@ def test_analytic_flops_vs_hlo():
 
     tokens = jnp.zeros((B, T), jnp.int32)
     compiled = jax.jit(fwd).lower(params, tokens).compile()
-    hlo_flops = compiled.cost_analysis()["flops"]
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):   # pre-0.4.27 JAX: one dict per device
+        ca = ca[0]
+    hlo_flops = ca["flops"]
     analytic = roof.forward_flops(cfg, B * T, T, "train")
     assert abs(analytic - hlo_flops) / hlo_flops < 0.15, \
         (analytic, hlo_flops)

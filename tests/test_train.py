@@ -1,15 +1,12 @@
 """Training integration: loss decreases, microbatch equivalence,
 optimizer semantics, checkpoint restart mid-run."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config
 from repro.data import TokenPipeline
-from repro.models import transformer as tf_lib
 from repro.train import optim as optim_lib
 from repro.train import step as step_lib
 
