@@ -7,26 +7,29 @@ the full 10^4-job version with per-seed 95% CIs.
 """
 from __future__ import annotations
 
+import itertools
 import json
 import pathlib
 from typing import Dict, List, Optional
 
 from repro.core.types import ALL_POLICIES
 from repro.sim import (
+    GridSpec,
     WorkloadParams,
     generate,
     run_policies,
     simulate,
     simulate_batched,
+    simulate_grid,
 )
 
 N_PE = 1024
 
-# the tracked perf-trajectory artifact lives at the repo root,
+# the tracked perf-trajectory artifacts live at the repo root,
 # independent of the benchmark's working directory
-BENCH_ADMISSION_PATH = str(
-    pathlib.Path(__file__).resolve().parent.parent
-    / "BENCH_admission.json")
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+BENCH_ADMISSION_PATH = str(_ROOT / "BENCH_admission.json")
+BENCH_SWEEP_PATH = str(_ROOT / "BENCH_sweep.json")
 
 
 def _sweep(param_sets: List[Dict], n_jobs: int, seed: int
@@ -81,7 +84,7 @@ def admission_throughput(n_jobs: int = 240, n_pe: int = 64,
     jobs = generate(WorkloadParams(n_jobs=n_jobs, n_pe=n_pe, seed=seed,
                                    u_low=2.0, u_med=4.0, u_hi=6.0))
     jobs = [j for j in jobs if j.n_pe <= n_pe]
-    rows = []
+    rows: List[Dict] = []
     for pol in ALL_POLICIES:
         variants = {
             "host_loop": lambda p=pol: simulate(
@@ -110,6 +113,88 @@ def admission_throughput(n_jobs: int = 240, n_pe: int = 64,
             "n_jobs": len(jobs), "n_pe": n_pe, "seed": seed,
             "note": ("admissions/sec, steady state (second run); wall "
                      "time counts scheduler work only"),
+            "rows": rows,
+        }
+        with open(out_path, "w") as fh:
+            json.dump(payload, fh, indent=2)
+            fh.write("\n")
+    return rows
+
+
+def sweep_throughput(n_jobs: int = 120, n_pe: int = 64,
+                     out_path: Optional[str] = BENCH_SWEEP_PATH
+                     ) -> List[Dict]:
+    """Grid cells/sec: host loop vs per-cell scan vs vmapped grid.
+
+    One Section-6 experiment matrix (7 policies × 3 loads × 3 seeds =
+    63 cells, workloads shared across policies) evaluated three ways:
+
+    * ``host_loop`` — the classic per-cell host event loop;
+    * ``device_scan`` — one ``admit_stream`` scan per cell, cells
+      dispatched sequentially from the host;
+    * ``vmapped_grid`` — all cells as lanes of one vmapped scan
+      (``simulate_grid``, DESIGN.md §4).
+
+    Each variant runs twice and the steady-state (second) run is
+    reported; wall time counts scheduler/dispatch work only.
+    """
+    from repro.sim.workload import generate_filtered
+
+    spec = GridSpec(
+        policies=ALL_POLICIES, arrival_factors=(1.0, 1.5, 2.0),
+        seeds=(0, 1, 2), flex_factors=(3.0,),
+        base=WorkloadParams(u_low=2.0, u_med=4.0, u_hi=6.0),
+        n_pe=n_pe, n_jobs=n_jobs)
+    workloads = {
+        (lo, se, fl): generate_filtered(
+            spec.workload_params(lo, se, fl), max_pe=n_pe)
+        for lo, se, fl in itertools.product(
+            spec.arrival_factors, spec.seeds, spec.flex_factors)}
+    cells = [(pol, key) for pol in spec.policies for key in workloads]
+
+    def host_loop() -> float:
+        return sum(
+            simulate(workloads[key], n_pe, pol,
+                     engine="host").wall_seconds
+            for pol, key in cells)
+
+    def device_scan() -> float:
+        return sum(
+            simulate_batched(workloads[key], n_pe, pol,
+                             capacity=128).wall_seconds
+            for pol, key in cells)
+
+    def vmapped_grid() -> float:
+        return simulate_grid(spec, capacity=128).wall_seconds
+
+    rows: List[Dict] = []
+    walls: Dict[str, float] = {}
+    for name, fn in (("host_loop", host_loop),
+                     ("device_scan", device_scan),
+                     ("vmapped_grid", vmapped_grid)):
+        fn()                              # warm-up: jit caches
+        wall = fn()                       # steady state
+        walls[name] = wall
+        rows.append({
+            "variant": name,
+            "n_cells": len(cells),
+            "wall_s": round(wall, 4),
+            "cells_per_s": round(len(cells) / max(wall, 1e-9), 2),
+        })
+    for row in rows:
+        row["speedup_vs_host_loop"] = round(
+            walls["host_loop"] / max(walls[row["variant"]], 1e-9), 2)
+    if out_path:
+        payload = {
+            "bench": "sweep_throughput",
+            "grid": {"policies": len(spec.policies),
+                     "arrival_factors": list(spec.arrival_factors),
+                     "seeds": list(spec.seeds),
+                     "flex_factors": list(spec.flex_factors),
+                     "n_jobs": n_jobs, "n_pe": n_pe},
+            "note": ("Section-6 grid cells/sec, steady state (second "
+                     "run); wall time counts scheduler/dispatch work "
+                     "only"),
             "rows": rows,
         }
         with open(out_path, "w") as fh:

@@ -47,6 +47,9 @@ def main() -> None:
         "admission_throughput":
             lambda: bench_policies.admission_throughput(
                 n_jobs=600 if args.full else 240),
+        "sweep_throughput":
+            lambda: bench_policies.sweep_throughput(
+                n_jobs=300 if args.full else 120),
         "datastructure_op_costs":
             lambda: bench_datastructure.op_costs(
                 n_jobs=800 if args.full else 300),

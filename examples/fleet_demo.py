@@ -85,6 +85,34 @@ def main() -> None:
     for e in fleet.events[-8:]:
         print(f"  t={e[0]:>7} {e[1]:14s} id={e[2]}")
 
+    partitioned_demo(args)
+
+
+def partitioned_demo(args) -> None:
+    """Partitioned fleet (DESIGN.md §4): 4 x 128-chip partitions
+    behind one vmapped state, bulk traffic routed in one dispatch."""
+    print("\n=== partitioned fleet: 4 x 128 chips, one vmapped state "
+          "===")
+    fleet = FleetScheduler(n_chips=512, n_partitions=4,
+                           policy=Policy(args.policy),
+                           routing="least_loaded")
+    small = [(a, s, min(c, 128), n) for a, s, c, n in WORKLOAD
+             if c <= 128] * 2
+    specs = [dict(arch=a, shape=s, n_chips=c, n_steps=n)
+             for a, s, c, n in small]
+    jobs = fleet.submit_batch(specs)
+    spread = {}
+    for j in jobs:
+        key = j.partition if j.partition >= 0 else "rejected"
+        spread[key] = spread.get(key, 0) + 1
+    print(f"submitted {len(jobs)} jobs in one routed dispatch; "
+          f"partition spread: {dict(sorted(spread.items(), key=str))}")
+    probe = fleet.submit_batch(
+        [dict(arch="qwen3-4b", shape="train_4k", n_chips=64,
+              n_steps=100)], routing="best_acceptance")[0]
+    print(f"best-acceptance probe placed job on partition "
+          f"{probe.partition} (state={probe.state.value})")
+
 
 if __name__ == "__main__":
     main()

@@ -25,3 +25,12 @@ from repro.core.batch import (  # noqa: F401
     requests_to_batch,
 )
 from repro.core.timeline import SchedulerState, init_state  # noqa: F401
+from repro.core.ensemble import (  # noqa: F401
+    admit_ensemble,
+    admit_stream_ensemble,
+    admit_stream_ensemble_auto,
+    find_allocation_ensemble,
+    init_ensemble,
+    member,
+    stack_states,
+)

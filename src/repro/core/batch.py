@@ -82,6 +82,39 @@ def request_struct(req: ARRequest) -> RequestBatch:
         n_pe=jnp.int32(req.n_pe))
 
 
+def pad_streams(streams, n_pe: int) -> Tuple[RequestBatch, np.ndarray]:
+    """Stack variable-length request streams into ``[C, N]`` + mask.
+
+    Padding requests ask for ``n_pe + 1`` PEs — never feasible, so
+    they are rejected without touching the timeline; they arrive after
+    the stream's last real request, so they cannot reorder releases
+    either.  Decisions at padded positions must be masked out with the
+    returned ``valid`` array (the ensemble consumers do).
+    """
+    C = len(streams)
+    N = max((len(s) for s in streams), default=0)
+    N = max(N, 1)
+    fields = {f: np.zeros((C, N), np.int32)
+              for f in RequestBatch._fields}
+    valid = np.zeros((C, N), bool)
+    for c, stream in enumerate(streams):
+        last = stream[-1].t_a if stream else 0
+        for i in range(N):
+            if i < len(stream):
+                r = stream[i]
+                valid[c, i] = True
+            else:
+                r = ARRequest(t_a=last, t_r=last, t_du=1,
+                              t_dl=last + 1, n_pe=n_pe + 1)
+            fields["t_a"][c, i] = r.t_a
+            fields["t_r"][c, i] = r.t_r
+            fields["t_du"][c, i] = r.t_du
+            fields["t_dl"][c, i] = r.t_dl
+            fields["n_pe"][c, i] = r.n_pe
+    return RequestBatch(**{k: jnp.asarray(v)
+                           for k, v in fields.items()}), valid
+
+
 def _where_tree(pred, if_true, if_false):
     return jax.tree_util.tree_map(
         lambda a, b: jnp.where(pred, a, b), if_true, if_false)
@@ -101,9 +134,9 @@ def release_due(state: SchedulerState, t_now: jax.Array) -> SchedulerState:
 
     def release_one(s: SchedulerState) -> SchedulerState:
         i = jnp.argmin(s.pend_te)
-        new_tl, ovf = tl_lib.update(
+        new_tl, ovf, n_keep = tl_lib.update(
             s.tl, s.pend_ts[i], s.pend_te[i], s.pend_mask[i],
-            is_add=False)
+            is_add=False, with_count=True)
         # the slot is freed even on overflow so the loop always makes
         # progress; an overflowed stream is re-run anyway.
         return s._replace(
@@ -114,6 +147,7 @@ def release_due(state: SchedulerState, t_now: jax.Array) -> SchedulerState:
             n_released=s.n_released
             + jnp.where(ovf, 0, 1).astype(jnp.int32),
             overflow=s.overflow | ovf,
+            hw_records=jnp.maximum(s.hw_records, n_keep),
         )
 
     return jax.lax.while_loop(pending_due, release_one, state)
@@ -136,11 +170,15 @@ def _admit_impl(state: SchedulerState, req: RequestBatch,
     found = res.found & ~state.overflow
 
     def commit(s: SchedulerState) -> SchedulerState:
-        new_tl, ovf = tl_lib.update(
-            s.tl, res.t_s, res.t_e, res.pe_mask, is_add=True)
+        new_tl, ovf, n_keep = tl_lib.update(
+            s.tl, res.t_s, res.t_e, res.pe_mask, is_add=True,
+            with_count=True)
+        hw_pending = s.hw_pending
         if auto_release:
             free = s.pend_te == T_INF
             slot = jnp.argmax(free)
+            n_used = jnp.sum(~free).astype(jnp.int32) + 1
+            hw_pending = jnp.maximum(hw_pending, n_used)
             ovf = ovf | ~jnp.any(free)
             pend_ts = jnp.where(
                 ovf, s.pend_ts, s.pend_ts.at[slot].set(res.t_s))
@@ -159,6 +197,8 @@ def _admit_impl(state: SchedulerState, req: RequestBatch,
             n_accepted=s.n_accepted
             + jnp.where(ovf, 0, 1).astype(jnp.int32),
             overflow=s.overflow | ovf,
+            hw_records=jnp.maximum(s.hw_records, n_keep),
+            hw_pending=hw_pending,
         )
 
     state = jax.lax.cond(found, commit, lambda s: s, state)
@@ -211,10 +251,34 @@ def admit_stream(state: SchedulerState, batch: RequestBatch,
 # ---------------------------------------------------------------------------
 
 
-def _grown(state: SchedulerState) -> SchedulerState:
+def grown_capacities(state: SchedulerState, need_records: int,
+                     need_pending: int) -> Tuple[int, int]:
+    """New (capacity, pending_capacity) sized by the high-water marks.
+
+    ``need_records`` / ``need_pending`` are the max watermarks observed
+    in the overflowing run (across the whole ensemble for the vmapped
+    wrappers).  A structure whose watermark fits keeps its size; one
+    that overflowed jumps straight to the next power of two covering
+    the need (at least doubling, so the retry loop always progresses
+    even when the watermark stalled at the first-overflow step).
+    """
+    cap, pend = state.tl.capacity, state.pending_capacity
+    new_cap = cap if need_records <= cap \
+        else max(2 * cap, tl_lib.next_pow2(need_records))
+    new_pend = pend if need_pending <= pend \
+        else max(2 * pend, tl_lib.next_pow2(need_pending))
+    if (new_cap, new_pend) == (cap, pend):
+        # overflow latched without a usable watermark: double both.
+        new_cap, new_pend = 2 * cap, 2 * pend
+    return new_cap, new_pend
+
+
+def _grown(state: SchedulerState, run: SchedulerState) -> SchedulerState:
+    """Grow the pre-run snapshot to what the failed ``run`` needed."""
+    new_cap, new_pend = grown_capacities(
+        state, int(run.hw_records), int(run.hw_pending))
     return tl_lib.grow_state(
-        state, new_capacity=2 * state.tl.capacity,
-        new_pending_capacity=2 * state.pending_capacity)
+        state, new_capacity=new_cap, new_pending_capacity=new_pend)
 
 
 def admit_stream_auto(state: SchedulerState, batch: RequestBatch,
@@ -238,7 +302,7 @@ def admit_stream_auto(state: SchedulerState, batch: RequestBatch,
         if not bool(out.overflow):
             return out, dec
         if attempt < MAX_DOUBLINGS:
-            start = _grown(start)
+            start = _grown(start, out)
     raise RuntimeError(
         f"admit_stream still overflowing after {MAX_DOUBLINGS + 1} "
         f"attempts (last tried capacity {start.tl.capacity}, "
@@ -259,7 +323,7 @@ def admit_one(state: SchedulerState, req: ARRequest, policy, *,
         if not bool(out.overflow):
             return out, decision_to_allocation(dec)
         if attempt < MAX_DOUBLINGS:
-            start = _grown(start)
+            start = _grown(start, out)
     raise RuntimeError(
         f"admit still overflowing after {MAX_DOUBLINGS + 1} attempts "
         f"(last tried capacity {start.tl.capacity}, "
@@ -289,6 +353,19 @@ def decision_to_allocation(dec: Decision) -> Optional[Allocation]:
         rectangle=Rectangle(
             t_s=int(dec.t_s), t_begin=int(dec.t_begin),
             t_end=int(dec.t_end), n_free=int(dec.n_free)),
+    )
+
+
+def search_result_to_allocation(res) -> Optional[Allocation]:
+    """One scalar ``SearchResult`` -> host :class:`Allocation`."""
+    if not bool(res.found):
+        return None
+    return Allocation(
+        t_s=int(res.t_s), t_e=int(res.t_e),
+        pe_ids=mask32_to_ids(np.asarray(res.pe_mask)),
+        rectangle=Rectangle(
+            t_s=int(res.t_s), t_begin=int(res.t_begin),
+            t_end=int(res.t_end), n_free=int(res.n_free)),
     )
 
 

@@ -1,0 +1,182 @@
+"""Ensemble axis: E independent scheduler timelines in one dispatch.
+
+The functional core (:mod:`repro.core.batch`) is pure, so a whole
+*ensemble* of schedulers — E independent timelines, pending buffers and
+overflow flags — is just a :class:`~repro.core.timeline.SchedulerState`
+pytree with a leading axis, stepped in lockstep by ``jax.vmap``
+(DESIGN.md §4).  One jitted dispatch then advances every lane: the
+Section-6 sweep grid (`sim/sweep.py`) runs policies × loads × seeds ×
+flexibilities as lanes of one vmapped scan, and the partitioned fleet
+(`runtime/fleet.py`) runs its cluster partitions the same way.
+
+Because the lanes share one stacked buffer, they share static shapes:
+capacity growth is collective.  The auto wrapper reads the per-lane
+high-water marks after an overflowing run and grows *once* to the max
+needed capacity across the ensemble, then re-runs deterministically
+from the pre-run snapshot — same protocol as the single-lane wrappers,
+sized by the worst lane.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import batch as batch_lib
+from repro.core import search as search_lib
+from repro.core import timeline as tl_lib
+from repro.core.batch import Decision, RequestBatch
+from repro.core.policies import policy_index
+from repro.core.timeline import SchedulerState
+
+
+def init_ensemble(n_ensemble: int, capacity: int, n_pe: int,
+                  pending_capacity: int = 256) -> SchedulerState:
+    """E fresh all-free lanes as one stacked state pytree."""
+    one = tl_lib.init_state(capacity, n_pe, pending_capacity)
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (n_ensemble,) + x.shape), one)
+
+
+def stack_states(states: Sequence[SchedulerState]) -> SchedulerState:
+    """Stack equally-shaped single-lane states along a new leading axis."""
+    return jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs), *states)
+
+
+def member(states: SchedulerState, i: int) -> SchedulerState:
+    """Extract lane ``i`` as a single-lane state."""
+    return jax.tree_util.tree_map(lambda x: x[i], states)
+
+
+def set_member(states: SchedulerState, i: int,
+               lane: SchedulerState) -> SchedulerState:
+    """Write a single-lane state back into lane ``i``."""
+    return jax.tree_util.tree_map(
+        lambda full, one: full.at[i].set(one), states, lane)
+
+
+def ensemble_size(states: SchedulerState) -> int:
+    return states.pend_te.shape[0]
+
+
+def lane_capacity(states: SchedulerState) -> Tuple[int, int]:
+    """(timeline capacity, pending capacity) of each lane."""
+    return states.tl.times.shape[-1], states.pend_te.shape[-1]
+
+
+def policy_ids(policies) -> jax.Array:
+    """int32[E] policy ids from policies / ids (one per lane)."""
+    return jnp.asarray(
+        [p if isinstance(p, (int, np.integer)) else policy_index(p)
+         for p in policies], jnp.int32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_pe", "auto_release", "use_kernel"))
+def admit_ensemble(states: SchedulerState, reqs: RequestBatch,
+                   pids: jax.Array, *, n_pe: int,
+                   auto_release: bool = True,
+                   use_kernel: bool = False
+                   ) -> Tuple[SchedulerState, Decision]:
+    """One fused admission step on every lane (`vmap` of ``admit``).
+
+    ``reqs`` carries one request per lane (leading axis E); ``pids``
+    is ``int32[E]`` so every lane can run a different policy without
+    recompilation.
+    """
+
+    def one(s, r, p):
+        return batch_lib.admit(s, r, p, n_pe=n_pe,
+                               auto_release=auto_release,
+                               use_kernel=use_kernel)
+
+    return jax.vmap(one)(states, reqs, pids)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_pe", "auto_release", "use_kernel"))
+def admit_stream_ensemble(states: SchedulerState, batches: RequestBatch,
+                          pids: jax.Array, *, n_pe: int,
+                          auto_release: bool = True,
+                          use_kernel: bool = False
+                          ) -> Tuple[SchedulerState, Decision]:
+    """Scan a per-lane request stream through every lane in lockstep.
+
+    ``batches`` fields are ``int32[E, N]`` (per-lane arrival-ordered
+    streams, padded to a common length with never-feasible requests —
+    see :func:`repro.core.batch.pad_streams`).  Returns the stacked
+    states and ``[E, N]`` decisions of ``vmap(admit_stream)``.
+    """
+
+    def one(s, b, p):
+        return batch_lib.admit_stream(s, b, p, n_pe=n_pe,
+                                      auto_release=auto_release,
+                                      use_kernel=use_kernel)
+
+    return jax.vmap(one)(states, batches, pids)
+
+
+@functools.partial(jax.jit, static_argnames=("n_pe", "use_kernel"))
+def find_allocation_ensemble(states: SchedulerState, req: RequestBatch,
+                             pid: jax.Array, *, n_pe: int,
+                             use_kernel: bool = False
+                             ) -> search_lib.SearchResult:
+    """Probe one request against every lane's timeline (no commit).
+
+    The request and policy are shared (unbatched); only the state is
+    vmapped — this is the fleet's best-acceptance routing probe.
+    """
+
+    def one(s):
+        return search_lib.search(
+            s.tl, req.t_r, req.t_du, req.t_dl, req.n_pe, pid, req.t_a,
+            n_pe=n_pe, use_kernel=use_kernel)
+
+    return jax.vmap(one)(states)
+
+
+def grow_ensemble(states: SchedulerState, new_capacity: int,
+                  new_pending_capacity: int) -> SchedulerState:
+    """Collective capacity growth of every lane (shared static shape)."""
+    return jax.vmap(lambda s: tl_lib.grow_state(
+        s, new_capacity=new_capacity,
+        new_pending_capacity=new_pending_capacity))(states)
+
+
+def admit_stream_ensemble_auto(
+    states: SchedulerState, batches: RequestBatch, policies, *,
+    n_pe: int, auto_release: bool = True, use_kernel: bool = False,
+) -> Tuple[SchedulerState, Decision]:
+    """Run :func:`admit_stream_ensemble`, growing on any lane overflow.
+
+    On overflow the ensemble grows *once* to the max needed capacity
+    across all lanes (their high-water marks) and the whole grid
+    re-runs from the pre-run snapshot; lanes that did not overflow
+    reproduce their decisions exactly (padding never changes
+    decisions), so the result equals E independent auto runs.
+    """
+    pids = policies if isinstance(policies, jax.Array) \
+        else policy_ids(policies)
+    start = states
+    for attempt in range(batch_lib.MAX_DOUBLINGS + 1):
+        out, dec = admit_stream_ensemble(
+            start, batches, pids, n_pe=n_pe,
+            auto_release=auto_release, use_kernel=use_kernel)
+        if not bool(jnp.any(out.overflow)):
+            return out, dec
+        if attempt < batch_lib.MAX_DOUBLINGS:
+            need_r = int(jnp.max(out.hw_records))
+            need_p = int(jnp.max(out.hw_pending))
+            probe = member(start, 0)
+            new_cap, new_pend = batch_lib.grown_capacities(
+                probe, need_r, need_p)
+            start = grow_ensemble(start, new_cap, new_pend)
+    cap, pend = lane_capacity(start)
+    raise RuntimeError(
+        f"admit_stream_ensemble still overflowing after "
+        f"{batch_lib.MAX_DOUBLINGS + 1} attempts (last tried capacity "
+        f"{cap}, pending {pend})")

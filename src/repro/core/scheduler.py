@@ -24,7 +24,7 @@ from repro.core import timeline as tl_lib
 from repro.core.hostsched import HostScheduler
 from repro.core.listsched import ListScheduler
 from repro.core.policies import policy_index
-from repro.core.types import Allocation, ARRequest, Policy, Rectangle, T_INF
+from repro.core.types import Allocation, ARRequest, Policy, T_INF
 
 
 class DeviceScheduler:
@@ -53,21 +53,20 @@ class DeviceScheduler:
         self._n_valid = int(new_tl.n_valid())
 
     def _mask32(self, pes: Sequence[int]) -> jnp.ndarray:
-        W = self.tl.words
-        bits = np.zeros(W * 32, dtype=np.uint32)
-        for i in pes:
-            bits[i] = 1
-        return jnp.asarray(tl_lib.pack_bits(bits[None, :])[0])
+        return tl_lib.ids_to_mask32(pes, self.tl.words)
 
     def _update(self, t_s: int, t_e: int, pes, is_add: bool) -> None:
         mask = pes if not isinstance(pes, (list, tuple, set, range)) \
             else self._mask32(sorted(pes))
-        new_tl, overflow = tl_lib.update(
-            self.tl, t_s, t_e, mask, is_add=is_add)
+        new_tl, overflow, n_keep = tl_lib.update(
+            self.tl, t_s, t_e, mask, is_add=is_add, with_count=True)
         if bool(overflow):
-            # static-shape growth, then retry (rare; amortised O(1))
+            # grow once to the needed record count (rare; amortised
+            # O(1)) — the same watermark protocol as the batched path
             self.state = tl_lib.grow_state(
-                self.state, new_capacity=2 * self.tl.capacity)
+                self.state, new_capacity=max(
+                    2 * self.tl.capacity,
+                    tl_lib.next_pow2(int(n_keep))))
             new_tl, overflow = tl_lib.update(
                 self.tl, t_s, t_e, mask, is_add=is_add)
             assert not bool(overflow)
@@ -99,15 +98,7 @@ class DeviceScheduler:
             jnp.int32(req.t_r), jnp.int32(req.t_du), jnp.int32(req.t_dl),
             jnp.int32(req.n_pe), jnp.int32(policy_index(policy)),
             jnp.int32(t_now), n_pe=self.n_pe, use_kernel=self.use_kernel)
-        if not bool(res.found):
-            return None
-        return Allocation(
-            t_s=int(res.t_s), t_e=int(res.t_e),
-            pe_ids=batch_lib.mask32_to_ids(np.asarray(res.pe_mask)),
-            rectangle=Rectangle(
-                t_s=int(res.t_s), t_begin=int(res.t_begin),
-                t_end=int(res.t_end), n_free=int(res.n_free)),
-        )
+        return batch_lib.search_result_to_allocation(res)
 
     # -- the fused batched path (DESIGN.md §3) -------------------------
     def admit(self, req: ARRequest, policy: Policy,

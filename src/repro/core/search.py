@@ -128,8 +128,11 @@ def search(
     """Full Algorithm 3: candidates -> rectangles -> policy -> PE pick.
 
     Trace-time body, deliberately not jitted: :func:`find_allocation`
-    wraps it for standalone use, and :mod:`repro.core.batch` inlines it
-    into the fused ``admit`` step so find+commit compile as one program.
+    wraps it for standalone use, :mod:`repro.core.batch` inlines it
+    into the fused ``admit`` step so find+commit compile as one
+    program, and :mod:`repro.core.ensemble` vmaps it over stacked
+    timelines (all inputs tolerate a leading ensemble axis — the
+    kernel path included).
     """
     starts = candidate_starts(tl, t_r, t_du, t_dl)
     if use_kernel:

@@ -19,7 +19,7 @@ Invariants (asserted in tests, preserved by ``update``):
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +32,11 @@ _WORD = 32
 
 def n_words(n_pe: int) -> int:
     return (n_pe + _WORD - 1) // _WORD
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= ``n`` (and >= 2) — growth sizing."""
+    return 1 << max(int(n) - 1, 1).bit_length()
 
 
 class Timeline(NamedTuple):
@@ -68,6 +73,13 @@ class SchedulerState(NamedTuple):
     pending buffer ran out of capacity: from then on every further
     fused-admission step is a no-op and the host wrapper must grow the
     state and re-run (see :mod:`repro.core.batch`).
+
+    ``hw_records`` / ``hw_pending`` are high-water marks: the most
+    timeline records (including the overflowing count, which may exceed
+    the capacity) and pending slots any step needed so far.  The host
+    wrappers read them to grow once to the max needed capacity —
+    across a whole ensemble when the leading axis is vmapped
+    (DESIGN.md §4) — instead of doubling blindly per retry.
     """
 
     tl: Timeline
@@ -77,6 +89,8 @@ class SchedulerState(NamedTuple):
     n_accepted: jax.Array  # int32 scalar
     n_released: jax.Array  # int32 scalar
     overflow: jax.Array    # bool scalar
+    hw_records: jax.Array  # int32 scalar: max records any update needed
+    hw_pending: jax.Array  # int32 scalar: max pending slots needed
 
     @property
     def pending_capacity(self) -> int:
@@ -95,6 +109,8 @@ def init_state(capacity: int, n_pe: int,
         n_accepted=jnp.int32(0),
         n_released=jnp.int32(0),
         overflow=jnp.asarray(False),
+        hw_records=jnp.int32(0),
+        hw_pending=jnp.int32(0),
     )
 
 
@@ -133,6 +149,14 @@ def pe_valid_mask(n_pe: int) -> np.ndarray:
     return pack_bits(bits[None, :])[0]
 
 
+def ids_to_mask32(pe_ids, words: int) -> jax.Array:
+    """Sorted-or-not PE id sequence -> uint32[words] bitmask."""
+    bits = np.zeros(words * _WORD, dtype=np.uint32)
+    for i in pe_ids:
+        bits[i] = 1
+    return jnp.asarray(pack_bits(bits[None, :])[0])
+
+
 def pack_bits(bits: np.ndarray | jax.Array) -> jax.Array:
     """[..., W*32] 0/1 -> uint32 [..., W] little-endian within words."""
     xp = jnp if isinstance(bits, jax.Array) else np
@@ -165,9 +189,12 @@ def next_times(tl: Timeline) -> jax.Array:
         [tl.times[1:], jnp.array([T_INF], dtype=jnp.int32)])
 
 
-@functools.partial(jax.jit, static_argnames=("is_add",))
+@functools.partial(jax.jit, static_argnames=("is_add", "with_count"))
 def update(tl: Timeline, t_s: jax.Array, t_e: jax.Array,
-           mask: jax.Array, *, is_add: bool) -> Tuple[Timeline, jax.Array]:
+           mask: jax.Array, *, is_add: bool,
+           with_count: bool = False
+           ) -> Union[Tuple[Timeline, jax.Array],
+                      Tuple[Timeline, jax.Array, jax.Array]]:
     """Functional ``addAllocation`` / ``deleteAllocation`` (Algorithms 1-2).
 
     Inserts the two boundary records, ORs (or AND-NOTs) ``mask`` into
@@ -175,6 +202,10 @@ def update(tl: Timeline, t_s: jax.Array, t_e: jax.Array,
     re-compacts into the same capacity.  Returns ``(new_tl, overflow)``
     where ``overflow`` flags that the compacted timeline needed more
     than ``S`` records (callers must grow and retry — see scheduler).
+    With ``with_count=True`` returns ``(new_tl, overflow, n_keep)``
+    where ``n_keep`` is the record count the result *needed* (it may
+    exceed the capacity ``S``) — the growth wrappers use it to size
+    the retry in one step.
     """
     S = tl.capacity
     t_s = jnp.asarray(t_s, jnp.int32)
@@ -209,9 +240,12 @@ def update(tl: Timeline, t_s: jax.Array, t_e: jax.Array,
         jnp.where(keep, ext_t, T_INF))
     out_o = jnp.zeros((S + 2, tl.words), jnp.uint32).at[dest].set(
         jnp.where(keep[:, None], ext_o, jnp.uint32(0)))
-    n_keep = jnp.sum(keep)
+    n_keep = jnp.sum(keep).astype(jnp.int32)
     overflow = n_keep > S
-    return Timeline(times=out_t[:S], occ=out_o[:S]), overflow
+    out = Timeline(times=out_t[:S], occ=out_o[:S])
+    if with_count:
+        return out, overflow, n_keep
+    return out, overflow
 
 
 @jax.jit

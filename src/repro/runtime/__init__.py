@@ -1,2 +1,8 @@
 """Fleet runtime: AR scheduling of ML jobs on the chip fleet."""
-from repro.runtime.fleet import FleetJob, FleetScheduler, JobState, estimate_duration  # noqa: F401
+from repro.runtime.fleet import (  # noqa: F401
+    FleetJob,
+    FleetScheduler,
+    JobState,
+    PartitionedCore,
+    estimate_duration,
+)

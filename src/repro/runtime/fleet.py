@@ -10,6 +10,13 @@ Admission, placement and policy choice reuse :mod:`repro.core`
 unchanged — the scheduler engine is the deliverable, the fleet is its
 first production consumer.
 
+With ``n_partitions > 1`` the fleet is *partitioned*: the chips split
+into equal partitions, each one lane of a single vmapped scheduler
+state (:class:`PartitionedCore`, DESIGN.md §4).  Bulk submissions are
+routed across partitions (round-robin, least-loaded, or
+best-acceptance probes) and admitted in one device dispatch; jobs
+never span partitions.
+
 Fault tolerance (the general-deadline slack is what makes this work —
 the paper's central observation):
 
@@ -30,10 +37,22 @@ import enum
 import itertools
 from typing import Dict, List, Optional, Sequence
 
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
 from repro.configs import get_config, shape_by_name
 from repro.core import ARRequest, Policy, make_scheduler
 from repro.core import batch as batch_lib
+from repro.core import ensemble as ens_lib
+from repro.core import timeline as tl_lib
+from repro.core.batch import pad_streams
+from repro.core.policies import policy_index
+from repro.core.types import Allocation, T_INF
 from repro.roofline import analysis as roof
+
+ROUTINGS = ("round_robin", "least_loaded", "best_acceptance")
 
 
 class JobState(str, enum.Enum):
@@ -58,6 +77,7 @@ class FleetJob:
     t_start: int = -1
     t_end: int = -1
     chips: tuple = ()
+    partition: int = -1                   # -1: unpartitioned fleet
     checkpoint_interval: int = 600        # seconds of work per ckpt
     work_done: int = 0                    # seconds of completed work
     preemptions: int = 0
@@ -84,15 +104,246 @@ def estimate_duration(arch: str, shape_name: str, n_chips: int,
     return max(int(step_s * n_steps) + 1, 60)
 
 
+class PartitionedCore:
+    """E cluster partitions behind one vmapped scheduler state.
+
+    The fleet's chips are split into ``n_partitions`` equal partitions;
+    each partition is one lane of a stacked
+    :class:`~repro.core.timeline.SchedulerState` (DESIGN.md §4), so
+    bulk admission steps every partition in a single jitted dispatch
+    (``admit_stream_ensemble``) and the best-acceptance probe searches
+    all partitions at once (``find_allocation_ensemble``).
+
+    The interface mirrors the single-cluster engines — ``find`` /
+    ``add`` / ``delete`` with *global* chip ids — plus the routed bulk
+    path :meth:`admit_stream_allocations`.  An allocation never spans
+    partitions: requests wider than a partition are rejected.
+    """
+
+    def __init__(self, n_chips: int, n_partitions: int,
+                 capacity: int = 128, pending_capacity: int = 256,
+                 use_kernel: bool = False):
+        if n_partitions < 1 or n_chips % n_partitions:
+            raise ValueError(
+                f"n_chips={n_chips} not divisible into "
+                f"{n_partitions} partitions")
+        self.n_chips = n_chips
+        self.n_partitions = n_partitions
+        self.chips_per_part = n_chips // n_partitions
+        self.use_kernel = use_kernel
+        self.states = ens_lib.init_ensemble(
+            n_partitions, capacity, self.chips_per_part,
+            pending_capacity)
+        # committed PE-seconds per partition (least-loaded routing)
+        self.load = [0.0] * n_partitions
+        self._rr = 0                      # round-robin cursor
+
+    # -- global chip ids <-> (lane, local) -----------------------------
+    def _split(self, pes: Sequence[int]):
+        lanes = {p // self.chips_per_part for p in pes}
+        if len(lanes) != 1:
+            raise ValueError(
+                f"allocation spans partitions {sorted(lanes)}")
+        lane = lanes.pop()
+        return lane, [p - lane * self.chips_per_part for p in pes]
+
+    def _mask(self, local_pes: Sequence[int]) -> jax.Array:
+        return tl_lib.ids_to_mask32(local_pes,
+                                    self.states.tl.occ.shape[-1])
+
+    def _globalize(self, lane: int, dec) -> Optional[Allocation]:
+        alloc = batch_lib.decision_to_allocation(dec)
+        if alloc is None:
+            return None
+        off = lane * self.chips_per_part
+        return dataclasses.replace(
+            alloc, pe_ids=tuple(p + off for p in alloc.pe_ids))
+
+    # -- the three classic operations (global chip ids) ----------------
+    def _lane_update(self, lane: int, t_s: int, t_e: int,
+                     local_pes: Sequence[int], is_add: bool) -> None:
+        mask = self._mask(local_pes)
+        for _ in range(batch_lib.MAX_DOUBLINGS + 1):
+            tl = jax.tree_util.tree_map(
+                lambda x: x[lane], self.states.tl)
+            new_tl, overflow, n_keep = tl_lib.update(
+                tl, t_s, t_e, mask, is_add=is_add, with_count=True)
+            if not bool(overflow):
+                self.states = self.states._replace(
+                    tl=jax.tree_util.tree_map(
+                        lambda full, one: full.at[lane].set(one),
+                        self.states.tl, new_tl))
+                return
+            # watermark protocol (DESIGN.md §3/§4): grow every lane
+            # once to the needed record count
+            cap = self.states.tl.times.shape[-1]
+            self.states = ens_lib.grow_ensemble(
+                self.states,
+                max(2 * cap, tl_lib.next_pow2(int(n_keep))),
+                self.states.pend_te.shape[-1])
+        raise RuntimeError("partition timeline kept overflowing")
+
+    def add_allocation(self, t_s: int, t_e: int,
+                       pes: Sequence[int]) -> None:
+        lane, local = self._split(pes)
+        self._lane_update(lane, t_s, t_e, local, is_add=True)
+        self.load[lane] += (t_e - t_s) * len(local)
+
+    def delete_allocation(self, t_s: int, t_e: int,
+                          pes: Sequence[int]) -> None:
+        lane, local = self._split(pes)
+        self._lane_update(lane, t_s, t_e, local, is_add=False)
+        self.load[lane] -= (t_e - t_s) * len(local)
+
+    def find_allocation(self, req: ARRequest, policy: Policy,
+                        t_now: Optional[int] = None
+                        ) -> Optional[Allocation]:
+        """Best-acceptance probe: search every partition in one
+        vmapped dispatch, take the earliest feasible start (ties to
+        the lowest lane)."""
+        struct = batch_lib.request_struct(req)
+        if t_now is not None:
+            # the search reads its "now" from the struct's t_a
+            struct = struct._replace(t_a=jnp.int32(t_now))
+        res = ens_lib.find_allocation_ensemble(
+            self.states, struct, jnp.int32(policy_index(policy)),
+            n_pe=self.chips_per_part, use_kernel=self.use_kernel)
+        res = jax.tree_util.tree_map(np.asarray, res)   # one sync
+        if not res.found.any():
+            return None
+        t_s = np.where(res.found, res.t_s, T_INF)
+        lane = int(np.argmin(t_s))        # argmin ties -> lowest lane
+        one = jax.tree_util.tree_map(lambda x: x[lane], res)
+        alloc = batch_lib.search_result_to_allocation(one)
+        off = lane * self.chips_per_part
+        return dataclasses.replace(
+            alloc, pe_ids=tuple(p + off for p in alloc.pe_ids))
+
+    # -- routed bulk admission (one vmapped dispatch) ------------------
+    def route(self, requests: Sequence[ARRequest],
+              routing: str) -> List[int]:
+        """Assign a partition lane to every request (no commit)."""
+        if routing not in ROUTINGS:
+            raise ValueError(
+                f"unknown routing {routing!r}; pick one of {ROUTINGS}")
+        if routing == "best_acceptance":
+            raise ValueError(
+                "best_acceptance routes by probing the timelines, not "
+                "by pre-assignment; use admit_stream_allocations")
+        E = self.n_partitions
+        if routing == "round_robin":
+            lanes = [(self._rr + i) % E for i in range(len(requests))]
+            self._rr = (self._rr + len(requests)) % E
+            return lanes
+        # least_loaded: greedy argmin over committed + planned area
+        load = list(self.load)
+        lanes = []
+        for req in requests:
+            lane = int(np.argmin(load))
+            lanes.append(lane)
+            load[lane] += req.n_pe * req.t_du
+        return lanes
+
+    def admit_stream_allocations(
+        self, requests: Sequence[ARRequest], policy: Policy,
+        routing: str = "round_robin",
+    ) -> List[Optional[Allocation]]:
+        """Bulk admission across partitions.
+
+        ``round_robin`` / ``least_loaded`` group the requests per lane
+        and admit all lanes in *one* vmapped ``admit_stream`` dispatch
+        (completion release stays with the fleet: ``auto_release`` is
+        off).  ``best_acceptance`` probes all partitions per request
+        (vmapped search) and commits to the earliest feasible start —
+        sequential commits, maximal acceptance.
+        """
+        if routing == "best_acceptance":
+            out: List[Optional[Allocation]] = []
+            for req in requests:
+                alloc = self.find_allocation(req, policy)
+                if alloc is not None:
+                    self.add_allocation(alloc.t_s, alloc.t_e,
+                                        list(alloc.pe_ids))
+                out.append(alloc)
+            return out
+        lanes = self.route(requests, routing)
+        E = self.n_partitions
+        streams: List[List[ARRequest]] = [[] for _ in range(E)]
+        slot: List[tuple] = []            # request i -> (lane, pos)
+        for req, lane in zip(requests, lanes):
+            slot.append((lane, len(streams[lane])))
+            streams[lane].append(req)
+        batch, _ = pad_streams(streams, self.chips_per_part)
+        self.states, dec = ens_lib.admit_stream_ensemble_auto(
+            self.states, batch,
+            jnp.full((E,), policy_index(policy), jnp.int32),
+            n_pe=self.chips_per_part, auto_release=False,
+            use_kernel=self.use_kernel)
+        dec = jax.tree_util.tree_map(np.asarray, dec)   # one sync
+        allocs = []
+        for lane, pos in slot:
+            one = jax.tree_util.tree_map(
+                lambda x, lane=lane, pos=pos: x[lane][pos], dec)
+            alloc = self._globalize(lane, one)
+            if alloc is not None:
+                self.load[lane] += \
+                    (alloc.t_e - alloc.t_s) * len(alloc.pe_ids)
+            allocs.append(alloc)
+        return allocs
+
+    # -- debug / test view ---------------------------------------------
+    def records(self) -> List[tuple]:
+        """Merged (time, busy-global-chip-set) view across partitions."""
+        lanes = []
+        for lane in range(self.n_partitions):
+            times = np.asarray(self.states.tl.times[lane])
+            occ = np.asarray(self.states.tl.occ[lane])
+            rows = [(int(t), frozenset(
+                p + lane * self.chips_per_part
+                for p in batch_lib.mask32_to_ids(o)))
+                for t, o in zip(times, occ) if t < T_INF]
+            lanes.append(rows)
+        bounds = sorted({t for rows in lanes for t, _ in rows})
+        out, prev = [], frozenset()
+        for t in bounds:
+            busy = set()
+            for rows in lanes:
+                cur = frozenset()
+                for rt, rb in rows:
+                    if rt <= t:
+                        cur = rb
+                    else:
+                        break
+                busy |= cur
+            busy = frozenset(busy)
+            if busy != prev:
+                out.append((t, busy))
+                prev = busy
+        return out
+
+
 class FleetScheduler:
     def __init__(self, n_chips: int = 512,
                  policy: Policy = Policy.PE_W,
-                 engine: str = "host",
+                 engine: Optional[str] = None,
                  repair_seconds: int = 1800,
-                 restart_overhead: int = 120):
+                 restart_overhead: int = 120,
+                 n_partitions: int = 1,
+                 routing: str = "round_robin",
+                 use_kernel: bool = False):
         self.n_chips = n_chips
         self.policy = policy
-        self.core = make_scheduler(n_chips, engine=engine)
+        if n_partitions > 1:
+            if engine is not None:
+                raise ValueError(
+                    "a partitioned fleet is always device-backed "
+                    "(one vmapped state); drop the engine argument")
+            self.core = PartitionedCore(
+                n_chips, n_partitions, use_kernel=use_kernel)
+        else:
+            self.core = make_scheduler(n_chips, engine=engine or "host")
+        self.n_partitions = n_partitions
+        self.routing = routing
         self.repair_seconds = repair_seconds
         self.restart_overhead = restart_overhead
         self.jobs: Dict[int, FleetJob] = {}
@@ -145,6 +396,9 @@ class FleetScheduler:
                                          list(alloc.pe_ids))
             job.t_start, job.t_end = alloc.t_s, alloc.t_e
             job.chips = alloc.pe_ids
+            if self.n_partitions > 1:
+                job.partition = \
+                    alloc.pe_ids[0] // self.core.chips_per_part
             self.events.append((self.now, "reserve", job.job_id))
         self.jobs[job.job_id] = job
         return job
@@ -162,21 +416,33 @@ class FleetScheduler:
 
     # ------------------------------------------------------------------
     def submit_batch(self, specs: Sequence[Dict],
-                     policy: Optional[Policy] = None) -> List[FleetJob]:
+                     policy: Optional[Policy] = None,
+                     routing: Optional[str] = None) -> List[FleetJob]:
         """Bulk admission control: one device scan for many jobs.
 
         Each spec is a dict with the keyword arguments of
         :meth:`submit` (``arch``, ``shape``, ``n_chips``, ``n_steps``,
-        optional ``ready``/``deadline_slack``).  On a device-engine
-        core the whole batch goes through ``core.admit_stream`` — a
-        single jitted ``lax.scan`` with no per-job host round-trips;
-        decisions are identical to sequential submission because the
-        scan commits each accepted job before considering the next.
-        Completion release stays with :meth:`advance`
-        (``auto_release=False``).  Other engines fall back to the
-        sequential loop.
+        optional ``ready``/``deadline_slack``).
+
+        On a partitioned fleet the batch is routed across partitions
+        (``routing`` overrides the fleet default: round-robin, least
+        loaded, or best-acceptance probes) and all partitions admit in
+        one vmapped dispatch.  On a device-engine core the whole batch
+        goes through ``core.admit_stream`` — a single jitted
+        ``lax.scan`` with no per-job host round-trips; decisions are
+        identical to sequential submission because the scan commits
+        each accepted job before considering the next.  Completion
+        release stays with :meth:`advance` (``auto_release=False``).
+        Other engines fall back to the sequential loop.
         """
         pol = policy or self.policy
+        if isinstance(self.core, PartitionedCore):
+            built = [self._build_job(**spec) for spec in specs]
+            allocs = self.core.admit_stream_allocations(
+                [req for _, req in built], pol,
+                routing or self.routing)
+            return [self._record_decision(job, alloc, committed=True)
+                    for (job, _), alloc in zip(built, allocs)]
         if not hasattr(self.core, "admit_stream"):
             return [self.submit(policy=pol, **spec) for spec in specs]
         built = [self._build_job(**spec) for spec in specs]
@@ -236,6 +502,9 @@ class FleetScheduler:
                                      list(alloc.pe_ids))
             job.t_start, job.t_end = alloc.t_s, alloc.t_e
             job.chips = alloc.pe_ids
+            if self.n_partitions > 1:
+                job.partition = \
+                    alloc.pe_ids[0] // self.core.chips_per_part
             self.events.append((self.now, "reserve-malleable",
                                 job.job_id))
         self.jobs[job.job_id] = job
@@ -278,6 +547,8 @@ class FleetScheduler:
                                  list(alloc.pe_ids))
         job.t_start, job.t_end = alloc.t_s, alloc.t_e
         job.chips = alloc.pe_ids
+        if self.n_partitions > 1:
+            job.partition = alloc.pe_ids[0] // self.core.chips_per_part
         job.n_chips = n_chips
         job.preemptions += 1
         job.state = JobState.RESERVED if alloc.t_s > self.now \

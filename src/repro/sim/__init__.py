@@ -1,8 +1,13 @@
 """Discrete-event simulation of the paper's Section 6 experiments."""
-from repro.sim.metrics import SimResult, mean_ci95  # noqa: F401
+from repro.sim.metrics import GridResult, SimResult, mean_ci95  # noqa: F401
 from repro.sim.simulator import (  # noqa: F401
     run_policies,
     simulate,
     simulate_batched,
 )
-from repro.sim.workload import WorkloadParams, generate  # noqa: F401
+from repro.sim.sweep import GridSpec, pad_streams, simulate_grid  # noqa: F401
+from repro.sim.workload import (  # noqa: F401
+    WorkloadParams,
+    generate,
+    generate_filtered,
+)

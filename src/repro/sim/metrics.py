@@ -3,7 +3,9 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 
 @dataclasses.dataclass
@@ -41,6 +43,56 @@ class SimResult:
                 f"slowdown={self.avg_slowdown:.3f} "
                 f"util={self.utilization:.3f} "
                 f"sched_wall={self.wall_seconds:.2f}s")
+
+
+@dataclasses.dataclass
+class GridResult:
+    """Stacked metrics of one vmapped Section-6 sweep grid.
+
+    Every metric array is indexed ``[policy, load, seed, flexibility]``
+    — the cell order of :func:`repro.sim.sweep.simulate_grid`.
+    """
+
+    policies: Tuple[str, ...]
+    arrival_factors: Tuple[float, ...]
+    seeds: Tuple[int, ...]
+    flex_factors: Tuple[float, ...]
+    acceptance: np.ndarray        # float [P, L, S, F]
+    slowdown: np.ndarray          # float [P, L, S, F] (nan: none accepted)
+    utilization: np.ndarray       # float [P, L, S, F]
+    n_jobs: np.ndarray            # int   [P, L, S, F] valid jobs per cell
+    n_accepted: np.ndarray        # int   [P, L, S, F]
+    wall_seconds: float = 0.0     # one dispatch for the whole grid
+    # per-cell (accepted, t_s) traces, populated on request only:
+    # decisions[p][l][s][f] is a list over that cell's (unpadded) jobs
+    decisions: Optional[list] = None
+
+    @property
+    def n_cells(self) -> int:
+        return int(np.prod(self.acceptance.shape))
+
+    @property
+    def cells_per_sec(self) -> float:
+        return self.n_cells / max(self.wall_seconds, 1e-9)
+
+    def policy_acceptance(self) -> Dict[str, float]:
+        """Grid-mean acceptance rate per policy (paper Figs. 2/4/6)."""
+        return {p: float(np.nanmean(self.acceptance[i]))
+                for i, p in enumerate(self.policies)}
+
+    def policy_slowdown(self) -> Dict[str, float]:
+        """Grid-mean slowdown per policy (paper Figs. 3/5/7)."""
+        return {p: float(np.nanmean(self.slowdown[i]))
+                for i, p in enumerate(self.policies)}
+
+    def summary(self) -> str:
+        acc, sd = self.policy_acceptance(), self.policy_slowdown()
+        lines = [f"{self.n_cells} cells in {self.wall_seconds:.2f}s "
+                 f"({self.cells_per_sec:.1f} cells/s)"]
+        for p in self.policies:
+            lines.append(f"  {p:8s} accept={acc[p]:.3f} "
+                         f"slowdown={sd[p]:.3f}")
+        return "\n".join(lines)
 
 
 def mean_ci95(values: Sequence[float]) -> tuple:

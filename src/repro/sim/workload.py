@@ -139,3 +139,18 @@ def generate(params: Optional[WorkloadParams] = None,
                   n_pe=int(sizes[i]))
         for i in range(n)
     ]
+
+
+def generate_filtered(params: Optional[WorkloadParams] = None,
+                      max_pe: Optional[int] = None,
+                      **overrides) -> List[ARRequest]:
+    """:func:`generate`, dropping jobs wider than the machine.
+
+    The size distribution is unconditional, so scaled-down machines
+    (``n_pe`` below the LANL-CM5 1024) would otherwise see requests
+    that can never fit; every sweep/benchmark applies this filter.
+    """
+    p = (params or WorkloadParams()).replace(**overrides) \
+        if overrides else (params or WorkloadParams())
+    cap = p.n_pe if max_pe is None else max_pe
+    return [j for j in generate(p) if j.n_pe <= cap]

@@ -1,0 +1,212 @@
+"""Ensemble-axis semantics (DESIGN.md §4).
+
+The contract: a vmapped ensemble run is *decision-identical* to E
+independent single-state runs — for every policy, for mixed policies
+across lanes, through the fused single step and the scanned stream,
+and through collective capacity growth when one lane overflows
+mid-scan while its neighbours do not.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import batch as batch_lib
+from repro.core import ensemble as ens_lib
+from repro.core import timeline as tl_lib
+from repro.core.types import ALL_POLICIES, ARRequest, Policy
+
+N_PE = 16
+
+
+def _stream(seed, n=25, n_pe=N_PE, pile=False):
+    """Arrival-ordered random stream; ``pile=True`` keeps every
+    reservation live at once (forces record/pending overflow)."""
+    if pile:
+        return [ARRequest(t_a=i, t_r=i, t_du=5000, t_dl=i + 5000,
+                          n_pe=1) for i in range(n)]
+    rng = np.random.default_rng(seed)
+    t = np.cumsum(rng.integers(0, 25, n))
+    jobs = []
+    for i in range(n):
+        du = int(rng.integers(5, 60))
+        tr = int(t[i] + rng.integers(0, 30))
+        jobs.append(ARRequest(
+            t_a=int(t[i]), t_r=tr, t_du=du,
+            t_dl=tr + du + int(rng.integers(0, 120)),
+            n_pe=int(rng.integers(1, n_pe + 1))))
+    return jobs
+
+
+def _stack(streams):
+    return batch_lib.RequestBatch(*[
+        jnp.stack([getattr(batch_lib.requests_to_batch(s), f)
+                   for s in streams])
+        for f in batch_lib.RequestBatch._fields])
+
+
+def _independent(stream, policy, capacity=64, pending=32):
+    state = tl_lib.init_state(capacity, N_PE, pending)
+    return batch_lib.admit_stream_auto(
+        state, batch_lib.requests_to_batch(stream), policy, n_pe=N_PE)
+
+
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+def test_ensemble_stream_matches_independent_runs(policy):
+    """E lanes under one policy == E separate ``admit_stream_auto``."""
+    streams = [_stream(s) for s in range(4)]
+    states = ens_lib.init_ensemble(4, 64, N_PE, 32)
+    out, dec = ens_lib.admit_stream_ensemble_auto(
+        states, _stack(streams), [policy] * 4, n_pe=N_PE)
+    for i, stream in enumerate(streams):
+        ref_state, ref = _independent(stream, policy)
+        np.testing.assert_array_equal(
+            np.asarray(ref.accepted), np.asarray(dec.accepted)[i])
+        np.testing.assert_array_equal(
+            np.asarray(ref.t_s), np.asarray(dec.t_s)[i])
+        np.testing.assert_array_equal(
+            np.asarray(ref.pe_mask), np.asarray(dec.pe_mask)[i])
+        assert int(ref_state.n_accepted) == int(out.n_accepted[i])
+
+
+def test_ensemble_mixed_policies_one_dispatch():
+    """policy_id is traced per lane: all seven policies run on the
+    same workload in a single vmapped dispatch."""
+    stream = _stream(42)
+    E = len(ALL_POLICIES)
+    states = ens_lib.init_ensemble(E, 64, N_PE, 32)
+    out, dec = ens_lib.admit_stream_ensemble_auto(
+        states, _stack([stream] * E), list(ALL_POLICIES), n_pe=N_PE)
+    for i, policy in enumerate(ALL_POLICIES):
+        _, ref = _independent(stream, policy)
+        np.testing.assert_array_equal(
+            np.asarray(ref.accepted), np.asarray(dec.accepted)[i])
+        np.testing.assert_array_equal(
+            np.asarray(ref.t_s), np.asarray(dec.t_s)[i])
+
+
+def test_ensemble_overflow_lane_grows_collectively():
+    """One lane overflows both the timeline and pending buffer
+    mid-scan; its neighbours do not.  The collective growth re-run
+    must leave every lane identical to its independent run."""
+    streams = [_stream(0, n=14, pile=True), _stream(1, n=14),
+               _stream(2, n=14)]
+    states = ens_lib.init_ensemble(3, 8, N_PE, 2)
+    out, dec = ens_lib.admit_stream_ensemble_auto(
+        states, _stack(streams), [Policy.FF] * 3, n_pe=N_PE)
+    cap, pend = ens_lib.lane_capacity(out)
+    assert cap > 8 and pend > 2          # grew past both limits
+    assert not bool(jnp.any(out.overflow))
+    for i, stream in enumerate(streams):
+        _, ref = _independent(stream, Policy.FF)
+        np.testing.assert_array_equal(
+            np.asarray(ref.accepted), np.asarray(dec.accepted)[i])
+        np.testing.assert_array_equal(
+            np.asarray(ref.t_s), np.asarray(dec.t_s)[i])
+
+
+def test_ensemble_growth_is_sized_by_watermark():
+    """The grow-once protocol jumps straight to the max needed
+    capacity across the ensemble instead of doubling repeatedly."""
+    streams = [_stream(0, n=20, pile=True), _stream(1, n=20)]
+    states = ens_lib.init_ensemble(2, 8, N_PE, 4)
+    grow_calls = []
+    orig = ens_lib.grow_ensemble
+
+    def spy(states, cap, pend):
+        grow_calls.append((cap, pend))
+        return orig(states, cap, pend)
+
+    ens_lib.grow_ensemble, saved = spy, ens_lib.grow_ensemble
+    try:
+        out, dec = ens_lib.admit_stream_ensemble_auto(
+            states, _stack(streams), [Policy.FF] * 2, n_pe=N_PE)
+    finally:
+        ens_lib.grow_ensemble = saved
+    # 20 concurrent 1-PE reservations need ~21 records and 20 pending
+    # slots: a blind doubling cascade from (8, 4) would take 2-3
+    # rounds; the watermark jump needs at most 2 runs to settle.
+    assert len(grow_calls) <= 2, grow_calls
+    assert not bool(jnp.any(out.overflow))
+    _, ref = _independent(streams[0], Policy.FF)
+    np.testing.assert_array_equal(
+        np.asarray(ref.accepted), np.asarray(dec.accepted)[0])
+
+
+def test_admit_ensemble_single_step():
+    """The fused single step vmaps too (one request per lane)."""
+    reqs = [ARRequest(t_a=0, t_r=0, t_du=10, t_dl=30, n_pe=k)
+            for k in (1, 8, 16)]
+    req_batch = _stack([[r] for r in reqs])
+    one_step = batch_lib.RequestBatch(
+        *[f[:, 0] for f in req_batch])      # [E] scalars per lane
+    states = ens_lib.init_ensemble(3, 32, N_PE, 8)
+    out, dec = ens_lib.admit_ensemble(
+        states, one_step, ens_lib.policy_ids([Policy.FF] * 3),
+        n_pe=N_PE)
+    assert bool(jnp.all(dec.accepted))
+    np.testing.assert_array_equal(np.asarray(out.n_accepted),
+                                  np.ones(3, np.int32))
+    for i, r in enumerate(reqs):
+        s1 = tl_lib.init_state(32, N_PE, 8)
+        _, alloc = batch_lib.admit_one(s1, r, Policy.FF, n_pe=N_PE)
+        assert alloc is not None
+        assert alloc.t_s == int(dec.t_s[i])
+
+
+def test_vmapped_update_matches_loop():
+    """``timeline.update`` itself tolerates a leading ensemble axis."""
+    tls = [tl_lib.empty(16, N_PE) for _ in range(3)]
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *tls)
+    t_s = jnp.asarray([0, 10, 20], jnp.int32)
+    t_e = jnp.asarray([5, 30, 25], jnp.int32)
+    mask = jnp.stack([tl_lib.pe_valid_mask(4)] * 3)
+    out, ovf = jax.vmap(
+        lambda tl, a, b, m: tl_lib.update(tl, a, b, m, is_add=True)
+    )(stacked, t_s, t_e, mask)
+    assert not bool(jnp.any(ovf))
+    for i in range(3):
+        ref, _ = tl_lib.update(
+            tls[i], t_s[i], t_e[i], mask[i], is_add=True)
+        np.testing.assert_array_equal(np.asarray(ref.times),
+                                      np.asarray(out.times[i]))
+        np.testing.assert_array_equal(np.asarray(ref.occ),
+                                      np.asarray(out.occ[i]))
+
+
+def test_find_allocation_ensemble_probes_all_lanes():
+    """The routing probe sees each lane's own timeline."""
+    lane0 = tl_lib.init_state(32, N_PE, 8)
+    lane1 = tl_lib.init_state(32, N_PE, 8)
+    # lane1 is fully busy over [0, 100)
+    full = jnp.asarray(tl_lib.pe_valid_mask(N_PE))
+    tl1, ovf = tl_lib.update(lane1.tl, 0, 100, full, is_add=True)
+    assert not bool(ovf)
+    lane1 = lane1._replace(tl=tl1)
+    states = ens_lib.stack_states([lane0, lane1])
+    req = ARRequest(t_a=0, t_r=0, t_du=50, t_dl=60, n_pe=N_PE)
+    res = ens_lib.find_allocation_ensemble(
+        states, batch_lib.request_struct(req),
+        jnp.int32(0), n_pe=N_PE)
+    found = np.asarray(res.found)
+    assert found[0] and not found[1]
+    assert int(res.t_s[0]) == 0
+
+
+def test_ensemble_kernel_path_matches_dense():
+    """`use_kernel=True` threads the Pallas contraction through the
+    vmapped scan; decisions must match the jnp path exactly."""
+    streams = [_stream(s, n=12) for s in range(2)]
+    states = ens_lib.init_ensemble(2, 64, N_PE, 32)
+    pols = [Policy.PE_W, Policy.DU_B]
+    _, dense = ens_lib.admit_stream_ensemble_auto(
+        states, _stack(streams), pols, n_pe=N_PE, use_kernel=False)
+    _, kern = ens_lib.admit_stream_ensemble_auto(
+        states, _stack(streams), pols, n_pe=N_PE, use_kernel=True)
+    np.testing.assert_array_equal(np.asarray(dense.accepted),
+                                  np.asarray(kern.accepted))
+    np.testing.assert_array_equal(np.asarray(dense.t_s),
+                                  np.asarray(kern.t_s))
+    np.testing.assert_array_equal(np.asarray(dense.pe_mask),
+                                  np.asarray(kern.pe_mask))

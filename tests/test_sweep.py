@@ -1,0 +1,128 @@
+"""`simulate_grid`: the Section-6 matrix as one vmapped dispatch.
+
+Acceptance gate of the ensemble refactor: on a 3-load × 3-seed ×
+7-policy grid every cell is decision-identical to the host event loop,
+and the grid reproduces the paper's policy ordering (PE-Worst-Fit
+highest acceptance, First-Fit lowest slowdown).
+"""
+import numpy as np
+import pytest
+
+from repro.core.types import ALL_POLICIES, Policy
+from repro.sim import (
+    GridSpec,
+    WorkloadParams,
+    generate_filtered,
+    pad_streams,
+    simulate_grid,
+)
+
+SMALL_SIZES = WorkloadParams(u_low=2.0, u_med=4.0, u_hi=6.0)
+
+
+@pytest.fixture(scope="module")
+def paper_grid():
+    """3 loads × 3 seeds × 7 policies, cross-checked per cell against
+    the host event loop (raises inside simulate_grid on divergence)."""
+    spec = GridSpec(
+        policies=ALL_POLICIES,
+        arrival_factors=(1.0, 1.5, 2.0),
+        seeds=(0, 1, 2),
+        flex_factors=(3.0,),
+        base=SMALL_SIZES,
+        n_pe=64,
+        n_jobs=150,
+    )
+    return simulate_grid(spec, capacity=64, cross_check=True,
+                         record_decisions=True)
+
+
+def test_grid_shape_and_counts(paper_grid):
+    assert paper_grid.acceptance.shape == (7, 3, 3, 1)
+    assert paper_grid.n_cells == 63
+    assert (paper_grid.n_jobs > 0).all()
+    assert (paper_grid.n_accepted <= paper_grid.n_jobs).all()
+    # workloads are shared across policies: same job count per column
+    assert (paper_grid.n_jobs == paper_grid.n_jobs[:1]).all()
+
+
+def test_grid_reproduces_pe_worst_fit_highest_acceptance(paper_grid):
+    """Paper headline: PE Worst Fit has the highest acceptance rate."""
+    acc = paper_grid.policy_acceptance()
+    best = max(acc.values())
+    assert acc[Policy.PE_W.value] >= best - 0.01
+
+
+def test_grid_reproduces_ff_lowest_slowdown(paper_grid):
+    """Paper headline: First Fit has the lowest average slowdown."""
+    sd = paper_grid.policy_slowdown()
+    assert sd[Policy.FF.value] == min(sd.values())
+
+
+def test_grid_acceptance_degrades_with_load(paper_grid):
+    """Fig. 4 trend along the grid's load axis (mean over seeds)."""
+    pe_w = list(paper_grid.policies).index(Policy.PE_W.value)
+    by_load = np.nanmean(paper_grid.acceptance[pe_w], axis=(1, 2))
+    assert by_load[0] > by_load[-1]
+
+
+def test_grid_decisions_recorded(paper_grid):
+    """record_decisions exposes per-cell (accepted, t_s) traces."""
+    cell = paper_grid.decisions[0][0][0][0]      # FF, load 1.0, seed 0
+    assert len(cell) == int(paper_grid.n_jobs[0, 0, 0, 0])
+    assert all(isinstance(a, bool) and isinstance(t, int)
+               for a, t in cell)
+
+
+def test_pad_streams_masks_and_never_admits():
+    """Unequal streams pad to fixed shape; padding requests are
+    rejected by construction and masked out of the metrics."""
+    a = generate_filtered(SMALL_SIZES.replace(n_jobs=40, n_pe=64),
+                          max_pe=64)
+    b = a[:17]
+    batch, valid = pad_streams([a, b], 64)
+    assert batch.t_a.shape == (2, len(a))
+    assert valid.sum(axis=1).tolist() == [len(a), len(b)]
+    # padded rows ask for more PEs than the machine has
+    assert (np.asarray(batch.n_pe)[~valid] == 65).all()
+    # padded arrivals never precede the stream's last real arrival
+    assert (np.asarray(batch.t_a)[1, len(b):] >= b[-1].t_a).all()
+
+
+def test_grid_flex_axis_raises_acceptance():
+    """Fig. 6 trend: more flexibility -> higher acceptance (PE_W)."""
+    r = simulate_grid(GridSpec(
+        policies=(Policy.PE_W,),
+        arrival_factors=(1.5,),
+        seeds=(0, 1),
+        flex_factors=(1.0, 5.0),
+        base=SMALL_SIZES, n_pe=64, n_jobs=120), capacity=64)
+    acc = np.nanmean(r.acceptance[0, 0], axis=0)     # [F]
+    assert acc[1] > acc[0]
+
+
+def test_grid_kernel_path_matches_dense():
+    """use_kernel threads the Pallas contraction through the whole
+    grid; metrics and decisions must be identical."""
+    spec = GridSpec(policies=(Policy.PE_W, Policy.FF),
+                    arrival_factors=(1.0,), seeds=(0,),
+                    flex_factors=(3.0,), base=SMALL_SIZES,
+                    n_pe=32, n_jobs=40)
+    dense = simulate_grid(spec, capacity=64, record_decisions=True)
+    kern = simulate_grid(spec, capacity=64, record_decisions=True,
+                         use_kernel=True)
+    np.testing.assert_array_equal(dense.n_accepted, kern.n_accepted)
+    assert dense.decisions == kern.decisions
+
+
+def test_grid_cell_overflow_grows_collectively():
+    """With a tiny shared initial capacity the busier cells overflow
+    mid-scan; the grow-once re-run keeps every cell host-identical
+    (cross_check raises on the first divergence)."""
+    spec = GridSpec(policies=(Policy.FF, Policy.PE_W),
+                    arrival_factors=(1.0,), seeds=(0,),
+                    flex_factors=(3.0,), base=SMALL_SIZES,
+                    n_pe=64, n_jobs=60)
+    r = simulate_grid(spec, capacity=8, pending_capacity=4,
+                      cross_check=True)
+    assert (r.n_accepted > 0).all()
