@@ -12,14 +12,14 @@ from typing import Dict, List
 
 import numpy as np
 
-from repro.core.scheduler import make_scheduler
+from repro.core.scheduler import _make_engine
 from repro.core.types import ARRequest, Policy
 
 
 def _drive(engine: str, n_pe: int, n_jobs: int, seed: int = 0,
            **kwargs) -> Dict[str, float]:
     rng = np.random.default_rng(seed)
-    s = make_scheduler(n_pe, engine=engine, **kwargs)
+    s = _make_engine(n_pe, engine=engine, **kwargs)
     t_now = 0
     active: List = []
     t_find = t_add = t_del = 0.0

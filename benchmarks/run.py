@@ -34,7 +34,8 @@ def main() -> None:
     n_jobs = 10_000 if args.full else 2_000
     t0 = time.time()
 
-    from benchmarks import bench_datastructure, bench_policies
+    from benchmarks import bench_datastructure, bench_policies, \
+        bench_service
     from benchmarks.bench_roofline import ART_OPT, roofline_rows
 
     sections = {
@@ -50,6 +51,9 @@ def main() -> None:
         "sweep_throughput":
             lambda: bench_policies.sweep_throughput(
                 n_jobs=300 if args.full else 120),
+        "service_throughput":
+            lambda: bench_service.service_throughput(
+                n_jobs=600 if args.full else 240),
         "datastructure_op_costs":
             lambda: bench_datastructure.op_costs(
                 n_jobs=800 if args.full else 300),

@@ -1,22 +1,24 @@
 """Quickstart: schedule deadline-constrained AR jobs on a cluster.
 
-Reproduces the paper's Figure 1 walkthrough, then compares the seven
-policies on the same request — on all three engines (literal list
-oracle, numpy host, JAX device) to show they agree bit-for-bit.
+Reproduces the paper's Figure 1 walkthrough through the service API
+(`repro.api.ReservationService`), then compares the seven policies on
+the same request — on all three engines (literal list oracle, numpy
+host, JAX device) to show they agree bit-for-bit.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-from repro.core import ALL_POLICIES, ARRequest, make_scheduler
+from repro.api import ReservationService, ServiceConfig
+from repro.core import ALL_POLICIES, ARRequest
 
 N_PE = 100
 
 
-def build_cluster(engine: str):
-    s = make_scheduler(N_PE, engine=engine)
-    pes = set if engine == "list" else list
-    s.add_allocation(0, 300, pes(range(0, 20)))       # job1: running
-    s.add_allocation(0, 100, pes(range(20, 50)))      # job2: running
-    s.add_allocation(800, 1000, pes(range(0, 25)))    # job3: reserved
+def build_session(engine: str):
+    svc = ReservationService(ServiceConfig(n_pe=N_PE, engine=engine))
+    s = svc.session()
+    s.add_allocation(0, 300, range(0, 20))        # job1: running
+    s.add_allocation(0, 100, range(20, 50))       # job2: running
+    s.add_allocation(800, 1000, range(0, 25))     # job3: reserved
     return s
 
 
@@ -32,7 +34,7 @@ def main() -> None:
     for pol in ALL_POLICIES:
         cells = []
         for engine in ("list", "host", "device"):
-            s = build_cluster(engine)
+            s = build_session(engine)
             a = s.find_allocation(req, pol)
             r = a.rectangle
             cells.append(f"t_s={a.t_s} rect({r.t_begin},"
@@ -43,6 +45,8 @@ def main() -> None:
             f"{c:>22s}" for c in cells) + f"  [{agree}]")
     print("\nFF starts earliest (t=200); PE_W/Du_B wait for the bigger"
           " all-free rectangle at t=300 — the paper's Section 5 example.")
+    print("\nFor streaming admission (offer/tick/cancel) see "
+          "examples/service_demo.py.")
 
 
 if __name__ == "__main__":

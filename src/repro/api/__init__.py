@@ -1,0 +1,22 @@
+"""`repro.api` — the reservation service facade (DESIGN.md §5).
+
+One streaming session API over engines, ensembles and partitions::
+
+    from repro.api import ReservationService, ServiceConfig
+
+    svc = ReservationService(ServiceConfig(n_pe=64))
+    session = svc.session()
+    result = session.offer(requests)     # fixed-shape chunked admission
+    session.tick(now)                    # release due completions
+    session.cancel(result.allocations()[0])
+"""
+from repro.api.config import (  # noqa: F401
+    ENGINE_NAMES,
+    ROUTINGS,
+    ServiceConfig,
+)
+from repro.api.service import (  # noqa: F401
+    OfferResult,
+    ReservationService,
+    Session,
+)

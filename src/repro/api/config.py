@@ -1,0 +1,195 @@
+"""`ServiceConfig`: one declarative knob set for every scheduler shape.
+
+The pre-service entry points each grew their own constructor surface —
+``make_scheduler(engine=..., capacity=...)``, ``DeviceScheduler(
+bucketing=..., pending_capacity=...)``, ``PartitionedCore(n_partitions,
+...)``, the ensemble initialisers — with diverging defaults and
+overflow conventions.  `ServiceConfig` subsumes them: a single frozen
+dataclass names the engine, the admission policy, the machine size, the
+capacity + grow-once policy, the ensemble lane count, the partition
+count and routing, the Pallas-kernel switch, and the streaming chunk /
+ring geometry.  :class:`repro.api.ReservationService` validates it once
+and every session it opens inherits the same semantics.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Optional, Union
+
+from repro.core import batch as batch_lib
+from repro.core.types import Policy
+
+#: The three engine implementations (see DESIGN.md §1).
+ENGINE_NAMES = ("list", "host", "device")
+
+#: Partition routing strategies (see DESIGN.md §4).
+ROUTINGS = ("round_robin", "least_loaded", "best_acceptance")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    """Complete configuration of a :class:`~repro.api.ReservationService`.
+
+    Engine / policy
+        ``engine`` picks the availability-structure implementation
+        (``list`` oracle, ``host`` numpy, ``device`` JAX); ``policy``
+        is the default Section-5 admission policy (overridable per
+        ``offer``); ``use_kernel`` swaps the dense search for the
+        Pallas kernel on the device engine.
+
+    Capacity and the grow-once policy
+        ``capacity`` / ``pending_capacity`` size the device timeline
+        and pending-release buffer.  With ``auto_grow`` (default) an
+        overflowing run grows *once* to the high-water mark it recorded
+        (``grown_capacities``, DESIGN.md §3) and re-runs
+        deterministically; ``max_growths`` caps that retry loop.
+        ``auto_grow=False`` raises ``RuntimeError`` on the first
+        overflow for callers that need hard bounds: the overflowing
+        dispatch commits nothing and its requests return to the ring
+        (earlier chunks of the same offer remain committed — atomicity
+        is per chunk).  Partitioned sessions, whose core grows
+        internally, require ``auto_grow=True``.
+
+    Scale-out axes
+        ``lanes > 1`` stacks that many independent timelines behind one
+        vmapped state (the Section-6 grid); ``n_partitions > 1`` splits
+        the machine into equal cluster partitions routed by
+        ``routing`` (the fleet).  The two axes are exclusive — a lane
+        is a *replica* of the whole machine, a partition is a *slice*
+        of it.
+
+    Streaming
+        ``chunk_size`` is the fixed admission-chunk length of
+        :meth:`~repro.api.Session.offer`: arrivals stage in a
+        ``ring_capacity``-slot :class:`~repro.core.batch.RequestRing`
+        and admit in constant-shape chunks, so steady-state streaming
+        never re-pads and never recompiles.  ``chunk_size=None``
+        selects one-shot mode (each ``offer`` admits its whole batch in
+        one scan — the pre-materialised-experiment shape).
+
+    ``auto_release=False`` hands completion release to the caller
+    (``cancel`` / ``delete_allocation``) instead of the on-device
+    pending buffer — the fleet's mode, and the only mode partitioned
+    sessions support (their core has no pending buffer).
+
+    ``engine_kwargs`` forwards host/list-engine constructor knobs
+    (e.g. ``HostScheduler``'s ``candidate_chunk``); device knobs are
+    first-class config fields.
+    """
+
+    n_pe: int
+    engine: str = "device"
+    policy: Policy = Policy.PE_W
+    capacity: int = 128
+    pending_capacity: int = 256
+    auto_grow: bool = True
+    max_growths: int = batch_lib.MAX_DOUBLINGS
+    auto_release: bool = True
+    use_kernel: bool = False
+    bucketing: bool = True
+    lanes: int = 1
+    n_partitions: int = 1
+    routing: str = "round_robin"
+    chunk_size: Optional[int] = 64
+    ring_capacity: int = 256
+    engine_kwargs: Optional[Mapping[str, Any]] = None
+
+    def __post_init__(self):
+        if self.n_pe < 1:
+            raise ValueError(f"n_pe must be >= 1, got {self.n_pe}")
+        if self.engine not in ENGINE_NAMES:
+            raise ValueError(
+                f"unknown engine {self.engine!r}; pick one of "
+                f"{ENGINE_NAMES}")
+        if isinstance(self.policy, str):
+            object.__setattr__(self, "policy", Policy(self.policy))
+        if self.lanes < 1 or self.n_partitions < 1:
+            raise ValueError("lanes and n_partitions must be >= 1")
+        if self.lanes > 1 and self.n_partitions > 1:
+            raise ValueError(
+                "lanes (whole-machine replicas) and n_partitions "
+                "(machine slices) are exclusive scale-out axes")
+        if (self.lanes > 1 or self.n_partitions > 1) \
+                and self.engine != "device":
+            raise ValueError(
+                "ensemble lanes and partitions are vmapped device "
+                "states; use engine='device'")
+        if self.n_partitions > 1 and self.n_pe % self.n_partitions:
+            raise ValueError(
+                f"n_pe={self.n_pe} not divisible into "
+                f"{self.n_partitions} partitions")
+        if self.n_partitions > 1 and self.auto_release:
+            raise ValueError(
+                "partitioned sessions have no pending-release buffer "
+                "— completions are the caller's (cancel / "
+                "delete_allocation); set auto_release=False")
+        if self.n_partitions > 1 and not self.auto_grow:
+            raise ValueError(
+                "the partitioned core grows internally; "
+                "auto_grow=False is not supported with n_partitions>1")
+        if self.engine_kwargs and self.engine == "device":
+            raise ValueError(
+                "device-engine knobs are first-class config fields "
+                "(capacity/pending_capacity/use_kernel/bucketing); "
+                "engine_kwargs is for host/list engines")
+        if self.max_growths < 0:
+            raise ValueError("max_growths must be >= 0")
+        if self.routing not in ROUTINGS:
+            raise ValueError(
+                f"unknown routing {self.routing!r}; pick one of "
+                f"{ROUTINGS}")
+        if self.chunk_size is not None:
+            if self.chunk_size < 1:
+                raise ValueError("chunk_size must be >= 1 or None")
+            if self.ring_capacity < self.chunk_size:
+                raise ValueError(
+                    f"ring_capacity ({self.ring_capacity}) must hold "
+                    f"at least one chunk ({self.chunk_size})")
+        if self.capacity < 2 or self.pending_capacity < 1:
+            raise ValueError("capacity >= 2 and pending_capacity >= 1")
+
+    def replace(self, **changes) -> "ServiceConfig":
+        return dataclasses.replace(self, **changes)
+
+    @classmethod
+    def from_engine_kwargs(cls, n_pe: int, engine: str = "host",
+                           **kwargs) -> "ServiceConfig":
+        """Translate legacy ``make_scheduler`` kwargs to a config.
+
+        The deprecation shims route through here so old call sites
+        keep their exact semantics: device kwargs map onto the
+        first-class config fields (with the legacy ``capacity=256``
+        default), host/list kwargs pass through ``engine_kwargs`` to
+        the engine constructor — which still rejects unknown names,
+        exactly as before.
+        """
+        if engine != "device":
+            return cls(n_pe=n_pe, engine=engine,
+                       engine_kwargs=dict(kwargs) or None)
+        known = {"capacity", "pending_capacity", "use_kernel",
+                 "bucketing"}
+        unknown = set(kwargs) - known
+        if unknown:
+            raise TypeError(
+                f"unknown device engine kwargs {sorted(unknown)}; "
+                f"supported: {sorted(known)}")
+        defaults = {f.name: f.default for f in dataclasses.fields(cls)}
+        merged = {k: kwargs.get(k, defaults[k]) for k in known}
+        # the legacy DeviceScheduler defaulted capacity to 256
+        if "capacity" not in kwargs:
+            merged["capacity"] = 256
+        return cls(n_pe=n_pe, engine=engine, **merged)
+
+
+PolicyLike = Union[Policy, int, str]
+
+
+def policy_id_of(policy: PolicyLike) -> int:
+    """Any policy spelling -> its traced int32 id."""
+    from repro.core.policies import policy_index
+
+    if isinstance(policy, str):
+        policy = Policy(policy)
+    if isinstance(policy, Policy):
+        return policy_index(policy)
+    return int(policy)

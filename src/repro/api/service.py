@@ -1,0 +1,892 @@
+"""`ReservationService`: one streaming session API over every engine.
+
+The paper's scheduler is a long-lived service admitting *dynamically
+arriving* AR requests.  This module is that service: a
+:class:`ReservationService` is configured once by a
+:class:`~repro.api.config.ServiceConfig` and opens :class:`Session`\\ s
+— each session carries device-resident scheduler state across calls
+and exposes one coherent verb set over every backend shape (single
+timeline, ensemble lanes, cluster partitions, host/list oracles):
+
+``offer(requests)``
+    Streaming admission.  Arrivals stage in a fixed-capacity
+    :class:`~repro.core.batch.RequestRing` and admit in constant-shape
+    ``chunk_size`` chunks of the jitted ``admit_stream`` scan, so a
+    session admits continuously with **zero re-padding and zero
+    recompilation** after warmup — regardless of how callers group
+    their arrivals.  ``chunk_size=None`` selects one-shot mode (each
+    offer is one whole-batch scan: the pre-materialised-experiment
+    path of ``simulate_batched`` / ``simulate_grid``).
+``tick(t)``
+    Release-due advancement: delete every pending reservation ending
+    by ``t`` (the simulator's completion heap, as a verb).
+``cancel(...)``
+    Withdraw a committed reservation (idempotent on auto-release
+    sessions: an already-released reservation returns ``False``).
+``snapshot()`` / ``restore(...)``
+    O(1) capture of the functional state — what-if probing for free.
+``metrics()``
+    Admission counters, growth events, chunk statistics.
+
+Capacity overflow follows the grow-once high-water protocol everywhere
+(DESIGN.md §3/§4): the failed dispatch reports the capacity it needed,
+the host grows once, and the chunk re-runs deterministically — so
+chunked decisions are bit-identical to a one-shot scan that started
+with enough capacity.
+
+The classic three operations (``find_allocation`` / ``add_allocation``
+/ ``delete_allocation``) remain available on every session, delegating
+to the underlying engine, so pre-service consumers (the fleet, the
+simulator oracle) migrate without semantic change.
+"""
+from __future__ import annotations
+
+import copy
+import dataclasses
+import heapq
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.config import ROUTINGS, ServiceConfig, policy_id_of
+from repro.core import batch as batch_lib
+from repro.core import ensemble as ens_lib
+from repro.core import timeline as tl_lib
+from repro.core.batch import Decision, RequestBatch, RequestRing
+from repro.core.scheduler import DeviceEngine, _make_engine
+from repro.core.types import Allocation, ARRequest, Policy, T_INF
+
+
+@dataclasses.dataclass
+class OfferResult:
+    """Outcome of one :meth:`Session.offer` call.
+
+    ``decision`` / ``batch`` / ``valid`` are the stacked fixed-shape
+    arrays actually admitted (``[M]``, or ``[E, M]`` on ensemble
+    sessions) — ``valid`` masks out ring filler, and consumers reduce
+    metrics from them on-device.  :meth:`allocations` unpacks host
+    :class:`~repro.core.types.Allocation` objects (or ``None`` per
+    rejection) in the order the requests were offered.  Host/list
+    sessions build ``decision`` from numpy and leave ``batch`` unset;
+    partitioned sessions provide allocations only.
+    """
+
+    decision: Optional[Decision]
+    batch: Optional[RequestBatch]
+    valid: Optional[np.ndarray]
+    _allocations: Optional[List[Optional[Allocation]]] = None
+
+    @property
+    def n_offered(self) -> int:
+        if self.valid is not None:
+            return int(np.asarray(self.valid).sum())
+        return len(self._allocations or [])
+
+    @property
+    def n_accepted(self) -> int:
+        if self.decision is not None:
+            acc = np.asarray(self.decision.accepted)
+            return int((acc & np.asarray(self.valid)).sum())
+        return sum(a is not None for a in (self._allocations or []))
+
+    def allocations(self) -> List[Optional[Allocation]]:
+        """Host allocations for the *valid* offered requests, in order.
+
+        Single-lane sessions only (on ensemble results, index
+        ``decision``/``valid`` per lane instead).
+        """
+        if self._allocations is not None:
+            return self._allocations
+        if self.decision is None:
+            return []
+        acc = np.asarray(self.decision.accepted)
+        if acc.ndim != 1:
+            raise ValueError(
+                "allocations() is per-lane on ensemble results; use "
+                "decision/valid with a lane index")
+        allocs = batch_lib.decisions_to_allocations(self.decision)
+        self._allocations = [
+            a for a, v in zip(allocs, self.valid) if v]
+        return self._allocations
+
+
+def _empty_result() -> OfferResult:
+    return OfferResult(decision=None, batch=None, valid=None,
+                       _allocations=[])
+
+
+def _mask_np(pe_ids, words: int) -> np.ndarray:
+    """PE ids -> uint32[W] bitmask, numpy-only (no device round-trip)."""
+    m = np.zeros(words, np.uint32)
+    for i in pe_ids:
+        m[i // 32] |= np.uint32(1 << (i % 32))
+    return m
+
+
+
+
+def _concat_tree(chunks: List[Any], axis: int):
+    """Concatenate a list of equally-structured pytrees."""
+    if len(chunks) == 1:
+        return chunks[0]
+    return jax.tree_util.tree_map(
+        lambda *xs: jnp.concatenate(xs, axis=axis), *chunks)
+
+
+class Session:
+    """One long-lived scheduler conversation (state lives on device).
+
+    Create via :meth:`ReservationService.session`.  All admission
+    verbs require arrival-ordered traffic (``t_a`` non-decreasing
+    across calls), exactly like the paper's event loop.
+    """
+
+    def __init__(self, service: "ReservationService"):
+        self.service = service
+        self.config = service.config
+        cfg = self.config
+        self._counters = dict(offered=0, accepted=0, released=0,
+                              cancelled=0, chunks=0, growths=0,
+                              one_shot_scans=0)
+        self._backend = _make_backend(cfg, self._counters)
+
+    # -- identity ------------------------------------------------------
+    @property
+    def engine(self):
+        """The underlying engine object (three-op surface)."""
+        return self._backend.engine
+
+    # -- the streaming verb set ----------------------------------------
+    def offer(self, requests, *, policy=None, routing: Optional[str] = None,
+              flush: bool = True) -> OfferResult:
+        """Admit newly arrived requests; returns their decisions.
+
+        ``requests`` is an arrival-ordered sequence of
+        :class:`~repro.core.types.ARRequest` (on ensemble sessions: one
+        such sequence per lane).  With ``flush`` (default) every
+        offered request is decided before returning — a final partial
+        chunk is padded with never-feasible filler, which cannot change
+        decisions.  ``flush=False`` only admits full chunks and leaves
+        the remainder staged in the ring for the next offer (or
+        :meth:`flush`).
+
+        ``policy`` overrides the config default for this call (one
+        policy, or one per lane on ensemble sessions); ``routing``
+        applies to partitioned sessions only.
+        """
+        return self._backend.offer(requests, policy=policy,
+                                   routing=routing, flush=flush)
+
+    def flush(self, *, policy=None) -> OfferResult:
+        """Decide any requests still staged by ``offer(flush=False)``."""
+        return self._backend.offer((), policy=policy, routing=None,
+                                   flush=True)
+
+    def tick(self, t: int) -> int:
+        """Advance to time ``t``: release reservations ending by ``t``.
+
+        Returns the number of reservations released.  Only meaningful
+        on auto-release sessions (the service tracks completions);
+        sessions with ``auto_release=False`` hand release back to the
+        caller via :meth:`cancel` / ``delete_allocation``.
+        """
+        return self._backend.tick(t)
+
+    def cancel(self, alloc: Optional[Allocation] = None, *,
+               t_s: Optional[int] = None, t_e: Optional[int] = None,
+               pe_ids: Optional[Sequence[int]] = None,
+               lane: int = 0) -> bool:
+        """Withdraw one committed reservation; ``True`` if it was held.
+
+        Pass the :class:`~repro.core.types.Allocation` returned at
+        admission (or its ``t_s``/``t_e``/``pe_ids`` triple).  On
+        ensemble sessions ``lane`` names the timeline the reservation
+        was admitted on (elsewhere it must stay 0).  On auto-release
+        sessions cancelling an unknown or already-released reservation
+        is a safe no-op returning ``False``.
+        """
+        if alloc is not None:
+            t_s, t_e, pe_ids = alloc.t_s, alloc.t_e, alloc.pe_ids
+        if t_s is None or t_e is None or pe_ids is None:
+            raise ValueError(
+                "cancel needs an Allocation or t_s/t_e/pe_ids")
+        return self._backend.cancel(int(t_s), int(t_e), list(pe_ids),
+                                    lane=lane)
+
+    def snapshot(self):
+        """Opaque capture of the whole session state (cheap: pytrees
+        are immutable, only ring/heap staging is copied)."""
+        return (self._backend.snapshot(), dict(self._counters))
+
+    def restore(self, snap) -> None:
+        """Rewind the session to a :meth:`snapshot`."""
+        payload, counters = snap
+        self._backend.restore(payload)
+        self._counters.clear()
+        self._counters.update(counters)
+
+    def records(self) -> list:
+        """Host view of the availability timeline (merged records)."""
+        return self._backend.records()
+
+    def metrics(self) -> Dict[str, Any]:
+        """Admission counters plus capacity / streaming geometry."""
+        out = dict(self._counters)
+        out.update(self._backend.metrics())
+        out.update(engine=self.config.engine, n_pe=self.config.n_pe,
+                   lanes=self.config.lanes,
+                   n_partitions=self.config.n_partitions,
+                   chunk_size=self.config.chunk_size)
+        return out
+
+    # -- the classic three operations ----------------------------------
+    def find_allocation(self, req: ARRequest, policy=None,
+                        t_now: Optional[int] = None
+                        ) -> Optional[Allocation]:
+        pol = self._backend.resolve_policy(policy)
+        return self._backend.find_allocation(req, pol, t_now=t_now)
+
+    def add_allocation(self, t_s: int, t_e: int,
+                       pes: Sequence[int]) -> None:
+        self._backend.add_allocation(t_s, t_e, pes)
+
+    def delete_allocation(self, t_s: int, t_e: int,
+                          pes: Sequence[int]) -> None:
+        self._backend.delete_allocation(t_s, t_e, pes)
+
+
+class ReservationService:
+    """The facade: validate one config, open any number of sessions.
+
+    >>> svc = ReservationService(ServiceConfig(n_pe=64))
+    >>> session = svc.session()
+    >>> result = session.offer(requests)        # stream in arrivals
+    >>> session.tick(now)                        # release completions
+    """
+
+    def __init__(self, config: Optional[ServiceConfig] = None,
+                 **kwargs):
+        if config is None:
+            config = ServiceConfig(**kwargs)
+        elif kwargs:
+            config = config.replace(**kwargs)
+        self.config = config
+        self.sessions: List[Session] = []
+
+    def session(self) -> Session:
+        """Open a fresh session (independent all-free state)."""
+        s = Session(self)
+        self.sessions.append(s)
+        return s
+
+    def metrics(self) -> Dict[str, Any]:
+        """Config echo plus per-session counters."""
+        return {
+            "config": dataclasses.asdict(self.config),
+            "n_sessions": len(self.sessions),
+            "sessions": [s.metrics() for s in self.sessions],
+        }
+
+
+# ---------------------------------------------------------------------------
+# backends
+# ---------------------------------------------------------------------------
+
+
+def _make_backend(cfg: ServiceConfig, counters: Dict[str, int]):
+    if cfg.n_partitions > 1:
+        return _PartitionBackend(cfg, counters)
+    if cfg.lanes > 1:
+        return _EnsembleBackend(cfg, counters)
+    if cfg.engine == "device":
+        return _StreamBackend(cfg, counters)
+    return _HostBackend(cfg, counters)
+
+
+class _BackendBase:
+    """Shared policy resolution + three-op delegation to ``engine``."""
+
+    def __init__(self, cfg: ServiceConfig, counters: Dict[str, int]):
+        self.cfg = cfg
+        self.counters = counters
+
+    def resolve_policy(self, policy) -> Policy:
+        if policy is None:
+            return self.cfg.policy
+        if isinstance(policy, str):
+            return Policy(policy)
+        return policy
+
+    @property
+    def growth_budget(self) -> int:
+        """Growth retries allowed per dispatch: 0 under
+        ``auto_grow=False`` — an overflowing dispatch raises without
+        growing or committing anything.  Atomicity is per dispatch
+        (chunk): earlier chunks of the same ``offer`` stand, and the
+        overflowing chunk's requests return to the ring."""
+        return self.cfg.max_growths if self.cfg.auto_grow else 0
+
+    def _grow_guard(self, before: Tuple[int, int],
+                    after: Tuple[int, int]) -> None:
+        if after != before:
+            self.counters["growths"] += 1
+
+    # three ops: default engine delegation
+    def find_allocation(self, req, policy, t_now=None):
+        return self.engine.find_allocation(req, policy, t_now=t_now)
+
+    def add_allocation(self, t_s, t_e, pes):
+        self.engine.add_allocation(t_s, t_e, list(pes))
+
+    def delete_allocation(self, t_s, t_e, pes):
+        self.engine.delete_allocation(t_s, t_e, list(pes))
+
+    def records(self):
+        return self.engine.records()
+
+
+class _StreamBackend(_BackendBase):
+    """Single device timeline with ring-buffer chunked streaming."""
+
+    def __init__(self, cfg, counters):
+        super().__init__(cfg, counters)
+        self.engine = DeviceEngine(
+            cfg.n_pe, capacity=cfg.capacity, use_kernel=cfg.use_kernel,
+            bucketing=cfg.bucketing,
+            pending_capacity=cfg.pending_capacity)
+        self.ring = RequestRing(cfg.ring_capacity) \
+            if cfg.chunk_size else None
+
+    @property
+    def _state(self):
+        return self.engine.state
+
+    @_state.setter
+    def _state(self, s):
+        self.engine.state = s
+        self.engine._n_valid = None      # lazily recomputed on search
+
+    def _capacities(self):
+        s = self._state
+        return (s.tl.capacity, s.pending_capacity)
+
+    def _admit_batch(self, batch: RequestBatch, pid: int) -> Decision:
+        before = self._capacities()
+        state, dec = batch_lib.admit_stream_grow(
+            self._state, batch, pid, n_pe=self.cfg.n_pe,
+            auto_release=self.cfg.auto_release,
+            use_kernel=self.cfg.use_kernel,
+            max_growths=self.growth_budget)
+        self._grow_guard(before, (state.tl.capacity,
+                                  state.pending_capacity))
+        self._state = state
+        return dec
+
+    def offer(self, requests, *, policy, routing, flush) -> OfferResult:
+        if routing is not None:
+            raise ValueError("routing applies to partitioned sessions")
+        if not flush and self.ring is None:
+            raise ValueError(
+                "flush=False staging needs the ring buffer; this "
+                "session is one-shot (chunk_size=None)")
+        pid = policy_id_of(self.resolve_policy(policy))
+        if isinstance(requests, RequestBatch):
+            # pre-packed batch: the pre-materialised-experiment path
+            if self.ring is not None:
+                raise ValueError(
+                    "a pre-packed RequestBatch bypasses the ring; use "
+                    "chunk_size=None (one-shot mode) or offer "
+                    "ARRequest sequences")
+            n = requests.t_a.shape[0]
+            self.counters["offered"] += n
+            dec = self._admit_batch(requests, pid)
+            self.counters["one_shot_scans"] += 1
+            res = OfferResult(decision=dec, batch=requests,
+                              valid=np.ones(n, bool))
+            self.counters["accepted"] += res.n_accepted
+            return res
+        reqs = list(requests)
+        if self.ring is None:
+            self.counters["offered"] += len(reqs)
+            if not reqs:
+                return _empty_result()
+            batch = batch_lib.requests_to_batch(reqs)
+            dec = self._admit_batch(batch, pid)
+            self.counters["one_shot_scans"] += 1
+            valid = np.ones(len(reqs), bool)
+            res = OfferResult(decision=dec, batch=batch, valid=valid)
+            self.counters["accepted"] += res.n_accepted
+            return res
+        batch_lib.check_arrival_order(reqs, self.ring.last_t_a)
+        self.counters["offered"] += len(reqs)
+        chunk = self.cfg.chunk_size
+        decs: List[Decision] = []
+        batches: List[RequestBatch] = []
+        valids: List[np.ndarray] = []
+
+        def drain_one():
+            # keep the ring intact if the chunk raises (auto_grow=False
+            # overflow): the popped requests stay staged for a retry
+            ring_snap = self.ring.snapshot()
+            batch, valid = self.ring.pop_chunk(chunk, self.cfg.n_pe)
+            try:
+                decs.append(self._admit_batch(batch, pid))
+            except Exception:
+                self.ring.restore(ring_snap)
+                raise
+            batches.append(batch)
+            valids.append(valid)
+            self.counters["chunks"] += 1
+
+        i = 0
+        while i < len(reqs):
+            take = min(self.ring.free, len(reqs) - i)
+            self.ring.push(reqs[i:i + take])
+            i += take
+            while self.ring.count >= chunk:
+                drain_one()
+        if flush:
+            while self.ring.count:
+                drain_one()
+        if not decs:
+            return _empty_result()
+        res = OfferResult(decision=_concat_tree(decs, axis=0),
+                          batch=_concat_tree(batches, axis=0),
+                          valid=np.concatenate(valids))
+        self.counters["accepted"] += res.n_accepted
+        return res
+
+    def tick(self, t: int) -> int:
+        if not self.cfg.auto_release:
+            return 0
+        before_rel = int(self._state.n_released)
+        before = self._capacities()
+        state = batch_lib.release_until(
+            self._state, t, max_growths=self.growth_budget)
+        self._grow_guard(before, (state.tl.capacity,
+                                  state.pending_capacity))
+        self._state = state
+        released = int(state.n_released) - before_rel
+        self.counters["released"] += released
+        return released
+
+    def cancel(self, t_s: int, t_e: int, pe_ids: List[int],
+               lane: int = 0) -> bool:
+        if lane != 0:
+            raise ValueError("lane applies to ensemble sessions")
+        mask = tl_lib.ids_to_mask32(pe_ids, self._state.tl.words)
+        before = self._capacities()
+        state, done = batch_lib.cancel_one(
+            self._state, t_s, t_e, mask,
+            require_pending=self.cfg.auto_release,
+            max_growths=self.growth_budget)
+        self._grow_guard(before, (state.tl.capacity,
+                                  state.pending_capacity))
+        self._state = state
+        self.counters["cancelled"] += int(done)
+        return done
+
+    def snapshot(self):
+        return (self._state,
+                self.ring.snapshot() if self.ring else None)
+
+    def restore(self, payload):
+        state, ring_snap = payload
+        self._state = state
+        if self.ring and ring_snap is not None:
+            self.ring.restore(ring_snap)
+
+    def metrics(self):
+        cap, pend = self._capacities()
+        out = dict(capacity=cap, pending_capacity=pend,
+                   n_pending=int(np.asarray(
+                       self._state.pend_te != T_INF).sum()))
+        if self.ring:
+            out.update(ring_capacity=self.ring.capacity,
+                       ring_staged=self.ring.count,
+                       ring_wrapped=self.ring.wrapped)
+        return out
+
+
+class _EnsembleBackend(_BackendBase):
+    """E whole-machine replica lanes behind one vmapped state."""
+
+    def __init__(self, cfg, counters):
+        super().__init__(cfg, counters)
+        self.states = ens_lib.init_ensemble(
+            cfg.lanes, cfg.capacity, cfg.n_pe, cfg.pending_capacity)
+        self.rings = [RequestRing(cfg.ring_capacity)
+                      for _ in range(cfg.lanes)] \
+            if cfg.chunk_size else None
+
+    @property
+    def engine(self):
+        return self
+
+    def _capacities(self):
+        return ens_lib.lane_capacity(self.states)
+
+    def _resolve_pids(self, policy) -> jax.Array:
+        E = self.cfg.lanes
+        if policy is None:
+            policy = self.cfg.policy
+        if isinstance(policy, (Policy, int, str)):
+            return jnp.full((E,), policy_id_of(policy), jnp.int32)
+        if isinstance(policy, jax.Array):
+            return policy
+        pids = [policy_id_of(p) for p in policy]
+        if len(pids) != E:
+            raise ValueError(
+                f"{len(pids)} policies for {E} lanes")
+        return jnp.asarray(pids, jnp.int32)
+
+    def _admit_batch(self, batch: RequestBatch,
+                     pids: jax.Array) -> Decision:
+        before = self._capacities()
+        states, dec = ens_lib.admit_stream_ensemble_auto(
+            self.states, batch, pids, n_pe=self.cfg.n_pe,
+            auto_release=self.cfg.auto_release,
+            use_kernel=self.cfg.use_kernel,
+            max_growths=self.growth_budget)
+        self._grow_guard(before, ens_lib.lane_capacity(states))
+        self.states = states
+        return dec
+
+    def offer(self, streams, *, policy, routing, flush) -> OfferResult:
+        if routing is not None:
+            raise ValueError("routing applies to partitioned sessions")
+        if not flush and self.rings is None:
+            raise ValueError(
+                "flush=False staging needs the ring buffers; this "
+                "session is one-shot (chunk_size=None)")
+        pids = self._resolve_pids(policy)
+        if isinstance(streams, tuple) and len(streams) == 2 \
+                and isinstance(streams[0], RequestBatch):
+            # pre-padded (batch, valid): the grid's one-shot path
+            if self.rings is not None:
+                raise ValueError(
+                    "a pre-padded (RequestBatch, valid) pair bypasses "
+                    "the rings; use chunk_size=None (one-shot mode)")
+            batch, valid = streams
+            self.counters["offered"] += int(valid.sum())
+            dec = self._admit_batch(batch, pids)
+            self.counters["one_shot_scans"] += 1
+            res = OfferResult(decision=dec, batch=batch, valid=valid)
+            self.counters["accepted"] += res.n_accepted
+            return res
+        streams = [list(s) for s in streams] or \
+            [[] for _ in range(self.cfg.lanes)]
+        if len(streams) != self.cfg.lanes:
+            raise ValueError(
+                f"{len(streams)} per-lane streams for "
+                f"{self.cfg.lanes} lanes")
+        if self.rings is not None:
+            for ring, stream in zip(self.rings, streams):
+                batch_lib.check_arrival_order(stream, ring.last_t_a)
+        self.counters["offered"] += sum(map(len, streams))
+        if self.rings is None:
+            if not any(streams):
+                return _empty_result()
+            batch, valid = batch_lib.pad_streams(streams, self.cfg.n_pe)
+            dec = self._admit_batch(batch, pids)
+            self.counters["one_shot_scans"] += 1
+            res = OfferResult(decision=dec, batch=batch, valid=valid)
+            self.counters["accepted"] += res.n_accepted
+            return res
+        chunk = self.cfg.chunk_size
+        decs, batches, valids = [], [], []
+
+        def drain_one(full_only: bool):
+            # a lane below a full chunk keeps its requests staged
+            # unless this is a flushing drain (flush=False contract)
+            ring_snaps = [r.snapshot() for r in self.rings]
+            batch, valid = batch_lib.pop_chunk_ensemble(
+                self.rings, chunk, self.cfg.n_pe, full_only=full_only)
+            try:
+                decs.append(self._admit_batch(batch, pids))
+            except Exception:
+                for r, s in zip(self.rings, ring_snaps):
+                    r.restore(s)
+                raise
+            batches.append(batch)
+            valids.append(valid)
+            self.counters["chunks"] += 1
+
+        cursors = [0] * self.cfg.lanes
+        while any(c < len(s) for c, s in zip(cursors, streams)):
+            for e, (ring, stream) in enumerate(
+                    zip(self.rings, streams)):
+                take = min(ring.free, len(stream) - cursors[e])
+                ring.push(stream[cursors[e]:cursors[e] + take])
+                cursors[e] += take
+            while any(r.count >= chunk for r in self.rings):
+                drain_one(full_only=not flush)
+        if flush:
+            while any(r.count for r in self.rings):
+                drain_one(full_only=False)
+        if not decs:
+            return _empty_result()
+        res = OfferResult(decision=_concat_tree(decs, axis=1),
+                          batch=_concat_tree(batches, axis=1),
+                          valid=np.concatenate(valids, axis=1))
+        self.counters["accepted"] += res.n_accepted
+        return res
+
+    def tick(self, t: int) -> int:
+        if not self.cfg.auto_release:
+            return 0
+        before_rel = int(jnp.sum(self.states.n_released))
+        before = self._capacities()
+        states = ens_lib.release_until_ensemble(
+            self.states, t, max_growths=self.growth_budget)
+        self._grow_guard(before, ens_lib.lane_capacity(states))
+        self.states = states
+        released = int(jnp.sum(states.n_released)) - before_rel
+        self.counters["released"] += released
+        return released
+
+    def cancel(self, t_s, t_e, pe_ids, lane: int = 0) -> bool:
+        if not 0 <= lane < self.cfg.lanes:
+            raise ValueError(
+                f"lane {lane} out of range for {self.cfg.lanes} lanes")
+        one = ens_lib.member(self.states, lane)
+        mask = tl_lib.ids_to_mask32(pe_ids, one.tl.words)
+        state, done = batch_lib.cancel_one(
+            one, t_s, t_e, mask,
+            require_pending=self.cfg.auto_release,
+            max_growths=self.growth_budget)
+        if state.tl.capacity != one.tl.capacity or \
+                state.pending_capacity != one.pending_capacity:
+            # growth must stay collective (shared static lane shape)
+            self.states = ens_lib.grow_ensemble(
+                self.states, state.tl.capacity,
+                state.pending_capacity)
+            self.counters["growths"] += 1
+            one = ens_lib.member(self.states, lane)
+            state, done = batch_lib.cancel_one(
+                one, t_s, t_e, mask,
+                require_pending=self.cfg.auto_release,
+                max_growths=self.growth_budget)
+        self.states = ens_lib.set_member(self.states, lane, state)
+        self.counters["cancelled"] += int(done)
+        return done
+
+    def find_allocation(self, req, policy, t_now=None):
+        raise NotImplementedError(
+            "ensemble sessions decide per lane; use offer() with "
+            "per-lane streams")
+
+    add_allocation = delete_allocation = find_allocation
+
+    def records(self, lane: int = 0):
+        times = np.asarray(self.states.tl.times[lane])
+        occ = np.asarray(self.states.tl.occ[lane])
+        return [(int(t), frozenset(batch_lib.mask32_to_ids(o)))
+                for t, o in zip(times, occ) if t < T_INF]
+
+    def snapshot(self):
+        return (self.states,
+                [r.snapshot() for r in self.rings]
+                if self.rings else None)
+
+    def restore(self, payload):
+        states, ring_snaps = payload
+        self.states = states
+        if self.rings and ring_snaps is not None:
+            for r, s in zip(self.rings, ring_snaps):
+                r.restore(s)
+
+    def metrics(self):
+        cap, pend = self._capacities()
+        out = dict(capacity=cap, pending_capacity=pend)
+        if self.rings:
+            out.update(ring_capacity=self.cfg.ring_capacity,
+                       ring_staged=sum(r.count for r in self.rings),
+                       ring_wrapped=any(r.wrapped for r in self.rings))
+        return out
+
+
+class _PartitionBackend(_BackendBase):
+    """Cluster partitions (machine slices) with routed bulk admission."""
+
+    def __init__(self, cfg, counters):
+        super().__init__(cfg, counters)
+        from repro.runtime.fleet import PartitionedCore
+
+        self.engine = PartitionedCore(
+            cfg.n_pe, cfg.n_partitions, capacity=cfg.capacity,
+            pending_capacity=cfg.pending_capacity,
+            use_kernel=cfg.use_kernel)
+
+    def offer(self, requests, *, policy, routing, flush) -> OfferResult:
+        routing = routing or self.cfg.routing
+        if routing not in ROUTINGS:
+            raise ValueError(
+                f"unknown routing {routing!r}; pick one of {ROUTINGS}")
+        if not flush:
+            raise ValueError(
+                "flush=False staging is a ring-buffer (device "
+                "session) feature; partitioned sessions decide every "
+                "offer immediately")
+        reqs = list(requests)
+        self.counters["offered"] += len(reqs)
+        if not reqs:
+            return _empty_result()
+        allocs = self.engine.admit_stream_allocations(
+            reqs, self.resolve_policy(policy), routing)
+        self.counters["accepted"] += \
+            sum(a is not None for a in allocs)
+        self.counters["one_shot_scans"] += 1
+        return OfferResult(decision=None, batch=None, valid=None,
+                           _allocations=allocs)
+
+    def tick(self, t: int) -> int:
+        # partitions admit with auto_release off (the client owns
+        # completion release via cancel/delete_allocation)
+        return 0
+
+    def cancel(self, t_s, t_e, pe_ids, lane: int = 0) -> bool:
+        if lane != 0:
+            raise ValueError(
+                "partitioned sessions address reservations by global "
+                "chip ids, not lanes")
+        self.engine.delete_allocation(t_s, t_e, list(pe_ids))
+        self.counters["cancelled"] += 1
+        return True
+
+    def snapshot(self):
+        return (self.engine.states, list(self.engine.load),
+                self.engine._rr)
+
+    def restore(self, payload):
+        states, load, rr = payload
+        self.engine.states = states
+        self.engine.load = list(load)
+        self.engine._rr = rr
+
+    def metrics(self):
+        cap, pend = ens_lib.lane_capacity(self.engine.states)
+        return dict(capacity=cap, pending_capacity=pend,
+                    chips_per_partition=self.engine.chips_per_part,
+                    partition_load=list(self.engine.load))
+
+
+class _HostBackend(_BackendBase):
+    """Host/list engines behind the same verb set (reference path)."""
+
+    def __init__(self, cfg, counters):
+        super().__init__(cfg, counters)
+        self.engine = _make_engine(cfg.n_pe, cfg.engine,
+                                   **(cfg.engine_kwargs or {}))
+        self._completions: list = []     # heap of (t_e, seq, t_s, ids)
+        self._seq = 0
+        self._last_ta = 0                # arrival-order watermark
+
+    def _pes(self, ids):
+        return set(ids) if self.cfg.engine == "list" else list(ids)
+
+    def add_allocation(self, t_s, t_e, pes):
+        self.engine.add_allocation(t_s, t_e, self._pes(pes))
+
+    def delete_allocation(self, t_s, t_e, pes):
+        self.engine.delete_allocation(t_s, t_e, self._pes(pes))
+
+    def _release_due(self, t: int) -> int:
+        n = 0
+        while self._completions and self._completions[0][0] <= t:
+            t_e, _, t_s, ids = heapq.heappop(self._completions)
+            self.engine.delete_allocation(t_s, t_e, self._pes(ids))
+            n += 1
+        self.counters["released"] += n
+        return n
+
+    def offer(self, requests, *, policy, routing, flush) -> OfferResult:
+        if routing is not None:
+            raise ValueError("routing applies to partitioned sessions")
+        if not flush:
+            raise ValueError(
+                "flush=False staging is a ring-buffer (device "
+                "session) feature; host/list sessions decide every "
+                "offer immediately")
+        pol = self.resolve_policy(policy)
+        reqs = list(requests)
+        batch_lib.check_arrival_order(reqs, self._last_ta)
+        self.counters["offered"] += len(reqs)
+        if not reqs:
+            return _empty_result()
+        W = tl_lib.n_words(self.cfg.n_pe)
+        rows: List[Tuple] = []
+        allocs: List[Optional[Allocation]] = []
+        for req in reqs:
+            if self.cfg.auto_release:
+                self._release_due(req.t_a)
+            alloc = self.engine.find_allocation(req, pol,
+                                                t_now=req.t_a)
+            allocs.append(alloc)
+            if alloc is None:
+                rows.append((False, -1, -1, np.zeros(W, np.uint32),
+                             0, 0, 0))
+                continue
+            self.engine.add_allocation(alloc.t_s, alloc.t_e,
+                                       self._pes(alloc.pe_ids))
+            if self.cfg.auto_release:
+                heapq.heappush(
+                    self._completions,
+                    (alloc.t_e, self._seq, alloc.t_s,
+                     tuple(alloc.pe_ids)))
+                self._seq += 1
+            r = alloc.rectangle
+            rows.append((True, alloc.t_s, alloc.t_e,
+                         _mask_np(alloc.pe_ids, W),
+                         r.n_free, r.t_begin, r.t_end))
+        self._last_ta = reqs[-1].t_a
+        self.counters["accepted"] += \
+            sum(a is not None for a in allocs)
+        dec = Decision(
+            accepted=np.asarray([r[0] for r in rows]),
+            t_s=np.asarray([r[1] for r in rows], np.int32),
+            t_e=np.asarray([r[2] for r in rows], np.int32),
+            pe_mask=np.stack([r[3] for r in rows]),
+            n_free=np.asarray([r[4] for r in rows], np.int32),
+            t_begin=np.asarray([r[5] for r in rows], np.int32),
+            t_end=np.asarray([r[6] for r in rows], np.int32))
+        return OfferResult(
+            decision=dec, batch=None,
+            valid=np.ones(len(reqs), bool), _allocations=allocs)
+
+    def tick(self, t: int) -> int:
+        if not self.cfg.auto_release:
+            return 0
+        return self._release_due(t)
+
+    def cancel(self, t_s, t_e, pe_ids, lane: int = 0) -> bool:
+        if lane != 0:
+            raise ValueError("lane applies to ensemble sessions")
+        key = (t_s, t_e, tuple(pe_ids))
+        if self.cfg.auto_release:
+            match = [c for c in self._completions
+                     if (c[2], c[0], c[3]) == key]
+            if not match:
+                return False
+            self._completions.remove(match[0])
+            heapq.heapify(self._completions)
+        self.engine.delete_allocation(t_s, t_e, self._pes(pe_ids))
+        self.counters["cancelled"] += 1
+        return True
+
+    def snapshot(self):
+        return (copy.deepcopy(self.engine),
+                list(self._completions), self._seq, self._last_ta)
+
+    def restore(self, payload):
+        engine, completions, seq, last_ta = payload
+        self.engine = copy.deepcopy(engine)
+        self._completions = list(completions)
+        self._seq = seq
+        self._last_ta = last_ta
+
+    def metrics(self):
+        return dict(n_pending=len(self._completions))

@@ -20,8 +20,10 @@ from repro.core.scheduler import make_scheduler  # noqa: F401
 from repro.core.batch import (  # noqa: F401
     Decision,
     RequestBatch,
+    RequestRing,
     admit,
     admit_stream,
+    admit_stream_grow,
     requests_to_batch,
 )
 from repro.core.timeline import SchedulerState, init_state  # noqa: F401

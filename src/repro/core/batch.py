@@ -13,12 +13,18 @@ that step with ``jax.lax.scan`` — whole experiments admit on-device.
 Capacity overflow (timeline records or pending slots) latches
 ``state.overflow``; every later step becomes a no-op so the truncated
 state is never consulted, and the host wrappers
-(:func:`admit_stream_auto`, :func:`admit_one`) grow the state and
+(:func:`admit_stream_grow`, :func:`admit_one`) grow the state and
 deterministically re-run the stream from its pre-run snapshot.
+
+Streaming arrivals stage through the fixed-capacity
+:class:`RequestRing` and leave as constant-shape chunks, which is what
+lets :class:`repro.api.Session` admit continuously with zero
+re-padding and zero recompilation after warmup.
 """
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
@@ -82,14 +88,40 @@ def request_struct(req: ARRequest) -> RequestBatch:
         n_pe=jnp.int32(req.n_pe))
 
 
+def filler_request(n_pe: int, t_a: int) -> ARRequest:
+    """A never-feasible padding request (asks for ``n_pe + 1`` PEs).
+
+    Rejected without touching the timeline; it carries the arrival time
+    of the last real request *already admitted* so it can never reorder
+    releases (a filler stamped past a still-staged request would
+    trigger its releases early).
+    """
+    return ARRequest(t_a=t_a, t_r=t_a, t_du=1, t_dl=t_a + 1,
+                     n_pe=n_pe + 1)
+
+
+def check_arrival_order(requests: Sequence[ARRequest],
+                        last_t_a: int) -> None:
+    """Validate t_a monotonicity of a whole slice before any mutation,
+    so a rejected offer/push leaves the caller's state untouched."""
+    last = last_t_a
+    for r in requests:
+        if r.t_a < last:
+            raise ValueError(
+                f"requests must be arrival-ordered across offers: "
+                f"got t_a={r.t_a} after t_a={last}")
+        last = r.t_a
+
+
 def pad_streams(streams, n_pe: int) -> Tuple[RequestBatch, np.ndarray]:
     """Stack variable-length request streams into ``[C, N]`` + mask.
 
-    Padding requests ask for ``n_pe + 1`` PEs — never feasible, so
-    they are rejected without touching the timeline; they arrive after
-    the stream's last real request, so they cannot reorder releases
-    either.  Decisions at padded positions must be masked out with the
-    returned ``valid`` array (the ensemble consumers do).
+    Padding requests (:func:`filler_request`) ask for ``n_pe + 1`` PEs
+    — never feasible, so they are rejected without touching the
+    timeline; they arrive after the stream's last real request, so they
+    cannot reorder releases either.  Decisions at padded positions must
+    be masked out with the returned ``valid`` array (the ensemble
+    consumers do).
     """
     C = len(streams)
     N = max((len(s) for s in streams), default=0)
@@ -104,13 +136,151 @@ def pad_streams(streams, n_pe: int) -> Tuple[RequestBatch, np.ndarray]:
                 r = stream[i]
                 valid[c, i] = True
             else:
-                r = ARRequest(t_a=last, t_r=last, t_du=1,
-                              t_dl=last + 1, n_pe=n_pe + 1)
+                r = filler_request(n_pe, last)
             fields["t_a"][c, i] = r.t_a
             fields["t_r"][c, i] = r.t_r
             fields["t_du"][c, i] = r.t_du
             fields["t_dl"][c, i] = r.t_dl
             fields["n_pe"][c, i] = r.n_pe
+    return RequestBatch(**{k: jnp.asarray(v)
+                           for k, v in fields.items()}), valid
+
+
+class RequestRing:
+    """Fixed-capacity FIFO staging ring for streaming admission.
+
+    The online path of :class:`repro.api.Session`: arriving requests
+    are staged here (host-side numpy storage — arrivals come from the
+    host anyway) and leave as *fixed-shape* device chunks via
+    :meth:`pop_chunk`, so the jitted ``admit_stream`` sees constant
+    shapes across calls no matter how the arrivals are grouped.  Slots
+    are reused modulo ``capacity``; the ring never re-pads or
+    reallocates, and a full ring rejects the push (callers drain first).
+    """
+
+    def __init__(self, capacity: int):
+        if capacity < 1:
+            raise ValueError("ring capacity must be >= 1")
+        self.capacity = capacity
+        self._buf = {f: np.zeros(capacity, np.int32)
+                     for f in RequestBatch._fields}
+        self._head = 0          # index of the oldest staged request
+        self.count = 0          # staged (not yet popped) requests
+        self.pushed = 0         # lifetime pushes
+        self.popped = 0         # lifetime pops (valid only)
+        self.wrapped = False    # a slot has been reused (index wrapped)
+        self.last_t_a = 0       # arrival time of the newest push
+        self.last_popped_t_a = 0  # arrival time of the newest pop
+
+    @property
+    def free(self) -> int:
+        return self.capacity - self.count
+
+    def push(self, requests: Sequence[ARRequest]) -> None:
+        """Stage arrival-ordered requests; raises when they don't fit.
+
+        All-or-nothing: the whole slice is validated before any slot
+        is written, so a rejected push leaves the ring untouched.
+        """
+        if len(requests) > self.free:
+            raise OverflowError(
+                f"ring full: {len(requests)} requests, "
+                f"{self.free}/{self.capacity} slots free — pop a chunk "
+                f"first or configure a larger ring_capacity")
+        check_arrival_order(requests, self.last_t_a)
+        for r in requests:
+            i = (self._head + self.count) % self.capacity
+            if self.pushed >= self.capacity:
+                self.wrapped = True
+            self._buf["t_a"][i] = r.t_a
+            self._buf["t_r"][i] = r.t_r
+            self._buf["t_du"][i] = r.t_du
+            self._buf["t_dl"][i] = r.t_dl
+            self._buf["n_pe"][i] = r.n_pe
+            self.count += 1
+            self.pushed += 1
+            self.last_t_a = r.t_a
+
+    def _pop_chunk_host(self, chunk: int, n_pe: int,
+                        n: Optional[int] = None):
+        """As :meth:`pop_chunk` but numpy fields (for lane stacking).
+
+        ``n`` caps how many staged requests to dequeue (default: up to
+        ``chunk``); the remaining positions hold filler.
+        """
+        n = min(chunk, self.count) if n is None \
+            else min(n, chunk, self.count)
+        idx = (self._head + np.arange(chunk)) % self.capacity
+        fields = {f: self._buf[f][idx].copy()
+                  for f in RequestBatch._fields}
+        valid = np.arange(chunk) < n
+        if n > 0:
+            self.last_popped_t_a = int(fields["t_a"][n - 1])
+        if n < chunk:
+            # filler is stamped with the newest *popped* arrival, never
+            # a still-staged one — stamping past staged requests would
+            # release their predecessors early and change decisions
+            pad = filler_request(n_pe, self.last_popped_t_a)
+            for f in RequestBatch._fields:
+                fields[f][n:] = getattr(pad, f)
+        self._head = (self._head + n) % self.capacity
+        self.count -= n
+        self.popped += n
+        return fields, valid
+
+    def pop_chunk(self, chunk: int,
+                  n_pe: int) -> Tuple[RequestBatch, np.ndarray]:
+        """Dequeue up to ``chunk`` requests as one fixed-shape batch.
+
+        Always returns arrays of length ``chunk``: missing tail
+        positions hold :func:`filler_request` padding and are flagged
+        ``False`` in the returned ``valid`` mask.
+        """
+        fields, valid = self._pop_chunk_host(chunk, n_pe)
+        return RequestBatch(**{k: jnp.asarray(v)
+                               for k, v in fields.items()}), valid
+
+    def snapshot(self) -> dict:
+        """Copy of the ring's mutable state (see :meth:`restore`)."""
+        return {"buf": {f: v.copy() for f, v in self._buf.items()},
+                "head": self._head, "count": self.count,
+                "pushed": self.pushed, "popped": self.popped,
+                "wrapped": self.wrapped, "last_t_a": self.last_t_a,
+                "last_popped_t_a": self.last_popped_t_a}
+
+    def restore(self, snap: dict) -> None:
+        for f, v in snap["buf"].items():
+            self._buf[f][:] = v
+        self._head = snap["head"]
+        self.count = snap["count"]
+        self.pushed = snap["pushed"]
+        self.popped = snap["popped"]
+        self.wrapped = snap["wrapped"]
+        self.last_t_a = snap["last_t_a"]
+        self.last_popped_t_a = snap["last_popped_t_a"]
+
+
+def pop_chunk_ensemble(rings: Sequence[RequestRing], chunk: int,
+                       n_pe: int, full_only: bool = False
+                       ) -> Tuple[RequestBatch, np.ndarray]:
+    """Pop one fixed-shape chunk from every lane's ring, stacked.
+
+    Returns an ``[E, chunk]`` :class:`RequestBatch` plus the matching
+    ``valid`` mask; lanes with fewer than ``chunk`` staged requests are
+    padded with :func:`filler_request`.  With ``full_only`` a lane
+    below a full chunk keeps its requests staged and contributes only
+    filler (the ``flush=False`` contract: partial remainders wait).
+    """
+    fields = {f: np.zeros((len(rings), chunk), np.int32)
+              for f in RequestBatch._fields}
+    valid = np.zeros((len(rings), chunk), bool)
+    for e, ring in enumerate(rings):
+        n = 0 if full_only and ring.count < chunk else None
+        lane_fields, lane_valid = ring._pop_chunk_host(chunk, n_pe,
+                                                       n=n)
+        for f in RequestBatch._fields:
+            fields[f][e] = lane_fields[f]
+        valid[e] = lane_valid
     return RequestBatch(**{k: jnp.asarray(v)
                            for k, v in fields.items()}), valid
 
@@ -281,32 +451,61 @@ def _grown(state: SchedulerState, run: SchedulerState) -> SchedulerState:
         state, new_capacity=new_cap, new_pending_capacity=new_pend)
 
 
-def admit_stream_auto(state: SchedulerState, batch: RequestBatch,
+def admit_stream_grow(state: SchedulerState, batch: RequestBatch,
                       policy, *, n_pe: int, auto_release: bool = True,
-                      use_kernel: bool = False
+                      use_kernel: bool = False,
+                      max_growths: int = MAX_DOUBLINGS
                       ) -> Tuple[SchedulerState, Decision]:
     """Run :func:`admit_stream`, growing capacity on overflow.
 
-    Each retry re-runs the *full* stream from the original (grown)
+    Each retry re-runs the *full* batch from the original (grown)
     pre-run state; padding never changes decisions, so the result is
-    identical to a run that started with enough capacity.
+    identical to a run that started with enough capacity.  This is the
+    growth step behind :meth:`repro.api.Session.offer`, which feeds it
+    fixed-shape ring-buffer chunks so steady-state streaming never
+    recompiles.  ``max_growths=0`` forbids growth entirely: the first
+    overflow raises before any state mutation (the service's
+    ``auto_grow=False`` mode).
     """
     pid = jnp.int32(
         policy if isinstance(policy, (int, np.integer))
         else policy_index(policy))
     start = state
-    for attempt in range(MAX_DOUBLINGS + 1):
+    for attempt in range(max_growths + 1):
         out, dec = admit_stream(start, batch, pid, n_pe=n_pe,
                                 auto_release=auto_release,
                                 use_kernel=use_kernel)
         if not bool(out.overflow):
             return out, dec
-        if attempt < MAX_DOUBLINGS:
+        if attempt < max_growths:
             start = _grown(start, out)
     raise RuntimeError(
-        f"admit_stream still overflowing after {MAX_DOUBLINGS + 1} "
+        f"admit_stream still overflowing after {max_growths + 1} "
         f"attempts (last tried capacity {start.tl.capacity}, "
-        f"pending {start.pending_capacity})")
+        f"pending {start.pending_capacity}; needed records "
+        f"{int(out.hw_records)}, pending {int(out.hw_pending)})")
+
+
+def admit_stream_auto(state: SchedulerState, batch: RequestBatch,
+                      policy, *, n_pe: int, auto_release: bool = True,
+                      use_kernel: bool = False
+                      ) -> Tuple[SchedulerState, Decision]:
+    """Deprecated alias of :func:`admit_stream_grow`.
+
+    .. deprecated:: PR 3
+       Use :class:`repro.api.ReservationService` — a
+       :meth:`~repro.api.Session.offer` session streams fixed-shape
+       chunks with zero recompilation — or call
+       :func:`admit_stream_grow` directly for one-shot batches.
+    """
+    warnings.warn(
+        "admit_stream_auto is deprecated: open a repro.api."
+        "ReservationService session and use Session.offer(requests) "
+        "(or admit_stream_grow for a one-shot batch)",
+        DeprecationWarning, stacklevel=2)
+    return admit_stream_grow(state, batch, policy, n_pe=n_pe,
+                             auto_release=auto_release,
+                             use_kernel=use_kernel)
 
 
 def admit_one(state: SchedulerState, req: ARRequest, policy, *,
@@ -328,6 +527,95 @@ def admit_one(state: SchedulerState, req: ARRequest, policy, *,
         f"admit still overflowing after {MAX_DOUBLINGS + 1} attempts "
         f"(last tried capacity {start.tl.capacity}, "
         f"pending {start.pending_capacity})")
+
+
+# ---------------------------------------------------------------------------
+# session verbs: release-due advancement and cancellation
+# ---------------------------------------------------------------------------
+
+
+release_due_step = jax.jit(release_due)
+
+
+def release_until(state: SchedulerState, t_now: int, *,
+                  max_growths: int = MAX_DOUBLINGS) -> SchedulerState:
+    """Host wrapper of :func:`release_due` with overflow growth.
+
+    The service's ``tick(t)``: deletes every pending reservation ending
+    by ``t_now``.  A deletion can split a merged record and overflow
+    the timeline; the retry re-runs from the pre-tick snapshot on a
+    grown state, which is deterministic.  ``max_growths=0`` raises on
+    the first overflow instead (before any state mutation).
+    """
+    start = state
+    for attempt in range(max_growths + 1):
+        out = release_due_step(start, jnp.int32(t_now))
+        if not bool(out.overflow):
+            return out
+        if attempt < max_growths:
+            start = _grown(start, out)
+    raise RuntimeError(
+        f"release_until still overflowing after {max_growths + 1} "
+        f"attempts (last tried capacity {start.tl.capacity})")
+
+
+@functools.partial(jax.jit, static_argnames=("require_pending",))
+def cancel_step(state: SchedulerState, t_s: jax.Array, t_e: jax.Array,
+                mask: jax.Array, *, require_pending: bool = True
+                ) -> Tuple[SchedulerState, jax.Array]:
+    """Withdraw one committed reservation in a single fused dispatch.
+
+    Deletes ``[t_s, t_e) x mask`` from the timeline and clears the
+    matching pending-release slot.  With ``require_pending`` (the
+    auto-release sessions) a reservation that is not pending — already
+    released, cancelled, or never admitted — is a no-op returning
+    ``False``, so cancel is idempotent and can never corrupt the
+    timeline.  Overflow latches as in :func:`admit`; host callers grow
+    and retry (:func:`cancel_one`).
+    """
+    match = (state.pend_ts == t_s) & (state.pend_te == t_e) & \
+        jnp.all(state.pend_mask == mask[None, :], axis=1)
+    found = jnp.any(match)
+    ok = found if require_pending else jnp.asarray(True)
+    ok = ok & ~state.overflow
+    new_tl, ovf, n_keep = tl_lib.update(
+        state.tl, t_s, t_e, mask, is_add=False, with_count=True)
+    ovf = ovf & ok
+    do = ok & ~ovf
+    slot = jnp.argmax(match)
+    clear = found & do
+    cleared_ts = state.pend_ts.at[slot].set(T_INF)
+    cleared_te = state.pend_te.at[slot].set(T_INF)
+    cleared_mask = state.pend_mask.at[slot].set(jnp.uint32(0))
+    out = state._replace(
+        tl=_where_tree(do, new_tl, state.tl),
+        pend_ts=jnp.where(clear, cleared_ts, state.pend_ts),
+        pend_te=jnp.where(clear, cleared_te, state.pend_te),
+        pend_mask=jnp.where(clear, cleared_mask, state.pend_mask),
+        overflow=state.overflow | ovf,
+        hw_records=jnp.maximum(state.hw_records,
+                               jnp.where(ok, n_keep, 0)),
+    )
+    return out, do
+
+
+def cancel_one(state: SchedulerState, t_s: int, t_e: int,
+               mask: jax.Array, *, require_pending: bool = True,
+               max_growths: int = MAX_DOUBLINGS
+               ) -> Tuple[SchedulerState, bool]:
+    """Host wrapper of :func:`cancel_step` with overflow growth."""
+    start = state
+    for attempt in range(max_growths + 1):
+        out, done = cancel_step(
+            start, jnp.int32(t_s), jnp.int32(t_e), mask,
+            require_pending=require_pending)
+        if not bool(out.overflow):
+            return out, bool(done)
+        if attempt < max_growths:
+            start = _grown(start, out)
+    raise RuntimeError(
+        f"cancel still overflowing after {max_growths + 1} "
+        f"attempts (last tried capacity {start.tl.capacity})")
 
 
 # ---------------------------------------------------------------------------

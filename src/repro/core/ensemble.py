@@ -147,9 +147,42 @@ def grow_ensemble(states: SchedulerState, new_capacity: int,
         new_pending_capacity=new_pending_capacity))(states)
 
 
+release_due_ensemble = jax.jit(
+    jax.vmap(batch_lib.release_due, in_axes=(0, None)))
+
+
+def release_until_ensemble(states: SchedulerState, t_now: int, *,
+                           max_growths: int = batch_lib.MAX_DOUBLINGS
+                           ) -> SchedulerState:
+    """Per-lane release-due advancement with collective growth.
+
+    The ensemble session's ``tick(t)``: every lane deletes its pending
+    reservations ending by ``t_now`` in one vmapped dispatch; a lane
+    overflow (a deletion splitting a merged record) grows all lanes
+    once to the worst watermark and re-runs from the pre-tick snapshot.
+    ``max_growths=0`` raises on the first overflow instead.
+    """
+    start = states
+    for attempt in range(max_growths + 1):
+        out = release_due_ensemble(start, jnp.int32(t_now))
+        if not bool(jnp.any(out.overflow)):
+            return out
+        if attempt < max_growths:
+            new_cap, new_pend = batch_lib.grown_capacities(
+                member(start, 0), int(jnp.max(out.hw_records)),
+                int(jnp.max(out.hw_pending)))
+            start = grow_ensemble(start, new_cap, new_pend)
+    cap, pend = lane_capacity(start)
+    raise RuntimeError(
+        f"release_until_ensemble still overflowing after "
+        f"{max_growths + 1} attempts (last tried capacity "
+        f"{cap}, pending {pend})")
+
+
 def admit_stream_ensemble_auto(
     states: SchedulerState, batches: RequestBatch, policies, *,
     n_pe: int, auto_release: bool = True, use_kernel: bool = False,
+    max_growths: int = batch_lib.MAX_DOUBLINGS,
 ) -> Tuple[SchedulerState, Decision]:
     """Run :func:`admit_stream_ensemble`, growing on any lane overflow.
 
@@ -158,17 +191,19 @@ def admit_stream_ensemble_auto(
     re-runs from the pre-run snapshot; lanes that did not overflow
     reproduce their decisions exactly (padding never changes
     decisions), so the result equals E independent auto runs.
+    ``max_growths=0`` raises on the first overflow instead (before any
+    state mutation).
     """
     pids = policies if isinstance(policies, jax.Array) \
         else policy_ids(policies)
     start = states
-    for attempt in range(batch_lib.MAX_DOUBLINGS + 1):
+    for attempt in range(max_growths + 1):
         out, dec = admit_stream_ensemble(
             start, batches, pids, n_pe=n_pe,
             auto_release=auto_release, use_kernel=use_kernel)
         if not bool(jnp.any(out.overflow)):
             return out, dec
-        if attempt < batch_lib.MAX_DOUBLINGS:
+        if attempt < max_growths:
             need_r = int(jnp.max(out.hw_records))
             need_p = int(jnp.max(out.hw_pending))
             probe = member(start, 0)
@@ -178,5 +213,5 @@ def admit_stream_ensemble_auto(
     cap, pend = lane_capacity(start)
     raise RuntimeError(
         f"admit_stream_ensemble still overflowing after "
-        f"{batch_lib.MAX_DOUBLINGS + 1} attempts (last tried capacity "
+        f"{max_growths + 1} attempts (last tried capacity "
         f"{cap}, pending {pend})")

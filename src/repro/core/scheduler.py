@@ -1,17 +1,27 @@
 """Engine facade: one API over the literal, host, and device engines.
 
-``make_scheduler(engine=...)`` returns an object with the paper's three
-operations.  The device engine is a thin stateful wrapper over the
-functional core: its whole state is one
+The engine registry behind :class:`repro.api.ReservationService`: every
+engine exposes the paper's three operations.  The device engine is a
+thin stateful wrapper over the functional core: its whole state is one
 :class:`~repro.core.timeline.SchedulerState` pytree and every mutation
 goes through the pure jitted functions in :mod:`repro.core.batch` /
-:mod:`repro.core.timeline`.  Capacity overflow triggers host-side
-growth (double and retry), so callers never see a fixed limit.  On top
-of the classic three operations it exposes the fused single-step
-``admit`` and the scanned ``admit_stream`` batched path (DESIGN.md §3).
+:mod:`repro.core.timeline`.  Capacity overflow follows the grow-once
+high-water protocol (DESIGN.md §3): each overflowing run records the
+record / pending-slot counts it *needed* (``hw_records`` /
+``hw_pending``), and the host grows straight to the next power of two
+covering that watermark (``grown_capacities``) before the
+deterministic re-run — so callers never see a fixed limit and growth
+is amortised O(1).  On top of the classic three operations the device
+engine exposes the fused single-step ``admit`` and the scanned
+``admit_stream`` batched path (DESIGN.md §3).
+
+``make_scheduler(engine=...)`` and ``DeviceScheduler`` remain as
+deprecated shims over the service API (sessions carry the same engines
+plus the streaming verbs).
 """
 from __future__ import annotations
 
+import warnings
 from typing import Optional, Sequence, Union
 
 import numpy as np
@@ -27,7 +37,7 @@ from repro.core.policies import policy_index
 from repro.core.types import Allocation, ARRequest, Policy, T_INF
 
 
-class DeviceScheduler:
+class DeviceEngine:
     """Device-resident scheduler with the HostScheduler interface."""
 
     def __init__(self, n_pe: int, capacity: int = 256,
@@ -40,7 +50,10 @@ class DeviceScheduler:
         # covering the live records cuts the work ~quadratically when
         # the timeline is mostly empty (each bucket jit-compiles once).
         self.bucketing = bucketing
-        self._n_valid = 0
+        # valid-record count for bucketing; None = stale (recomputed
+        # lazily on the next search so the streaming hot path never
+        # pays the device reduction)
+        self._n_valid: Optional[int] = 0
         self.state = tl_lib.init_state(capacity, n_pe, pending_capacity)
 
     # -- helpers -------------------------------------------------------
@@ -50,7 +63,7 @@ class DeviceScheduler:
 
     def _set_tl(self, new_tl: tl_lib.Timeline) -> None:
         self.state = self.state._replace(tl=new_tl)
-        self._n_valid = int(new_tl.n_valid())
+        self._n_valid = None
 
     def _mask32(self, pes: Sequence[int]) -> jnp.ndarray:
         return tl_lib.ids_to_mask32(pes, self.tl.words)
@@ -76,6 +89,8 @@ class DeviceScheduler:
         """Smallest power-of-two prefix covering the valid records."""
         if not self.bucketing:
             return self.tl
+        if self._n_valid is None:
+            self._n_valid = int(self.tl.n_valid())
         k = 16
         while k < self._n_valid:
             k *= 2
@@ -113,7 +128,7 @@ class DeviceScheduler:
         self.state, alloc = batch_lib.admit_one(
             self.state, req, policy, n_pe=self.n_pe,
             auto_release=auto_release, use_kernel=self.use_kernel)
-        self._n_valid = int(self.state.tl.n_valid())
+        self._n_valid = None
         return alloc
 
     def admit_stream(self,
@@ -129,10 +144,10 @@ class DeviceScheduler:
         """
         if not isinstance(requests, batch_lib.RequestBatch):
             requests = batch_lib.requests_to_batch(list(requests))
-        self.state, dec = batch_lib.admit_stream_auto(
+        self.state, dec = batch_lib.admit_stream_grow(
             self.state, requests, policy, n_pe=self.n_pe,
             auto_release=auto_release, use_kernel=self.use_kernel)
-        self._n_valid = int(self.state.tl.n_valid())
+        self._n_valid = None
         return dec
 
     def records(self):
@@ -149,15 +164,60 @@ class DeviceScheduler:
 ENGINES = {
     "list": ListScheduler,
     "host": HostScheduler,
-    "device": DeviceScheduler,
+    "device": DeviceEngine,
 }
 
 
-def make_scheduler(n_pe: int, engine: str = "host", **kwargs):
-    """Factory over the three interchangeable engines."""
+def _make_engine(n_pe: int, engine: str = "host", **kwargs):
+    """Engine factory (no deprecation warning — internal use)."""
     try:
         cls = ENGINES[engine]
     except KeyError:
         raise ValueError(
             f"unknown engine {engine!r}; pick one of {sorted(ENGINES)}")
     return cls(n_pe, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# deprecated shims over the service API
+# ---------------------------------------------------------------------------
+
+
+class DeviceScheduler(DeviceEngine):
+    """Deprecated alias of :class:`DeviceEngine`.
+
+    .. deprecated:: PR 3
+       Construct a :class:`repro.api.ReservationService` and open a
+       session; ``Session`` exposes the same three operations plus the
+       streaming verbs, and ``session.engine`` is the underlying
+       :class:`DeviceEngine` where raw access is needed.
+    """
+
+    def __init__(self, *args, **kwargs):
+        warnings.warn(
+            "DeviceScheduler is deprecated: use repro.api."
+            "ReservationService(ServiceConfig(n_pe=..., "
+            "engine='device')).session() — the session has the same "
+            "three operations plus offer/tick/cancel, and "
+            "session.engine exposes the raw DeviceEngine",
+            DeprecationWarning, stacklevel=2)
+        super().__init__(*args, **kwargs)
+
+
+def make_scheduler(n_pe: int, engine: str = "host", **kwargs):
+    """Deprecated factory over the three interchangeable engines.
+
+    .. deprecated:: PR 3
+       Use :class:`repro.api.ReservationService`: ``ReservationService(
+       ServiceConfig(n_pe=..., engine=...)).session().engine`` returns
+       the identical engine object, and the session adds the streaming
+       verbs (``offer`` / ``tick`` / ``cancel``).
+    """
+    warnings.warn(
+        "make_scheduler is deprecated: use repro.api."
+        "ReservationService(ServiceConfig(n_pe=..., engine=..., ...))"
+        ".session() (session.engine is the raw engine object)",
+        DeprecationWarning, stacklevel=2)
+    from repro.api import ReservationService, ServiceConfig
+    cfg = ServiceConfig.from_engine_kwargs(n_pe, engine, **kwargs)
+    return ReservationService(cfg).session().engine

@@ -42,8 +42,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.api import ReservationService, ServiceConfig
+from repro.api.config import ROUTINGS  # noqa: F401  (re-export)
 from repro.configs import get_config, shape_by_name
-from repro.core import ARRequest, Policy, make_scheduler
+from repro.core import ARRequest, Policy
 from repro.core import batch as batch_lib
 from repro.core import ensemble as ens_lib
 from repro.core import timeline as tl_lib
@@ -51,8 +53,6 @@ from repro.core.batch import pad_streams
 from repro.core.policies import policy_index
 from repro.core.types import Allocation, T_INF
 from repro.roofline import analysis as roof
-
-ROUTINGS = ("round_robin", "least_loaded", "best_acceptance")
 
 
 class JobState(str, enum.Enum):
@@ -323,6 +323,18 @@ class PartitionedCore:
 
 
 class FleetScheduler:
+    """Admission control for the chip fleet — a
+    :class:`~repro.api.ReservationService` client.
+
+    The fleet owns job bookkeeping, fault handling and completion
+    release (``advance``); all reservation decisions go through one
+    service session.  Completion release stays with the fleet
+    (``auto_release=False``), bulk admission uses one-shot
+    :meth:`~repro.api.Session.offer` calls, and the classic three
+    operations reach the underlying engine via ``session.engine``
+    (kept as ``self.core``).
+    """
+
     def __init__(self, n_chips: int = 512,
                  policy: Policy = Policy.PE_W,
                  engine: Optional[str] = None,
@@ -338,10 +350,21 @@ class FleetScheduler:
                 raise ValueError(
                     "a partitioned fleet is always device-backed "
                     "(one vmapped state); drop the engine argument")
-            self.core = PartitionedCore(
-                n_chips, n_partitions, use_kernel=use_kernel)
+            cfg = ServiceConfig(
+                n_pe=n_chips, engine="device", policy=policy,
+                n_partitions=n_partitions, routing=routing,
+                use_kernel=use_kernel, auto_release=False,
+                chunk_size=None)
         else:
-            self.core = make_scheduler(n_chips, engine=engine or "host")
+            cfg = ServiceConfig.from_engine_kwargs(
+                n_chips, engine or "host",
+                **({"use_kernel": use_kernel}
+                   if (engine or "host") == "device" else {})
+            ).replace(policy=policy, auto_release=False,
+                      chunk_size=None)
+        self.service = ReservationService(cfg)
+        self.session = self.service.session()
+        self.core = self.session.engine
         self.n_partitions = n_partitions
         self.routing = routing
         self.repair_seconds = repair_seconds
@@ -427,31 +450,23 @@ class FleetScheduler:
         On a partitioned fleet the batch is routed across partitions
         (``routing`` overrides the fleet default: round-robin, least
         loaded, or best-acceptance probes) and all partitions admit in
-        one vmapped dispatch.  On a device-engine core the whole batch
-        goes through ``core.admit_stream`` — a single jitted
+        one vmapped dispatch.  On a device engine the whole batch is
+        one session :meth:`~repro.api.Session.offer` — a single jitted
         ``lax.scan`` with no per-job host round-trips; decisions are
         identical to sequential submission because the scan commits
-        each accepted job before considering the next.  Completion
-        release stays with :meth:`advance` (``auto_release=False``).
-        Other engines fall back to the sequential loop.
+        each accepted job before considering the next.  Host/list
+        engines admit through the same verb (the session's reference
+        loop).  Completion release stays with :meth:`advance`
+        (``auto_release=False``).
         """
         pol = policy or self.policy
-        if isinstance(self.core, PartitionedCore):
-            built = [self._build_job(**spec) for spec in specs]
-            allocs = self.core.admit_stream_allocations(
-                [req for _, req in built], pol,
-                routing or self.routing)
-            return [self._record_decision(job, alloc, committed=True)
-                    for (job, _), alloc in zip(built, allocs)]
-        if not hasattr(self.core, "admit_stream"):
-            return [self.submit(policy=pol, **spec) for spec in specs]
         built = [self._build_job(**spec) for spec in specs]
-        decisions = self.core.admit_stream([req for _, req in built],
-                                           pol, auto_release=False)
-        return [
-            self._record_decision(job, alloc, committed=True)
-            for (job, _), alloc in zip(
-                built, batch_lib.decisions_to_allocations(decisions))]
+        res = self.session.offer(
+            [req for _, req in built], policy=pol,
+            routing=(routing or self.routing)
+            if self.n_partitions > 1 else None)
+        return [self._record_decision(job, alloc, committed=True)
+                for (job, _), alloc in zip(built, res.allocations())]
 
     # ------------------------------------------------------------------
     def submit_malleable(self, arch: str, shape: str,

@@ -17,9 +17,9 @@ from typing import Iterable, List, Optional
 
 import numpy as np
 
+from repro.api import ReservationService, ServiceConfig
 from repro.core import batch as batch_lib
-from repro.core import timeline as tl_lib
-from repro.core.scheduler import make_scheduler
+from repro.core.scheduler import _make_engine
 from repro.core.types import ARRequest, Policy
 from repro.sim.metrics import SimResult
 
@@ -34,7 +34,7 @@ def simulate(
 ) -> SimResult:
     """Run one experiment: schedule every job, collect the metrics."""
     jobs = sorted(jobs, key=lambda j: j.t_a)
-    sched = make_scheduler(n_pe, engine=engine, **(engine_kwargs or {}))
+    sched = _make_engine(n_pe, engine=engine, **(engine_kwargs or {}))
     completions: List = []   # heap of (t_e, seq, t_s, t_e, pe_ids)
     seq = 0
     result = SimResult(policy=policy.value, n_jobs=len(jobs),
@@ -92,10 +92,11 @@ def simulate_batched(
 
     Semantically identical to :func:`simulate` with the device engine —
     completions are released before each arrival, then the fused step
-    searches and commits — but the entire experiment runs inside one
-    jitted scan (:mod:`repro.core.batch`), so there are zero host
-    round-trips between requests.  ``capacity``/``pending_capacity``
-    are starting sizes; overflow grows them and re-runs.
+    searches and commits — but the entire experiment runs as one
+    one-shot :meth:`repro.api.Session.offer` (a single jitted scan,
+    :mod:`repro.core.batch`), so there are zero host round-trips
+    between requests.  ``capacity``/``pending_capacity`` are starting
+    sizes; overflow grows them and re-runs.
 
     With ``cross_check=True`` the host-loop simulator is run on the
     same workload and the per-job accept/reject decisions, start times
@@ -109,12 +110,13 @@ def simulate_batched(
     if not jobs:
         return result
     batch = batch_lib.requests_to_batch(jobs)
-    state = tl_lib.init_state(capacity, n_pe, pending_capacity)
+    session = ReservationService(ServiceConfig(
+        n_pe=n_pe, policy=policy, capacity=capacity,
+        pending_capacity=pending_capacity, chunk_size=None)).session()
     t0 = _time.perf_counter()
-    state, dec = batch_lib.admit_stream_auto(
-        state, batch, policy, n_pe=n_pe)
-    accepted = np.asarray(dec.accepted)       # device sync
-    starts = np.asarray(dec.t_s)
+    res = session.offer(batch)
+    accepted = np.asarray(res.decision.accepted)       # device sync
+    starts = np.asarray(res.decision.t_s)
     result.wall_seconds = _time.perf_counter() - t0
     result.n_accepted = int(accepted.sum())
     result.decisions = [

@@ -6,7 +6,8 @@ functional core's ensemble axis (:mod:`repro.core.ensemble`) that grid
 — policies × loads × seeds × flexibilities — becomes *lanes of one
 vmapped scan*: every cell's request stream is materialised on the host
 (:mod:`repro.sim.workload`), padded to a common fixed shape, stacked,
-and stepped in lockstep by one jitted dispatch.  The acceptance /
+and offered to one ensemble :class:`repro.api.Session` (lanes =
+cells, one-shot mode) in a single jitted dispatch.  The acceptance /
 slowdown / utilization metrics are reduced on-device and returned
 stacked as a :class:`~repro.sim.metrics.GridResult`.
 
@@ -24,8 +25,8 @@ from typing import List, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import ReservationService, ServiceConfig
 from repro.core import batch as batch_lib
-from repro.core import ensemble as ens_lib
 from repro.core.batch import RequestBatch, pad_streams
 from repro.core.policies import policy_index
 from repro.core.types import ALL_POLICIES, Policy
@@ -131,11 +132,13 @@ def simulate_grid(
     batch, valid = pad_streams(streams, spec.n_pe)
     pids = jnp.asarray([policy_index(p) for p, _, _, _ in cells],
                        jnp.int32)
-    states = ens_lib.init_ensemble(
-        len(cells), capacity, spec.n_pe, pending_capacity)
+    session = ReservationService(ServiceConfig(
+        n_pe=spec.n_pe, lanes=len(cells), capacity=capacity,
+        pending_capacity=pending_capacity, use_kernel=use_kernel,
+        chunk_size=None)).session()
     t0 = _time.perf_counter()
-    states, dec = ens_lib.admit_stream_ensemble_auto(
-        states, batch, pids, n_pe=spec.n_pe, use_kernel=use_kernel)
+    res = session.offer((batch, valid), policy=pids)
+    dec = res.decision
     n_acc, n_val, acc_rate, slowdown, util = _grid_metrics(
         dec, batch, valid, spec.n_pe)        # syncs the device
     wall = _time.perf_counter() - t0
