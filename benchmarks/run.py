@@ -34,8 +34,8 @@ def main() -> None:
     n_jobs = 10_000 if args.full else 2_000
     t0 = time.time()
 
-    from benchmarks import bench_datastructure, bench_policies, \
-        bench_service
+    from benchmarks import bench_backfill, bench_datastructure, \
+        bench_policies, bench_service
     from benchmarks.bench_roofline import ART_OPT, roofline_rows
 
     sections = {
@@ -53,6 +53,9 @@ def main() -> None:
                 n_jobs=300 if args.full else 120),
         "service_throughput":
             lambda: bench_service.service_throughput(
+                n_jobs=600 if args.full else 240),
+        "backfill_throughput":
+            lambda: bench_backfill.backfill_throughput(
                 n_jobs=600 if args.full else 240),
         "datastructure_op_costs":
             lambda: bench_datastructure.op_costs(

@@ -11,6 +11,7 @@ One streaming session API over engines, ensembles and partitions::
     session.cancel(result.allocations()[0])
 """
 from repro.api.config import (  # noqa: F401
+    BACKFILLS,
     ENGINE_NAMES,
     ROUTINGS,
     ServiceConfig,

@@ -14,16 +14,19 @@ and every session it opens inherits the same semantics.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Mapping, Optional, Union
+from typing import Any, Mapping, Optional, Tuple, Union
 
 from repro.core import batch as batch_lib
-from repro.core.types import Policy
+from repro.core.types import BackfillMode, Policy
 
 #: The three engine implementations (see DESIGN.md §1).
 ENGINE_NAMES = ("list", "host", "device")
 
 #: Partition routing strategies (see DESIGN.md §4).
 ROUTINGS = ("round_robin", "least_loaded", "best_acceptance")
+
+#: Backfilling admission modes (see DESIGN.md §6).
+BACKFILLS = tuple(m.value for m in BackfillMode)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,6 +70,24 @@ class ServiceConfig:
         selects one-shot mode (each ``offer`` admits its whole batch in
         one scan — the pre-materialised-experiment shape).
 
+    Backfilling
+        ``backfill`` picks the deferral-queue admission mode
+        (DESIGN.md §6): ``"none"`` (the paper's strict arrival-order
+        admission), ``"conservative"`` (accepted-but-delayed requests
+        park in a bounded FCFS queue holding immovable reservations —
+        decision-identical to ``none`` with an observable queue) or
+        ``"easy"`` (only the head's reservation binds: parked
+        reservations may be pulled earlier by the retry sweep, and an
+        otherwise-rejected arrival may displace non-head parked jobs
+        inside their deadline windows).  On ensemble sessions a tuple
+        gives one mode per lane — the mode is *traced*, so mixing
+        modes never recompiles.  ``backfill_queue`` sizes the queue
+        (static shape; a full queue degrades gracefully: delayed
+        requests commit immovably as under ``none``).  Backfilling
+        needs the device engine with ``auto_release=True`` and no
+        partitions.  :meth:`~repro.api.Session.pending` exposes the
+        live queue.
+
     ``auto_release=False`` hands completion release to the caller
     (``cancel`` / ``delete_allocation``) instead of the on-device
     pending buffer — the fleet's mode, and the only mode partitioned
@@ -92,6 +113,8 @@ class ServiceConfig:
     routing: str = "round_robin"
     chunk_size: Optional[int] = 64
     ring_capacity: int = 256
+    backfill: Union[str, Tuple[str, ...]] = "none"
+    backfill_queue: int = 8
     engine_kwargs: Optional[Mapping[str, Any]] = None
 
     def __post_init__(self):
@@ -147,6 +170,52 @@ class ServiceConfig:
                     f"at least one chunk ({self.chunk_size})")
         if self.capacity < 2 or self.pending_capacity < 1:
             raise ValueError("capacity >= 2 and pending_capacity >= 1")
+        bf = self.backfill
+        if isinstance(bf, str):
+            if bf not in BACKFILLS:
+                raise ValueError(
+                    f"unknown backfill {bf!r}; pick one of {BACKFILLS}")
+        else:
+            bf = tuple(bf)
+            object.__setattr__(self, "backfill", bf)
+            unknown = [m for m in bf if m not in BACKFILLS]
+            if unknown:
+                raise ValueError(
+                    f"unknown backfill modes {unknown}; pick from "
+                    f"{BACKFILLS}")
+            if len(bf) != self.lanes:
+                raise ValueError(
+                    f"{len(bf)} backfill modes for {self.lanes} lanes "
+                    f"(a tuple gives one mode per ensemble lane)")
+        if self.backfilling:
+            if self.engine != "device":
+                raise ValueError(
+                    "backfilling runs on the device deferral queue; "
+                    "use engine='device'")
+            if self.n_partitions > 1:
+                raise ValueError(
+                    "backfilling is per-timeline; partitioned "
+                    "sessions do not support it")
+            if not self.auto_release:
+                raise ValueError(
+                    "backfilling promotes parked reservations through "
+                    "the pending-release buffer; it requires "
+                    "auto_release=True")
+            if self.backfill_queue < 1:
+                raise ValueError(
+                    "backfill_queue must be >= 1 when backfilling")
+
+    @property
+    def backfilling(self) -> bool:
+        """Whether any lane runs a non-``none`` backfill mode."""
+        bf = self.backfill
+        modes = (bf,) if isinstance(bf, str) else bf
+        return any(m != BackfillMode.NONE.value for m in modes)
+
+    @property
+    def park_capacity(self) -> int:
+        """Static deferral-queue shape: 0 when no lane backfills."""
+        return self.backfill_queue if self.backfilling else 0
 
     def replace(self, **changes) -> "ServiceConfig":
         return dataclasses.replace(self, **changes)

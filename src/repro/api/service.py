@@ -232,6 +232,16 @@ class Session:
         """Host view of the availability timeline (merged records)."""
         return self._backend.records()
 
+    def pending(self, lane: int = 0) -> list:
+        """The live backfilling deferral queue, FCFS order.
+
+        One dict per parked reservation (``seq``/``t_s``/``t_e``/
+        ``t_r``/``t_dl``/``n_pe``/``pe_ids``; the first entry is the
+        head of queue).  Empty on non-backfilling sessions.  On
+        ensemble sessions ``lane`` names the timeline to inspect.
+        """
+        return self._backend.pending(lane)
+
     def metrics(self) -> Dict[str, Any]:
         """Admission counters plus capacity / streaming geometry."""
         out = dict(self._counters)
@@ -239,7 +249,8 @@ class Session:
         out.update(engine=self.config.engine, n_pe=self.config.n_pe,
                    lanes=self.config.lanes,
                    n_partitions=self.config.n_partitions,
-                   chunk_size=self.config.chunk_size)
+                   chunk_size=self.config.chunk_size,
+                   backfill=self.config.backfill)
         return out
 
     # -- the classic three operations ----------------------------------
@@ -334,6 +345,11 @@ class _BackendBase:
         if after != before:
             self.counters["growths"] += 1
 
+    def pending(self, lane: int = 0) -> list:
+        if lane != 0:
+            raise ValueError("lane applies to ensemble sessions")
+        return []
+
     # three ops: default engine delegation
     def find_allocation(self, req, policy, t_now=None):
         return self.engine.find_allocation(req, policy, t_now=t_now)
@@ -356,7 +372,10 @@ class _StreamBackend(_BackendBase):
         self.engine = DeviceEngine(
             cfg.n_pe, capacity=cfg.capacity, use_kernel=cfg.use_kernel,
             bucketing=cfg.bucketing,
-            pending_capacity=cfg.pending_capacity)
+            pending_capacity=cfg.pending_capacity,
+            park_capacity=cfg.park_capacity)
+        self._bf = batch_lib.BF_NONE if not cfg.backfilling else \
+            batch_lib.as_backfill_id(cfg.backfill)
         self.ring = RequestRing(cfg.ring_capacity) \
             if cfg.chunk_size else None
 
@@ -377,6 +396,7 @@ class _StreamBackend(_BackendBase):
         before = self._capacities()
         state, dec = batch_lib.admit_stream_grow(
             self._state, batch, pid, n_pe=self.cfg.n_pe,
+            backfill=self._bf,
             auto_release=self.cfg.auto_release,
             use_kernel=self.cfg.use_kernel,
             max_growths=self.growth_budget)
@@ -384,6 +404,11 @@ class _StreamBackend(_BackendBase):
                                   state.pending_capacity))
         self._state = state
         return dec
+
+    def pending(self, lane: int = 0) -> list:
+        if lane != 0:
+            raise ValueError("lane applies to ensemble sessions")
+        return batch_lib.parked_entries(self._state)
 
     def offer(self, requests, *, policy, routing, flush) -> OfferResult:
         if routing is not None:
@@ -508,6 +533,15 @@ class _StreamBackend(_BackendBase):
             out.update(ring_capacity=self.ring.capacity,
                        ring_staged=self.ring.count,
                        ring_wrapped=self.ring.wrapped)
+        if self.cfg.backfilling:
+            s = self._state
+            out.update(
+                park_capacity=s.park_capacity,
+                n_parked_now=int(np.asarray(
+                    s.park_seq != T_INF).sum()),
+                n_parked=int(s.n_parked),
+                n_promoted=int(s.n_promoted),
+                n_moved=int(s.n_moved))
         return out
 
 
@@ -517,7 +551,9 @@ class _EnsembleBackend(_BackendBase):
     def __init__(self, cfg, counters):
         super().__init__(cfg, counters)
         self.states = ens_lib.init_ensemble(
-            cfg.lanes, cfg.capacity, cfg.n_pe, cfg.pending_capacity)
+            cfg.lanes, cfg.capacity, cfg.n_pe, cfg.pending_capacity,
+            cfg.park_capacity)
+        self._bf_ids = ens_lib.backfill_ids(cfg.backfill, cfg.lanes)
         self.rings = [RequestRing(cfg.ring_capacity)
                       for _ in range(cfg.lanes)] \
             if cfg.chunk_size else None
@@ -548,12 +584,20 @@ class _EnsembleBackend(_BackendBase):
         before = self._capacities()
         states, dec = ens_lib.admit_stream_ensemble_auto(
             self.states, batch, pids, n_pe=self.cfg.n_pe,
+            backfills=self._bf_ids,
             auto_release=self.cfg.auto_release,
             use_kernel=self.cfg.use_kernel,
             max_growths=self.growth_budget)
         self._grow_guard(before, ens_lib.lane_capacity(states))
         self.states = states
         return dec
+
+    def pending(self, lane: int = 0) -> list:
+        if not 0 <= lane < self.cfg.lanes:
+            raise ValueError(
+                f"lane {lane} out of range for {self.cfg.lanes} lanes")
+        return batch_lib.parked_entries(
+            ens_lib.member(self.states, lane))
 
     def offer(self, streams, *, policy, routing, flush) -> OfferResult:
         if routing is not None:
@@ -706,6 +750,15 @@ class _EnsembleBackend(_BackendBase):
             out.update(ring_capacity=self.cfg.ring_capacity,
                        ring_staged=sum(r.count for r in self.rings),
                        ring_wrapped=any(r.wrapped for r in self.rings))
+        if self.cfg.backfilling:
+            s = self.states
+            out.update(
+                park_capacity=s.park_seq.shape[-1],
+                n_parked_now=int(np.asarray(
+                    s.park_seq != T_INF).sum()),
+                n_parked=int(jnp.sum(s.n_parked)),
+                n_promoted=int(jnp.sum(s.n_promoted)),
+                n_moved=int(jnp.sum(s.n_moved)))
         return out
 
 
@@ -852,7 +905,8 @@ class _HostBackend(_BackendBase):
             pe_mask=np.stack([r[3] for r in rows]),
             n_free=np.asarray([r[4] for r in rows], np.int32),
             t_begin=np.asarray([r[5] for r in rows], np.int32),
-            t_end=np.asarray([r[6] for r in rows], np.int32))
+            t_end=np.asarray([r[6] for r in rows], np.int32),
+            parked=np.zeros(len(rows), bool))
         return OfferResult(
             decision=dec, batch=None,
             valid=np.ones(len(reqs), bool), _allocations=allocs)

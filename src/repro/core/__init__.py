@@ -10,11 +10,14 @@ structure and the seven policies of the paper:
 """
 from repro.core.types import (  # noqa: F401
     ALL_POLICIES,
+    BACKFILL_MODES,
     Allocation,
     ARRequest,
+    BackfillMode,
     Policy,
     Rectangle,
     T_INF,
+    backfill_index,
 )
 from repro.core.scheduler import make_scheduler  # noqa: F401
 from repro.core.batch import (  # noqa: F401

@@ -35,11 +35,41 @@ from repro.core import search as search_lib
 from repro.core import timeline as tl_lib
 from repro.core.policies import policy_index
 from repro.core.timeline import SchedulerState
-from repro.core.types import Allocation, ARRequest, Rectangle, T_INF
+from repro.core.types import (
+    Allocation,
+    ARRequest,
+    BackfillMode,
+    Rectangle,
+    T_INF,
+    backfill_index,
+)
 
 # Growth retries before the host wrappers give up (2**8 x the initial
 # capacity is far beyond any stream the int32 timeline can describe).
 MAX_DOUBLINGS = 8
+
+# Traced backfill-mode ids (see repro.core.types.BackfillMode).
+BF_NONE = backfill_index(BackfillMode.NONE)
+BF_EASY = backfill_index(BackfillMode.EASY)
+BF_CONSERVATIVE = backfill_index(BackfillMode.CONSERVATIVE)
+
+
+def as_backfill_id(backfill) -> jax.Array:
+    """Any backfill spelling -> its traced int32 id.
+
+    Accepts a mode name / :class:`~repro.core.types.BackfillMode` /
+    validated id, an already-traced array (passed through), or a
+    1-tuple (the single-lane spelling of the per-lane config form).
+    """
+    if isinstance(backfill, jax.Array):
+        return backfill
+    if isinstance(backfill, (tuple, list)):
+        if len(backfill) != 1:
+            raise ValueError(
+                f"{len(backfill)} backfill modes for a single lane "
+                f"(per-lane tuples belong to ensemble callers)")
+        backfill = backfill[0]
+    return jnp.int32(backfill_index(backfill))
 
 
 class RequestBatch(NamedTuple):
@@ -67,6 +97,8 @@ class Decision(NamedTuple):
     n_free: jax.Array     # int32 winning-rectangle free PEs
     t_begin: jax.Array    # int32 winning-rectangle begin
     t_end: jax.Array      # int32 winning-rectangle end
+    parked: jax.Array     # bool: accepted into the deferral queue
+    #                       (reservation may still move under EASY)
 
 
 def requests_to_batch(jobs: Sequence[ARRequest]) -> RequestBatch:
@@ -290,14 +322,69 @@ def _where_tree(pred, if_true, if_false):
         lambda a, b: jnp.where(pred, a, b), if_true, if_false)
 
 
+def _promote_due(state: SchedulerState,
+                 t_now: jax.Array) -> SchedulerState:
+    """Commit parked reservations whose start time has arrived.
+
+    A deferral-queue entry with ``t_s <= t_now`` is running (or about
+    to): its reservation becomes immovable and moves to the
+    pending-release buffer, freeing the queue slot.  FCFS: earliest
+    sequence first — promotion only shuffles bookkeeping (the timeline
+    occupancy is unchanged), so the order matters only for determinism.
+    """
+    t_now = jnp.asarray(t_now, jnp.int32)
+
+    def due(s: SchedulerState):
+        return (jnp.any((s.park_seq < T_INF) & (s.park_ts <= t_now))
+                & ~s.overflow)
+
+    def one(s: SchedulerState) -> SchedulerState:
+        cand = (s.park_seq < T_INF) & (s.park_ts <= t_now)
+        i = jnp.argmin(jnp.where(cand, s.park_seq, T_INF))
+        free = s.pend_te == T_INF
+        slot = jnp.argmax(free)
+        ovf = ~jnp.any(free)
+        n_used = jnp.sum(~free).astype(jnp.int32) + 1
+        keep = ~ovf
+        return s._replace(
+            pend_ts=jnp.where(
+                keep, s.pend_ts.at[slot].set(s.park_ts[i]), s.pend_ts),
+            pend_te=jnp.where(
+                keep, s.pend_te.at[slot].set(s.park_te[i]), s.pend_te),
+            pend_mask=jnp.where(
+                keep, s.pend_mask.at[slot].set(s.park_mask[i]),
+                s.pend_mask),
+            park_ts=jnp.where(
+                keep, s.park_ts.at[i].set(T_INF), s.park_ts),
+            park_te=jnp.where(
+                keep, s.park_te.at[i].set(T_INF), s.park_te),
+            park_mask=jnp.where(
+                keep, s.park_mask.at[i].set(jnp.uint32(0)),
+                s.park_mask),
+            park_seq=jnp.where(
+                keep, s.park_seq.at[i].set(T_INF), s.park_seq),
+            n_promoted=s.n_promoted
+            + jnp.where(keep, 1, 0).astype(jnp.int32),
+            overflow=s.overflow | ovf,
+            hw_pending=jnp.maximum(s.hw_pending, n_used),
+        )
+
+    return jax.lax.while_loop(due, one, state)
+
+
 def release_due(state: SchedulerState, t_now: jax.Array) -> SchedulerState:
     """Delete every pending reservation with ``t_e <= t_now``.
 
     Mirrors the host simulator's completion heap: earliest end first.
     Reservations never share a PE over overlapping intervals, so the
     deletions commute and the loop order only has to be deterministic.
-    Amortised one iteration per admitted job.
+    Amortised one iteration per admitted job.  With a deferral queue
+    (``park_capacity > 0``) parked reservations whose start has arrived
+    are promoted into the pending-release buffer first, so a later due
+    end is released in the same pass.
     """
+    if state.park_capacity:
+        state = _promote_due(state, t_now)
 
     def pending_due(s: SchedulerState):
         return jnp.any(s.pend_te <= t_now) & ~s.overflow
@@ -323,12 +410,196 @@ def release_due(state: SchedulerState, t_now: jax.Array) -> SchedulerState:
     return jax.lax.while_loop(pending_due, release_one, state)
 
 
+def _retry_parked(state: SchedulerState, t_now: jax.Array,
+                  bf: jax.Array, *, n_pe: int,
+                  use_kernel: bool) -> SchedulerState:
+    """EASY retry-on-release sweep: pull parked reservations earlier.
+
+    In FCFS order each live queue entry is lifted off the timeline,
+    re-searched with :func:`~repro.core.search.replacement_search`
+    (earliest feasible start, the classic backfilling reservation), and
+    moved only when the new start is *strictly earlier* — so the sweep
+    can never delay anybody, the head included.  It runs only when the
+    ``park_retry`` latch is set, i.e. after a cancellation freed
+    *future* capacity: completions free only past records (durations
+    are exact), and proactively compacting reservations toward ``now``
+    crowds exactly the region where new arrivals' deadline windows
+    live, hurting acceptance.  Conservative mode never sweeps: its
+    reservations are frozen at admission, which keeps conservative
+    decision-identical to ``none``.
+    """
+    Q = state.park_capacity
+    t_now = jnp.asarray(t_now, jnp.int32)
+
+    def sweep(s0: SchedulerState) -> SchedulerState:
+        def body(_, carry):
+            s, done = carry
+            cand = (s.park_seq < T_INF) & ~done
+            i = jnp.argmin(jnp.where(cand, s.park_seq, T_INF))
+            act = jnp.any(cand) & ~s.overflow
+            t_du = s.park_te[i] - s.park_ts[i]
+            tl1, ovf1, nk1 = tl_lib.update(
+                s.tl, s.park_ts[i], s.park_te[i], s.park_mask[i],
+                is_add=False, with_count=True)
+            res = search_lib.replacement_search(
+                tl1, s.park_tr[i], t_du, s.park_tdl[i],
+                s.park_npe[i], jnp.int32(0), t_now, n_pe=n_pe,
+                use_kernel=use_kernel)
+            better = act & ~ovf1 & res.found & (res.t_s < s.park_ts[i])
+            new_ts = jnp.where(better, res.t_s, s.park_ts[i])
+            new_te = new_ts + t_du
+            new_mk = jnp.where(better, res.pe_mask, s.park_mask[i])
+            tl2, ovf2, nk2 = tl_lib.update(
+                tl1, new_ts, new_te, new_mk, is_add=True,
+                with_count=True)
+            apply = act & ~ovf1 & ~ovf2
+            s = s._replace(
+                tl=_where_tree(apply, tl2, s.tl),
+                park_ts=s.park_ts.at[i].set(
+                    jnp.where(apply & better, new_ts, s.park_ts[i])),
+                park_te=s.park_te.at[i].set(
+                    jnp.where(apply & better, new_te, s.park_te[i])),
+                park_mask=s.park_mask.at[i].set(
+                    jnp.where(apply & better, new_mk, s.park_mask[i])),
+                n_moved=s.n_moved
+                + jnp.where(apply & better, 1, 0).astype(jnp.int32),
+                overflow=s.overflow | (act & (ovf1 | ovf2)),
+                hw_records=jnp.maximum(
+                    s.hw_records,
+                    jnp.where(act, jnp.maximum(nk1, nk2), 0)),
+            )
+            return (s, done.at[i].set(True))
+
+        out, _ = jax.lax.fori_loop(
+            0, Q, body, (s0, jnp.zeros((Q,), bool)))
+        return out
+
+    pred = ((bf == BF_EASY) & state.park_retry
+            & jnp.any(state.park_seq < T_INF) & ~state.overflow)
+    out = jax.lax.cond(pred, sweep, lambda s: s, state)
+    # the latch is consumed per admit step whether or not it fired
+    return out._replace(park_retry=jnp.asarray(False))
+
+
+def _no_displace(state: SchedulerState, req: RequestBatch,
+                 policy_id: jax.Array):
+    zero = jnp.int32(0)
+    return state, search_lib.SearchResult(
+        found=jnp.asarray(False), t_s=zero, t_e=zero,
+        pe_mask=jnp.zeros((state.tl.words,), jnp.uint32),
+        n_free=zero, t_begin=zero, t_end=zero)
+
+
+def _displace(state: SchedulerState, req: RequestBatch,
+              policy_id: jax.Array, *, n_pe: int, use_kernel: bool):
+    """EASY displacement: admit ``req`` by moving non-head reservations.
+
+    The transaction of DESIGN.md §6: lift every *non-head* deferral-
+    queue reservation off the timeline, place the arriving request
+    (its own policy, full deadline window) around the committed
+    reservations plus the protected head, then re-place the lifted
+    entries in FCFS order at their earliest feasible start inside their
+    own deadline windows.  The request is admitted only if every lifted
+    entry still fits — otherwise the whole transaction rolls back and
+    the request is rejected, exactly as under ``none``.  The head-of-
+    queue reservation and every committed start are untouched by
+    construction (the EASY safety invariant).
+
+    Returns the (possibly unchanged) state and a
+    :class:`~repro.core.search.SearchResult` whose ``found`` flags the
+    transaction outcome.  Any capacity overflow inside the transaction
+    latches ``state.overflow`` regardless of the outcome, so the host
+    grow-and-re-run protocol stays deterministic.
+    """
+    Q = state.park_capacity
+    s = state
+    active = s.park_seq < T_INF
+    head = jnp.argmin(jnp.where(active, s.park_seq, T_INF))
+    nonhead = active & (jnp.arange(Q) != head)
+
+    def del_body(i, carry):
+        tl, ovf, hw = carry
+        do = nonhead[i]
+        tl2, o2, nk = tl_lib.update(
+            tl, s.park_ts[i], s.park_te[i], s.park_mask[i],
+            is_add=False, with_count=True)
+        return (_where_tree(do & ~o2, tl2, tl), ovf | (do & o2),
+                jnp.maximum(hw, jnp.where(do, nk, 0)))
+
+    tl, ovf, hw = jax.lax.fori_loop(
+        0, Q, del_body, (s.tl, jnp.asarray(False), jnp.int32(0)))
+
+    res_r = search_lib.search(
+        tl, req.t_r, req.t_du, req.t_dl, req.n_pe, policy_id,
+        req.t_a, n_pe=n_pe, use_kernel=use_kernel)
+    ok = res_r.found & ~ovf
+    tl2, o2, nk2 = tl_lib.update(
+        tl, jnp.where(ok, res_r.t_s, 0), jnp.where(ok, res_r.t_e, 1),
+        jnp.where(ok, res_r.pe_mask, jnp.uint32(0)), is_add=True,
+        with_count=True)
+    ovf = ovf | (ok & o2)
+    tl = _where_tree(ok & ~o2, tl2, tl)
+    hw = jnp.maximum(hw, jnp.where(ok, nk2, 0))
+
+    def re_body(_, carry):
+        tl, ovf, hw, ok, done, pts, pte, pmk, moved = carry
+        cand = nonhead & ~done
+        i = jnp.argmin(jnp.where(cand, s.park_seq, T_INF))
+        act = jnp.any(cand) & ok & ~ovf
+        t_du = s.park_te[i] - s.park_ts[i]
+        res = search_lib.replacement_search(
+            tl, s.park_tr[i], t_du, s.park_tdl[i], s.park_npe[i],
+            jnp.int32(0), req.t_a, n_pe=n_pe, use_kernel=use_kernel)
+        okp = act & res.found
+        tl2, o2, nk = tl_lib.update(
+            tl, jnp.where(okp, res.t_s, 0),
+            jnp.where(okp, res.t_s + t_du, 1),
+            jnp.where(okp, res.pe_mask, jnp.uint32(0)), is_add=True,
+            with_count=True)
+        return (
+            _where_tree(okp & ~o2, tl2, tl),
+            ovf | (okp & o2),
+            jnp.maximum(hw, jnp.where(okp, nk, 0)),
+            ok & (res.found | ~act),
+            done.at[i].set(True),
+            pts.at[i].set(jnp.where(okp, res.t_s, pts[i])),
+            pte.at[i].set(jnp.where(okp, res.t_s + t_du, pte[i])),
+            pmk.at[i].set(jnp.where(okp, res.pe_mask, pmk[i])),
+            moved + jnp.where(
+                okp & (res.t_s != s.park_ts[i]), 1, 0
+            ).astype(jnp.int32),
+        )
+
+    tl, ovf, hw, ok, _, pts, pte, pmk, moved = jax.lax.fori_loop(
+        0, Q, re_body,
+        (tl, ovf, hw, ok, jnp.zeros((Q,), bool), s.park_ts,
+         s.park_te, s.park_mask, jnp.int32(0)))
+
+    commit = ok & ~ovf
+    out = s._replace(
+        tl=_where_tree(commit, tl, s.tl),
+        park_ts=jnp.where(commit, pts, s.park_ts),
+        park_te=jnp.where(commit, pte, s.park_te),
+        park_mask=jnp.where(commit, pmk, s.park_mask),
+        n_moved=s.n_moved + jnp.where(commit, moved, 0),
+        overflow=s.overflow | ovf,
+        hw_records=jnp.maximum(s.hw_records, hw),
+    )
+    return out, res_r._replace(found=commit)
+
+
 def _admit_impl(state: SchedulerState, req: RequestBatch,
-                policy_id: jax.Array, *, n_pe: int,
+                policy_id: jax.Array, backfill_id, *, n_pe: int,
                 auto_release: bool,
                 use_kernel: bool = False) -> Tuple[SchedulerState, Decision]:
+    Q = state.park_capacity
+    bf = jnp.asarray(backfill_id, jnp.int32)
+    backfilling = bool(Q) and auto_release
     if auto_release:
         state = release_due(state, req.t_a)
+    if backfilling:
+        state = _retry_parked(state, req.t_a, bf, n_pe=n_pe,
+                              use_kernel=use_kernel)
     # NB: searches at full capacity S — the per-request engine's
     # power-of-two bucketing needs the host-visible record count, which
     # does not exist inside a fixed-shape scan.  The fusion win (no
@@ -338,30 +609,67 @@ def _admit_impl(state: SchedulerState, req: RequestBatch,
         state.tl, req.t_r, req.t_du, req.t_dl, req.n_pe, policy_id,
         req.t_a, n_pe=n_pe, use_kernel=use_kernel)
     found = res.found & ~state.overflow
+    t_s, t_e, pe_mask = res.t_s, res.t_e, res.pe_mask
+    n_free, t_begin, t_end = res.n_free, res.t_begin, res.t_end
+    need_add = jnp.asarray(True)
+    if backfilling:
+        # EASY fallback: an otherwise-rejected request may displace
+        # non-head parked reservations (transactional; see _displace).
+        # With fewer than two live entries there is nothing to lift —
+        # the transaction would re-run the identical failed search —
+        # so it is skipped (identical decisions, no wasted searches).
+        can_try = ((bf == BF_EASY) & ~res.found & ~state.overflow
+                   & (jnp.sum(state.park_seq < T_INF) >= 2))
+        state, dres = jax.lax.cond(
+            can_try,
+            functools.partial(_displace, n_pe=n_pe,
+                              use_kernel=use_kernel),
+            _no_displace, state, req, policy_id)
+        found = jnp.where(can_try, dres.found, found)
+        t_s = jnp.where(can_try, dres.t_s, t_s)
+        t_e = jnp.where(can_try, dres.t_e, t_e)
+        pe_mask = jnp.where(can_try, dres.pe_mask, pe_mask)
+        n_free = jnp.where(can_try, dres.n_free, n_free)
+        t_begin = jnp.where(can_try, dres.t_begin, t_begin)
+        t_end = jnp.where(can_try, dres.t_end, t_end)
+        # the displacement transaction already wrote r to the timeline
+        need_add = ~can_try
+        free_park = state.park_seq == jnp.int32(T_INF)
+        parks = ((bf != BF_NONE) & (t_s > req.t_r)
+                 & jnp.any(free_park))
+    else:
+        parks = jnp.asarray(False)
 
     def commit(s: SchedulerState) -> SchedulerState:
         new_tl, ovf, n_keep = tl_lib.update(
-            s.tl, res.t_s, res.t_e, res.pe_mask, is_add=True,
+            s.tl, jnp.where(need_add, t_s, 0),
+            jnp.where(need_add, t_e, 1),
+            jnp.where(need_add, pe_mask, jnp.uint32(0)), is_add=True,
             with_count=True)
+        ovf = ovf & need_add
         hw_pending = s.hw_pending
         if auto_release:
             free = s.pend_te == T_INF
             slot = jnp.argmax(free)
             n_used = jnp.sum(~free).astype(jnp.int32) + 1
-            hw_pending = jnp.maximum(hw_pending, n_used)
-            ovf = ovf | ~jnp.any(free)
+            to_pend = ~parks
+            hw_pending = jnp.maximum(
+                hw_pending, jnp.where(to_pend, n_used, 0))
+            ovf = ovf | (to_pend & ~jnp.any(free))
+            wr = to_pend & ~ovf
             pend_ts = jnp.where(
-                ovf, s.pend_ts, s.pend_ts.at[slot].set(res.t_s))
+                wr, s.pend_ts.at[slot].set(t_s), s.pend_ts)
             pend_te = jnp.where(
-                ovf, s.pend_te, s.pend_te.at[slot].set(res.t_e))
+                wr, s.pend_te.at[slot].set(t_e), s.pend_te)
             pend_mask = jnp.where(
-                ovf, s.pend_mask, s.pend_mask.at[slot].set(res.pe_mask))
+                wr, s.pend_mask.at[slot].set(pe_mask), s.pend_mask)
         else:
             pend_ts, pend_te, pend_mask = \
                 s.pend_ts, s.pend_te, s.pend_mask
-        # an overflowing update returns a truncated timeline — keep the
-        # pre-commit state so the retry starts from consistent data.
-        return s._replace(
+        out = s._replace(
+            # an overflowing update returns a truncated timeline —
+            # keep the pre-commit state so the retry starts from
+            # consistent data.
             tl=_where_tree(ovf, s.tl, new_tl),
             pend_ts=pend_ts, pend_te=pend_te, pend_mask=pend_mask,
             n_accepted=s.n_accepted
@@ -370,46 +678,83 @@ def _admit_impl(state: SchedulerState, req: RequestBatch,
             hw_records=jnp.maximum(s.hw_records, n_keep),
             hw_pending=hw_pending,
         )
+        if backfilling:
+            pslot = jnp.argmax(free_park)
+            live = jnp.sum(~free_park).astype(jnp.int32) + 1
+            wr = parks & ~ovf
+            out = out._replace(
+                park_ts=jnp.where(
+                    wr, out.park_ts.at[pslot].set(t_s), out.park_ts),
+                park_te=jnp.where(
+                    wr, out.park_te.at[pslot].set(t_e), out.park_te),
+                park_mask=jnp.where(
+                    wr, out.park_mask.at[pslot].set(pe_mask),
+                    out.park_mask),
+                park_tr=jnp.where(
+                    wr, out.park_tr.at[pslot].set(req.t_r),
+                    out.park_tr),
+                park_tdl=jnp.where(
+                    wr, out.park_tdl.at[pslot].set(req.t_dl),
+                    out.park_tdl),
+                park_npe=jnp.where(
+                    wr, out.park_npe.at[pslot].set(req.n_pe),
+                    out.park_npe),
+                park_seq=jnp.where(
+                    wr, out.park_seq.at[pslot].set(out.park_next_seq),
+                    out.park_seq),
+                park_next_seq=out.park_next_seq
+                + jnp.where(wr, 1, 0).astype(jnp.int32),
+                n_parked=out.n_parked
+                + jnp.where(wr, 1, 0).astype(jnp.int32),
+                hw_parked=jnp.maximum(
+                    out.hw_parked, jnp.where(wr, live, 0)),
+            )
+        return out
 
     state = jax.lax.cond(found, commit, lambda s: s, state)
     accepted = found & ~state.overflow
     return state, Decision(
         accepted=accepted,
-        t_s=jnp.where(accepted, res.t_s, jnp.int32(-1)),
-        t_e=jnp.where(accepted, res.t_e, jnp.int32(-1)),
-        pe_mask=jnp.where(accepted, res.pe_mask, jnp.uint32(0)),
-        n_free=res.n_free,
-        t_begin=res.t_begin,
-        t_end=res.t_end,
+        t_s=jnp.where(accepted, t_s, jnp.int32(-1)),
+        t_e=jnp.where(accepted, t_e, jnp.int32(-1)),
+        pe_mask=jnp.where(accepted, pe_mask, jnp.uint32(0)),
+        n_free=n_free,
+        t_begin=t_begin,
+        t_end=t_end,
+        parked=accepted & parks,
     )
 
 
 @functools.partial(
     jax.jit, static_argnames=("n_pe", "auto_release", "use_kernel"))
 def admit(state: SchedulerState, req: RequestBatch,
-          policy_id: jax.Array, *, n_pe: int,
+          policy_id: jax.Array, backfill_id=BF_NONE, *, n_pe: int,
           auto_release: bool = True,
           use_kernel: bool = False) -> Tuple[SchedulerState, Decision]:
-    """One fused admission step: release due -> search -> commit.
+    """One fused admission step: release due -> retry -> search -> commit.
 
     ``auto_release=False`` skips the pending-release bookkeeping for
     callers (e.g. the fleet) that manage completions themselves.
+    ``backfill_id`` is the traced deferral mode (none/easy/
+    conservative); it only matters when the state carries a deferral
+    queue (``park_capacity > 0``).
     """
-    return _admit_impl(state, req, policy_id, n_pe=n_pe,
+    return _admit_impl(state, req, policy_id, backfill_id, n_pe=n_pe,
                        auto_release=auto_release, use_kernel=use_kernel)
 
 
 @functools.partial(
     jax.jit, static_argnames=("n_pe", "auto_release", "use_kernel"))
 def admit_stream(state: SchedulerState, batch: RequestBatch,
-                 policy_id: jax.Array, *, n_pe: int,
-                 auto_release: bool = True,
+                 policy_id: jax.Array, backfill_id=BF_NONE, *,
+                 n_pe: int, auto_release: bool = True,
                  use_kernel: bool = False
                  ) -> Tuple[SchedulerState, Decision]:
     """Scan a whole arrival-ordered request stream on-device."""
+    bf = jnp.asarray(backfill_id, jnp.int32)
 
     def step(s, r):
-        return _admit_impl(s, r, policy_id, n_pe=n_pe,
+        return _admit_impl(s, r, policy_id, bf, n_pe=n_pe,
                            auto_release=auto_release,
                            use_kernel=use_kernel)
 
@@ -452,7 +797,8 @@ def _grown(state: SchedulerState, run: SchedulerState) -> SchedulerState:
 
 
 def admit_stream_grow(state: SchedulerState, batch: RequestBatch,
-                      policy, *, n_pe: int, auto_release: bool = True,
+                      policy, *, n_pe: int, backfill=BF_NONE,
+                      auto_release: bool = True,
                       use_kernel: bool = False,
                       max_growths: int = MAX_DOUBLINGS
                       ) -> Tuple[SchedulerState, Decision]:
@@ -470,9 +816,10 @@ def admit_stream_grow(state: SchedulerState, batch: RequestBatch,
     pid = jnp.int32(
         policy if isinstance(policy, (int, np.integer))
         else policy_index(policy))
+    bfid = as_backfill_id(backfill)
     start = state
     for attempt in range(max_growths + 1):
-        out, dec = admit_stream(start, batch, pid, n_pe=n_pe,
+        out, dec = admit_stream(start, batch, pid, bfid, n_pe=n_pe,
                                 auto_release=auto_release,
                                 use_kernel=use_kernel)
         if not bool(out.overflow):
@@ -509,15 +856,16 @@ def admit_stream_auto(state: SchedulerState, batch: RequestBatch,
 
 
 def admit_one(state: SchedulerState, req: ARRequest, policy, *,
-              n_pe: int, auto_release: bool = True,
+              n_pe: int, backfill=BF_NONE, auto_release: bool = True,
               use_kernel: bool = False
               ) -> Tuple[SchedulerState, Optional[Allocation]]:
     """Single fused admission with growth retry; host-typed result."""
     pid = jnp.int32(policy_index(policy))
+    bfid = as_backfill_id(backfill)
     start = state
     for attempt in range(MAX_DOUBLINGS + 1):
-        out, dec = admit(start, request_struct(req), pid, n_pe=n_pe,
-                         auto_release=auto_release,
+        out, dec = admit(start, request_struct(req), pid, bfid,
+                         n_pe=n_pe, auto_release=auto_release,
                          use_kernel=use_kernel)
         if not bool(out.overflow):
             return out, decision_to_allocation(dec)
@@ -576,6 +924,13 @@ def cancel_step(state: SchedulerState, t_s: jax.Array, t_e: jax.Array,
     match = (state.pend_ts == t_s) & (state.pend_te == t_e) & \
         jnp.all(state.pend_mask == mask[None, :], axis=1)
     found = jnp.any(match)
+    if state.park_capacity:
+        # a parked (deferral-queue) reservation is cancellable too
+        pmatch = (state.park_ts == t_s) & (state.park_te == t_e) & \
+            jnp.all(state.park_mask == mask[None, :], axis=1) & \
+            (state.park_seq < T_INF)
+        pfound = jnp.any(pmatch)
+        found = found | pfound
     ok = found if require_pending else jnp.asarray(True)
     ok = ok & ~state.overflow
     new_tl, ovf, n_keep = tl_lib.update(
@@ -583,7 +938,7 @@ def cancel_step(state: SchedulerState, t_s: jax.Array, t_e: jax.Array,
     ovf = ovf & ok
     do = ok & ~ovf
     slot = jnp.argmax(match)
-    clear = found & do
+    clear = jnp.any(match) & do
     cleared_ts = state.pend_ts.at[slot].set(T_INF)
     cleared_te = state.pend_te.at[slot].set(T_INF)
     cleared_mask = state.pend_mask.at[slot].set(jnp.uint32(0))
@@ -596,6 +951,24 @@ def cancel_step(state: SchedulerState, t_s: jax.Array, t_e: jax.Array,
         hw_records=jnp.maximum(state.hw_records,
                                jnp.where(ok, n_keep, 0)),
     )
+    if state.park_capacity:
+        pslot = jnp.argmax(pmatch)
+        pclear = pfound & do
+        out = out._replace(
+            park_ts=jnp.where(
+                pclear, out.park_ts.at[pslot].set(T_INF), out.park_ts),
+            park_te=jnp.where(
+                pclear, out.park_te.at[pslot].set(T_INF), out.park_te),
+            park_mask=jnp.where(
+                pclear, out.park_mask.at[pslot].set(jnp.uint32(0)),
+                out.park_mask),
+            park_seq=jnp.where(
+                pclear, out.park_seq.at[pslot].set(T_INF),
+                out.park_seq),
+            # a successful withdrawal frees future capacity: arm the
+            # EASY retry-on-release sweep for the next admit step
+            park_retry=out.park_retry | do,
+        )
     return out, do
 
 
@@ -621,6 +994,32 @@ def cancel_one(state: SchedulerState, t_s: int, t_e: int,
 # ---------------------------------------------------------------------------
 # host-side decision unpacking
 # ---------------------------------------------------------------------------
+
+
+def parked_entries(state: SchedulerState) -> List[dict]:
+    """Host view of the deferral queue in FCFS order.
+
+    One dict per live entry: the reservation mark (``t_s``/``t_e``/
+    ``pe_ids``), the request window it can still be re-placed in
+    (``t_r``/``t_dl``/``n_pe``) and its arrival sequence number.  The
+    first entry is the head of queue (protected under EASY).
+    """
+    seq = np.asarray(state.park_seq)
+    ts = np.asarray(state.park_ts)
+    te = np.asarray(state.park_te)
+    tr = np.asarray(state.park_tr)
+    tdl = np.asarray(state.park_tdl)
+    npe = np.asarray(state.park_npe)
+    masks = np.asarray(state.park_mask)
+    out = []
+    for i in np.argsort(seq, kind="stable"):
+        if seq[i] >= T_INF:
+            continue
+        out.append(dict(
+            seq=int(seq[i]), t_s=int(ts[i]), t_e=int(te[i]),
+            t_r=int(tr[i]), t_dl=int(tdl[i]), n_pe=int(npe[i]),
+            pe_ids=mask32_to_ids(masks[i])))
+    return out
 
 
 def mask32_to_ids(mask32: np.ndarray) -> Tuple[int, ...]:

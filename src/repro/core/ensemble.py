@@ -34,9 +34,11 @@ from repro.core.timeline import SchedulerState
 
 
 def init_ensemble(n_ensemble: int, capacity: int, n_pe: int,
-                  pending_capacity: int = 256) -> SchedulerState:
+                  pending_capacity: int = 256,
+                  park_capacity: int = 0) -> SchedulerState:
     """E fresh all-free lanes as one stacked state pytree."""
-    one = tl_lib.init_state(capacity, n_pe, pending_capacity)
+    one = tl_lib.init_state(capacity, n_pe, pending_capacity,
+                            park_capacity)
     return jax.tree_util.tree_map(
         lambda x: jnp.broadcast_to(x, (n_ensemble,) + x.shape), one)
 
@@ -75,33 +77,51 @@ def policy_ids(policies) -> jax.Array:
          for p in policies], jnp.int32)
 
 
+def backfill_ids(modes, n_ensemble: int) -> jax.Array:
+    """int32[E] backfill-mode ids from one mode or one per lane."""
+    from repro.core.types import backfill_index
+
+    if modes is None:
+        return jnp.zeros((n_ensemble,), jnp.int32)
+    if isinstance(modes, jax.Array):
+        return modes
+    if isinstance(modes, (str, int, np.integer)) or not hasattr(
+            modes, "__len__"):
+        return jnp.full((n_ensemble,), backfill_index(modes),
+                        jnp.int32)
+    return jnp.asarray([backfill_index(m) for m in modes], jnp.int32)
+
+
 @functools.partial(
     jax.jit, static_argnames=("n_pe", "auto_release", "use_kernel"))
 def admit_ensemble(states: SchedulerState, reqs: RequestBatch,
-                   pids: jax.Array, *, n_pe: int,
-                   auto_release: bool = True,
+                   pids: jax.Array, bids: jax.Array = None, *,
+                   n_pe: int, auto_release: bool = True,
                    use_kernel: bool = False
                    ) -> Tuple[SchedulerState, Decision]:
     """One fused admission step on every lane (`vmap` of ``admit``).
 
     ``reqs`` carries one request per lane (leading axis E); ``pids``
     is ``int32[E]`` so every lane can run a different policy without
-    recompilation.
+    recompilation, and ``bids`` (``int32[E]``, optional) a per-lane
+    backfill mode the same way.
     """
+    if bids is None:
+        bids = jnp.zeros_like(pids)
 
-    def one(s, r, p):
-        return batch_lib.admit(s, r, p, n_pe=n_pe,
+    def one(s, r, p, b):
+        return batch_lib.admit(s, r, p, b, n_pe=n_pe,
                                auto_release=auto_release,
                                use_kernel=use_kernel)
 
-    return jax.vmap(one)(states, reqs, pids)
+    return jax.vmap(one)(states, reqs, pids, bids)
 
 
 @functools.partial(
     jax.jit, static_argnames=("n_pe", "auto_release", "use_kernel"))
 def admit_stream_ensemble(states: SchedulerState, batches: RequestBatch,
-                          pids: jax.Array, *, n_pe: int,
-                          auto_release: bool = True,
+                          pids: jax.Array, bids: jax.Array = None, *,
+                          n_pe: int, auto_release: bool = True,
                           use_kernel: bool = False
                           ) -> Tuple[SchedulerState, Decision]:
     """Scan a per-lane request stream through every lane in lockstep.
@@ -110,14 +130,18 @@ def admit_stream_ensemble(states: SchedulerState, batches: RequestBatch,
     streams, padded to a common length with never-feasible requests —
     see :func:`repro.core.batch.pad_streams`).  Returns the stacked
     states and ``[E, N]`` decisions of ``vmap(admit_stream)``.
+    ``bids`` optionally runs a different backfill mode per lane (the
+    Section-6 policy × backfill grid is one such dispatch).
     """
+    if bids is None:
+        bids = jnp.zeros_like(pids)
 
-    def one(s, b, p):
-        return batch_lib.admit_stream(s, b, p, n_pe=n_pe,
+    def one(s, b, p, bf):
+        return batch_lib.admit_stream(s, b, p, bf, n_pe=n_pe,
                                       auto_release=auto_release,
                                       use_kernel=use_kernel)
 
-    return jax.vmap(one)(states, batches, pids)
+    return jax.vmap(one)(states, batches, pids, bids)
 
 
 @functools.partial(jax.jit, static_argnames=("n_pe", "use_kernel"))
@@ -181,7 +205,8 @@ def release_until_ensemble(states: SchedulerState, t_now: int, *,
 
 def admit_stream_ensemble_auto(
     states: SchedulerState, batches: RequestBatch, policies, *,
-    n_pe: int, auto_release: bool = True, use_kernel: bool = False,
+    n_pe: int, backfills=None, auto_release: bool = True,
+    use_kernel: bool = False,
     max_growths: int = batch_lib.MAX_DOUBLINGS,
 ) -> Tuple[SchedulerState, Decision]:
     """Run :func:`admit_stream_ensemble`, growing on any lane overflow.
@@ -196,10 +221,11 @@ def admit_stream_ensemble_auto(
     """
     pids = policies if isinstance(policies, jax.Array) \
         else policy_ids(policies)
+    bids = backfill_ids(backfills, pids.shape[0])
     start = states
     for attempt in range(max_growths + 1):
         out, dec = admit_stream_ensemble(
-            start, batches, pids, n_pe=n_pe,
+            start, batches, pids, bids, n_pe=n_pe,
             auto_release=auto_release, use_kernel=use_kernel)
         if not bool(jnp.any(out.overflow)):
             return out, dec

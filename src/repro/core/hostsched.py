@@ -16,6 +16,7 @@ terminator record).
 """
 from __future__ import annotations
 
+import heapq
 from typing import Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -23,6 +24,7 @@ import numpy as np
 from repro.core.types import (
     Allocation,
     ARRequest,
+    BackfillMode,
     Policy,
     Rectangle,
     T_INF,
@@ -324,3 +326,208 @@ class HostScheduler:
     def records(self) -> List[Tuple[int, frozenset]]:
         return [(int(t), frozenset(ids_from_mask(row)))
                 for t, row in zip(self.times, self.occ)]
+
+
+class BackfillOracle:
+    """Host event-loop oracle for the backfilling admission modes.
+
+    Used only by tests (DESIGN.md §6): a literal Python re-statement of
+    the device pipeline — promote due parked reservations, release due
+    completions, EASY retry sweep, search, commit-or-park, EASY
+    displacement transaction — over a :class:`HostScheduler` timeline.
+    The differential suites assert the device ``admit_stream`` is
+    bit-identical to :meth:`admit` called per request, and the
+    ``moves`` log carries every reservation move for the safety-
+    invariant property tests (conservative never moves anything; EASY
+    never delays the head of queue or a committed start).
+    """
+
+    def __init__(self, n_pe: int, policy: Policy, mode,
+                 park_capacity: int = 8):
+        self.sched = HostScheduler(n_pe)
+        self.n_pe = n_pe
+        self.policy = policy
+        self.mode = BackfillMode(mode)
+        self.Q = park_capacity
+        self.parked: List[dict] = []      # FCFS by ['seq']
+        self.completions: List[tuple] = []  # heap (t_e, seq, t_s, ids)
+        self._next_seq = 0
+        self._heap_seq = 0
+        self.n_parked = self.n_promoted = self.n_moved = 0
+        self.retry_flag = False   # armed by cancel, consumed per admit
+        # (seq, old_t_s, new_t_s, was_head, event) per reservation move
+        self.moves: List[tuple] = []
+
+    # -- helpers -------------------------------------------------------
+    def _heap_push(self, t_s: int, t_e: int, ids) -> None:
+        heapq.heappush(self.completions,
+                       (t_e, self._heap_seq, t_s, tuple(ids)))
+        self._heap_seq += 1
+
+    def _promote_due(self, t_now: int) -> None:
+        self.parked.sort(key=lambda p: p["seq"])
+        still = []
+        for p in self.parked:
+            if p["t_s"] <= t_now:
+                self._heap_push(p["t_s"], p["t_e"], p["pe_ids"])
+                self.n_promoted += 1
+            else:
+                still.append(p)
+        self.parked = still
+
+    def _release_due(self, t_now: int) -> None:
+        while self.completions and self.completions[0][0] <= t_now:
+            t_e, _, t_s, ids = heapq.heappop(self.completions)
+            self.sched.delete_allocation(t_s, t_e, list(ids))
+
+    def _replacement(self, entry: dict, t_now: int,
+                     policy: Policy) -> Optional[Allocation]:
+        """The clamped-window re-placement search of a parked entry."""
+        req = ARRequest(
+            t_a=t_now, t_r=max(entry["t_r"], t_now),
+            t_du=entry["t_e"] - entry["t_s"], t_dl=entry["t_dl"],
+            n_pe=entry["n_pe"])
+        return self.sched.find_allocation(req, policy, t_now=t_now)
+
+    def _retry_parked(self, t_now: int) -> None:
+        """EASY retry-on-release sweep: pull reservations earlier
+        (never later), FCFS; runs once after a cancel armed the
+        latch (only a cancel frees *future* capacity)."""
+        for p in sorted(self.parked, key=lambda q: q["seq"]):
+            self.sched.delete_allocation(p["t_s"], p["t_e"],
+                                         list(p["pe_ids"]))
+            alloc = self._replacement(p, t_now, Policy.FF)
+            if alloc is not None and alloc.t_s < p["t_s"]:
+                self.moves.append((p["seq"], p["t_s"], alloc.t_s,
+                                   self._is_head(p), "retry"))
+                p["t_s"], p["t_e"] = alloc.t_s, alloc.t_e
+                p["pe_ids"] = alloc.pe_ids
+                self.n_moved += 1
+            self.sched.add_allocation(p["t_s"], p["t_e"],
+                                      list(p["pe_ids"]))
+
+    def _is_head(self, entry: dict) -> bool:
+        return bool(self.parked) and \
+            entry["seq"] == min(p["seq"] for p in self.parked)
+
+    def _commit_or_park(self, req: ARRequest, t_s: int, t_e: int,
+                        pe_ids) -> bool:
+        """Book an accepted reservation; returns whether it parked."""
+        parks = (self.mode != BackfillMode.NONE
+                 and t_s > req.t_r and len(self.parked) < self.Q)
+        if parks:
+            self.parked.append(dict(
+                seq=self._next_seq, t_s=t_s, t_e=t_e, t_r=req.t_r,
+                t_dl=req.t_dl, n_pe=req.n_pe, pe_ids=tuple(pe_ids)))
+            self._next_seq += 1
+            self.n_parked += 1
+        else:
+            self._heap_push(t_s, t_e, pe_ids)
+        return parks
+
+    def _displace(self, req: ARRequest) -> Optional[Allocation]:
+        """The EASY transaction: move non-head reservations for req."""
+        snap = (self.sched.times.copy(), self.sched.occ.copy(),
+                [dict(p) for p in self.parked])
+        head_seq = min(p["seq"] for p in self.parked)
+        nonhead = sorted((p for p in self.parked
+                          if p["seq"] != head_seq),
+                         key=lambda p: p["seq"])
+        for p in nonhead:
+            self.sched.delete_allocation(p["t_s"], p["t_e"],
+                                         list(p["pe_ids"]))
+        alloc = self.sched.find_allocation(req, self.policy,
+                                           t_now=req.t_a)
+        moves = []
+        ok = alloc is not None
+        if ok:
+            self.sched.add_allocation(alloc.t_s, alloc.t_e,
+                                      list(alloc.pe_ids))
+            for p in nonhead:
+                re = self._replacement(p, req.t_a, Policy.FF)
+                if re is None:
+                    ok = False
+                    break
+                if re.t_s != p["t_s"]:
+                    moves.append((p["seq"], p["t_s"], re.t_s, False,
+                                  "displace"))
+                p["t_s"], p["t_e"] = re.t_s, re.t_e
+                p["pe_ids"] = re.pe_ids
+                self.sched.add_allocation(re.t_s, re.t_e,
+                                          list(re.pe_ids))
+        if not ok:
+            self.sched.times, self.sched.occ, self.parked = \
+                snap[0], snap[1], snap[2]
+            return None
+        self.moves.extend(moves)
+        self.n_moved += len(moves)
+        return alloc
+
+    # -- one admission step (mirrors the device _admit_impl) ----------
+    def admit(self, req: ARRequest) -> Tuple[bool, int, bool]:
+        """Decide one arrival; returns ``(accepted, t_s, parked)``."""
+        t_now = req.t_a
+        self._promote_due(t_now)
+        self._release_due(t_now)
+        if self.mode == BackfillMode.EASY and self.parked \
+                and self.retry_flag:
+            self._retry_parked(t_now)
+        self.retry_flag = False
+        alloc = self.sched.find_allocation(req, self.policy,
+                                           t_now=t_now)
+        if alloc is None and self.mode == BackfillMode.EASY \
+                and len(self.parked) >= 2:
+            # a lone head cannot be displaced around: the transaction
+            # would re-run the identical failed search (device parity)
+            alloc = self._displace(req)
+            if alloc is None:
+                return False, -1, False
+            parked = self._commit_or_park(req, alloc.t_s, alloc.t_e,
+                                          alloc.pe_ids)
+            return True, alloc.t_s, parked
+        if alloc is None:
+            return False, -1, False
+        self.sched.add_allocation(alloc.t_s, alloc.t_e,
+                                  list(alloc.pe_ids))
+        parked = self._commit_or_park(req, alloc.t_s, alloc.t_e,
+                                      alloc.pe_ids)
+        return True, alloc.t_s, parked
+
+    def run(self, jobs) -> List[Tuple[bool, int]]:
+        """Admit an arrival-ordered stream; per-job (accepted, t_s)."""
+        return [self.admit(r)[:2] for r in jobs]
+
+    def tick(self, t_now: int) -> None:
+        """Advance time only: promote and release everything due."""
+        self._promote_due(t_now)
+        self._release_due(t_now)
+
+    def cancel(self, t_s: int, t_e: int, pe_ids) -> bool:
+        """Withdraw a parked or committed reservation; arms the
+        EASY retry-on-release sweep (mirrors ``cancel_step``)."""
+        key = (t_s, t_e, tuple(pe_ids))
+        for p in self.parked:
+            if (p["t_s"], p["t_e"], tuple(p["pe_ids"])) == key:
+                self.parked.remove(p)
+                break
+        else:
+            match = [c for c in self.completions
+                     if (c[2], c[0], c[3]) == key]
+            if not match:
+                return False
+            self.completions.remove(match[0])
+            heapq.heapify(self.completions)
+        self.sched.delete_allocation(t_s, t_e, list(pe_ids))
+        self.retry_flag = True
+        return True
+
+    def pending(self) -> List[dict]:
+        """FCFS deferral-queue view, same layout as the device
+        :func:`repro.core.batch.parked_entries`."""
+        return [dict(seq=p["seq"], t_s=p["t_s"], t_e=p["t_e"],
+                     t_r=p["t_r"], t_dl=p["t_dl"], n_pe=p["n_pe"],
+                     pe_ids=tuple(p["pe_ids"]))
+                for p in sorted(self.parked, key=lambda q: q["seq"])]
+
+    def records(self):
+        return self.sched.records()

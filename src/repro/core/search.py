@@ -160,3 +160,29 @@ def search(
 
 find_allocation = functools.partial(
     jax.jit, static_argnames=("n_pe", "use_kernel"))(search)
+
+
+def replacement_search(
+    tl: Timeline,
+    t_r: jax.Array,
+    t_du: jax.Array,
+    t_dl: jax.Array,
+    n_req: jax.Array,
+    policy_id: jax.Array,
+    t_now: jax.Array,
+    *,
+    n_pe: int,
+    use_kernel: bool = False,
+) -> SearchResult:
+    """The backfill feasibility check: re-place a parked reservation.
+
+    Identical to :func:`search` except the window is clamped to what is
+    still reachable — candidates start at ``max(t_r, t_now)`` — so a
+    deferral-queue entry can only be re-placed at a start it could
+    really make.  Because a live parked reservation always satisfies
+    ``t_now < t_s <= t_dl - t_du``, the clamped window is never empty.
+    Used by the retry-on-release sweep (earliest-start re-placement)
+    and the EASY displacement transaction (:mod:`repro.core.batch`).
+    """
+    return search(tl, jnp.maximum(t_r, t_now), t_du, t_dl, n_req,
+                  policy_id, t_now, n_pe=n_pe, use_kernel=use_kernel)

@@ -80,6 +80,17 @@ class SchedulerState(NamedTuple):
     wrappers read them to grow once to the max needed capacity —
     across a whole ensemble when the leading axis is vmapped
     (DESIGN.md §4) — instead of doubling blindly per retry.
+
+    The ``park_*`` arrays are the bounded backfilling deferral queue
+    (DESIGN.md §6): accepted-but-delayed requests hold their
+    reservation mark here (start / end / PE mask occupy the timeline
+    like any committed reservation) together with the request window
+    needed to re-place them (``park_tr`` / ``park_tdl`` / ``park_npe``)
+    and an FCFS sequence number (``park_seq``; ``T_INF`` marks a free
+    slot, the minimum live value is the head of queue).  The queue
+    capacity ``Q`` is a *static* shape: ``Q == 0`` (the default)
+    compiles every backfill branch away, so pre-backfill callers keep
+    their exact graphs.
     """
 
     tl: Timeline
@@ -91,15 +102,40 @@ class SchedulerState(NamedTuple):
     overflow: jax.Array    # bool scalar
     hw_records: jax.Array  # int32 scalar: max records any update needed
     hw_pending: jax.Array  # int32 scalar: max pending slots needed
+    park_ts: jax.Array    # int32[Q] parked reservation starts
+    park_te: jax.Array    # int32[Q] parked reservation ends
+    park_mask: jax.Array  # uint32[Q, W] parked reserved-PE bitmasks
+    park_tr: jax.Array    # int32[Q] ready times (re-place window lo)
+    park_tdl: jax.Array   # int32[Q] deadlines (re-place window hi)
+    park_npe: jax.Array   # int32[Q] PEs requested
+    park_seq: jax.Array   # int32[Q] FCFS sequence; T_INF = free slot
+    park_retry: jax.Array  # bool scalar: a cancel freed future
+    #                        capacity; the next EASY admit step runs
+    #                        the retry-on-release sweep once
+    park_next_seq: jax.Array  # int32 scalar: next sequence to assign
+    n_parked: jax.Array    # int32 scalar: lifetime parks
+    n_promoted: jax.Array  # int32 scalar: lifetime promotions
+    n_moved: jax.Array     # int32 scalar: lifetime reservation moves
+    hw_parked: jax.Array   # int32 scalar: max live queue entries
 
     @property
     def pending_capacity(self) -> int:
         return self.pend_te.shape[0]
 
+    @property
+    def park_capacity(self) -> int:
+        return self.park_seq.shape[0]
+
 
 def init_state(capacity: int, n_pe: int,
-               pending_capacity: int = 256) -> SchedulerState:
-    """Fresh all-free scheduler state."""
+               pending_capacity: int = 256,
+               park_capacity: int = 0) -> SchedulerState:
+    """Fresh all-free scheduler state.
+
+    ``park_capacity`` sizes the backfilling deferral queue; the default
+    0 statically disables every backfill code path (identical compiled
+    graphs to the pre-backfill core).
+    """
     return SchedulerState(
         tl=empty(capacity, n_pe),
         pend_ts=jnp.full((pending_capacity,), T_INF, jnp.int32),
@@ -111,6 +147,20 @@ def init_state(capacity: int, n_pe: int,
         overflow=jnp.asarray(False),
         hw_records=jnp.int32(0),
         hw_pending=jnp.int32(0),
+        park_ts=jnp.full((park_capacity,), T_INF, jnp.int32),
+        park_te=jnp.full((park_capacity,), T_INF, jnp.int32),
+        park_mask=jnp.zeros((park_capacity, n_words(n_pe)),
+                            jnp.uint32),
+        park_tr=jnp.zeros((park_capacity,), jnp.int32),
+        park_tdl=jnp.zeros((park_capacity,), jnp.int32),
+        park_npe=jnp.zeros((park_capacity,), jnp.int32),
+        park_seq=jnp.full((park_capacity,), T_INF, jnp.int32),
+        park_retry=jnp.asarray(False),
+        park_next_seq=jnp.int32(0),
+        n_parked=jnp.int32(0),
+        n_promoted=jnp.int32(0),
+        n_moved=jnp.int32(0),
+        hw_parked=jnp.int32(0),
     )
 
 

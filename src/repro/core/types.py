@@ -31,6 +31,52 @@ class Policy(str, enum.Enum):
 ALL_POLICIES: Tuple[Policy, ...] = tuple(Policy)
 
 
+class BackfillMode(str, enum.Enum):
+    """Admission-order relaxation of the deferral queue (DESIGN.md §6).
+
+    ``NONE`` is the paper's strict arrival-order admission: every
+    accepted request commits its start immediately and immutably.
+    Under the backfilling modes an accepted request whose chosen start
+    is *delayed* past its ready time (``t_s > t_r``) parks in a bounded
+    FCFS pending queue holding a reservation mark instead:
+
+    ``CONSERVATIVE``
+        every parked request holds an immovable reservation; later
+        arrivals may only backfill into holes that delay nobody —
+        decision-identical to ``NONE`` (the paper's admission *is*
+        conservative backfilling), but the queue is observable and
+        promotion/commit timing is explicit.
+    ``EASY``
+        only the head-of-queue reservation binds.  A retry sweep may
+        pull parked reservations *earlier* (never later), and an
+        otherwise-rejected arrival may displace non-head parked
+        reservations inside their deadline windows (transactionally:
+        it is admitted only if every displaced job still fits).
+    """
+
+    NONE = "none"
+    EASY = "easy"
+    CONSERVATIVE = "conservative"
+
+
+BACKFILL_MODES: Tuple[BackfillMode, ...] = tuple(BackfillMode)
+BACKFILL_IDS = {m: i for i, m in enumerate(BACKFILL_MODES)}
+
+
+def backfill_index(mode) -> int:
+    """Any mode spelling -> its traced int32 id (none=0/easy/cons)."""
+    if isinstance(mode, str) and not isinstance(mode, BackfillMode):
+        mode = BackfillMode(mode)
+    if isinstance(mode, BackfillMode):
+        return BACKFILL_IDS[mode]
+    mode = int(mode)
+    if not 0 <= mode < len(BACKFILL_MODES):
+        raise ValueError(
+            f"backfill id {mode} out of range; valid ids are "
+            f"{dict((m.value, i) for m, i in BACKFILL_IDS.items())}")
+    return mode
+
+
 @dataclasses.dataclass(frozen=True)
 class ARRequest:
     """An advance-reservation request (paper Section 3).

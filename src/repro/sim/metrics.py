@@ -1,4 +1,11 @@
-"""Performance metrics of Section 6.1: acceptance rate and slowdown."""
+"""Performance metrics of Section 6.1: acceptance rate and slowdown.
+
+Includes the on-device grid reductions (:func:`grid_reductions`) and
+the NaN-safe aggregation helpers: a grid cell that accepts zero jobs
+has no slowdown (and an all-padding cell no utilization), so those
+cells carry ``NaN`` and every :class:`GridResult` reduction masks them
+instead of dividing by zero or tripping numpy's all-NaN warnings.
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -6,6 +13,15 @@ import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
+
+
+def nanmean_safe(a) -> float:
+    """Mean over finite entries; NaN (no warning) when none are."""
+    a = np.asarray(a, dtype=float)
+    m = np.isfinite(a)
+    if not m.any():
+        return float("nan")
+    return float(a[m].mean())
 
 
 @dataclasses.dataclass
@@ -49,22 +65,28 @@ class SimResult:
 class GridResult:
     """Stacked metrics of one vmapped Section-6 sweep grid.
 
-    Every metric array is indexed ``[policy, load, seed, flexibility]``
-    — the cell order of :func:`repro.sim.sweep.simulate_grid`.
+    Every metric array is indexed ``[policy, backfill, load, seed,
+    flexibility]`` — the cell order of
+    :func:`repro.sim.sweep.simulate_grid`.  ``backfill_modes`` is the
+    grid's deferral-mode axis (``("none",)`` for the classic paper
+    matrix).  A cell that accepts no jobs carries ``NaN`` slowdown (an
+    all-padding cell ``NaN`` utilization); the reductions below mask
+    those cells.
     """
 
     policies: Tuple[str, ...]
     arrival_factors: Tuple[float, ...]
     seeds: Tuple[int, ...]
     flex_factors: Tuple[float, ...]
-    acceptance: np.ndarray        # float [P, L, S, F]
-    slowdown: np.ndarray          # float [P, L, S, F] (nan: none accepted)
-    utilization: np.ndarray       # float [P, L, S, F]
-    n_jobs: np.ndarray            # int   [P, L, S, F] valid jobs per cell
-    n_accepted: np.ndarray        # int   [P, L, S, F]
+    backfill_modes: Tuple[str, ...]
+    acceptance: np.ndarray        # float [P, B, L, S, F]
+    slowdown: np.ndarray          # float [P, B, L, S, F] (nan: empty)
+    utilization: np.ndarray       # float [P, B, L, S, F]
+    n_jobs: np.ndarray            # int   [P, B, L, S, F] valid jobs
+    n_accepted: np.ndarray        # int   [P, B, L, S, F]
     wall_seconds: float = 0.0     # one dispatch for the whole grid
     # per-cell (accepted, t_s) traces, populated on request only:
-    # decisions[p][l][s][f] is a list over that cell's (unpadded) jobs
+    # decisions[p][b][l][s][f] is a list over the cell's unpadded jobs
     decisions: Optional[list] = None
 
     @property
@@ -77,22 +99,80 @@ class GridResult:
 
     def policy_acceptance(self) -> Dict[str, float]:
         """Grid-mean acceptance rate per policy (paper Figs. 2/4/6)."""
-        return {p: float(np.nanmean(self.acceptance[i]))
+        return {p: nanmean_safe(self.acceptance[i])
                 for i, p in enumerate(self.policies)}
 
     def policy_slowdown(self) -> Dict[str, float]:
-        """Grid-mean slowdown per policy (paper Figs. 3/5/7)."""
-        return {p: float(np.nanmean(self.slowdown[i]))
+        """Grid-mean slowdown per policy (paper Figs. 3/5/7).
+
+        Empty cells (zero accepted jobs) are masked, not averaged.
+        """
+        return {p: nanmean_safe(self.slowdown[i])
                 for i, p in enumerate(self.policies)}
 
+    def mode_policy_acceptance(self) -> Dict[str, Dict[str, float]]:
+        """Per backfill mode, grid-mean acceptance per policy."""
+        return {m: {p: nanmean_safe(self.acceptance[i, b])
+                    for i, p in enumerate(self.policies)}
+                for b, m in enumerate(self.backfill_modes)}
+
+    def mode_policy_slowdown(self) -> Dict[str, Dict[str, float]]:
+        """Per backfill mode, grid-mean slowdown per policy."""
+        return {m: {p: nanmean_safe(self.slowdown[i, b])
+                    for i, p in enumerate(self.policies)}
+                for b, m in enumerate(self.backfill_modes)}
+
     def summary(self) -> str:
-        acc, sd = self.policy_acceptance(), self.policy_slowdown()
         lines = [f"{self.n_cells} cells in {self.wall_seconds:.2f}s "
                  f"({self.cells_per_sec:.1f} cells/s)"]
-        for p in self.policies:
-            lines.append(f"  {p:8s} accept={acc[p]:.3f} "
-                         f"slowdown={sd[p]:.3f}")
+        by_acc = self.mode_policy_acceptance()
+        by_sd = self.mode_policy_slowdown()
+        for m in self.backfill_modes:
+            head = f" [{m}]" if len(self.backfill_modes) > 1 else ""
+            for p in self.policies:
+                lines.append(
+                    f"  {p:8s}{head} accept={by_acc[m][p]:.3f} "
+                    f"slowdown={by_sd[m][p]:.3f}")
         return "\n".join(lines)
+
+
+def grid_reductions(dec, batch, valid: np.ndarray, n_pe: int):
+    """Per-cell metric reductions, computed on-device, synced once.
+
+    ``dec``/``batch`` are the stacked ``[C, N]`` decision/request
+    arrays of one grid dispatch, ``valid`` the padding mask.  Returns
+    host ``(n_accepted, n_valid, acceptance, slowdown, utilization)``
+    arrays of shape ``[C]``.  NaN-safe: a cell with zero accepted jobs
+    gets ``NaN`` slowdown, a cell with zero valid jobs ``NaN``
+    utilization — downstream reductions mask them
+    (:func:`nanmean_safe`) instead of dividing by zero.
+    """
+    import jax.numpy as jnp
+
+    v = jnp.asarray(valid)
+    acc = dec.accepted & v                             # [C, N]
+    n_acc = jnp.sum(acc, axis=1)
+    n_val = jnp.sum(v, axis=1)
+    t_du = batch.t_du.astype(jnp.float32)
+    wait = (dec.t_s - batch.t_r + batch.t_du).astype(jnp.float32)
+    slow = jnp.where(acc, wait / jnp.maximum(t_du, 1), 0.0)
+    slowdown = jnp.sum(slow, axis=1) / jnp.maximum(n_acc, 1)
+    slowdown = jnp.where(n_acc > 0, slowdown, jnp.nan)
+    # accumulate PE-seconds in f32: paper-scale cells (~1e11) overflow
+    # an int32 sum, and utilization is a ratio so 1e-7 relative error
+    # is immaterial
+    area = jnp.sum(jnp.where(
+        acc, (batch.n_pe * batch.t_du).astype(jnp.float32), 0.0),
+        axis=1)
+    t_a = jnp.where(v, batch.t_a, 0)
+    first = jnp.min(jnp.where(v, batch.t_a, jnp.int32(2**31 - 1)),
+                    axis=1)
+    span = jnp.maximum(jnp.max(t_a, axis=1), 1) - first + 1
+    util = area.astype(jnp.float32) / (n_pe * span.astype(jnp.float32))
+    util = jnp.where(n_val > 0, util, jnp.nan)
+    rate = n_acc / jnp.maximum(n_val, 1).astype(jnp.float32)
+    return (np.asarray(n_acc), np.asarray(n_val), np.asarray(rate),
+            np.asarray(slowdown), np.asarray(util))
 
 
 def mean_ci95(values: Sequence[float]) -> tuple:

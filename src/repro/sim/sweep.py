@@ -3,17 +3,20 @@
 The paper evaluates its seven policies by sequentially simulating a
 grid of job sizes, durations, loads and flexibilities.  With the
 functional core's ensemble axis (:mod:`repro.core.ensemble`) that grid
-— policies × loads × seeds × flexibilities — becomes *lanes of one
-vmapped scan*: every cell's request stream is materialised on the host
-(:mod:`repro.sim.workload`), padded to a common fixed shape, stacked,
-and offered to one ensemble :class:`repro.api.Session` (lanes =
-cells, one-shot mode) in a single jitted dispatch.  The acceptance /
-slowdown / utilization metrics are reduced on-device and returned
-stacked as a :class:`~repro.sim.metrics.GridResult`.
+— policies × backfill modes × loads × seeds × flexibilities — becomes
+*lanes of one vmapped scan*: every cell's request stream is
+materialised on the host (:mod:`repro.sim.workload`), padded to a
+common fixed shape, stacked, and offered to one ensemble
+:class:`repro.api.Session` (lanes = cells, one-shot mode) in a single
+jitted dispatch.  The backfill mode is *traced* per lane (DESIGN.md
+§6), so the 7 × {none, easy, conservative} matrix compiles once.  The
+acceptance / slowdown / utilization metrics are reduced on-device and
+returned stacked as a :class:`~repro.sim.metrics.GridResult`.
 
 The host event loop (:func:`repro.sim.simulator.simulate`) remains the
-oracle: ``cross_check=True`` asserts per-job decision identity for
-every cell, exactly as ``simulate_batched`` does for a single stream.
+oracle for ``backfill="none"`` cells, and the host backfilling oracle
+(:class:`repro.core.hostsched.BackfillOracle`) for the others:
+``cross_check=True`` asserts per-job decision identity for every cell.
 """
 from __future__ import annotations
 
@@ -26,35 +29,39 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.api import ReservationService, ServiceConfig
-from repro.core import batch as batch_lib
-from repro.core.batch import RequestBatch, pad_streams
+from repro.core.batch import pad_streams
 from repro.core.policies import policy_index
 from repro.core.types import ALL_POLICIES, Policy
-from repro.sim.metrics import GridResult
+from repro.sim.metrics import GridResult, grid_reductions
 from repro.sim.workload import WorkloadParams, generate_filtered
 
 
 @dataclasses.dataclass(frozen=True)
 class GridSpec:
-    """The experiment matrix: policies × loads × seeds × flexibilities.
+    """The experiment matrix: policies × backfill × loads × seeds × flex.
 
     ``arrival_factors`` rescale arrivals (higher = heavier load, paper
     Figs. 4-5); ``flex_factors`` set both the AR-time and deadline
-    factor (Figs. 6-7).  ``base`` supplies every other workload knob.
+    factor (Figs. 6-7); ``backfill_modes`` adds the deferral-queue
+    scenario axis (DESIGN.md §6) with ``park_capacity`` queue slots per
+    lane.  ``base`` supplies every other workload knob.
     """
 
     policies: Tuple[Policy, ...] = ALL_POLICIES
     arrival_factors: Tuple[float, ...] = (0.75, 1.0, 1.25)
     seeds: Tuple[int, ...] = (0, 1, 2)
     flex_factors: Tuple[float, ...] = (3.0,)
+    backfill_modes: Tuple[str, ...] = ("none",)
     base: WorkloadParams = WorkloadParams()
     n_pe: int = 64
     n_jobs: int = 200
+    park_capacity: int = 8
 
     @property
-    def shape(self) -> Tuple[int, int, int, int]:
-        return (len(self.policies), len(self.arrival_factors),
-                len(self.seeds), len(self.flex_factors))
+    def shape(self) -> Tuple[int, int, int, int, int]:
+        return (len(self.policies), len(self.backfill_modes),
+                len(self.arrival_factors), len(self.seeds),
+                len(self.flex_factors))
 
     @property
     def n_cells(self) -> int:
@@ -65,34 +72,6 @@ class GridSpec:
         return self.base.replace(
             n_jobs=self.n_jobs, n_pe=self.n_pe, arrival_factor=load,
             seed=seed, artime_factor=flex, deadline_factor=flex)
-
-
-def _grid_metrics(dec: batch_lib.Decision, batch: RequestBatch,
-                  valid: np.ndarray, n_pe: int):
-    """Per-cell metric reductions, computed on-device then synced once."""
-    v = jnp.asarray(valid)
-    acc = dec.accepted & v                             # [C, N]
-    n_acc = jnp.sum(acc, axis=1)
-    n_val = jnp.maximum(jnp.sum(v, axis=1), 1)
-    t_du = batch.t_du.astype(jnp.float32)
-    wait = (dec.t_s - batch.t_r + batch.t_du).astype(jnp.float32)
-    slow = jnp.where(acc, wait / jnp.maximum(t_du, 1), 0.0)
-    slowdown = jnp.sum(slow, axis=1) / jnp.maximum(n_acc, 1)
-    slowdown = jnp.where(n_acc > 0, slowdown, jnp.nan)
-    # accumulate PE-seconds in f32: paper-scale cells (~1e11) overflow
-    # an int32 sum, and utilization is a ratio so 1e-7 relative error
-    # is immaterial
-    area = jnp.sum(jnp.where(
-        acc, (batch.n_pe * batch.t_du).astype(jnp.float32), 0.0),
-        axis=1)
-    t_a = jnp.where(v, batch.t_a, 0)
-    first = jnp.min(jnp.where(v, batch.t_a, jnp.int32(2**31 - 1)),
-                    axis=1)
-    span = jnp.maximum(jnp.max(t_a, axis=1), 1) - first + 1
-    util = area.astype(jnp.float32) / (n_pe * span.astype(jnp.float32))
-    return (np.asarray(n_acc), np.asarray(jnp.sum(v, axis=1)),
-            np.asarray(n_acc / n_val.astype(jnp.float32)),
-            np.asarray(slowdown), np.asarray(util))
 
 
 def simulate_grid(
@@ -108,16 +87,19 @@ def simulate_grid(
     """Run the whole experiment matrix as one vmapped on-device scan.
 
     Each (load, seed, flexibility) workload is generated once and
-    shared by all policies — the paper's setup.  All cells admit in
-    lockstep via :func:`repro.core.ensemble.admit_stream_ensemble_auto`
-    (one growth covers the worst lane), and the stacked metrics come
-    back as a :class:`GridResult` indexed ``[policy, load, seed,
+    shared by all policies and backfill modes — the paper's setup.  All
+    cells admit in lockstep via
+    :func:`repro.core.ensemble.admit_stream_ensemble_auto` (one growth
+    covers the worst lane; policy and backfill mode are traced per
+    lane, so no cell recompiles), and the stacked metrics come back as
+    a :class:`GridResult` indexed ``[policy, backfill, load, seed,
     flex]``.  ``cross_check=True`` re-runs every cell on the host
-    event loop and asserts per-job decision identity.
+    oracle (event loop / :class:`~repro.core.hostsched.BackfillOracle`)
+    and asserts per-job decision identity.
     """
     spec = dataclasses.replace(spec or GridSpec(), **overrides)
-    P, L, S, F = spec.shape
-    # one workload per (load, seed, flex), shared across policies
+    P, B, L, S, F = spec.shape
+    # one workload per (load, seed, flex), shared across policy/mode
     workloads = {}
     for load, seed, flex in itertools.product(
             spec.arrival_factors, spec.seeds, spec.flex_factors):
@@ -126,20 +108,25 @@ def simulate_grid(
         workloads[(load, seed, flex)] = sorted(
             jobs, key=lambda j: j.t_a)
     cells = list(itertools.product(
-        spec.policies, spec.arrival_factors, spec.seeds,
-        spec.flex_factors))
-    streams = [workloads[(lo, se, fl)] for _, lo, se, fl in cells]
+        spec.policies, spec.backfill_modes, spec.arrival_factors,
+        spec.seeds, spec.flex_factors))
+    streams = [workloads[(lo, se, fl)]
+               for _, _, lo, se, fl in cells]
     batch, valid = pad_streams(streams, spec.n_pe)
-    pids = jnp.asarray([policy_index(p) for p, _, _, _ in cells],
+    pids = jnp.asarray([policy_index(p) for p, *_ in cells],
                        jnp.int32)
+    backfill = tuple(m for _, m, *_ in cells)
+    if all(m == "none" for m in backfill):
+        backfill = "none"          # keep the classic Q == 0 graphs
     session = ReservationService(ServiceConfig(
         n_pe=spec.n_pe, lanes=len(cells), capacity=capacity,
         pending_capacity=pending_capacity, use_kernel=use_kernel,
+        backfill=backfill, backfill_queue=spec.park_capacity,
         chunk_size=None)).session()
     t0 = _time.perf_counter()
     res = session.offer((batch, valid), policy=pids)
     dec = res.decision
-    n_acc, n_val, acc_rate, slowdown, util = _grid_metrics(
+    n_acc, n_val, acc_rate, slowdown, util = grid_reductions(
         dec, batch, valid, spec.n_pe)        # syncs the device
     wall = _time.perf_counter() - t0
     result = GridResult(
@@ -147,11 +134,12 @@ def simulate_grid(
         arrival_factors=spec.arrival_factors,
         seeds=spec.seeds,
         flex_factors=spec.flex_factors,
-        acceptance=acc_rate.reshape(P, L, S, F),
-        slowdown=slowdown.reshape(P, L, S, F),
-        utilization=util.reshape(P, L, S, F),
-        n_jobs=n_val.reshape(P, L, S, F).astype(int),
-        n_accepted=n_acc.reshape(P, L, S, F).astype(int),
+        backfill_modes=spec.backfill_modes,
+        acceptance=acc_rate.reshape(P, B, L, S, F),
+        slowdown=slowdown.reshape(P, B, L, S, F),
+        utilization=util.reshape(P, B, L, S, F),
+        n_jobs=n_val.reshape(P, B, L, S, F).astype(int),
+        n_accepted=n_acc.reshape(P, B, L, S, F).astype(int),
         wall_seconds=wall,
     )
     if record_decisions or cross_check:
@@ -165,24 +153,32 @@ def simulate_grid(
             arr = np.empty(len(cells), dtype=object)
             for c in range(len(cells)):
                 arr[c] = traces[c]
-            result.decisions = arr.reshape(P, L, S, F).tolist()
+            result.decisions = arr.reshape(P, B, L, S, F).tolist()
     if cross_check:
-        _cross_check_cells(cells, streams, traces, spec.n_pe)
+        _cross_check_cells(cells, streams, traces, spec.n_pe,
+                           spec.park_capacity)
     return result
 
 
-def _cross_check_cells(cells, streams, traces, n_pe: int) -> None:
-    """Assert every cell is decision-identical to the host event loop."""
+def _cross_check_cells(cells, streams, traces, n_pe: int,
+                       park_capacity: int) -> None:
+    """Assert every cell is decision-identical to its host oracle."""
+    from repro.core.hostsched import BackfillOracle
     from repro.sim.simulator import simulate
 
-    for c, (policy, load, seed, flex) in enumerate(cells):
-        ref = simulate(streams[c], n_pe, policy, engine="host",
-                       record_decisions=True)
-        if ref.decisions != traces[c]:
+    for c, (policy, mode, load, seed, flex) in enumerate(cells):
+        if mode == "none":
+            ref = simulate(streams[c], n_pe, policy, engine="host",
+                           record_decisions=True).decisions
+        else:
+            ref = BackfillOracle(
+                n_pe, policy, mode,
+                park_capacity=park_capacity).run(streams[c])
+        if ref != traces[c]:
             diff = [i for i, (x, y) in
-                    enumerate(zip(ref.decisions, traces[c])) if x != y]
+                    enumerate(zip(ref, traces[c])) if x != y]
             raise AssertionError(
-                f"grid cell (policy={policy.value}, load={load}, "
-                f"seed={seed}, flex={flex}) diverges from the host "
-                f"loop at job indices {diff[:10]} "
+                f"grid cell (policy={policy.value}, backfill={mode}, "
+                f"load={load}, seed={seed}, flex={flex}) diverges "
+                f"from the host oracle at job indices {diff[:10]} "
                 f"({len(diff)}/{len(streams[c])} total)")

@@ -89,3 +89,34 @@ def test_device_engine_agrees_with_host_in_sim():
                  engine_kwargs={"capacity": 128})
     assert a.n_accepted == b.n_accepted
     assert a.slowdowns == b.slowdowns
+
+
+def test_backfilling_modes_dominate_none_on_acceptance():
+    """Scenario-axis extension (DESIGN.md §6): EASY backfilling
+    accepts at least as many jobs as the paper's strict arrival-order
+    admission, and conservative is decision-identical to it — on a
+    fragmented small machine the EASY gain is strict.  (The full
+    7-policy × 3-mode grid claim lives in tests/test_sweep.py.)"""
+    import numpy as np
+
+    from repro.core import batch as batch_lib
+    from repro.core import timeline as tl_lib
+    from repro.sim import generate_filtered
+
+    n_pe = 16
+    jobs = sorted(generate_filtered(WorkloadParams(
+        n_jobs=120, n_pe=n_pe, seed=3, arrival_factor=2.5,
+        u_low=2.0, u_med=3.0, u_hi=4.0), max_pe=n_pe),
+        key=lambda j: j.t_a)
+    batch = batch_lib.requests_to_batch(jobs)
+    acc = {}
+    for policy in (Policy.PE_W, Policy.FF):
+        for mode in ("none", "easy", "conservative"):
+            q = 0 if mode == "none" else 8
+            state = tl_lib.init_state(64, n_pe, 128, park_capacity=q)
+            _, dec = batch_lib.admit_stream_grow(
+                state, batch, policy, n_pe=n_pe, backfill=mode)
+            acc[(policy, mode)] = int(
+                np.asarray(dec.accepted).sum())
+        assert acc[(policy, "easy")] > acc[(policy, "none")]
+        assert acc[(policy, "conservative")] == acc[(policy, "none")]

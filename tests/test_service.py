@@ -99,6 +99,32 @@ def test_offer_1k_stream_identical_to_one_shot_all_policies():
         "chunked offer recompiled after warmup"
 
 
+def test_offer_with_backfilling_compiles_once_per_chunk_shape():
+    """Backfilling extension of the cache gate: the deferral mode is
+    *traced*, so chunked offers compile once per chunk shape and an
+    easy session, a conservative session and every policy share the
+    same cache entry."""
+    n_pe = 32
+    jobs = _workload(260, n_pe, seed=13)
+    warm = None
+    for mode in ("easy", "conservative"):
+        for policy in (Policy.PE_W, Policy.FF):
+            sess = ReservationService(ServiceConfig(
+                n_pe=n_pe, policy=policy, capacity=128,
+                backfill=mode, backfill_queue=8, chunk_size=32,
+                ring_capacity=64)).session()
+            i = 0
+            while i < len(jobs):
+                sess.offer(jobs[i:i + 50])
+                i += 50
+                if warm is None:
+                    # the first chunk of the first session compiled
+                    # the Q=8 scan; nothing after it may compile
+                    warm = batch_lib.admit_stream._cache_size()
+    assert warm == batch_lib.admit_stream._cache_size(), \
+        "backfilling offer recompiled after warmup"
+
+
 def test_offer_mid_stream_growth_identical_to_big_capacity():
     """A chunk that overflows grows once (high-water) and re-runs;
     decisions match a session that started with ample capacity."""

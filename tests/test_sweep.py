@@ -1,14 +1,22 @@
 """`simulate_grid`: the Section-6 matrix as one vmapped dispatch.
 
-Acceptance gate of the ensemble refactor: on a 3-load × 3-seed ×
-7-policy grid every cell is decision-identical to the host event loop,
-and the grid reproduces the paper's policy ordering (PE-Worst-Fit
-highest acceptance, First-Fit lowest slowdown).
+Acceptance gates of the ensemble refactor and the backfill axis: on a
+3-load × 3-seed × 7-policy grid every cell is decision-identical to the
+host event loop, the grid reproduces the paper's policy ordering
+(PE-Worst-Fit highest acceptance, First-Fit lowest slowdown), and the
+policy × backfill matrix runs as *one* dispatch whose backfilling modes
+dominate ``none`` on acceptance (conservative bit-identically equal).
 """
+import warnings
+
 import numpy as np
 import pytest
 
-from repro.core.types import ALL_POLICIES, Policy
+import jax.numpy as jnp
+
+from repro.core import batch as batch_lib
+from repro.core import timeline as tl_lib
+from repro.core.types import ALL_POLICIES, ARRequest, Policy
 from repro.sim import (
     GridSpec,
     WorkloadParams,
@@ -16,8 +24,13 @@ from repro.sim import (
     pad_streams,
     simulate_grid,
 )
+from repro.sim.metrics import GridResult, grid_reductions, nanmean_safe
 
 SMALL_SIZES = WorkloadParams(u_low=2.0, u_med=4.0, u_hi=6.0)
+# the backfill claims grid: small machine + relatively wide jobs, so
+# fragmentation gives the EASY displacement real holes to fill (the
+# regime is pinned — decisions are deterministic per seed)
+BACKFILL_SIZES = WorkloadParams(u_low=2.0, u_med=3.0, u_hi=4.0)
 
 
 @pytest.fixture(scope="module")
@@ -37,9 +50,27 @@ def paper_grid():
                          record_decisions=True)
 
 
+@pytest.fixture(scope="module")
+def backfill_grid():
+    """7 policies × {none, easy, conservative} in one dispatch."""
+    spec = GridSpec(
+        policies=ALL_POLICIES,
+        arrival_factors=(2.5,),
+        seeds=(3, 5),
+        flex_factors=(3.0,),
+        backfill_modes=("none", "easy", "conservative"),
+        base=BACKFILL_SIZES,
+        n_pe=16,
+        n_jobs=120,
+        park_capacity=8,
+    )
+    return simulate_grid(spec, capacity=64, record_decisions=True)
+
+
 def test_grid_shape_and_counts(paper_grid):
-    assert paper_grid.acceptance.shape == (7, 3, 3, 1)
+    assert paper_grid.acceptance.shape == (7, 1, 3, 3, 1)
     assert paper_grid.n_cells == 63
+    assert paper_grid.backfill_modes == ("none",)
     assert (paper_grid.n_jobs > 0).all()
     assert (paper_grid.n_accepted <= paper_grid.n_jobs).all()
     # workloads are shared across policies: same job count per column
@@ -62,14 +93,14 @@ def test_grid_reproduces_ff_lowest_slowdown(paper_grid):
 def test_grid_acceptance_degrades_with_load(paper_grid):
     """Fig. 4 trend along the grid's load axis (mean over seeds)."""
     pe_w = list(paper_grid.policies).index(Policy.PE_W.value)
-    by_load = np.nanmean(paper_grid.acceptance[pe_w], axis=(1, 2))
+    by_load = np.nanmean(paper_grid.acceptance[pe_w, 0], axis=(1, 2))
     assert by_load[0] > by_load[-1]
 
 
 def test_grid_decisions_recorded(paper_grid):
     """record_decisions exposes per-cell (accepted, t_s) traces."""
-    cell = paper_grid.decisions[0][0][0][0]      # FF, load 1.0, seed 0
-    assert len(cell) == int(paper_grid.n_jobs[0, 0, 0, 0])
+    cell = paper_grid.decisions[0][0][0][0][0]   # FF, none, 1.0, s0
+    assert len(cell) == int(paper_grid.n_jobs[0, 0, 0, 0, 0])
     assert all(isinstance(a, bool) and isinstance(t, int)
                for a, t in cell)
 
@@ -97,7 +128,7 @@ def test_grid_flex_axis_raises_acceptance():
         seeds=(0, 1),
         flex_factors=(1.0, 5.0),
         base=SMALL_SIZES, n_pe=64, n_jobs=120), capacity=64)
-    acc = np.nanmean(r.acceptance[0, 0], axis=0)     # [F]
+    acc = np.nanmean(r.acceptance[0, 0, 0], axis=0)     # [F]
     assert acc[1] > acc[0]
 
 
@@ -126,3 +157,123 @@ def test_grid_cell_overflow_grows_collectively():
     r = simulate_grid(spec, capacity=8, pending_capacity=4,
                       cross_check=True)
     assert (r.n_accepted > 0).all()
+
+
+# ---------------------------------------------------------------------------
+# the backfill axis (DESIGN.md §6)
+# ---------------------------------------------------------------------------
+
+
+def test_backfill_grid_modes_dominate_none(backfill_grid):
+    """Paper-claims extension: on the policy × backfill matrix, every
+    policy accepts strictly more under EASY and exactly as much under
+    conservative (decision-identity, asserted on the raw arrays)."""
+    acc = backfill_grid.mode_policy_acceptance()
+    for p in backfill_grid.policies:
+        assert acc["easy"][p] > acc["none"][p], p
+        assert acc["conservative"][p] == acc["none"][p], p
+    # conservative is bit-identical to none, cell by cell
+    b = {m: i for i, m in enumerate(backfill_grid.backfill_modes)}
+    np.testing.assert_array_equal(
+        backfill_grid.acceptance[:, b["conservative"]],
+        backfill_grid.acceptance[:, b["none"]])
+    np.testing.assert_array_equal(
+        backfill_grid.slowdown[:, b["conservative"]],
+        backfill_grid.slowdown[:, b["none"]])
+    assert backfill_grid.decisions[0][b["conservative"]] == \
+        backfill_grid.decisions[0][b["none"]]
+
+
+def test_backfill_grid_keeps_policy_orderings(backfill_grid):
+    """PE-Worst-Fit stays best-acceptance and First-Fit stays
+    lowest-slowdown within every backfill mode."""
+    acc = backfill_grid.mode_policy_acceptance()
+    sd = backfill_grid.mode_policy_slowdown()
+    for m in backfill_grid.backfill_modes:
+        assert acc[m][Policy.PE_W.value] >= max(acc[m].values()) - 0.01
+        assert sd[m][Policy.FF.value] == min(sd[m].values())
+
+
+def test_backfill_grid_single_dispatch_no_per_mode_recompile():
+    """The policy × backfill matrix is one vmapped dispatch (the mode
+    is traced): permuting the mode assignment compiles nothing new."""
+    spec = GridSpec(
+        policies=(Policy.PE_W, Policy.FF),
+        arrival_factors=(2.0,), seeds=(3,), flex_factors=(3.0,),
+        backfill_modes=("none", "easy", "conservative"),
+        base=BACKFILL_SIZES, n_pe=16, n_jobs=40, park_capacity=4)
+    from repro.core import ensemble as ens_lib
+
+    r1 = simulate_grid(spec, capacity=64)
+    warm = ens_lib.admit_stream_ensemble._cache_size()
+    r2 = simulate_grid(spec, capacity=64, backfill_modes=(
+        "easy", "conservative", "none"))
+    assert ens_lib.admit_stream_ensemble._cache_size() == warm, \
+        "permuting the backfill-mode assignment recompiled the scan"
+    # same cells, permuted axis: identical per-mode metrics
+    for m in ("none", "easy", "conservative"):
+        a1 = r1.acceptance[:, r1.backfill_modes.index(m)]
+        a2 = r2.acceptance[:, r2.backfill_modes.index(m)]
+        np.testing.assert_array_equal(a1, a2)
+
+
+def test_backfill_grid_cross_check_against_host_oracle():
+    """Differential gate at the grid level: every (policy, mode) cell
+    is decision-identical to its host oracle (the event loop for
+    ``none``, the BackfillOracle otherwise)."""
+    spec = GridSpec(
+        policies=(Policy.PE_W, Policy.DU_B, Policy.FF),
+        arrival_factors=(2.0,), seeds=(3,), flex_factors=(3.0,),
+        backfill_modes=("none", "easy", "conservative"),
+        base=BACKFILL_SIZES, n_pe=16, n_jobs=60, park_capacity=4)
+    r = simulate_grid(spec, capacity=64, cross_check=True)
+    assert (r.n_accepted > 0).all()
+
+
+# ---------------------------------------------------------------------------
+# NaN-safe metric reductions (zero-acceptance regression)
+# ---------------------------------------------------------------------------
+
+
+def test_zero_acceptance_cell_is_nan_safe():
+    """A cell accepting no jobs must reduce to NaN slowdown without
+    dividing by zero or tripping numpy's all-NaN warnings."""
+    n_pe = 8
+    # every request asks for more PEs than the machine has: all reject
+    jobs = [ARRequest(t_a=i, t_r=i, t_du=10, t_dl=i + 100, n_pe=16)
+            for i in range(5)]
+    state = tl_lib.init_state(16, n_pe, 8)
+    batch = batch_lib.requests_to_batch(jobs)
+    _, dec = batch_lib.admit_stream_grow(
+        state, batch, Policy.PE_W, n_pe=n_pe)
+    stacked = batch_lib.Decision(*[jnp.asarray(f)[None] for f in dec])
+    sb = batch_lib.RequestBatch(
+        *[jnp.asarray(f)[None] for f in batch])
+    valid = np.ones((1, len(jobs)), bool)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")       # any warning fails
+        n_acc, n_val, rate, slowdown, util = grid_reductions(
+            stacked, sb, valid, n_pe)
+        assert n_acc.tolist() == [0]
+        assert rate.tolist() == [0.0]
+        assert np.isnan(slowdown).all()
+        r = GridResult(
+            policies=("PE_W",), arrival_factors=(1.0,), seeds=(0,),
+            flex_factors=(3.0,), backfill_modes=("none",),
+            acceptance=rate.reshape(1, 1, 1, 1, 1),
+            slowdown=slowdown.reshape(1, 1, 1, 1, 1),
+            utilization=util.reshape(1, 1, 1, 1, 1),
+            n_jobs=n_val.reshape(1, 1, 1, 1, 1).astype(int),
+            n_accepted=n_acc.reshape(1, 1, 1, 1, 1).astype(int))
+        assert np.isnan(r.policy_slowdown()["PE_W"])
+        assert np.isnan(r.mode_policy_slowdown()["none"]["PE_W"])
+        assert r.policy_acceptance()["PE_W"] == 0.0
+        assert "PE_W" in r.summary()
+    # an all-padding cell additionally has NaN utilization
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        _, _, _, _, util = grid_reductions(
+            stacked, sb, np.zeros((1, len(jobs)), bool), n_pe)
+        assert np.isnan(util).all()
+    assert np.isnan(nanmean_safe([np.nan, np.nan]))
+    assert nanmean_safe([1.0, np.nan]) == 1.0
