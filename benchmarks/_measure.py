@@ -1,0 +1,60 @@
+"""Shared benchmark measurement helpers + the frozen PR 4 baselines.
+
+Every BENCH_*.json row published by PR 5 carries a ``speedup_vs_pr4``
+field against the numbers the PR 4 tree committed (copied verbatim
+below, so re-running the benchmarks never chains the comparison onto
+itself).  Wall times are warmed-up medians: a single steady-state run
+(the pre-PR 5 protocol) was noisy enough on shared CPU runners to move
+published ratios by tens of percent.
+"""
+from __future__ import annotations
+
+from typing import Callable, Iterable, List
+
+
+def median(vals: Iterable[float]) -> float:
+    """Upper median (odd counts: the true median) — the one
+    measurement protocol for every bench; repeats are odd in-repo."""
+    s: List[float] = sorted(vals)
+    return s[len(s) // 2]
+
+
+def median_wall(fn: Callable[[], float], repeats: int = 5) -> float:
+    """Median wall of ``repeats`` runs after one warmup run.
+
+    The warmup run populates jit caches *and* runs the grow-once
+    overflow protocol to its fixed point, so the measured runs see the
+    steady-state shapes.  ``fn`` returns its own wall seconds.
+    """
+    fn()
+    return median(fn() for _ in range(max(repeats, 1)))
+
+
+# --------------------------------------------------------------------------
+# PR 4 baselines (the BENCH_*.json rows committed by PR 4)
+# --------------------------------------------------------------------------
+
+# admissions/sec of the scanned device path (BENCH_admission.json)
+PR4_ADMISSION_STREAM = {
+    "FF": 1367.1, "PE_B": 2648.9, "PE_W": 1341.4, "Du_B": 2009.6,
+    "Du_W": 2015.4, "PEDu_B": 1902.8, "PEDu_W": 1368.0,
+}
+
+# Section-6 grid cells/sec (BENCH_sweep.json)
+PR4_SWEEP_CELLS = {
+    "host_loop": 44.16, "device_scan": 18.6, "vmapped_grid": 25.0,
+}
+
+# warm decisions/sec per backfill mode (BENCH_backfill.json)
+PR4_BACKFILL_DPS = {
+    "none": 8890.6, "easy": 1001.4, "conservative": 5833.2,
+}
+# warm step-cost ratios vs the plain (mode "none") scan
+PR4_BACKFILL_COST = {"none": 1.0, "easy": 8.88, "conservative": 1.52}
+
+# warm requests/sec of the streaming variants (BENCH_service.json)
+PR4_SERVICE_WARM = {"rescan_per_group": 1829.5, "ring_chunked": 2116.1}
+
+
+def speedup_vs_pr4(value: float, baseline: float) -> float:
+    return round(value / max(baseline, 1e-9), 2)

@@ -46,6 +46,7 @@ def _arrival_groups(jobs, chunk: int, seed: int) -> List[list]:
 
 def service_throughput(n_jobs: int = 240, n_pe: int = 64,
                        chunk: int = 64, seed: int = 0,
+                       repeats: int = 5,
                        out_path: Optional[str] = BENCH_SERVICE_PATH
                        ) -> List[Dict]:
     """Requests/sec of the two online-admission strategies.
@@ -56,11 +57,16 @@ def service_throughput(n_jobs: int = 240, n_pe: int = 64,
     * ``ring_chunked`` — one service session; groups stage in the ring
       and admit as fixed-shape chunks (compiles once at warmup).
 
-    Each variant answers every group (decision sync per group) and runs
-    twice: ``cold`` includes compilation — the steady reality of the
-    re-scan server, whose shapes keep changing — and ``warm`` has every
-    shape cached.
+    Each variant answers every group (decision sync per group);
+    ``cold`` includes compilation — the steady reality of the re-scan
+    server, whose shapes keep changing — and ``warm`` is the median of
+    ``repeats`` runs with every shape cached.  ``speedup_vs_pr4``
+    compares warm requests/sec to the frozen PR 4 baselines
+    (:mod:`benchmarks._measure`).
     """
+    from benchmarks._measure import (
+        PR4_SERVICE_WARM, median, speedup_vs_pr4)
+
     jobs = sorted(
         [j for j in generate(WorkloadParams(
             n_jobs=n_jobs, n_pe=n_pe, seed=seed,
@@ -102,7 +108,7 @@ def service_throughput(n_jobs: int = 240, n_pe: int = 64,
         cache0 = batch_lib.admit_stream._cache_size()
         cold = fn()
         compiles = batch_lib.admit_stream._cache_size() - cache0
-        warm = fn()
+        warm = median(fn() for _ in range(max(repeats, 1)))
         walls[name] = cold
         rows.append({
             "variant": name,
@@ -119,18 +125,20 @@ def service_throughput(n_jobs: int = 240, n_pe: int = 64,
         row["cold_speedup_vs_rescan"] = round(
             walls["rescan_per_group"] / max(
                 walls[row["variant"]], 1e-9), 2)
+        row["speedup_vs_pr4"] = speedup_vs_pr4(
+            row["warm_req_per_s"], PR4_SERVICE_WARM[row["variant"]])
     assert rows[0]["accepted"] == rows[1]["accepted"], \
         "streaming variants diverged"
     if out_path:
         payload = {
             "bench": "service_throughput",
             "n_jobs": len(jobs), "n_pe": n_pe, "chunk": chunk,
-            "seed": seed,
+            "seed": seed, "repeats": repeats,
             "note": ("online admission in irregular arrival groups; "
                      "cold includes jit compiles (the re-scan server "
                      "keeps seeing new shapes), warm has all shapes "
-                     "cached; decisions bit-identical across "
-                     "variants"),
+                     "cached (warm = median of repeats); decisions "
+                     "bit-identical across variants"),
             "rows": rows,
         }
         with open(out_path, "w") as fh:

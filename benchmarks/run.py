@@ -1,16 +1,30 @@
 """Benchmark harness: one section per paper table/figure + roofline.
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run --check [--tolerance T]
 
 Prints CSV blocks: ``name,...columns`` per section.  ``--full`` uses
 the paper's 10^4-job workloads (slow); default is a reduced size that
 preserves every reported ordering.
+
+``--check`` is the perf-regression mode (CI ``perf-smoke``): it
+re-measures the four BENCH benchmarks at reduced sizes and compares
+the freshly measured *ratios* — device-vs-host throughput, backfill
+mode cost vs the plain scan, ring-vs-rescan streaming — against the
+committed ``BENCH_*.json`` files with a tolerance band.  Ratios only:
+absolute wall times are meaningless on shared runners, but a device
+path that regresses from 3x-faster-than-host to slower-than-host
+moves its ratio far beyond any plausible machine noise.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
 import sys
 import time
+
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 
 def _emit(name: str, rows) -> None:
@@ -25,12 +39,119 @@ def _emit(name: str, rows) -> None:
     sys.stdout.flush()
 
 
+def _committed(name: str) -> dict:
+    path = _ROOT / f"BENCH_{name}.json"
+    with open(path) as fh:
+        return json.load(fh)
+
+
+def check(tolerance: float) -> int:
+    """Ratio gates vs the committed BENCH files; returns #failures.
+
+    Fresh measurements use the committed workload sizes with fewer
+    repeats; ``tolerance`` is the allowed *relative* drift of each
+    ratio (default 0.5: a committed 3.0x device-vs-host gate fails
+    below 1.5x).  Cost-ratio ("le") gates get an extra +0.5 absolute
+    slack — their committed values sit near 1.0, where relative bands
+    are tighter than shared-runner noise on tens-of-ms walls.  No
+    absolute wall-time asserts anywhere.
+    """
+    from benchmarks import bench_backfill, bench_policies, \
+        bench_service
+
+    failures = []
+    checks = []
+
+    def gate(label: str, fresh: float, committed: float,
+             direction: str) -> None:
+        if direction == "ge":
+            bound = committed * (1.0 - tolerance)
+            ok = fresh >= bound
+        else:
+            bound = committed * (1.0 + tolerance) + 0.5
+            ok = fresh <= bound
+        checks.append({
+            "gate": label, "fresh_ratio": round(fresh, 3),
+            "committed_ratio": round(committed, 3),
+            "bound": round(bound, 3),
+            "direction": direction,
+            "status": "PASS" if ok else "FAIL",
+        })
+        if not ok:
+            failures.append(label)
+
+    # -- admission: device stream vs host loop ------------------------
+    # one gate on the MEDIAN ratio across the seven policies: the
+    # per-policy ratios move several 10s of percent with the host
+    # loop's cache behaviour on shared runners, the median is stable
+    from benchmarks._measure import median
+
+    ref_rows = _committed("admission")["rows"]
+    rows = bench_policies.admission_throughput(repeats=3,
+                                               out_path=None)
+    fresh = median(
+        r["device_stream_adm_per_s"] / max(
+            r["host_loop_adm_per_s"], 1e-9) for r in rows)
+    committed = median(
+        r["device_stream_adm_per_s"] / max(
+            r["host_loop_adm_per_s"], 1e-9) for r in ref_rows)
+    gate("admission/median:stream_vs_host", fresh, committed, "ge")
+
+    # -- sweep: vmapped grid vs host loop -----------------------------
+    ref = {r["variant"]: r for r in _committed("sweep")["rows"]}
+    rows = bench_policies.sweep_throughput(repeats=3, out_path=None)
+    got = {r["variant"]: r for r in rows}
+    for variant in ("device_scan", "vmapped_grid"):
+        fresh = got[variant]["cells_per_s"] / max(
+            got["host_loop"]["cells_per_s"], 1e-9)
+        committed = ref[variant]["cells_per_s"] / max(
+            ref["host_loop"]["cells_per_s"], 1e-9)
+        gate(f"sweep/{variant}:vs_host", fresh, committed, "ge")
+
+    # -- backfill: mode cost vs the plain scan ------------------------
+    ref = {r["mode"]: r for r in _committed("backfill")["rows"]}
+    rows = bench_backfill.backfill_throughput(repeats=5,
+                                              out_path=None)
+    for row in rows:
+        mode = row["mode"]
+        if mode in ("none", "none_idle") or mode not in ref:
+            continue
+        gate(f"backfill/{mode}:cost_vs_plain",
+             row["warm_cost_vs_plain"],
+             ref[mode]["warm_cost_vs_plain"], "le")
+
+    # -- service: warm ring-chunked vs re-scan ------------------------
+    ref = {r["variant"]: r for r in _committed("service")["rows"]}
+    rows = bench_service.service_throughput(repeats=3, out_path=None)
+    got = {r["variant"]: r for r in rows}
+    fresh = got["ring_chunked"]["warm_req_per_s"] / max(
+        got["rescan_per_group"]["warm_req_per_s"], 1e-9)
+    committed = ref["ring_chunked"]["warm_req_per_s"] / max(
+        ref["rescan_per_group"]["warm_req_per_s"], 1e-9)
+    gate("service/ring_vs_rescan:warm", fresh, committed, "ge")
+
+    _emit("perf_check", checks)
+    if failures:
+        print(f"\n# PERF CHECK FAILED: {len(failures)} gate(s) out of "
+              f"band (tolerance {tolerance}): {failures}")
+    else:
+        print(f"\n# perf check OK: {len(checks)} ratio gates within "
+              f"tolerance {tolerance}")
+    return len(failures)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale 10^4-job sweeps")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--check", action="store_true",
+                    help="ratio-gate regression mode vs BENCH_*.json")
+    ap.add_argument("--tolerance", type=float, default=0.5,
+                    help="allowed relative ratio drift in --check")
     args = ap.parse_args()
+    if args.check:
+        sys.exit(1 if check(args.tolerance) else 0)
     n_jobs = 10_000 if args.full else 2_000
     t0 = time.time()
 

@@ -216,6 +216,25 @@ class Session:
         return self._backend.cancel(int(t_s), int(t_e), list(pe_ids),
                                     lane=lane)
 
+    def cancel_many(self, allocs: Sequence[Allocation],
+                    lane: int = 0) -> List[bool]:
+        """Withdraw several committed reservations at once.
+
+        On single-engine sessions all cancellations apply in *one*
+        fused dispatch (``timeline.update_many`` deletes every matched
+        interval in a single boundary-union + merge pass — DESIGN.md
+        §7); other backends fall back to sequential :meth:`cancel`.
+        Returns one bool per allocation, matching sequential-cancel
+        semantics: on auto-release sessions repeated allocations
+        report ``False`` after their first occurrence (the slot is
+        already cleared); with ``auto_release=False`` cancels are
+        blind deletes and every entry reports ``True``, exactly as
+        repeated :meth:`cancel` calls would.
+        """
+        triples = [(int(a.t_s), int(a.t_e), list(a.pe_ids))
+                   for a in allocs]
+        return self._backend.cancel_many(triples, lane=lane)
+
     def snapshot(self):
         """Opaque capture of the whole session state (cheap: pytrees
         are immutable, only ring/heap staging is copied)."""
@@ -349,6 +368,15 @@ class _BackendBase:
         if lane != 0:
             raise ValueError("lane applies to ensemble sessions")
         return []
+
+    def cancel_many(self, triples, lane: int = 0) -> List[bool]:
+        """Withdraw several reservations; sequential fallback.
+
+        The single-engine backend overrides this with one fused
+        ``timeline.update_many`` dispatch (DESIGN.md §7).
+        """
+        return [self.cancel(ts, te, list(pes), lane=lane)
+                for ts, te, pes in triples]
 
     # three ops: default engine delegation
     def find_allocation(self, req, policy, t_now=None):
@@ -512,6 +540,23 @@ class _StreamBackend(_BackendBase):
                                   state.pending_capacity))
         self._state = state
         self.counters["cancelled"] += int(done)
+        return done
+
+    def cancel_many(self, triples, lane: int = 0) -> List[bool]:
+        if lane != 0:
+            raise ValueError("lane applies to ensemble sessions")
+        W = self._state.tl.words
+        entries = [(ts, te, tl_lib.ids_to_mask32(pes, W))
+                   for ts, te, pes in triples]
+        before = self._capacities()
+        state, done = batch_lib.cancel_many(
+            self._state, entries,
+            require_pending=self.cfg.auto_release,
+            max_growths=self.growth_budget)
+        self._grow_guard(before, (state.tl.capacity,
+                                  state.pending_capacity))
+        self._state = state
+        self.counters["cancelled"] += sum(done)
         return done
 
     def snapshot(self):

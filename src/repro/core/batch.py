@@ -328,86 +328,141 @@ def _promote_due(state: SchedulerState,
 
     A deferral-queue entry with ``t_s <= t_now`` is running (or about
     to): its reservation becomes immovable and moves to the
-    pending-release buffer, freeing the queue slot.  FCFS: earliest
-    sequence first — promotion only shuffles bookkeeping (the timeline
-    occupancy is unchanged), so the order matters only for determinism.
+    pending-release buffer, freeing the queue slot.  All due entries
+    promote in one vectorised pass (DESIGN.md §7): the k-th due entry
+    in FCFS order takes the k-th free pending slot in index order —
+    exactly the assignment the old one-at-a-time ``while_loop``
+    produced, without threading the full state through a loop carry.
+    The whole pass sits behind ``lax.cond`` on a due-entry predicate,
+    so steps with an idle queue pay one ``any`` reduction.
     """
     t_now = jnp.asarray(t_now, jnp.int32)
+    K = state.pending_capacity
 
-    def due(s: SchedulerState):
-        return (jnp.any((s.park_seq < T_INF) & (s.park_ts <= t_now))
-                & ~s.overflow)
-
-    def one(s: SchedulerState) -> SchedulerState:
-        cand = (s.park_seq < T_INF) & (s.park_ts <= t_now)
-        i = jnp.argmin(jnp.where(cand, s.park_seq, T_INF))
+    def promote(s: SchedulerState) -> SchedulerState:
+        due = (s.park_seq < T_INF) & (s.park_ts <= t_now)
         free = s.pend_te == T_INF
-        slot = jnp.argmax(free)
-        ovf = ~jnp.any(free)
-        n_used = jnp.sum(~free).astype(jnp.int32) + 1
-        keep = ~ovf
+        n_free = jnp.sum(free).astype(jnp.int32)
+        n_due = jnp.sum(due).astype(jnp.int32)
+        # FCFS rank among due entries (sequence numbers are unique)
+        seq = jnp.where(due, s.park_seq, T_INF)
+        rank = jnp.sum((seq[None, :] < seq[:, None]) & due[None, :],
+                       axis=1).astype(jnp.int32)
+        promoted = due & (rank < n_free)
+        # k-th free pending slot (index order) for FCFS rank k
+        frank = (jnp.cumsum(free) - 1).astype(jnp.int32)
+        slot_of_rank = jnp.full((K + 1,), K, jnp.int32).at[
+            jnp.where(free, frank, K)].set(
+            jnp.arange(K, dtype=jnp.int32))
+        dest = jnp.where(promoted,
+                         slot_of_rank[jnp.clip(rank, 0, K)], K)
+
+        def scat(pend, park, fill):
+            ext = jnp.concatenate([pend, pend[:1]])
+            return ext.at[dest].set(
+                jnp.where(_bcast(promoted, park), park, fill))[:K]
+
+        ovf = n_due > n_free
+        n_prom = jnp.minimum(n_due, n_free)
+        used0 = jnp.sum(~free).astype(jnp.int32)
         return s._replace(
-            pend_ts=jnp.where(
-                keep, s.pend_ts.at[slot].set(s.park_ts[i]), s.pend_ts),
-            pend_te=jnp.where(
-                keep, s.pend_te.at[slot].set(s.park_te[i]), s.pend_te),
-            pend_mask=jnp.where(
-                keep, s.pend_mask.at[slot].set(s.park_mask[i]),
-                s.pend_mask),
-            park_ts=jnp.where(
-                keep, s.park_ts.at[i].set(T_INF), s.park_ts),
-            park_te=jnp.where(
-                keep, s.park_te.at[i].set(T_INF), s.park_te),
-            park_mask=jnp.where(
-                keep, s.park_mask.at[i].set(jnp.uint32(0)),
-                s.park_mask),
-            park_seq=jnp.where(
-                keep, s.park_seq.at[i].set(T_INF), s.park_seq),
-            n_promoted=s.n_promoted
-            + jnp.where(keep, 1, 0).astype(jnp.int32),
+            pend_ts=scat(s.pend_ts, s.park_ts, jnp.int32(0)),
+            pend_te=scat(s.pend_te, s.park_te, jnp.int32(0)),
+            pend_mask=scat(s.pend_mask, s.park_mask, jnp.uint32(0)),
+            park_ts=jnp.where(promoted, T_INF, s.park_ts),
+            park_te=jnp.where(promoted, T_INF, s.park_te),
+            park_mask=jnp.where(promoted[:, None], jnp.uint32(0),
+                                s.park_mask),
+            park_seq=jnp.where(promoted, T_INF, s.park_seq),
+            n_promoted=s.n_promoted + n_prom,
             overflow=s.overflow | ovf,
-            hw_pending=jnp.maximum(s.hw_pending, n_used),
+            hw_pending=jnp.maximum(
+                s.hw_pending,
+                jnp.where(ovf, jnp.int32(K + 1), used0 + n_prom)),
         )
 
-    return jax.lax.while_loop(due, one, state)
+    pred = (jnp.any((state.park_seq < T_INF)
+                    & (state.park_ts <= t_now)) & ~state.overflow)
+    return jax.lax.cond(pred, promote, lambda s: s, state)
+
+
+def _bcast(pred: jax.Array, like: jax.Array) -> jax.Array:
+    """Broadcast a [K] predicate against [K]- or [K, W]-shaped data."""
+    return pred if like.ndim == 1 else pred[:, None]
+
+
+# Static batch width of the fused multi-release: one `update_many`
+# deletes up to this many due reservations per pass.  Typical steps
+# have 0-2 due completions, so one pass nearly always suffices while
+# the scratch rows stay at S + 2 * chunk.
+RELEASE_CHUNK = 8
 
 
 def release_due(state: SchedulerState, t_now: jax.Array) -> SchedulerState:
     """Delete every pending reservation with ``t_e <= t_now``.
 
-    Mirrors the host simulator's completion heap: earliest end first.
-    Reservations never share a PE over overlapping intervals, so the
-    deletions commute and the loop order only has to be deterministic.
-    Amortised one iteration per admitted job.  With a deferral queue
-    (``park_capacity > 0``) parked reservations whose start has arrived
-    are promoted into the pending-release buffer first, so a later due
-    end is released in the same pass.
+    With a deferral queue (``park_capacity > 0``) parked reservations
+    whose start has arrived are promoted into the pending-release
+    buffer first, so a later due end is released in the same pass.
+    This is the session ``tick`` entry; the fused admit step gates the
+    promotion together with the retry sweep under one queue-work cond
+    (see ``_admit_impl``).
     """
     if state.park_capacity:
         state = _promote_due(state, t_now)
+    return _release_pending(state, t_now)
+
+
+def _release_pending(state: SchedulerState,
+                     t_now: jax.Array) -> SchedulerState:
+    """The release loop proper (no promotion).
+
+    Reservations never share a PE over overlapping intervals, so the
+    deletions commute and — the timeline being a canonical
+    representation of its occupancy step function — one fused
+    multi-interval delete is bit-identical to the old one-at-a-time
+    loop (DESIGN.md §7).  Up to :data:`RELEASE_CHUNK` due reservations
+    are deleted per ``update_many`` call; the ``while_loop`` only
+    iterates when more completions than that fall due at once.
+    """
+    t_now = jnp.asarray(t_now, jnp.int32)
+    CH = min(RELEASE_CHUNK, state.pending_capacity)
+    W = state.pend_mask.shape[1]
 
     def pending_due(s: SchedulerState):
         return jnp.any(s.pend_te <= t_now) & ~s.overflow
 
-    def release_one(s: SchedulerState) -> SchedulerState:
-        i = jnp.argmin(s.pend_te)
-        new_tl, ovf, n_keep = tl_lib.update(
-            s.tl, s.pend_ts[i], s.pend_te[i], s.pend_mask[i],
-            is_add=False, with_count=True)
-        # the slot is freed even on overflow so the loop always makes
+    def release_chunk(s: SchedulerState) -> SchedulerState:
+        due = s.pend_te <= t_now
+        rank = jnp.cumsum(due) - 1
+        chosen = due & (rank < CH)
+        dest = jnp.where(chosen, rank, CH)
+        sel_ts = jnp.zeros((CH + 1,), jnp.int32).at[dest].set(
+            jnp.where(chosen, s.pend_ts, 0))[:CH]
+        sel_te = jnp.zeros((CH + 1,), jnp.int32).at[dest].set(
+            jnp.where(chosen, s.pend_te, 0))[:CH]
+        sel_mk = jnp.zeros((CH + 1, W), jnp.uint32).at[dest].set(
+            jnp.where(chosen[:, None], s.pend_mask,
+                      jnp.uint32(0)))[:CH]
+        act = jnp.zeros((CH + 1,), bool).at[dest].set(chosen)[:CH]
+        new_tl, ovf, n_keep = tl_lib.update_many(
+            s.tl, sel_ts, sel_te, sel_mk, act, is_add=False,
+            with_count=True)
+        # slots are freed even on overflow so the loop always makes
         # progress; an overflowed stream is re-run anyway.
         return s._replace(
             tl=_where_tree(ovf, s.tl, new_tl),
-            pend_ts=s.pend_ts.at[i].set(T_INF),
-            pend_te=s.pend_te.at[i].set(T_INF),
-            pend_mask=s.pend_mask.at[i].set(jnp.uint32(0)),
-            n_released=s.n_released
-            + jnp.where(ovf, 0, 1).astype(jnp.int32),
+            pend_ts=jnp.where(chosen, T_INF, s.pend_ts),
+            pend_te=jnp.where(chosen, T_INF, s.pend_te),
+            pend_mask=jnp.where(chosen[:, None], jnp.uint32(0),
+                                s.pend_mask),
+            n_released=s.n_released + jnp.where(
+                ovf, 0, jnp.sum(chosen)).astype(jnp.int32),
             overflow=s.overflow | ovf,
             hw_records=jnp.maximum(s.hw_records, n_keep),
         )
 
-    return jax.lax.while_loop(pending_due, release_one, state)
+    return jax.lax.while_loop(pending_due, release_chunk, state)
 
 
 def _retry_parked(state: SchedulerState, t_now: jax.Array,
@@ -476,9 +531,9 @@ def _retry_parked(state: SchedulerState, t_now: jax.Array,
 
     pred = ((bf == BF_EASY) & state.park_retry
             & jnp.any(state.park_seq < T_INF) & ~state.overflow)
-    out = jax.lax.cond(pred, sweep, lambda s: s, state)
-    # the latch is consumed per admit step whether or not it fired
-    return out._replace(park_retry=jnp.asarray(False))
+    return jax.lax.cond(pred, sweep, lambda s: s, state)
+    # NB: the caller (_admit_impl) consumes the park_retry latch per
+    # admit step whether or not the sweep fired.
 
 
 def _no_displace(state: SchedulerState, req: RequestBatch,
@@ -517,17 +572,14 @@ def _displace(state: SchedulerState, req: RequestBatch,
     head = jnp.argmin(jnp.where(active, s.park_seq, T_INF))
     nonhead = active & (jnp.arange(Q) != head)
 
-    def del_body(i, carry):
-        tl, ovf, hw = carry
-        do = nonhead[i]
-        tl2, o2, nk = tl_lib.update(
-            tl, s.park_ts[i], s.park_te[i], s.park_mask[i],
-            is_add=False, with_count=True)
-        return (_where_tree(do & ~o2, tl2, tl), ovf | (do & o2),
-                jnp.maximum(hw, jnp.where(do, nk, 0)))
-
-    tl, ovf, hw = jax.lax.fori_loop(
-        0, Q, del_body, (s.tl, jnp.asarray(False), jnp.int32(0)))
+    # batched lift: every non-head parked reservation comes off the
+    # timeline in ONE fused multi-interval delete (DESIGN.md §7) —
+    # the lifts commute, so this is bit-identical to the old
+    # per-entry fori_loop of updates.
+    tl, ovf, hw = tl_lib.update_many(
+        s.tl, s.park_ts, s.park_te, s.park_mask, nonhead,
+        is_add=False, with_count=True)
+    tl = _where_tree(ovf, s.tl, tl)
 
     res_r = search_lib.search(
         tl, req.t_r, req.t_du, req.t_dl, req.n_pe, policy_id,
@@ -595,11 +647,32 @@ def _admit_impl(state: SchedulerState, req: RequestBatch,
     Q = state.park_capacity
     bf = jnp.asarray(backfill_id, jnp.int32)
     backfilling = bool(Q) and auto_release
-    if auto_release:
-        state = release_due(state, req.t_a)
     if backfilling:
-        state = _retry_parked(state, req.t_a, bf, n_pe=n_pe,
-                              use_kernel=use_kernel)
+        # promote-due + release + retry sweep under ONE queue-work
+        # cond (DESIGN.md §7): a step whose queue holds nothing due
+        # and whose retry latch is unarmed — every step on an
+        # idle-queue stream — pays one predicate and the plain
+        # release loop, i.e. mode-`none` cost.
+        t_now = jnp.asarray(req.t_a, jnp.int32)
+        live = state.park_seq < T_INF
+        queue_pred = ((jnp.any(live & (state.park_ts <= t_now))
+                       | ((bf == BF_EASY) & state.park_retry
+                          & jnp.any(live)))
+                      & ~state.overflow)
+
+        def queue_work(s: SchedulerState) -> SchedulerState:
+            s = _promote_due(s, t_now)
+            s = _release_pending(s, t_now)
+            return _retry_parked(s, t_now, bf, n_pe=n_pe,
+                                 use_kernel=use_kernel)
+
+        state = jax.lax.cond(
+            queue_pred, queue_work,
+            lambda s: _release_pending(s, t_now), state)
+        # the retry latch is consumed per admit step either way
+        state = state._replace(park_retry=jnp.asarray(False))
+    elif auto_release:
+        state = release_due(state, req.t_a)
     # NB: searches at full capacity S — the per-request engine's
     # power-of-two bucketing needs the host-visible record count, which
     # does not exist inside a fixed-shape scan.  The fusion win (no
@@ -679,36 +752,28 @@ def _admit_impl(state: SchedulerState, req: RequestBatch,
             hw_pending=hw_pending,
         )
         if backfilling:
-            pslot = jnp.argmax(free_park)
-            live = jnp.sum(~free_park).astype(jnp.int32) + 1
-            wr = parks & ~ovf
-            out = out._replace(
-                park_ts=jnp.where(
-                    wr, out.park_ts.at[pslot].set(t_s), out.park_ts),
-                park_te=jnp.where(
-                    wr, out.park_te.at[pslot].set(t_e), out.park_te),
-                park_mask=jnp.where(
-                    wr, out.park_mask.at[pslot].set(pe_mask),
-                    out.park_mask),
-                park_tr=jnp.where(
-                    wr, out.park_tr.at[pslot].set(req.t_r),
-                    out.park_tr),
-                park_tdl=jnp.where(
-                    wr, out.park_tdl.at[pslot].set(req.t_dl),
-                    out.park_tdl),
-                park_npe=jnp.where(
-                    wr, out.park_npe.at[pslot].set(req.n_pe),
-                    out.park_npe),
-                park_seq=jnp.where(
-                    wr, out.park_seq.at[pslot].set(out.park_next_seq),
-                    out.park_seq),
-                park_next_seq=out.park_next_seq
-                + jnp.where(wr, 1, 0).astype(jnp.int32),
-                n_parked=out.n_parked
-                + jnp.where(wr, 1, 0).astype(jnp.int32),
-                hw_parked=jnp.maximum(
-                    out.hw_parked, jnp.where(wr, live, 0)),
-            )
+            # park bookkeeping sits behind its own cond: an accept
+            # that starts at its ready time (the overwhelmingly
+            # common case — always, on an idle-queue stream) pays one
+            # predicate instead of seven queue-array scatters
+            def park_write(o: SchedulerState) -> SchedulerState:
+                pslot = jnp.argmax(free_park)
+                live = jnp.sum(~free_park).astype(jnp.int32) + 1
+                return o._replace(
+                    park_ts=o.park_ts.at[pslot].set(t_s),
+                    park_te=o.park_te.at[pslot].set(t_e),
+                    park_mask=o.park_mask.at[pslot].set(pe_mask),
+                    park_tr=o.park_tr.at[pslot].set(req.t_r),
+                    park_tdl=o.park_tdl.at[pslot].set(req.t_dl),
+                    park_npe=o.park_npe.at[pslot].set(req.n_pe),
+                    park_seq=o.park_seq.at[pslot].set(o.park_next_seq),
+                    park_next_seq=o.park_next_seq + 1,
+                    n_parked=o.n_parked + 1,
+                    hw_parked=jnp.maximum(o.hw_parked, live),
+                )
+
+            out = jax.lax.cond(parks & ~ovf, park_write,
+                               lambda o: o, out)
         return out
 
     state = jax.lax.cond(found, commit, lambda s: s, state)
@@ -988,6 +1053,133 @@ def cancel_one(state: SchedulerState, t_s: int, t_e: int,
             start = _grown(start, out)
     raise RuntimeError(
         f"cancel still overflowing after {max_growths + 1} "
+        f"attempts (last tried capacity {start.tl.capacity})")
+
+
+@functools.partial(jax.jit, static_argnames=("require_pending",))
+def cancel_many_step(state: SchedulerState, t_s: jax.Array,
+                     t_e: jax.Array, masks: jax.Array,
+                     active: jax.Array, *,
+                     require_pending: bool = True
+                     ) -> Tuple[SchedulerState, jax.Array]:
+    """Withdraw up to K committed reservations in one fused dispatch.
+
+    The batched sibling of :func:`cancel_step`, built on
+    ``timeline.update_many``: all matched reservations are deleted in
+    one boundary-union + merge pass and their pending (or parked)
+    slots cleared together.  Cancellations of distinct reservations
+    commute, so this is decision-identical to K sequential cancels
+    (callers must not repeat a reservation within one batch — the
+    host wrapper deduplicates).  Returns the new state and a bool[K]
+    of per-entry outcomes (``require_pending`` semantics as in
+    :func:`cancel_step`).
+    """
+    K = t_s.shape[0]
+    active = jnp.asarray(active, bool)
+    pmatch = (state.pend_ts[None, :] == t_s[:, None]) & \
+        (state.pend_te[None, :] == t_e[:, None]) & \
+        jnp.all(state.pend_mask[None, :, :] == masks[:, None, :],
+                axis=2)                                       # [K, P]
+    found = jnp.any(pmatch, axis=1)
+    if state.park_capacity:
+        kmatch = (state.park_ts[None, :] == t_s[:, None]) & \
+            (state.park_te[None, :] == t_e[:, None]) & \
+            jnp.all(state.park_mask[None, :, :] == masks[:, None, :],
+                    axis=2) & (state.park_seq[None, :] < T_INF)
+        kfound = jnp.any(kmatch, axis=1)
+        found = found | kfound
+    ok = (found if require_pending else jnp.ones((K,), bool))
+    ok = ok & active & ~state.overflow
+    new_tl, ovf, n_keep = tl_lib.update_many(
+        state.tl, t_s, t_e, masks, ok, is_add=False, with_count=True)
+    do = ok & ~ovf
+    P = state.pending_capacity
+    slot = jnp.argmax(pmatch, axis=1)
+    clear = jnp.zeros((P + 1,), bool).at[
+        jnp.where(do & jnp.any(pmatch, axis=1), slot, P)].set(
+        True)[:P]
+    out = state._replace(
+        tl=_where_tree(ovf, state.tl, new_tl),
+        pend_ts=jnp.where(clear, T_INF, state.pend_ts),
+        pend_te=jnp.where(clear, T_INF, state.pend_te),
+        pend_mask=jnp.where(clear[:, None], jnp.uint32(0),
+                            state.pend_mask),
+        overflow=state.overflow | ovf,
+        hw_records=jnp.maximum(state.hw_records,
+                               jnp.where(jnp.any(ok), n_keep, 0)),
+    )
+    if state.park_capacity:
+        Q = state.park_capacity
+        pslot = jnp.argmax(kmatch, axis=1)
+        pclear = jnp.zeros((Q + 1,), bool).at[
+            jnp.where(do & kfound, pslot, Q)].set(True)[:Q]
+        out = out._replace(
+            park_ts=jnp.where(pclear, T_INF, out.park_ts),
+            park_te=jnp.where(pclear, T_INF, out.park_te),
+            park_mask=jnp.where(pclear[:, None], jnp.uint32(0),
+                                out.park_mask),
+            park_seq=jnp.where(pclear, T_INF, out.park_seq),
+            # a successful withdrawal frees future capacity: arm the
+            # EASY retry-on-release sweep for the next admit step
+            park_retry=out.park_retry | jnp.any(do),
+        )
+    return out, do
+
+
+def cancel_many(state: SchedulerState, entries, *,
+                require_pending: bool = True,
+                max_growths: int = MAX_DOUBLINGS
+                ) -> Tuple[SchedulerState, List[bool]]:
+    """Host wrapper of :func:`cancel_many_step` with overflow growth.
+
+    ``entries`` is a sequence of ``(t_s, t_e, mask)`` triples.
+    Under ``require_pending`` repeated triples within one batch are
+    deduplicated on the host: the first occurrence cancels, later
+    duplicates report ``False`` — exactly what sequential
+    :func:`cancel_one` calls return, since the first cancel clears
+    the matching slot.  With ``require_pending=False`` sequential
+    cancels are blind deletes that report ``True`` every time, so
+    duplicates stay active (the batched AND-NOT union is idempotent
+    on occupancy) and report ``True`` as well.
+    """
+    entries = list(entries)
+    if not entries:
+        return state, []
+    W = state.tl.words
+    if require_pending:
+        seen: dict = {}
+        dup = np.zeros(len(entries), bool)
+        for i, (ts, te, mk) in enumerate(entries):
+            key = (int(ts), int(te), bytes(np.asarray(mk)))
+            if key in seen:
+                dup[i] = True
+            seen[key] = i
+        act = jnp.asarray(~dup)
+    else:
+        act = jnp.ones((len(entries),), bool)
+    # pad K to the next power of two (inactive rows) so varying batch
+    # sizes share O(log K) compiled shapes instead of one per size
+    K_pad = tl_lib.next_pow2(len(entries)) \
+        if len(entries) > 1 else 1
+    pad = K_pad - len(entries)
+    act = jnp.concatenate([act, jnp.zeros((pad,), bool)])
+    t_s = jnp.asarray([e[0] for e in entries] + [0] * pad, jnp.int32)
+    t_e = jnp.asarray([e[1] for e in entries] + [0] * pad, jnp.int32)
+    masks = jnp.asarray(np.stack(
+        [np.asarray(e[2], np.uint32).reshape(W) for e in entries]
+        + [np.zeros(W, np.uint32)] * pad))
+    start = state
+    for attempt in range(max_growths + 1):
+        out, done = cancel_many_step(
+            start, t_s, t_e, masks, act,
+            require_pending=require_pending)
+        if not bool(out.overflow):
+            return out, [bool(d) for d in
+                         np.asarray(done)[:len(entries)]]
+        if attempt < max_growths:
+            start = _grown(start, out)
+    raise RuntimeError(
+        f"cancel_many still overflowing after {max_growths + 1} "
         f"attempts (last tried capacity {start.tl.capacity})")
 
 

@@ -54,14 +54,22 @@ def select(policy_id: jax.Array, n_free: jax.Array, duration: jax.Array,
                                                             jax.Array]:
     """Pick the best feasible candidate for ``policy_id``.
 
-    Returns ``(best_index, found)``: lexicographic (key1, key2, t_s)
-    minimum over feasible candidates via a stable three-key sort.
+    Returns ``(best_index, found)``: the lexicographic
+    (key1, key2, t_s) minimum over feasible candidates, earliest index
+    on full ties.  Computed sort-free (DESIGN.md §7) as three chained
+    masked min-reductions plus a first-true pick — identical to the
+    stable three-key lexsort it replaces, without sorting the
+    candidate axis on every admission step.
     """
     big = jnp.iinfo(jnp.int32).max
     key1, key2 = integer_keys(policy_id, n_free, duration)
     key1 = jnp.where(feasible, key1, big)
     key2 = jnp.where(feasible, key2, big)
     tiebreak = jnp.where(feasible, starts, big)
-    order = jnp.lexsort((tiebreak, key2, key1))
-    best = order[0]
+    m1 = jnp.min(key1)
+    e1 = key1 == m1
+    m2 = jnp.min(jnp.where(e1, key2, big))
+    e2 = e1 & (key2 == m2)
+    m3 = jnp.min(jnp.where(e2, tiebreak, big))
+    best = jnp.argmax(e2 & (tiebreak == m3))
     return best, feasible[best]

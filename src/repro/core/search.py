@@ -20,6 +20,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import policies as policies_lib
 from repro.core import timeline as tl_lib
@@ -54,6 +55,15 @@ def candidate_starts(tl: Timeline, t_r: jax.Array, t_du: jax.Array,
     Candidates are the ready time, the latest start, every boundary in
     range, and every boundary shifted left by the duration (end-aligned
     placements) — the paper's Section 4.2 enumeration.
+
+    The sorted array is *deduplicated and compacted* (DESIGN.md §7):
+    distinct live candidates ascending at the front, all duplicates
+    and out-of-window slots collapsed into the ``T_INF`` tail.
+    Duplicates share their first occurrence's start value, hence its
+    rectangle and policy score, so dropping them never changes the
+    selected start; compaction makes the effective candidate count
+    track *live* boundaries instead of static capacity, which is what
+    lets the availscan kernel skip all-padding tiles.
     """
     lo = t_r
     hi = t_dl - t_du
@@ -65,37 +75,68 @@ def candidate_starts(tl: Timeline, t_r: jax.Array, t_du: jax.Array,
     shifted = jnp.where(tl.times < T_INF, tl.times - t_du, T_INF)
     c_shift = jnp.where(in_range(shifted), shifted, T_INF)
     ends = jnp.stack([lo, hi]).astype(jnp.int32)
-    return jnp.sort(jnp.concatenate([ends, c_bound, c_shift]))
+    cand = jnp.sort(jnp.concatenate([ends, c_bound, c_shift]))
+    # dedupe + compact: keep the first occurrence of each distinct
+    # live value, scatter the survivors to the front in order.
+    P = cand.shape[0]
+    keep = (cand < T_INF) & jnp.concatenate(
+        [jnp.ones((1,), bool), cand[1:] != cand[:-1]])
+    dest = jnp.where(keep, jnp.cumsum(keep) - 1, P)
+    return jnp.full((P + 1,), T_INF, jnp.int32).at[dest].set(
+        jnp.where(keep, cand, T_INF))[:P]
 
 
 def availability_rectangles(
     tl: Timeline, starts: jax.Array, t_du: jax.Array, t_now: jax.Array,
     n_pe: int,
 ) -> Rectangles:
-    """Maximum availability rectangle per candidate (Algorithm 3 l.6-9)."""
-    occ_bits = tl_lib.unpack_bits(tl.occ, n_pe).astype(jnp.float32)
+    """Maximum availability rectangle per candidate (Algorithm 3 l.6-9).
+
+    The pure-jnp reference path computes both contractions directly on
+    the *packed* uint32 occupancy words (bitwise OR / AND + popcount)
+    instead of bit-expanding to a ``[S, n_pe]`` float matrix: the
+    booleans are identical to the MXU formulation of DESIGN.md §2
+    (which the Pallas kernel keeps), but each uint32 op covers 32 PEs,
+    so the hot contraction shrinks ~32x on CPU/VPU hardware.
+
+    Invalid candidates (``T_INF`` padding) are masked to fixed
+    sentinels (``n_free = t_begin = t_end = 0``) so the kernel path
+    can skip all-padding tiles and still match this reference
+    element-for-element; sentinels can never win selection (invalid
+    candidates are never feasible) and the all-infeasible fallback
+    index 0 is always a live candidate.
+    """
     nxt = tl_lib.next_times(tl)
     valid = starts < T_INF
     a = jnp.minimum(starts, T_INF - t_du)       # avoid int32 overflow
     b = a + t_du
-    # window overlap and busy-PE union (first MXU contraction)
+    # window overlap and busy-PE union (bitwise OR over packed words)
     ov = ((tl.times[None, :] < b[:, None]) &
-          (nxt[None, :] > a[:, None])).astype(jnp.float32)      # [P, S]
-    busy = jax.lax.dot(ov, occ_bits) > 0.5                      # [P, pe]
-    free = ~busy                                                # [P, pe]
-    n_free = jnp.sum(free, axis=1).astype(jnp.int32)
+          (nxt[None, :] > a[:, None]))                          # [P, S]
+    busy_w = jax.lax.reduce(
+        jnp.where(ov[:, :, None], tl.occ[None, :, :], jnp.uint32(0)),
+        np.uint32(0), jax.lax.bitwise_or, (1,))                 # [P, W]
+    # occupancy words never set bits past n_pe (timeline invariant),
+    # so the popcount of the busy union counts real PEs only
+    n_free = (n_pe - jnp.sum(
+        jax.lax.population_count(busy_w), axis=1).astype(jnp.int32))
+    free_w = ~busy_w                                            # [P, W]
     # blocking slots: a slot blocks iff it occupies any free PE
-    # (second MXU contraction, contracting the PE axis)
-    blocking = jax.lax.dot_general(
-        free.astype(jnp.float32), occ_bits,
-        dimension_numbers=(((1,), (1,)), ((), ()))) > 0.5        # [P, S]
+    # (bitwise AND against the free-word union; junk free bits past
+    # n_pe never match because occupancy words are clean there)
+    blocking = jnp.any(
+        (free_w[:, None, :] & tl.occ[None, :, :]) != 0, axis=2)  # [P, S]
     left = blocking & (nxt[None, :] <= a[:, None])
     t_begin = jnp.max(jnp.where(left, nxt[None, :], -T_INF), axis=1)
     t_begin = jnp.minimum(jnp.maximum(t_begin, t_now), a)
     right = blocking & (tl.times[None, :] >= b[:, None])
     t_end = jnp.min(jnp.where(right, tl.times[None, :], T_INF), axis=1)
-    return Rectangles(starts=starts, n_free=n_free, t_begin=t_begin,
-                      t_end=t_end, valid=valid)
+    zero = jnp.int32(0)
+    return Rectangles(starts=starts,
+                      n_free=jnp.where(valid, n_free, zero),
+                      t_begin=jnp.where(valid, t_begin, zero),
+                      t_end=jnp.where(valid, t_end, zero),
+                      valid=valid)
 
 
 def _winning_pe_mask(tl: Timeline, t_s: jax.Array, t_du: jax.Array,
@@ -137,10 +178,27 @@ def search(
     starts = candidate_starts(tl, t_r, t_du, t_dl)
     if use_kernel:
         from repro.kernels import ops as kernel_ops
-        rects = kernel_ops.availability_rectangles(
-            tl, starts, t_du, t_now, n_pe=n_pe)
-    else:
-        rects = availability_rectangles(tl, starts, t_du, t_now, n_pe)
+        # fused path: rectangles + policy selection in one kernel —
+        # the per-candidate vectors never round-trip through HBM
+        sel = kernel_ops.search_select(
+            tl, starts, t_du, t_now, n_req, policy_id, n_pe=n_pe)
+        if sel is not None:
+            found = sel["found"]
+            t_s = starts[sel["best"]]
+            pe_mask = _winning_pe_mask(tl, t_s, t_du, n_req, n_pe)
+            return SearchResult(
+                found=found,
+                t_s=t_s,
+                t_e=t_s + t_du,
+                pe_mask=jnp.where(found, pe_mask, jnp.uint32(0)),
+                n_free=sel["n_free"],
+                t_begin=sel["t_begin"],
+                t_end=sel["t_end"],
+            )
+    # jnp reference path — also the fallback when search_select
+    # returned None (shape beyond the kernel VMEM budget; the unfused
+    # kernel entry exists for the element-wise oracle tests)
+    rects = availability_rectangles(tl, starts, t_du, t_now, n_pe)
     feasible = rects.valid & (rects.n_free >= n_req)
     duration = rects.t_end - rects.t_begin
     best, found = policies_lib.select(

@@ -239,6 +239,32 @@ def next_times(tl: Timeline) -> jax.Array:
         [tl.times[1:], jnp.array([T_INF], dtype=jnp.int32)])
 
 
+def _merge_compact(ext_t: jax.Array, ext_o: jax.Array, S: int,
+                   words: int) -> Tuple[Timeline, jax.Array, jax.Array]:
+    """Shared epilogue of every update: merge + scatter-compact.
+
+    ``ext_t``/``ext_o`` are the time-sorted extended rows (originals
+    plus inserted boundaries, already range-updated).  Keeps rows whose
+    occupancy differs from the previous kept row — duplicates carry
+    identical occupancy after the range update, so comparing against
+    the immediate predecessor suffices — then scatter-compacts the
+    survivors back into capacity ``S``.
+    """
+    R = ext_t.shape[0]
+    prev = jnp.concatenate(
+        [jnp.zeros((1, words), jnp.uint32), ext_o[:-1]])
+    keep = (ext_t < T_INF) & jnp.any(ext_o != prev, axis=1)
+    pos = jnp.cumsum(keep) - 1
+    dest = jnp.where(keep, pos, R - 1)
+    out_t = jnp.full((R,), T_INF, jnp.int32).at[dest].set(
+        jnp.where(keep, ext_t, T_INF))
+    out_o = jnp.zeros((R, words), jnp.uint32).at[dest].set(
+        jnp.where(keep[:, None], ext_o, jnp.uint32(0)))
+    n_keep = jnp.sum(keep).astype(jnp.int32)
+    overflow = n_keep > S
+    return Timeline(times=out_t[:S], occ=out_o[:S]), overflow, n_keep
+
+
 @functools.partial(jax.jit, static_argnames=("is_add", "with_count"))
 def update(tl: Timeline, t_s: jax.Array, t_e: jax.Array,
            mask: jax.Array, *, is_add: bool,
@@ -256,6 +282,64 @@ def update(tl: Timeline, t_s: jax.Array, t_e: jax.Array,
     where ``n_keep`` is the record count the result *needed* (it may
     exceed the capacity ``S``) — the growth wrappers use it to size
     the retry in one step.
+
+    Sort-free (DESIGN.md §7): the timeline is sorted by invariant, so
+    the two boundary records are placed with ``searchsorted`` and a
+    shift-gather instead of re-lexsorting all ``S + 2`` rows on every
+    insert.  Bit-identical to :func:`update_lexsort` (the retained
+    oracle, asserted by ``tests/test_timeline_fast.py``).
+    """
+    S = tl.capacity
+    t_s = jnp.asarray(t_s, jnp.int32)
+    t_e = jnp.asarray(t_e, jnp.int32)
+    # 1. merged positions of the two inserted boundary records: after
+    #    all originals of equal time ('right'), and — matching the
+    #    retained lexsort oracle's stable tie-break — the t_s record
+    #    before the t_e record when the two coincide.
+    i_s = jnp.searchsorted(tl.times, t_s, side="right").astype(jnp.int32)
+    i_e = jnp.searchsorted(tl.times, t_e, side="right").astype(jnp.int32)
+    pos_s = i_s + (t_e < t_s).astype(jnp.int32)
+    pos_e = i_e + (t_s <= t_e).astype(jnp.int32)
+    # 2. shift-gather the originals around the two insertion points;
+    #    inserted records inherit the occupancy in effect at their
+    #    instant.
+    idx = jnp.arange(S + 2, dtype=jnp.int32)
+    src = idx - (idx > pos_s).astype(jnp.int32) \
+        - (idx > pos_e).astype(jnp.int32)
+    src = jnp.clip(src, 0, S - 1)
+    ext_t = jnp.where(
+        idx == pos_s, t_s,
+        jnp.where(idx == pos_e, t_e, tl.times[src]))
+    ext_o = jnp.where(
+        (idx == pos_s)[:, None], occupancy_at(tl, t_s)[None, :],
+        jnp.where((idx == pos_e)[:, None],
+                  occupancy_at(tl, t_e)[None, :], tl.occ[src]))
+    # 3. apply the range update.
+    in_range = (ext_t >= t_s) & (ext_t < t_e)
+    if is_add:
+        upd = ext_o | mask[None, :]
+    else:
+        upd = ext_o & ~mask[None, :]
+    ext_o = jnp.where(in_range[:, None], upd, ext_o)
+    # 4.-5. merge + scatter-compact back to capacity S.
+    out, overflow, n_keep = _merge_compact(ext_t, ext_o, S, tl.words)
+    if with_count:
+        return out, overflow, n_keep
+    return out, overflow
+
+
+@functools.partial(jax.jit, static_argnames=("is_add", "with_count"))
+def update_lexsort(tl: Timeline, t_s: jax.Array, t_e: jax.Array,
+                   mask: jax.Array, *, is_add: bool,
+                   with_count: bool = False
+                   ) -> Union[Tuple[Timeline, jax.Array],
+                              Tuple[Timeline, jax.Array, jax.Array]]:
+    """The original lexsort-based :func:`update` (the PR 1-4 hot path).
+
+    Retained as the bit-exactness oracle for the sort-free
+    implementations: ``tests/test_timeline_fast.py`` fuzzes
+    :func:`update` and :func:`update_many` against it.  Not used on
+    any hot path.
     """
     S = tl.capacity
     t_s = jnp.asarray(t_s, jnp.int32)
@@ -277,22 +361,79 @@ def update(tl: Timeline, t_s: jax.Array, t_e: jax.Array,
     else:
         upd = ext_o & ~mask[None, :]
     ext_o = jnp.where(in_range[:, None], upd, ext_o)
-    # 4. merge: keep rows whose occupancy differs from the previous kept
-    #    row.  Because duplicates carry identical occupancy after the
-    #    update, comparing against the immediate predecessor suffices.
-    prev = jnp.concatenate(
-        [jnp.zeros((1, tl.words), jnp.uint32), ext_o[:-1]])
-    keep = (ext_t < T_INF) & jnp.any(ext_o != prev, axis=1)
-    # 5. scatter-compact back to capacity S (+2 scratch rows).
-    pos = jnp.cumsum(keep) - 1
-    dest = jnp.where(keep, pos, S + 1)
-    out_t = jnp.full((S + 2,), T_INF, jnp.int32).at[dest].set(
-        jnp.where(keep, ext_t, T_INF))
-    out_o = jnp.zeros((S + 2, tl.words), jnp.uint32).at[dest].set(
-        jnp.where(keep[:, None], ext_o, jnp.uint32(0)))
-    n_keep = jnp.sum(keep).astype(jnp.int32)
-    overflow = n_keep > S
-    out = Timeline(times=out_t[:S], occ=out_o[:S])
+    # 4.-5. merge + scatter-compact back to capacity S.
+    out, overflow, n_keep = _merge_compact(ext_t, ext_o, S, tl.words)
+    if with_count:
+        return out, overflow, n_keep
+    return out, overflow
+
+
+@functools.partial(jax.jit, static_argnames=("is_add", "with_count"))
+def update_many(tl: Timeline, t_s: jax.Array, t_e: jax.Array,
+                masks: jax.Array, active: jax.Array, *, is_add: bool,
+                with_count: bool = False
+                ) -> Union[Tuple[Timeline, jax.Array],
+                           Tuple[Timeline, jax.Array, jax.Array]]:
+    """Batched ``update``: K same-direction intervals, one merge pass.
+
+    Applies every interval ``[t_s[k], t_e[k]) x masks[k]`` with
+    ``active[k]`` set — all adds or all deletes (``is_add`` is
+    static).  Same-direction interval updates commute (a segment's
+    occupancy is the OR / AND-NOT of the union of covering masks) and
+    the merged compacted timeline is a *canonical* representation of
+    the occupancy step function, so one batched pass is bit-identical
+    to applying the K intervals through :func:`update` sequentially —
+    the decision-safety argument of DESIGN.md §7 — while paying one
+    boundary union + one segment-mask pass + one merge/compact
+    instead of K.
+
+    ``overflow`` flags that the final compacted result needed more
+    than ``S`` records (``n_keep`` with ``with_count=True``); unlike
+    a sequential chain there are no intermediate states, so a batch
+    whose *end state* fits never overflows even if some sequential
+    order would have spiked past ``S`` transiently.
+    """
+    S, W = tl.capacity, tl.words
+    K = t_s.shape[0]
+    t_s = jnp.asarray(t_s, jnp.int32)
+    t_e = jnp.asarray(t_e, jnp.int32)
+    active = jnp.asarray(active, bool)
+    R = S + 2 * K
+    # 1. boundary records: both endpoints of every active interval;
+    #    inactive intervals contribute T_INF rows, which the merge
+    #    drops.  Inserted records go after originals of equal time;
+    #    ties among boundaries break by position (t_s block first).
+    b_t = jnp.where(jnp.concatenate([active, active]),
+                    jnp.concatenate([t_s, t_e]), T_INF)
+    base = jnp.searchsorted(tl.times, b_t, side="right").astype(jnp.int32)
+    lt = b_t[None, :] < b_t[:, None]
+    tie = (b_t[None, :] == b_t[:, None]) & \
+        (jnp.arange(2 * K)[None, :] < jnp.arange(2 * K)[:, None])
+    rank = jnp.sum(lt | tie, axis=1).astype(jnp.int32)
+    pos_b = base + rank
+    # originals shift right past every boundary strictly below them
+    pos_o = jnp.arange(S, dtype=jnp.int32) + jnp.sum(
+        b_t[None, :] < tl.times[:, None], axis=1).astype(jnp.int32)
+    # 2. scatter originals + boundaries into the merged order (the
+    #    positions are pairwise distinct and cover [0, R) exactly).
+    occ_b = jax.vmap(occupancy_at, in_axes=(None, 0))(tl, b_t)
+    ext_t = jnp.zeros((R,), jnp.int32).at[pos_o].set(
+        tl.times).at[pos_b].set(b_t)
+    ext_o = jnp.zeros((R, W), jnp.uint32).at[pos_o].set(
+        tl.occ).at[pos_b].set(occ_b)
+    # 3. segment-mask union: OR (add) / AND-NOT (delete) of every
+    #    active interval covering each record's instant.
+    cover = active[None, :] & (t_s[None, :] <= ext_t[:, None]) & \
+        (ext_t[:, None] < t_e[None, :])                        # [R, K]
+    union = jax.lax.reduce(
+        jnp.where(cover[:, :, None], masks[None, :, :], jnp.uint32(0)),
+        np.uint32(0), jax.lax.bitwise_or, (1,))                # [R, W]
+    if is_add:
+        ext_o = ext_o | union
+    else:
+        ext_o = ext_o & ~union
+    # 4.-5. merge + scatter-compact back to capacity S.
+    out, overflow, n_keep = _merge_compact(ext_t, ext_o, S, W)
     if with_count:
         return out, overflow, n_keep
     return out, overflow

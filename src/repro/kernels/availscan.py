@@ -1,4 +1,4 @@
-"""Pallas TPU kernel for the availability-rectangle scan.
+"""Pallas TPU kernels for the availability-rectangle scan.
 
 This is the paper's computational hot spot: ``findAllocation`` spends
 ``O(p * u * v)`` testing every candidate start against every slot
@@ -15,6 +15,21 @@ candidate tile — the TPU analogue of the paper's "organise availability
 for efficient search".  All comparisons stay in exact int32; only the
 0/1 contraction operands are f32 (counts < 2**24, exact).
 
+Occupancy awareness (DESIGN.md §7): the candidate array arrives
+deduplicated and compacted (live starts first, ``T_INF`` tail — see
+``search.candidate_starts``), and the *live candidate count* rides in
+as a scalar-prefetch operand.  Tiles past the live prefix are skipped
+with ``pl.when``: they write sentinel outputs without touching the
+MXU, so per-search cost tracks live boundaries instead of the static
+capacity ``S``.
+
+:func:`availscan_select` additionally fuses the policy selection
+(``policies.select``) into the kernel epilogue: each tile reduces its
+candidates to a lexicographic best and folds it into a running-best
+accumulator across the sequential grid, so only one 8-lane result row
+leaves the kernel — the per-candidate ``[P]`` vectors (and the
+``[Pt, S]`` blocking matrix) never round-trip through HBM.
+
 VMEM budget per program (defaults Pt=128, S<=1024, n_pe<=2048):
 occ_bits f32[S, pe] = 8 MiB worst case + tiles ~1.5 MiB < 16 MiB.
 The ops.py wrapper falls back to the pure-jnp path beyond these bounds.
@@ -27,6 +42,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.types import T_INF
 
@@ -34,37 +50,50 @@ from repro.core.types import T_INF
 DEFAULT_PT = 128
 # TPU lane width; S and n_pe are padded to multiples of this.
 _LANE = 128
+_BIG = jnp.iinfo(jnp.int32).max
 
 
-def _availscan_kernel(a_ref, b_ref, times_ref, nxt_ref, occ_ref,
-                      nfree_ref, tb_ref, te_ref):
-    a = a_ref[:, 0]            # i32[Pt]
-    b = b_ref[:, 0]            # i32[Pt]
-    times = times_ref[0, :]    # i32[S]
-    nxt = nxt_ref[0, :]        # i32[S]
-    occ = occ_ref[...]         # f32[S, n_pe] 0/1
-
-    # --- window overlap and busy-PE union (MXU contraction 1) --------
+def _tile_rects(a, b, times, nxt, occ):
+    """The two MXU contractions + rectangle bounds for one tile."""
     ov = ((times[None, :] < b[:, None]) &
           (nxt[None, :] > a[:, None])).astype(jnp.float32)     # [Pt, S]
     busy = jax.lax.dot(ov, occ,
                        preferred_element_type=jnp.float32)     # [Pt, pe]
     free = (busy < 0.5)
-    nfree_ref[:, 0] = jnp.sum(free.astype(jnp.int32), axis=1)
-
-    # --- blocking slots (MXU contraction 2, contracting the PE axis) -
+    nfree = jnp.sum(free.astype(jnp.int32), axis=1)
     blocking = jax.lax.dot_general(
         free.astype(jnp.float32), occ,
         dimension_numbers=(((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32) > 0.5              # [Pt, S]
-
-    # --- rectangle bounds: masked max/min over the slot axis ---------
     left = blocking & (nxt[None, :] <= a[:, None])
-    tb_ref[:, 0] = jnp.max(
-        jnp.where(left, nxt[None, :], -T_INF), axis=1)
+    tb = jnp.max(jnp.where(left, nxt[None, :], -T_INF), axis=1)
     right = blocking & (times[None, :] >= b[:, None])
-    te_ref[:, 0] = jnp.min(
-        jnp.where(right, times[None, :], T_INF), axis=1)
+    te = jnp.min(jnp.where(right, times[None, :], T_INF), axis=1)
+    return nfree, tb, te
+
+
+def _availscan_kernel(nlive_ref, a_ref, b_ref, times_ref, nxt_ref,
+                      occ_ref, nfree_ref, tb_ref, te_ref, *, pt):
+    i = pl.program_id(0)
+    live = i * pt < nlive_ref[0]
+
+    @pl.when(live)
+    def _():
+        nfree, tb, te = _tile_rects(
+            a_ref[:, 0], b_ref[:, 0], times_ref[0, :], nxt_ref[0, :],
+            occ_ref[...])
+        nfree_ref[:, 0] = nfree
+        tb_ref[:, 0] = tb
+        te_ref[:, 0] = te
+
+    @pl.when(~live)
+    def _():
+        # all-padding tile: sentinel outputs, no MXU work.  The ops.py
+        # wrapper masks every invalid candidate to the reference
+        # sentinels afterwards, so these values are never observed.
+        nfree_ref[:, 0] = jnp.zeros((pt,), jnp.int32)
+        tb_ref[:, 0] = jnp.full((pt,), -T_INF, jnp.int32)
+        te_ref[:, 0] = jnp.full((pt,), T_INF, jnp.int32)
 
 
 def _pad_to(x: jax.Array, size: int, fill) -> jax.Array:
@@ -83,15 +112,18 @@ def availscan(
     nxt: jax.Array,        # i32[S]
     a: jax.Array,          # i32[P] window starts (overflow-clamped)
     b: jax.Array,          # i32[P] window ends
+    n_live: jax.Array,     # i32 scalar: live (compacted) candidates
     *,
     pt: int = DEFAULT_PT,
     interpret: bool = True,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Tiled scan over candidates.
+    """Tiled scan over candidates, skipping all-padding tiles.
 
     Returns raw ``(n_free, t_begin_raw, t_end_raw)`` — ``n_free`` still
     counts PE-axis padding (caller subtracts) and the bounds carry
     ``-T_INF`` / ``T_INF`` sentinels when unblocked (caller clamps).
+    ``n_live`` is a scalar-prefetch operand: tiles whose candidates
+    are all ``T_INF`` padding skip both contractions.
     """
     S, n_pe_p = occ_bits.shape
     assert S % _LANE == 0 and n_pe_p % _LANE == 0, (S, n_pe_p)
@@ -101,25 +133,168 @@ def availscan(
     b_p = _pad_to(b, P_pad, T_INF)[:, None]
     grid = (P_pad // pt,)
     nfree, tb, te = pl.pallas_call(
-        _availscan_kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((pt, 1), lambda i: (i, 0)),       # a
-            pl.BlockSpec((pt, 1), lambda i: (i, 0)),       # b
-            pl.BlockSpec((1, S), lambda i: (0, 0)),        # times
-            pl.BlockSpec((1, S), lambda i: (0, 0)),        # nxt
-            pl.BlockSpec((S, n_pe_p), lambda i: (0, 0)),   # occ_bits
-        ],
-        out_specs=[
-            pl.BlockSpec((pt, 1), lambda i: (i, 0)),
-            pl.BlockSpec((pt, 1), lambda i: (i, 0)),
-            pl.BlockSpec((pt, 1), lambda i: (i, 0)),
-        ],
+        functools.partial(_availscan_kernel, pt=pt),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((pt, 1), lambda i, s: (i, 0)),      # a
+                pl.BlockSpec((pt, 1), lambda i, s: (i, 0)),      # b
+                pl.BlockSpec((1, S), lambda i, s: (0, 0)),       # times
+                pl.BlockSpec((1, S), lambda i, s: (0, 0)),       # nxt
+                pl.BlockSpec((S, n_pe_p), lambda i, s: (0, 0)),  # occ
+            ],
+            out_specs=[
+                pl.BlockSpec((pt, 1), lambda i, s: (i, 0)),
+                pl.BlockSpec((pt, 1), lambda i, s: (i, 0)),
+                pl.BlockSpec((pt, 1), lambda i, s: (i, 0)),
+            ],
+        ),
         out_shape=[
             jax.ShapeDtypeStruct((P_pad, 1), jnp.int32),
             jax.ShapeDtypeStruct((P_pad, 1), jnp.int32),
             jax.ShapeDtypeStruct((P_pad, 1), jnp.int32),
         ],
         interpret=interpret,
-    )(a_p, b_p, times[None, :], nxt[None, :], occ_bits)
+    )(jnp.reshape(n_live, (1,)).astype(jnp.int32), a_p, b_p,
+      times[None, :], nxt[None, :], occ_bits)
     return nfree[:P, 0], tb[:P, 0], te[:P, 0]
+
+
+def _integer_keys_tile(policy_id, n_free, duration):
+    """In-kernel mirror of ``policies.integer_keys`` (where-chain)."""
+    nf = n_free.astype(jnp.int32)
+    du = duration.astype(jnp.int32)
+    du_hi = du >> 16
+    du_lo = du & 0xFFFF
+    p_lo_raw = nf * du_lo
+    p_hi = nf * du_hi + (p_lo_raw >> 16)
+    p_lo = p_lo_raw & 0xFFFF
+    zero = jnp.zeros_like(nf)
+    key1 = jnp.where(
+        policy_id == 1, nf, jnp.where(
+            policy_id == 2, -nf, jnp.where(
+                policy_id == 3, du, jnp.where(
+                    policy_id == 4, -du, jnp.where(
+                        policy_id == 5, p_hi, jnp.where(
+                            policy_id == 6, -p_hi, zero))))))
+    key2 = jnp.where(policy_id == 5, p_lo,
+                     jnp.where(policy_id == 6, -p_lo, zero))
+    return key1, key2
+
+
+def _availscan_select_kernel(scal_ref, starts_ref, a_ref, b_ref,
+                             times_ref, nxt_ref, occ_ref, acc_ref, *,
+                             pt):
+    i = pl.program_id(0)
+    n_live = scal_ref[0]
+    policy_id = scal_ref[1]
+    n_req = scal_ref[2]
+    t_now = scal_ref[3]
+    pad_corr = scal_ref[4]
+
+    @pl.when(i == 0)
+    def _():
+        # lexicographic +inf on the four comparison lanes: no tile
+        # has contributed yet (built from iota — pallas kernels may
+        # not capture constant arrays)
+        lane = jax.lax.iota(jnp.int32, 8)
+        acc_ref[0, :] = jnp.where(lane < 4, _BIG, 0)
+
+    @pl.when(i * pt < n_live)
+    def _():
+        starts = starts_ref[:, 0]
+        a = a_ref[:, 0]
+        nfree_raw, tb_raw, te_raw = _tile_rects(
+            a, b_ref[:, 0], times_ref[0, :], nxt_ref[0, :],
+            occ_ref[...])
+        valid = starts < T_INF
+        # the exact post-processing of the ops.py wrapper / jnp ref
+        zero = jnp.zeros((pt,), jnp.int32)
+        n_free = jnp.where(valid, nfree_raw - pad_corr, zero)
+        t_begin = jnp.where(
+            valid, jnp.minimum(jnp.maximum(tb_raw, t_now), a), zero)
+        t_end = jnp.where(valid, te_raw, zero)
+        # the exact scoring of policies.select
+        feasible = valid & (n_free >= n_req)
+        key1, key2 = _integer_keys_tile(policy_id, n_free,
+                                        t_end - t_begin)
+        key1 = jnp.where(feasible, key1, _BIG)
+        key2 = jnp.where(feasible, key2, _BIG)
+        tb = jnp.where(feasible, starts, _BIG)
+        # tile-local lexicographic min of (key1, key2, tb, index)
+        idx = i * pt + jax.lax.iota(jnp.int32, pt)
+        m1 = jnp.min(key1)
+        e1 = key1 == m1
+        m2 = jnp.min(jnp.where(e1, key2, _BIG))
+        e2 = e1 & (key2 == m2)
+        m3 = jnp.min(jnp.where(e2, tb, _BIG))
+        e3 = e2 & (tb == m3)
+        m4 = jnp.min(jnp.where(e3, idx, _BIG))
+        win = e3 & (idx == m4)
+
+        def pick(v):
+            return jnp.sum(jnp.where(win, v, 0).astype(jnp.int32))
+
+        row = jnp.stack([m1, m2, m3, m4, pick(n_free), pick(t_begin),
+                         pick(t_end), pick(feasible.astype(jnp.int32))])
+        # fold into the running best: strict lexicographic less on
+        # (key1, key2, tb, index) — index is unique, so ties cannot
+        # occur and "first tile wins" falls out of the index key.
+        acc = acc_ref[0, :]
+        less = (row[0] < acc[0]) | (
+            (row[0] == acc[0]) & ((row[1] < acc[1]) | (
+                (row[1] == acc[1]) & ((row[2] < acc[2]) | (
+                    (row[2] == acc[2]) & (row[3] < acc[3]))))))
+        acc_ref[0, :] = jnp.where(less, row, acc)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("pt", "interpret"))
+def availscan_select(
+    occ_bits: jax.Array,   # f32[S, n_pe_padded] 0/1 occupancy
+    times: jax.Array,      # i32[S]
+    nxt: jax.Array,        # i32[S]
+    starts: jax.Array,     # i32[P] candidate starts (T_INF padded)
+    a: jax.Array,          # i32[P] window starts (overflow-clamped)
+    b: jax.Array,          # i32[P] window ends
+    scalars: jax.Array,    # i32[5]: n_live, policy, n_req, t_now, pad
+    *,
+    pt: int = DEFAULT_PT,
+    interpret: bool = True,
+) -> jax.Array:
+    """Fused availscan + policy selection (one int32[8] result row).
+
+    Row layout: ``key1, key2, start_key, best_index, n_free, t_begin,
+    t_end, feasible`` of the winning candidate — post-processed values
+    (pad-corrected ``n_free``, clamped ``t_begin``), bit-identical to
+    the jnp ``availability_rectangles`` + ``policies.select`` chain.
+    """
+    S, n_pe_p = occ_bits.shape
+    assert S % _LANE == 0 and n_pe_p % _LANE == 0, (S, n_pe_p)
+    P = a.shape[0]
+    P_pad = -(-P // pt) * pt
+    starts_p = _pad_to(starts, P_pad, T_INF)[:, None]
+    a_p = _pad_to(a, P_pad, T_INF - 1)[:, None]
+    b_p = _pad_to(b, P_pad, T_INF)[:, None]
+    grid = (P_pad // pt,)
+    acc = pl.pallas_call(
+        functools.partial(_availscan_select_kernel, pt=pt),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((pt, 1), lambda i, s: (i, 0)),      # starts
+                pl.BlockSpec((pt, 1), lambda i, s: (i, 0)),      # a
+                pl.BlockSpec((pt, 1), lambda i, s: (i, 0)),      # b
+                pl.BlockSpec((1, S), lambda i, s: (0, 0)),       # times
+                pl.BlockSpec((1, S), lambda i, s: (0, 0)),       # nxt
+                pl.BlockSpec((S, n_pe_p), lambda i, s: (0, 0)),  # occ
+            ],
+            out_specs=pl.BlockSpec((1, 8), lambda i, s: (0, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((1, 8), jnp.int32),
+        interpret=interpret,
+    )(scalars.astype(jnp.int32), starts_p, a_p, b_p, times[None, :],
+      nxt[None, :], occ_bits)
+    return acc[0]

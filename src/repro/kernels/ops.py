@@ -1,14 +1,28 @@
-"""Jit'd public wrapper around the availscan Pallas kernel.
+"""Jit'd public wrappers around the availscan Pallas kernels.
 
 Prepares the dense operands from a :class:`~repro.core.timeline.Timeline`
 (bit-expansion, lane padding), invokes the kernel, and post-processes
 the raw tile outputs back into the exact semantics of the pure-jnp
 reference (:func:`repro.core.search.availability_rectangles`).
 
-On shapes beyond the kernel's single-block VMEM budget the wrapper
-transparently falls back to the reference path.
+Occupancy awareness (DESIGN.md §7): the live candidate count — the
+number of non-``T_INF`` entries in the deduplicated, compacted
+candidate array — is threaded into the kernel as a scalar-prefetch
+operand so all-padding tiles are skipped, and the invalid tail is
+masked to the same sentinels the reference produces, keeping the two
+paths element-identical.
+
+:func:`search_select` exposes the fused availscan + policy-selection
+kernel (the per-candidate vectors never leave the kernel); the
+``search`` hot path uses it on the kernel path.
+
+On shapes beyond the kernel's single-block VMEM budget the wrappers
+transparently fall back to the reference path (``search_select``
+returns ``None`` and the caller runs the jnp chain).
 """
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -33,35 +47,80 @@ def _round_up(x: int, m: int) -> int:
     return -(-x // m) * m
 
 
-def availability_rectangles(
-    tl: Timeline, starts: jax.Array, t_du: jax.Array, t_now: jax.Array,
-    n_pe: int,
-) -> search_lib.Rectangles:
-    """Kernel-backed drop-in for ``search.availability_rectangles``."""
+def _padded_operands(tl: Timeline, n_pe: int):
+    """Lane-padded dense operands shared by both kernel entries."""
     S = tl.capacity
     S_pad = _round_up(max(S, _k._LANE), _k._LANE)
     n_pe_pad = _round_up(max(n_pe, _k._LANE), _k._LANE)
     if S_pad * n_pe_pad > _MAX_OCC_ELEMS:
-        return search_lib.availability_rectangles(
-            tl, starts, t_du, t_now, n_pe)
-
+        return None
     occ_bits = tl_lib.unpack_bits(tl.occ, n_pe).astype(jnp.float32)
     occ_bits = jnp.pad(
         occ_bits, ((0, S_pad - S), (0, n_pe_pad - n_pe)))
     times = jnp.pad(tl.times, (0, S_pad - S), constant_values=T_INF)
     nxt = jnp.pad(tl_lib.next_times(tl), (0, S_pad - S),
                   constant_values=T_INF)
+    return occ_bits, times, nxt, n_pe_pad
+
+
+def availability_rectangles(
+    tl: Timeline, starts: jax.Array, t_du: jax.Array, t_now: jax.Array,
+    n_pe: int,
+) -> search_lib.Rectangles:
+    """Kernel-backed drop-in for ``search.availability_rectangles``."""
+    ops = _padded_operands(tl, n_pe)
+    if ops is None:
+        return search_lib.availability_rectangles(
+            tl, starts, t_du, t_now, n_pe)
+    occ_bits, times, nxt, n_pe_pad = ops
 
     valid = starts < T_INF
+    n_live = jnp.sum(valid).astype(jnp.int32)
     a = jnp.minimum(starts, T_INF - t_du)   # avoid int32 overflow
     b = a + t_du
 
     nfree_raw, tb_raw, te_raw = _k.availscan(
-        occ_bits, times, nxt, a, b, interpret=_interpret_mode())
+        occ_bits, times, nxt, a, b, n_live,
+        interpret=_interpret_mode())
 
-    n_free = nfree_raw - (n_pe_pad - n_pe)   # padded PE bits are never busy
+    zero = jnp.int32(0)
+    n_free = nfree_raw - (n_pe_pad - n_pe)   # padded PE bits never busy
     t_begin = jnp.minimum(jnp.maximum(tb_raw, t_now), a)
-    t_end = te_raw
+    # invalid candidates (skipped tiles included) take the reference
+    # sentinels, keeping kernel and jnp paths element-identical
     return search_lib.Rectangles(
-        starts=starts, n_free=n_free, t_begin=t_begin, t_end=t_end,
+        starts=starts,
+        n_free=jnp.where(valid, n_free, zero),
+        t_begin=jnp.where(valid, t_begin, zero),
+        t_end=jnp.where(valid, te_raw, zero),
         valid=valid)
+
+
+def search_select(
+    tl: Timeline, starts: jax.Array, t_du: jax.Array, t_now: jax.Array,
+    n_req: jax.Array, policy_id: jax.Array, n_pe: int,
+) -> Optional[dict]:
+    """Fused availscan + policy selection on the kernel path.
+
+    Returns ``None`` when the shape exceeds the kernel budget (caller
+    falls back to the jnp chain); otherwise a dict with the winning
+    candidate: ``found``, ``best`` (index into ``starts``) and its
+    post-processed ``n_free`` / ``t_begin`` / ``t_end`` — bit-identical
+    to ``availability_rectangles`` + ``policies.select``.
+    """
+    ops = _padded_operands(tl, n_pe)
+    if ops is None:
+        return None
+    occ_bits, times, nxt, n_pe_pad = ops
+    n_live = jnp.sum(starts < T_INF).astype(jnp.int32)
+    a = jnp.minimum(starts, T_INF - t_du)
+    b = a + t_du
+    scalars = jnp.stack([
+        n_live, jnp.asarray(policy_id, jnp.int32),
+        jnp.asarray(n_req, jnp.int32), jnp.asarray(t_now, jnp.int32),
+        jnp.int32(n_pe_pad - n_pe)])
+    acc = _k.availscan_select(
+        occ_bits, times, nxt, starts, a, b, scalars,
+        interpret=_interpret_mode())
+    return dict(found=acc[7] > 0, best=acc[3], n_free=acc[4],
+                t_begin=acc[5], t_end=acc[6])

@@ -1,0 +1,347 @@
+"""Sort-free timeline updates, locked down against the lexsort oracle.
+
+PR 5 (DESIGN.md §7) replaced the lexsort-based ``timeline.update`` with
+a ``searchsorted`` + shift-gather insertion and added ``update_many``
+(K same-direction intervals in one boundary-union + merge pass).  The
+original implementation is retained as ``timeline.update_lexsort`` and
+these suites assert the new paths are **bit-identical** to it — times,
+occupancy words, the overflow flag and the ``n_keep`` high-water count
+— across fuzzed add/delete/mixed sequences, duplicate-boundary cases
+and overflow.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import batch as batch_lib
+from repro.core import timeline as tl_lib
+from repro.core.types import T_INF
+
+
+def _rand_mask(rng, n_pe, words):
+    ids = rng.choice(n_pe, size=int(rng.integers(1, n_pe + 1)),
+                     replace=False)
+    return tl_lib.ids_to_mask32(ids, words)
+
+
+def _assert_tl_equal(a, b, ctx=None):
+    np.testing.assert_array_equal(
+        np.asarray(a.times), np.asarray(b.times), err_msg=str(ctx))
+    np.testing.assert_array_equal(
+        np.asarray(a.occ), np.asarray(b.occ), err_msg=str(ctx))
+
+
+def _step_both(tl_pair, t_s, t_e, mask, is_add, ctx):
+    """Apply one interval through both implementations and compare."""
+    new, old = tl_pair
+    a, ova, nka = tl_lib.update(new, t_s, t_e, mask, is_add=is_add,
+                                with_count=True)
+    b, ovb, nkb = tl_lib.update_lexsort(old, t_s, t_e, mask,
+                                        is_add=is_add, with_count=True)
+    assert bool(ova) == bool(ovb), ctx
+    assert int(nka) == int(nkb), ctx
+    _assert_tl_equal(a, b, ctx)
+    return (a, b), bool(ova)
+
+
+# ---------------------------------------------------------------------------
+# seeded fuzz: update == update_lexsort, bit for bit
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_update_matches_lexsort_fuzzed(seed):
+    rng = np.random.default_rng(seed)
+    S = int(rng.choice([4, 8, 16, 32]))
+    n_pe = int(rng.choice([8, 33, 64]))
+    pair = (tl_lib.empty(S, n_pe), tl_lib.empty(S, n_pe))
+    for step in range(40):
+        t_s = int(rng.integers(0, 120))
+        t_e = t_s + int(rng.integers(0, 40))   # includes empty windows
+        mask = _rand_mask(rng, n_pe, pair[0].words)
+        pair, overflowed = _step_both(
+            pair, t_s, t_e, mask, bool(rng.integers(0, 2)),
+            (seed, step))
+        if overflowed:
+            break
+
+
+def test_update_duplicate_boundaries_and_degenerate_windows():
+    """t_s / t_e coinciding with existing records, zero-length and
+    inverted windows, adjacent and nested intervals."""
+    n_pe = 8
+    pair = (tl_lib.empty(16, n_pe), tl_lib.empty(16, n_pe))
+    m = tl_lib.ids_to_mask32([0, 1], pair[0].words)
+    m2 = tl_lib.ids_to_mask32([2, 3], pair[0].words)
+    cases = [
+        (10, 20, m, True), (10, 20, m2, True),   # duplicate boundaries
+        (20, 30, m, True),                       # adjacent (merges)
+        (12, 18, m2, True),                      # nested
+        (15, 15, m, True),                       # empty window: no-op
+        (18, 12, m, True),                       # inverted: no-op
+        (10, 20, m2, False),                     # delete splits
+        (0, 100, m, False),                      # superset delete
+        (20, 30, m, False), (12, 18, m2, False),
+        (10, 20, m, False),                      # back to empty
+    ]
+    for i, (t_s, t_e, mask, is_add) in enumerate(cases):
+        pair, _ = _step_both(pair, t_s, t_e, mask, is_add, i)
+    assert [t for t in np.asarray(pair[0].times) if t < T_INF] == []
+
+
+def test_update_overflow_flag_and_count_match():
+    """Overflow latches identically (n_keep may exceed capacity)."""
+    n_pe = 4
+    pair = (tl_lib.empty(4, n_pe), tl_lib.empty(4, n_pe))
+    m = tl_lib.ids_to_mask32([0], pair[0].words)
+    for i in range(2):            # 2 disjoint intervals -> 4 records
+        pair, ov = _step_both(pair, 100 * i, 100 * i + 10, m, True, i)
+        assert not ov
+    # the third disjoint interval needs 6 records on capacity 4
+    new, ova, nka = tl_lib.update(pair[0], 500, 510, m, is_add=True,
+                                  with_count=True)
+    old, ovb, nkb = tl_lib.update_lexsort(pair[1], 500, 510, m,
+                                          is_add=True, with_count=True)
+    assert bool(ova) and bool(ovb)
+    assert int(nka) == int(nkb) == 6
+    _assert_tl_equal(new, old)
+
+
+# ---------------------------------------------------------------------------
+# update_many == sequential lexsort chain
+# ---------------------------------------------------------------------------
+
+
+def _preloaded(rng, S, n_pe, n=5):
+    tl = tl_lib.empty(S, n_pe)
+    for _ in range(n):
+        t_s = int(rng.integers(0, 80))
+        t_e = t_s + int(rng.integers(1, 25))
+        tl2, ov = tl_lib.update_lexsort(
+            tl, t_s, t_e, _rand_mask(rng, n_pe, tl.words), is_add=True)
+        if bool(ov):
+            break
+        tl = tl2
+    return tl
+
+
+@pytest.mark.parametrize("seed", range(10))
+@pytest.mark.parametrize("is_add", [True, False])
+def test_update_many_matches_sequential_chain(seed, is_add):
+    rng = np.random.default_rng(1000 * seed + is_add)
+    S, n_pe = int(rng.choice([8, 16, 32])), 16
+    tl0 = _preloaded(rng, S, n_pe)
+    K = int(rng.integers(1, 7))
+    ts = rng.integers(0, 90, size=K).astype(np.int32)
+    te = ts + rng.integers(0, 30, size=K).astype(np.int32)
+    masks = jnp.stack([_rand_mask(rng, n_pe, tl0.words)
+                       for _ in range(K)])
+    active = rng.integers(0, 4, size=K) > 0     # some inactive slots
+    got, ovg, nkg = tl_lib.update_many(
+        tl0, jnp.asarray(ts), jnp.asarray(te), masks,
+        jnp.asarray(active), is_add=is_add, with_count=True)
+    ref, ovr = tl0, False
+    for k in range(K):
+        if not active[k]:
+            continue
+        ref, ov = tl_lib.update_lexsort(
+            ref, int(ts[k]), int(te[k]), masks[k], is_add=is_add)
+        ovr = ovr or bool(ov)
+    # a sequential-only overflow is legal (transient spike past S);
+    # a batched-only overflow never is — the batch's n_keep is the
+    # final sequential record count, <= the sequential maximum
+    if bool(ovg):
+        assert ovr, (seed, is_add)
+    if not ovr and not bool(ovg):
+        _assert_tl_equal(got, ref, (seed, is_add))
+        assert int(nkg) == int(jnp.sum(ref.times < T_INF))
+
+
+def test_update_many_single_interval_equals_update():
+    """K=1 update_many is exactly update, overflow flag included."""
+    rng = np.random.default_rng(7)
+    tl = _preloaded(rng, 8, 8)
+    for trial in range(20):
+        t_s = int(rng.integers(0, 90))
+        t_e = t_s + int(rng.integers(0, 30))
+        mask = _rand_mask(rng, 8, tl.words)
+        is_add = bool(rng.integers(0, 2))
+        a, ova, nka = tl_lib.update_many(
+            tl, jnp.asarray([t_s], jnp.int32),
+            jnp.asarray([t_e], jnp.int32), mask[None, :],
+            jnp.asarray([True]), is_add=is_add, with_count=True)
+        b, ovb, nkb = tl_lib.update(tl, t_s, t_e, mask, is_add=is_add,
+                                    with_count=True)
+        assert bool(ova) == bool(ovb) and int(nka) == int(nkb)
+        _assert_tl_equal(a, b, trial)
+        if not bool(ovb):
+            tl = b
+
+
+def test_update_many_all_inactive_is_identity():
+    rng = np.random.default_rng(3)
+    tl = _preloaded(rng, 16, 8)
+    got, ov, nk = tl_lib.update_many(
+        tl, jnp.zeros((4,), jnp.int32), jnp.ones((4,), jnp.int32),
+        jnp.zeros((4, tl.words), jnp.uint32), jnp.zeros((4,), bool),
+        is_add=False, with_count=True)
+    assert not bool(ov)
+    _assert_tl_equal(got, tl)
+    assert int(nk) == int(jnp.sum(tl.times < T_INF))
+
+
+def test_update_many_no_transient_overflow():
+    """A batch whose end state fits never overflows, even when some
+    sequential order would spike past capacity transiently."""
+    n_pe = 2
+    tl = tl_lib.empty(4, n_pe)
+    m = tl_lib.ids_to_mask32([0], tl.words)
+    tl, ov = tl_lib.update(tl, 0, 100, m, is_add=True)
+    assert not bool(ov)
+    # deleting [20,40) then [40,60) sequentially splits to 3 then
+    # merges back to 2+2 records; the batch sees only the end state
+    ts = jnp.asarray([20, 40], jnp.int32)
+    te = jnp.asarray([40, 60], jnp.int32)
+    got, ov2, nk = tl_lib.update_many(
+        tl, ts, te, jnp.stack([m, m]), jnp.asarray([True, True]),
+        is_add=False, with_count=True)
+    assert not bool(ov2)
+    ref = tl
+    for k in range(2):
+        ref, _ = tl_lib.update_lexsort(
+            ref, int(ts[k]), int(te[k]), m, is_add=False)
+    _assert_tl_equal(got, ref)
+
+
+# ---------------------------------------------------------------------------
+# the batched verbs built on update_many
+# ---------------------------------------------------------------------------
+
+
+def test_release_due_chunked_matches_sequential_deletes():
+    """More due completions than one RELEASE_CHUNK: the fused
+    multi-release lands on the identical canonical timeline."""
+    n_pe = 16
+    n = batch_lib.RELEASE_CHUNK + 4
+    state = tl_lib.init_state(64, n_pe, 32)
+    ref_tl = tl_lib.empty(64, n_pe)
+    for i in range(n):
+        mask = tl_lib.ids_to_mask32([i % n_pe], state.tl.words)
+        t_s, t_e = 5 * i, 5 * i + 50
+        new_tl, ov = tl_lib.update(state.tl, t_s, t_e, mask,
+                                   is_add=True)
+        assert not bool(ov)
+        state = state._replace(
+            tl=new_tl,
+            pend_ts=state.pend_ts.at[i].set(t_s),
+            pend_te=state.pend_te.at[i].set(t_e),
+            pend_mask=state.pend_mask.at[i].set(mask))
+        ref_tl, _ = tl_lib.update_lexsort(ref_tl, t_s, t_e, mask,
+                                          is_add=True)
+    out = batch_lib.release_due_step(state, jnp.int32(10_000))
+    assert not bool(out.overflow)
+    assert int(out.n_released) == n
+    for i in range(n):
+        mask = tl_lib.ids_to_mask32([i % n_pe], state.tl.words)
+        ref_tl, _ = tl_lib.update_lexsort(ref_tl, 5 * i, 5 * i + 50,
+                                          mask, is_add=False)
+    _assert_tl_equal(out.tl, ref_tl)
+    assert bool(jnp.all(out.pend_te == T_INF))
+
+
+def test_cancel_many_matches_sequential_cancel():
+    """Batched cancel == sequential cancel_one, duplicates included."""
+    from repro.core.types import ARRequest, Policy
+
+    n_pe = 8
+    state = tl_lib.init_state(32, n_pe, 16)
+    allocs = []
+    for i in range(4):
+        req = ARRequest(t_a=0, t_r=10 * i, t_du=8, t_dl=10 * i + 8,
+                        n_pe=2)
+        state, alloc = batch_lib.admit_one(state, req, Policy.FF,
+                                           n_pe=n_pe)
+        assert alloc is not None
+        allocs.append(alloc)
+    W = state.tl.words
+    entries = [(a.t_s, a.t_e, tl_lib.ids_to_mask32(a.pe_ids, W))
+               for a in allocs[:3]]
+    entries.append(entries[0])            # duplicate -> False
+    entries.append((999, 1000,
+                    tl_lib.ids_to_mask32([0], W)))   # unknown -> False
+    got_state, got = batch_lib.cancel_many(state, entries)
+    ref_state = state
+    ref = []
+    for ts, te, mk in entries:
+        ref_state, done = batch_lib.cancel_one(ref_state, ts, te, mk)
+        ref.append(done)
+    assert got == ref == [True, True, True, False, False]
+    _assert_tl_equal(got_state.tl, ref_state.tl)
+    np.testing.assert_array_equal(np.asarray(got_state.pend_te),
+                                  np.asarray(ref_state.pend_te))
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis fuzz (runs where hypothesis is installed)
+# ---------------------------------------------------------------------------
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                           # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=60, deadline=None)
+    @given(st.data())
+    def test_hypothesis_update_matches_lexsort(data):
+        n_pe = data.draw(st.sampled_from([4, 8, 33]))
+        S = data.draw(st.sampled_from([4, 8, 16]))
+        pair = (tl_lib.empty(S, n_pe), tl_lib.empty(S, n_pe))
+        n_steps = data.draw(st.integers(1, 12))
+        for step in range(n_steps):
+            t_s = data.draw(st.integers(0, 60))
+            t_e = t_s + data.draw(st.integers(0, 25))
+            ids = data.draw(
+                st.sets(st.integers(0, n_pe - 1), min_size=1))
+            mask = tl_lib.ids_to_mask32(sorted(ids), pair[0].words)
+            pair, overflowed = _step_both(
+                pair, t_s, t_e, mask, data.draw(st.booleans()), step)
+            if overflowed:
+                break
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.data())
+    def test_hypothesis_update_many_matches_chain(data):
+        n_pe, S = 8, 16
+        rng = np.random.default_rng(data.draw(st.integers(0, 2**16)))
+        tl0 = _preloaded(rng, S, n_pe, n=3)
+        K = data.draw(st.integers(1, 5))
+        is_add = data.draw(st.booleans())
+        ts, te, masks, active = [], [], [], []
+        for _ in range(K):
+            s = data.draw(st.integers(0, 70))
+            ts.append(s)
+            te.append(s + data.draw(st.integers(0, 20)))
+            ids = data.draw(
+                st.sets(st.integers(0, n_pe - 1), min_size=1))
+            masks.append(tl_lib.ids_to_mask32(sorted(ids), tl0.words))
+            active.append(data.draw(st.booleans()))
+        got, ovg, _ = tl_lib.update_many(
+            tl0, jnp.asarray(ts, jnp.int32),
+            jnp.asarray(te, jnp.int32), jnp.stack(masks),
+            jnp.asarray(active), is_add=is_add, with_count=True)
+        ref, ovr = tl0, False
+        for k in range(K):
+            if not active[k]:
+                continue
+            ref, ov = tl_lib.update_lexsort(
+                ref, ts[k], te[k], masks[k], is_add=is_add)
+            ovr = ovr or bool(ov)
+        # batched-only overflow is always a bug (see the seeded test)
+        if bool(ovg):
+            assert ovr
+        if not ovr and not bool(ovg):
+            _assert_tl_equal(got, ref)
