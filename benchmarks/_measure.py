@@ -1,11 +1,11 @@
-"""Shared benchmark measurement helpers + the frozen PR 4 baselines.
+"""Shared benchmark measurement helpers + the frozen PR baselines.
 
-Every BENCH_*.json row published by PR 5 carries a ``speedup_vs_pr4``
-field against the numbers the PR 4 tree committed (copied verbatim
-below, so re-running the benchmarks never chains the comparison onto
-itself).  Wall times are warmed-up medians: a single steady-state run
-(the pre-PR 5 protocol) was noisy enough on shared CPU runners to move
-published ratios by tens of percent.
+Every BENCH_*.json row carries ``speedup_vs_pr5`` (and the older
+``speedup_vs_pr4``) against the numbers the corresponding PR's tree
+committed — copied verbatim below, so re-running the benchmarks never
+chains the comparison onto itself.  Wall times are warmed-up medians:
+a single steady-state run (the pre-PR 5 protocol) was noisy enough on
+shared CPU runners to move published ratios by tens of percent.
 """
 from __future__ import annotations
 
@@ -57,4 +57,34 @@ PR4_SERVICE_WARM = {"rescan_per_group": 1829.5, "ring_chunked": 2116.1}
 
 
 def speedup_vs_pr4(value: float, baseline: float) -> float:
+    return round(value / max(baseline, 1e-9), 2)
+
+
+# --------------------------------------------------------------------------
+# PR 5 baselines (the BENCH_*.json rows committed by PR 5)
+# --------------------------------------------------------------------------
+
+# admissions/sec of the scanned device path (BENCH_admission.json)
+PR5_ADMISSION_STREAM = {
+    "FF": 13437.8, "PE_B": 17053.2, "PE_W": 12553.4, "Du_B": 13449.9,
+    "Du_W": 16026.1, "PEDu_B": 10037.9, "PEDu_W": 15356.7,
+}
+
+# Section-6 grid cells/sec (BENCH_sweep.json)
+PR5_SWEEP_CELLS = {
+    "host_loop": 45.75, "device_scan": 124.44, "vmapped_grid": 72.3,
+}
+
+# warm decisions/sec per backfill mode (BENCH_backfill.json)
+PR5_BACKFILL_DPS = {
+    "none": 9507.3, "easy": 1956.7, "conservative": 8565.5,
+}
+# warm step-cost ratios vs the plain (mode "none") scan
+PR5_BACKFILL_COST = {"none": 1.0, "easy": 4.86, "conservative": 1.11}
+
+# warm requests/sec of the streaming variants (BENCH_service.json)
+PR5_SERVICE_WARM = {"rescan_per_group": 2884.7, "ring_chunked": 1953.0}
+
+
+def speedup_vs_pr5(value: float, baseline: float) -> float:
     return round(value / max(baseline, 1e-9), 2)

@@ -83,11 +83,13 @@ def admission_throughput(n_jobs: int = 240, n_pe: int = 64,
     then track the workload's live records instead of a pessimistic
     preset, which is where the sort-free hot path gets its constant
     factors.  Wall times are warmed-up medians of ``repeats`` runs;
-    each device_stream row carries ``speedup_vs_pr4`` against the
-    frozen PR 4 baseline (:mod:`benchmarks._measure`).
+    each device_stream row carries ``speedup_vs_pr4`` /
+    ``speedup_vs_pr5`` against the frozen prior-PR baselines
+    (:mod:`benchmarks._measure`).
     """
     from benchmarks._measure import (
-        PR4_ADMISSION_STREAM, median_wall, speedup_vs_pr4)
+        PR4_ADMISSION_STREAM, PR5_ADMISSION_STREAM, median_wall,
+        speedup_vs_pr4, speedup_vs_pr5)
 
     jobs = generate(WorkloadParams(n_jobs=n_jobs, n_pe=n_pe, seed=seed,
                                    u_low=2.0, u_med=4.0, u_hi=6.0))
@@ -124,6 +126,9 @@ def admission_throughput(n_jobs: int = 240, n_pe: int = 64,
         row["speedup_vs_pr4"] = speedup_vs_pr4(
             row["device_stream_adm_per_s"],
             PR4_ADMISSION_STREAM[pol.value])
+        row["speedup_vs_pr5"] = speedup_vs_pr5(
+            row["device_stream_adm_per_s"],
+            PR5_ADMISSION_STREAM[pol.value])
         rows.append(row)
     if out_path:
         payload = {
@@ -135,8 +140,8 @@ def admission_throughput(n_jobs: int = 240, n_pe: int = 64,
                      "work only, grow-once overflow sizing included; "
                      "device variants start at capacity "
                      f"{capacity} (occupancy-aware, DESIGN.md §7); "
-                     "speedup_vs_pr4 compares device_stream to the "
-                     "frozen PR 4 rows"),
+                     "speedup_vs_pr4/pr5 compare device_stream to the "
+                     "frozen prior-PR rows"),
             "rows": rows,
         }
         with open(out_path, "w") as fh:
@@ -169,7 +174,8 @@ def sweep_throughput(n_jobs: int = 120, n_pe: int = 64,
     trajectories stay comparable.
     """
     from benchmarks._measure import (
-        PR4_SWEEP_CELLS, median_wall, speedup_vs_pr4)
+        PR4_SWEEP_CELLS, PR5_SWEEP_CELLS, median_wall,
+        speedup_vs_pr4, speedup_vs_pr5)
     from repro.sim.workload import generate_filtered
 
     spec = GridSpec(
@@ -217,6 +223,8 @@ def sweep_throughput(n_jobs: int = 120, n_pe: int = 64,
             walls["host_loop"] / max(walls[row["variant"]], 1e-9), 2)
         row["speedup_vs_pr4"] = speedup_vs_pr4(
             row["cells_per_s"], PR4_SWEEP_CELLS[row["variant"]])
+        row["speedup_vs_pr5"] = speedup_vs_pr5(
+            row["cells_per_s"], PR5_SWEEP_CELLS[row["variant"]])
     if out_path:
         payload = {
             "bench": "sweep_throughput",
@@ -231,8 +239,8 @@ def sweep_throughput(n_jobs: int = 120, n_pe: int = 64,
                      f"{repeats} runs; wall time counts scheduler/"
                      "dispatch work only, grow-once overflow sizing "
                      "included (device variants start at capacity "
-                     f"{capacity}); speedup_vs_pr4 compares to the "
-                     "frozen PR 4 rows"),
+                     f"{capacity}); speedup_vs_pr4/pr5 compare to "
+                     "the frozen prior-PR rows"),
             "rows": rows,
         }
         with open(out_path, "w") as fh:

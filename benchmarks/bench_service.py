@@ -60,12 +60,13 @@ def service_throughput(n_jobs: int = 240, n_pe: int = 64,
     Each variant answers every group (decision sync per group);
     ``cold`` includes compilation — the steady reality of the re-scan
     server, whose shapes keep changing — and ``warm`` is the median of
-    ``repeats`` runs with every shape cached.  ``speedup_vs_pr4``
-    compares warm requests/sec to the frozen PR 4 baselines
-    (:mod:`benchmarks._measure`).
+    ``repeats`` runs with every shape cached.  ``speedup_vs_pr4`` /
+    ``speedup_vs_pr5`` compare warm requests/sec to the frozen
+    prior-PR baselines (:mod:`benchmarks._measure`).
     """
     from benchmarks._measure import (
-        PR4_SERVICE_WARM, median, speedup_vs_pr4)
+        PR4_SERVICE_WARM, PR5_SERVICE_WARM, median,
+        speedup_vs_pr4, speedup_vs_pr5)
 
     jobs = sorted(
         [j for j in generate(WorkloadParams(
@@ -127,6 +128,8 @@ def service_throughput(n_jobs: int = 240, n_pe: int = 64,
                 walls[row["variant"]], 1e-9), 2)
         row["speedup_vs_pr4"] = speedup_vs_pr4(
             row["warm_req_per_s"], PR4_SERVICE_WARM[row["variant"]])
+        row["speedup_vs_pr5"] = speedup_vs_pr5(
+            row["warm_req_per_s"], PR5_SERVICE_WARM[row["variant"]])
     assert rows[0]["accepted"] == rows[1]["accepted"], \
         "streaming variants diverged"
     if out_path:

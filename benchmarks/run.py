@@ -8,10 +8,12 @@ the paper's 10^4-job workloads (slow); default is a reduced size that
 preserves every reported ordering.
 
 ``--check`` is the perf-regression mode (CI ``perf-smoke``): it
-re-measures the four BENCH benchmarks at reduced sizes and compares
+re-measures the five BENCH benchmarks at reduced sizes and compares
 the freshly measured *ratios* — device-vs-host throughput, backfill
-mode cost vs the plain scan, ring-vs-rescan streaming — against the
-committed ``BENCH_*.json`` files with a tolerance band.  Ratios only:
+mode cost vs the plain scan, ring-vs-rescan streaming,
+sharded-vs-single mesh placement and pipelined-vs-eager chunked
+offers — against the committed ``BENCH_*.json`` files with a
+tolerance band.  Ratios only:
 absolute wall times are meaningless on shared runners, but a device
 path that regresses from 3x-faster-than-host to slower-than-host
 moves its ratio far beyond any plausible machine noise.
@@ -56,8 +58,8 @@ def check(tolerance: float) -> int:
     are tighter than shared-runner noise on tens-of-ms walls.  No
     absolute wall-time asserts anywhere.
     """
-    from benchmarks import bench_backfill, bench_policies, \
-        bench_service
+    from benchmarks import bench_backfill, bench_mesh, \
+        bench_policies, bench_service
 
     failures = []
     checks = []
@@ -130,6 +132,34 @@ def check(tolerance: float) -> int:
         ref["rescan_per_group"]["warm_req_per_s"], 1e-9)
     gate("service/ring_vs_rescan:warm", fresh, committed, "ge")
 
+    # -- mesh: sharded grid vs single placement, pipelined vs eager ---
+    # a reduced 168-lane grid keeps the CI lane fast; both gates are
+    # ratios of same-machine variants, so the size reduction cancels
+    mesh_doc = _committed("mesh")
+    ref = {r["variant"]: r
+           for r in mesh_doc["sharded_grid"]["rows"]}
+    got = {r["variant"]: r for r in bench_mesh.sharded_grid(
+        n_seeds=8, repeats=3, out_path=None)}
+    fresh = got["sharded_auto"]["cells_per_s"] / max(
+        got["single_device"]["cells_per_s"], 1e-9)
+    committed = ref["sharded_auto"]["cells_per_s"] / max(
+        ref["single_device"]["cells_per_s"], 1e-9)
+    gate("mesh/sharded_grid:vs_single", fresh, committed, "ge")
+    gate("mesh/sharded_grid:steady_recompiles",
+         float(got["sharded_auto"]["steady_recompiles"]),
+         float(ref["sharded_auto"]["steady_recompiles"]), "le")
+
+    ref = {r["variant"]: r
+           for r in mesh_doc["offer_overlap"]["rows"]}
+    got = {r["variant"]: r for r in bench_mesh.offer_overlap(
+        repeats=3, out_path=None)}
+    fresh = got["pipelined"]["warm_req_per_s"] / max(
+        got["eager"]["warm_req_per_s"], 1e-9)
+    committed = ref["pipelined"]["warm_req_per_s"] / max(
+        ref["eager"]["warm_req_per_s"], 1e-9)
+    gate("mesh/offer_overlap:pipelined_vs_eager", fresh, committed,
+         "ge")
+
     _emit("perf_check", checks)
     if failures:
         print(f"\n# PERF CHECK FAILED: {len(failures)} gate(s) out of "
@@ -156,7 +186,7 @@ def main() -> None:
     t0 = time.time()
 
     from benchmarks import bench_backfill, bench_datastructure, \
-        bench_policies, bench_service
+        bench_mesh, bench_policies, bench_service
     from benchmarks.bench_roofline import ART_OPT, roofline_rows
 
     sections = {
@@ -177,6 +207,11 @@ def main() -> None:
                 n_jobs=600 if args.full else 240),
         "backfill_throughput":
             lambda: bench_backfill.backfill_throughput(
+                n_jobs=600 if args.full else 240),
+        "mesh_sharded_grid":
+            lambda: bench_mesh.sharded_grid(),
+        "mesh_offer_overlap":
+            lambda: bench_mesh.offer_overlap(
                 n_jobs=600 if args.full else 240),
         "datastructure_op_costs":
             lambda: bench_datastructure.op_costs(

@@ -10,8 +10,15 @@ the same policies run under {none, easy, conservative} backfilling in
 the *same* dispatch (the mode is traced per lane), showing EASY's
 acceptance gain over strict arrival-order admission.
 
+``--sharded`` shards the grid's lane axis over every local device
+(``ServiceConfig.placement="auto"``, DESIGN.md §8) — same single
+dispatch, bit-identical decisions, lanes spread across the mesh.
+Force a multi-device host on CPU with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+
     PYTHONPATH=src python examples/sweep_demo.py [--n-jobs 150]
     PYTHONPATH=src python examples/sweep_demo.py --backfill
+    PYTHONPATH=src python examples/sweep_demo.py --sharded
 """
 from __future__ import annotations
 
@@ -30,6 +37,9 @@ def main() -> None:
     ap.add_argument("--backfill", action="store_true",
                     help="add the {none, easy, conservative} "
                          "backfilling axis (small fragmented machine)")
+    ap.add_argument("--sharded", action="store_true",
+                    help="shard the lane axis over every local device "
+                         "(placement='auto', DESIGN.md §8)")
     args = ap.parse_args()
 
     if args.backfill:
@@ -57,8 +67,19 @@ def main() -> None:
     print(f"grid: {len(spec.policies)} policies x "
           f"{len(spec.backfill_modes)} backfill modes x "
           f"{len(spec.arrival_factors)} loads x {len(spec.seeds)} "
-          f"seeds = {spec.n_cells} cells, one vmapped dispatch\n")
-    r = simulate_grid(spec, capacity=64 if args.backfill else 128)
+          f"seeds = {spec.n_cells} cells, one vmapped dispatch")
+    placement = "auto" if args.sharded else "single"
+    if args.sharded:
+        import jax
+
+        from repro.launch.mesh import data_shards, make_lane_mesh
+        mesh = make_lane_mesh(spec.n_cells)
+        print(f"placement=auto: {spec.n_cells} lanes sharded "
+              f"{data_shards(mesh)}-way over {jax.device_count()} "
+              "local device(s), decisions identical to single-device")
+    print()
+    r = simulate_grid(spec, capacity=64 if args.backfill else 128,
+                      placement=placement)
     print(r.summary())
 
     acc, sd = r.policy_acceptance(), r.policy_slowdown()

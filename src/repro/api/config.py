@@ -28,6 +28,9 @@ ROUTINGS = ("round_robin", "least_loaded", "best_acceptance")
 #: Backfilling admission modes (see DESIGN.md §6).
 BACKFILLS = tuple(m.value for m in BackfillMode)
 
+#: Named lane placements (see DESIGN.md §8); an int caps shard count.
+PLACEMENTS = ("auto", "single", "host")
+
 
 @dataclasses.dataclass(frozen=True)
 class ServiceConfig:
@@ -88,6 +91,27 @@ class ServiceConfig:
         partitions.  :meth:`~repro.api.Session.pending` exposes the
         live queue.
 
+    Placement and donation (DESIGN.md §8)
+        ``placement`` names the device mesh ensemble lanes and cluster
+        partitions shard over: ``"auto"`` (default) spreads the lane
+        axis over every local device via
+        :func:`repro.launch.mesh.make_lane_mesh` — on a single-device
+        host this resolves through
+        :func:`repro.launch.mesh.make_host_mesh` and behavior is
+        unchanged; ``"host"`` pins that 1x1 mesh explicitly; an int
+        caps the shard count; ``"single"``/``None`` disables sharding
+        entirely.  Decisions are bit-identical across placements (the
+        lane axis is embarrassingly parallel).  ``donate`` (default)
+        donates the scheduler-state buffers into the jitted admission
+        dispatches (``jax.jit(..., donate_argnums=...)``) so the
+        steady-state step re-uses its buffers instead of allocating;
+        overflow growth re-materializes outside the donated path
+        (rollback-on-overflow, DESIGN.md §8) and remains
+        deterministic.  With ``donate`` and ``auto_grow``, chunked
+        offers also pipeline: the host stages chunk k+1 while the
+        device admits chunk k, and the only synchronization is one
+        overflow read at the end of the offer.
+
     ``auto_release=False`` hands completion release to the caller
     (``cancel`` / ``delete_allocation``) instead of the on-device
     pending buffer — the fleet's mode, and the only mode partitioned
@@ -115,6 +139,8 @@ class ServiceConfig:
     ring_capacity: int = 256
     backfill: Union[str, Tuple[str, ...]] = "none"
     backfill_queue: int = 8
+    placement: Union[None, str, int] = "auto"
+    donate: bool = True
     engine_kwargs: Optional[Mapping[str, Any]] = None
 
     def __post_init__(self):
@@ -187,6 +213,20 @@ class ServiceConfig:
                 raise ValueError(
                     f"{len(bf)} backfill modes for {self.lanes} lanes "
                     f"(a tuple gives one mode per ensemble lane)")
+        pl = self.placement
+        if isinstance(pl, bool) or not (
+                pl is None or isinstance(pl, (str, int))):
+            raise ValueError(
+                f"placement must be one of {PLACEMENTS}, a positive "
+                f"int shard cap, or None; got {pl!r}")
+        if isinstance(pl, str) and pl not in PLACEMENTS:
+            raise ValueError(
+                f"unknown placement {pl!r}; pick one of {PLACEMENTS} "
+                f"(or an int shard cap / None)")
+        if isinstance(pl, int) and pl < 1:
+            raise ValueError(
+                f"an int placement caps the shard count and must be "
+                f">= 1, got {pl}")
         if self.backfilling:
             if self.engine != "device":
                 raise ValueError(

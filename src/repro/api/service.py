@@ -44,6 +44,7 @@ from __future__ import annotations
 import copy
 import dataclasses
 import heapq
+import warnings
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -58,6 +59,8 @@ from repro.core import timeline as tl_lib
 from repro.core.batch import Decision, RequestBatch, RequestRing
 from repro.core.scheduler import DeviceEngine, _make_engine
 from repro.core.types import Allocation, ARRequest, Policy, T_INF
+from repro.launch.mesh import data_shards, resolve_placement
+from repro.sharding import rules as shard_rules
 
 
 @dataclasses.dataclass
@@ -134,6 +137,27 @@ def _concat_tree(chunks: List[Any], axis: int):
         return chunks[0]
     return jax.tree_util.tree_map(
         lambda *xs: jnp.concatenate(xs, axis=axis), *chunks)
+
+
+def _push_front(ring: RequestRing, rows: List[dict], lta: int) -> int:
+    """Reinsert popped requests at the *front* of a ring, in order.
+
+    The terminal-overflow restage path: ``rows`` were popped from this
+    very ring, so front-insertion restores their original position
+    ahead of anything pushed later.  ``lta`` rewinds the filler
+    stamp (``last_popped_t_a``) to the newest arrival actually
+    decided, so future partial chunks cannot release staged requests'
+    predecessors early.  Returns how many rows did not fit (dropped).
+    """
+    kept = rows[:ring.free]
+    for row in reversed(kept):
+        ring._head = (ring._head - 1) % ring.capacity
+        for f in RequestBatch._fields:
+            ring._buf[f][ring._head] = row[f]
+        ring.count += 1
+        ring.popped -= 1
+    ring.last_popped_t_a = lta
+    return len(rows) - len(kept)
 
 
 class Session:
@@ -263,8 +287,11 @@ class Session:
 
     def metrics(self) -> Dict[str, Any]:
         """Admission counters plus capacity / streaming geometry."""
+        # backend.metrics() first: it folds the lazily accumulated
+        # device-side accepted count into the shared counters dict
+        backend = self._backend.metrics()
         out = dict(self._counters)
-        out.update(self._backend.metrics())
+        out.update(backend)
         out.update(engine=self.config.engine, n_pe=self.config.n_pe,
                    lanes=self.config.lanes,
                    n_partitions=self.config.n_partitions,
@@ -342,6 +369,11 @@ class _BackendBase:
     def __init__(self, cfg: ServiceConfig, counters: Dict[str, int]):
         self.cfg = cfg
         self.counters = counters
+        # `_retained`: an outstanding snapshot/restore aliases our
+        # state buffers, so donating them would invalidate it; the
+        # next successful admit produces fresh buffers and clears it.
+        self._retained = False
+        self._acc_dev = None      # lazily synced accepted count
 
     def resolve_policy(self, policy) -> Policy:
         if policy is None:
@@ -363,6 +395,29 @@ class _BackendBase:
                     after: Tuple[int, int]) -> None:
         if after != before:
             self.counters["growths"] += 1
+
+    def _donate_ok(self) -> bool:
+        return self.cfg.donate and not self._retained
+
+    def _defer_accepted(self, decision, valid) -> None:
+        """Accumulate the accepted count on-device, no host sync.
+
+        :meth:`_sync_counters` (called from ``metrics``/``snapshot``)
+        folds the accumulator into ``counters["accepted"]`` — this is
+        what keeps ``offer`` free of per-call device round-trips.
+        """
+        n = jnp.sum(
+            jnp.logical_and(jnp.asarray(decision.accepted),
+                            jnp.asarray(valid)),
+            dtype=jnp.int32)
+        self._acc_dev = n if self._acc_dev is None else \
+            self._acc_dev + n
+
+    def _sync_counters(self) -> None:
+        if self._acc_dev is not None:
+            self.counters["accepted"] += int(
+                jax.device_get(self._acc_dev))
+            self._acc_dev = None
 
     def pending(self, lane: int = 0) -> list:
         if lane != 0:
@@ -422,15 +477,26 @@ class _StreamBackend(_BackendBase):
 
     def _admit_batch(self, batch: RequestBatch, pid: int) -> Decision:
         before = self._capacities()
-        state, dec = batch_lib.admit_stream_grow(
-            self._state, batch, pid, n_pe=self.cfg.n_pe,
-            backfill=self._bf,
-            auto_release=self.cfg.auto_release,
-            use_kernel=self.cfg.use_kernel,
-            max_growths=self.growth_budget)
+        try:
+            state, dec = batch_lib.admit_stream_grow(
+                self._state, batch, pid, n_pe=self.cfg.n_pe,
+                backfill=self._bf,
+                auto_release=self.cfg.auto_release,
+                use_kernel=self.cfg.use_kernel,
+                max_growths=self.growth_budget,
+                donate=self._donate_ok())
+        except batch_lib.GrowthError as e:
+            if e.state is not None:
+                # the donated attempt consumed our buffers; reinstall
+                # the in-dispatch rollback (latch cleared) so the
+                # session stays usable after the raise
+                self._state = e.state._replace(
+                    overflow=jnp.zeros_like(e.state.overflow))
+            raise
         self._grow_guard(before, (state.tl.capacity,
                                   state.pending_capacity))
         self._state = state
+        self._retained = False
         return dec
 
     def pending(self, lane: int = 0) -> list:
@@ -459,7 +525,7 @@ class _StreamBackend(_BackendBase):
             self.counters["one_shot_scans"] += 1
             res = OfferResult(decision=dec, batch=requests,
                               valid=np.ones(n, bool))
-            self.counters["accepted"] += res.n_accepted
+            self._defer_accepted(res.decision, res.valid)
             return res
         reqs = list(requests)
         if self.ring is None:
@@ -471,10 +537,15 @@ class _StreamBackend(_BackendBase):
             self.counters["one_shot_scans"] += 1
             valid = np.ones(len(reqs), bool)
             res = OfferResult(decision=dec, batch=batch, valid=valid)
-            self.counters["accepted"] += res.n_accepted
+            self._defer_accepted(res.decision, res.valid)
             return res
         batch_lib.check_arrival_order(reqs, self.ring.last_t_a)
         self.counters["offered"] += len(reqs)
+        if self._donate_ok() and self.growth_budget > 0:
+            return self._offer_pipelined(reqs, pid, flush)
+        return self._offer_eager(reqs, pid, flush)
+
+    def _offer_eager(self, reqs, pid, flush) -> OfferResult:
         chunk = self.cfg.chunk_size
         decs: List[Decision] = []
         batches: List[RequestBatch] = []
@@ -509,8 +580,126 @@ class _StreamBackend(_BackendBase):
         res = OfferResult(decision=_concat_tree(decs, axis=0),
                           batch=_concat_tree(batches, axis=0),
                           valid=np.concatenate(valids))
-        self.counters["accepted"] += res.n_accepted
+        self._defer_accepted(res.decision, res.valid)
         return res
+
+    def _offer_pipelined(self, reqs, pid, flush) -> OfferResult:
+        """Chunked drain over the double-buffered device ring.
+
+        Zero per-chunk synchronization: every chunk's admit goes
+        through :func:`~repro.core.batch.admit_stream_donated`
+        (allocation-free, async), and while the device runs chunk k
+        the host pops and uploads chunk k+1 from the ring.  The
+        overflow latches of all chunks are read *once* at the end; on
+        overflow (rare) the sticky in-dispatch rollback left the state
+        exactly at the first latched chunk, so the tail replays
+        deterministically on a grown state — decisions bit-identical
+        to the eager per-chunk path (DESIGN.md §8).
+        """
+        chunk = self.cfg.chunk_size
+        decs: List[Decision] = []
+        batches: List[RequestBatch] = []
+        valids: List[np.ndarray] = []
+        ovfs: List[jax.Array] = []
+        ltas: List[int] = [self.ring.last_popped_t_a]
+        staged = None
+
+        def stage():
+            popped = self.ring.pop_chunk(chunk, self.cfg.n_pe)
+            ltas.append(self.ring.last_popped_t_a)
+            return popped
+
+        def dispatch(cur) -> None:
+            batch, valid = cur
+            state, dec = batch_lib.admit_stream_donated(
+                self._state, batch, jnp.int32(pid), self._bf,
+                n_pe=self.cfg.n_pe,
+                auto_release=self.cfg.auto_release,
+                use_kernel=self.cfg.use_kernel)
+            self._state = state
+            # jnp.any copies the latch into a fresh buffer: the next
+            # dispatch donates `state` (this leaf included) away
+            ovfs.append(jnp.any(state.overflow))
+            decs.append(dec)
+            batches.append(batch)
+            valids.append(valid)
+            self.counters["chunks"] += 1
+
+        def drain(more) -> None:
+            nonlocal staged
+            while staged is not None or more():
+                cur = staged if staged is not None else stage()
+                staged = None
+                dispatch(cur)          # device admits chunk k ...
+                if more():
+                    staged = stage()   # ... host stages chunk k+1
+
+        i = 0
+        while i < len(reqs):
+            take = min(self.ring.free, len(reqs) - i)
+            self.ring.push(reqs[i:i + take])
+            i += take
+            drain(lambda: self.ring.count >= chunk)
+        if flush:
+            drain(lambda: self.ring.count > 0)
+        if not decs:
+            return _empty_result()
+        # the offer's single synchronization point: all latches at once
+        latched = np.asarray(jax.device_get(jnp.stack(ovfs)))
+        if latched.any():
+            self._replay_overflow(int(latched.argmax()), batches, pid,
+                                  decs, valids, ltas)
+        res = OfferResult(decision=_concat_tree(decs, axis=0),
+                          batch=_concat_tree(batches, axis=0),
+                          valid=np.concatenate(valids))
+        self._defer_accepted(res.decision, res.valid)
+        return res
+
+    def _replay_overflow(self, j: int, batches, pid, decs, valids,
+                         ltas) -> None:
+        """Re-run chunks ``j..`` after a deferred-overflow rollback.
+
+        Chunks before ``j`` committed normally; the sticky latch made
+        every dispatch from ``j`` on state-preserving, so ``_state``
+        is the pre-chunk-``j`` state sized by the failed tail's
+        watermarks.  Grow once from the rollback and re-admit the tail
+        eagerly, replacing its (garbage) decisions — observably
+        identical to growing at chunk ``j`` in the eager path.
+        """
+        before = self._capacities()
+        self._state = batch_lib.grow_rollback(self._state)
+        self._grow_guard(before, self._capacities())
+        for k in range(j, len(batches)):
+            try:
+                decs[k] = self._admit_batch(batches[k], pid)
+            except batch_lib.GrowthError:
+                self._restage_tail(k, batches, valids, ltas)
+                self.counters["chunks"] -= len(batches) - k
+                del decs[k:], batches[k:], valids[k:]
+                raise
+
+    def _restage_tail(self, k: int, batches, valids, ltas) -> None:
+        """Return undecided chunks ``k..`` to the front of the ring.
+
+        Terminal overflow during a replay: the eager path would have
+        left these requests staged, so reinsert them ahead of anything
+        pushed later (order preserved — they were popped from here).
+        Requests that no longer fit are dropped with a warning; the
+        session itself stays usable on the rolled-back state.
+        """
+        rows = []
+        for batch, valid in zip(batches[k:], valids[k:]):
+            fields = {f: np.asarray(getattr(batch, f))
+                      for f in RequestBatch._fields}
+            for i in np.flatnonzero(valid):
+                rows.append({f: int(fields[f][i])
+                             for f in RequestBatch._fields})
+        dropped = _push_front(self.ring, rows, ltas[k])
+        if dropped:
+            warnings.warn(
+                f"ring full while restaging after terminal overflow: "
+                f"{dropped} undecided requests dropped",
+                RuntimeWarning, stacklevel=2)
 
     def tick(self, t: int) -> int:
         if not self.cfg.auto_release:
@@ -560,16 +749,21 @@ class _StreamBackend(_BackendBase):
         return done
 
     def snapshot(self):
+        self._sync_counters()
+        self._retained = True    # snapshot aliases these buffers
         return (self._state,
                 self.ring.snapshot() if self.ring else None)
 
     def restore(self, payload):
         state, ring_snap = payload
         self._state = state
+        self._retained = True    # ...and so does a restored payload
+        self._acc_dev = None     # accumulated after the snapshot
         if self.ring and ring_snap is not None:
             self.ring.restore(ring_snap)
 
     def metrics(self):
+        self._sync_counters()
         cap, pend = self._capacities()
         out = dict(capacity=cap, pending_capacity=pend,
                    n_pending=int(np.asarray(
@@ -595,13 +789,24 @@ class _EnsembleBackend(_BackendBase):
 
     def __init__(self, cfg, counters):
         super().__init__(cfg, counters)
-        self.states = ens_lib.init_ensemble(
+        # lane axis -> mesh data axis (DESIGN.md §8): every stacked
+        # leaf is sharded on its leading (ensemble) dimension, so the
+        # vmapped admit scan runs one program with each device owning
+        # lanes/n_shards lanes — decisions are placement-invariant.
+        self.mesh = resolve_placement(cfg.placement, cfg.lanes)
+        self.states = self._put(ens_lib.init_ensemble(
             cfg.lanes, cfg.capacity, cfg.n_pe, cfg.pending_capacity,
-            cfg.park_capacity)
-        self._bf_ids = ens_lib.backfill_ids(cfg.backfill, cfg.lanes)
+            cfg.park_capacity))
+        self._bf_ids = self._put(
+            ens_lib.backfill_ids(cfg.backfill, cfg.lanes))
         self.rings = [RequestRing(cfg.ring_capacity)
                       for _ in range(cfg.lanes)] \
             if cfg.chunk_size else None
+
+    def _put(self, tree):
+        """Lane-shard a stacked pytree (no-op on unsharded sessions,
+        and for leaves already carrying the target sharding)."""
+        return shard_rules.shard_ensemble(self.mesh, tree)
 
     @property
     def engine(self):
@@ -627,14 +832,28 @@ class _EnsembleBackend(_BackendBase):
     def _admit_batch(self, batch: RequestBatch,
                      pids: jax.Array) -> Decision:
         before = self._capacities()
-        states, dec = ens_lib.admit_stream_ensemble_auto(
-            self.states, batch, pids, n_pe=self.cfg.n_pe,
-            backfills=self._bf_ids,
-            auto_release=self.cfg.auto_release,
-            use_kernel=self.cfg.use_kernel,
-            max_growths=self.growth_budget)
-        self._grow_guard(before, ens_lib.lane_capacity(states))
+        try:
+            states, dec = ens_lib.admit_stream_ensemble_auto(
+                self.states, self._put(batch), pids,
+                n_pe=self.cfg.n_pe,
+                backfills=self._bf_ids,
+                auto_release=self.cfg.auto_release,
+                use_kernel=self.cfg.use_kernel,
+                max_growths=self.growth_budget,
+                donate=self._donate_ok())
+        except batch_lib.GrowthError as e:
+            if e.state is not None:
+                self.states = e.state._replace(
+                    overflow=jnp.zeros_like(e.state.overflow))
+            raise
+        after = ens_lib.lane_capacity(states)
+        self._grow_guard(before, after)
+        if after != before:
+            # growth re-materialized the lanes outside the donated
+            # dispatch; re-pin the lane sharding deterministically
+            states = self._put(states)
         self.states = states
+        self._retained = False
         return dec
 
     def pending(self, lane: int = 0) -> list:
@@ -664,7 +883,7 @@ class _EnsembleBackend(_BackendBase):
             dec = self._admit_batch(batch, pids)
             self.counters["one_shot_scans"] += 1
             res = OfferResult(decision=dec, batch=batch, valid=valid)
-            self.counters["accepted"] += res.n_accepted
+            self._defer_accepted(res.decision, res.valid)
             return res
         streams = [list(s) for s in streams] or \
             [[] for _ in range(self.cfg.lanes)]
@@ -683,8 +902,13 @@ class _EnsembleBackend(_BackendBase):
             dec = self._admit_batch(batch, pids)
             self.counters["one_shot_scans"] += 1
             res = OfferResult(decision=dec, batch=batch, valid=valid)
-            self.counters["accepted"] += res.n_accepted
+            self._defer_accepted(res.decision, res.valid)
             return res
+        if self._donate_ok() and self.growth_budget > 0:
+            return self._offer_pipelined(streams, pids, flush)
+        return self._offer_eager(streams, pids, flush)
+
+    def _offer_eager(self, streams, pids, flush) -> OfferResult:
         chunk = self.cfg.chunk_size
         decs, batches, valids = [], [], []
 
@@ -721,8 +945,112 @@ class _EnsembleBackend(_BackendBase):
         res = OfferResult(decision=_concat_tree(decs, axis=1),
                           batch=_concat_tree(batches, axis=1),
                           valid=np.concatenate(valids, axis=1))
-        self.counters["accepted"] += res.n_accepted
+        self._defer_accepted(res.decision, res.valid)
         return res
+
+    def _offer_pipelined(self, streams, pids, flush) -> OfferResult:
+        """Lane-stacked pipelined drain (see the stream backend).
+
+        One donated vmapped dispatch per chunk across all lanes —
+        sharded lanes run their slices in the same program — while the
+        host pops and lane-shards the next chunk.  All overflow
+        latches are read once at the end; a latched chunk replays on
+        a collectively grown ensemble, bit-identical to the eager
+        per-chunk growth path.
+        """
+        chunk = self.cfg.chunk_size
+        pids = self._put(pids)
+        decs, batches, valids, ovfs = [], [], [], []
+        ltas = [[r.last_popped_t_a for r in self.rings]]
+        staged = None
+
+        def stage(full_only: bool):
+            batch, valid = batch_lib.pop_chunk_ensemble(
+                self.rings, chunk, self.cfg.n_pe, full_only=full_only)
+            ltas.append([r.last_popped_t_a for r in self.rings])
+            return self._put(batch), valid
+
+        def dispatch(cur) -> None:
+            batch, valid = cur
+            states, dec = ens_lib.admit_stream_ensemble_donated(
+                self.states, batch, pids, self._bf_ids,
+                n_pe=self.cfg.n_pe,
+                auto_release=self.cfg.auto_release,
+                use_kernel=self.cfg.use_kernel)
+            self.states = states
+            ovfs.append(jnp.any(states.overflow))
+            decs.append(dec)
+            batches.append(batch)
+            valids.append(valid)
+            self.counters["chunks"] += 1
+
+        def drain(more, full_only: bool) -> None:
+            nonlocal staged
+            while staged is not None or more():
+                cur = staged if staged is not None \
+                    else stage(full_only)
+                staged = None
+                dispatch(cur)
+                if more():
+                    staged = stage(full_only)
+
+        cursors = [0] * self.cfg.lanes
+        while any(c < len(s) for c, s in zip(cursors, streams)):
+            for e, (ring, stream) in enumerate(
+                    zip(self.rings, streams)):
+                take = min(ring.free, len(stream) - cursors[e])
+                ring.push(stream[cursors[e]:cursors[e] + take])
+                cursors[e] += take
+            drain(lambda: any(r.count >= chunk for r in self.rings),
+                  full_only=not flush)
+        if flush:
+            drain(lambda: any(r.count for r in self.rings),
+                  full_only=False)
+        if not decs:
+            return _empty_result()
+        latched = np.asarray(jax.device_get(jnp.stack(ovfs)))
+        if latched.any():
+            self._replay_overflow(int(latched.argmax()), batches,
+                                  pids, decs, valids, ltas)
+        res = OfferResult(decision=_concat_tree(decs, axis=1),
+                          batch=_concat_tree(batches, axis=1),
+                          valid=np.concatenate(valids, axis=1))
+        self._defer_accepted(res.decision, res.valid)
+        return res
+
+    def _replay_overflow(self, j: int, batches, pids, decs, valids,
+                         ltas) -> None:
+        """Collective-growth replay of chunks ``j..`` after rollback."""
+        before = self._capacities()
+        self.states = self._put(
+            ens_lib.grow_rollback_ensemble(self.states))
+        self._grow_guard(before, self._capacities())
+        for k in range(j, len(batches)):
+            try:
+                decs[k] = self._admit_batch(batches[k], pids)
+            except batch_lib.GrowthError:
+                self._restage_tail(k, batches, valids, ltas)
+                self.counters["chunks"] -= len(batches) - k
+                del decs[k:], batches[k:], valids[k:]
+                raise
+
+    def _restage_tail(self, k: int, batches, valids, ltas) -> None:
+        """Per-lane front-reinsertion of undecided chunks ``k..``."""
+        dropped = 0
+        for e, ring in enumerate(self.rings):
+            rows = []
+            for batch, valid in zip(batches[k:], valids[k:]):
+                fields = {f: np.asarray(getattr(batch, f)[e])
+                          for f in RequestBatch._fields}
+                for i in np.flatnonzero(valid[e]):
+                    rows.append({f: int(fields[f][i])
+                                 for f in RequestBatch._fields})
+            dropped += _push_front(ring, rows, ltas[k][e])
+        if dropped:
+            warnings.warn(
+                f"rings full while restaging after terminal overflow: "
+                f"{dropped} undecided requests dropped",
+                RuntimeWarning, stacklevel=2)
 
     def tick(self, t: int) -> int:
         if not self.cfg.auto_release:
@@ -732,7 +1060,7 @@ class _EnsembleBackend(_BackendBase):
         states = ens_lib.release_until_ensemble(
             self.states, t, max_growths=self.growth_budget)
         self._grow_guard(before, ens_lib.lane_capacity(states))
-        self.states = states
+        self.states = self._put(states)
         released = int(jnp.sum(states.n_released)) - before_rel
         self.counters["released"] += released
         return released
@@ -750,16 +1078,17 @@ class _EnsembleBackend(_BackendBase):
         if state.tl.capacity != one.tl.capacity or \
                 state.pending_capacity != one.pending_capacity:
             # growth must stay collective (shared static lane shape)
-            self.states = ens_lib.grow_ensemble(
+            self.states = self._put(ens_lib.grow_ensemble(
                 self.states, state.tl.capacity,
-                state.pending_capacity)
+                state.pending_capacity))
             self.counters["growths"] += 1
             one = ens_lib.member(self.states, lane)
             state, done = batch_lib.cancel_one(
                 one, t_s, t_e, mask,
                 require_pending=self.cfg.auto_release,
                 max_growths=self.growth_budget)
-        self.states = ens_lib.set_member(self.states, lane, state)
+        self.states = self._put(
+            ens_lib.set_member(self.states, lane, state))
         self.counters["cancelled"] += int(done)
         return done
 
@@ -777,6 +1106,8 @@ class _EnsembleBackend(_BackendBase):
                 for t, o in zip(times, occ) if t < T_INF]
 
     def snapshot(self):
+        self._sync_counters()
+        self._retained = True
         return (self.states,
                 [r.snapshot() for r in self.rings]
                 if self.rings else None)
@@ -784,13 +1115,18 @@ class _EnsembleBackend(_BackendBase):
     def restore(self, payload):
         states, ring_snaps = payload
         self.states = states
+        self._retained = True
+        self._acc_dev = None
         if self.rings and ring_snaps is not None:
             for r, s in zip(self.rings, ring_snaps):
                 r.restore(s)
 
     def metrics(self):
+        self._sync_counters()
         cap, pend = self._capacities()
-        out = dict(capacity=cap, pending_capacity=pend)
+        out = dict(capacity=cap, pending_capacity=pend,
+                   placement_shards=data_shards(self.mesh)
+                   if self.mesh is not None else 1)
         if self.rings:
             out.update(ring_capacity=self.cfg.ring_capacity,
                        ring_staged=sum(r.count for r in self.rings),
@@ -817,7 +1153,7 @@ class _PartitionBackend(_BackendBase):
         self.engine = PartitionedCore(
             cfg.n_pe, cfg.n_partitions, capacity=cfg.capacity,
             pending_capacity=cfg.pending_capacity,
-            use_kernel=cfg.use_kernel)
+            use_kernel=cfg.use_kernel, placement=cfg.placement)
 
     def offer(self, requests, *, policy, routing, flush) -> OfferResult:
         routing = routing or self.cfg.routing

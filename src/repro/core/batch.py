@@ -826,9 +826,68 @@ def admit_stream(state: SchedulerState, batch: RequestBatch,
     return jax.lax.scan(step, state, batch)
 
 
+@functools.partial(
+    jax.jit, static_argnames=("n_pe", "auto_release", "use_kernel"),
+    donate_argnums=(0,))
+def admit_stream_donated(state: SchedulerState, batch: RequestBatch,
+                         policy_id: jax.Array, backfill_id=BF_NONE, *,
+                         n_pe: int, auto_release: bool = True,
+                         use_kernel: bool = False
+                         ) -> Tuple[SchedulerState, Decision]:
+    """:func:`admit_stream` with the state buffers *donated*.
+
+    Donation lets XLA reuse the input buffers for the output, so the
+    steady-state step is allocation-free — but it consumes the
+    caller's only copy, which collides with the grow-once protocol's
+    "re-run the batch from the pre-run snapshot".  The resolution is
+    rollback-on-overflow (DESIGN.md §8): when the overflow latch is
+    (or becomes) set, this function returns the *pre-call* state —
+    rolled back inside the dispatch — carrying the sticky latch and
+    the run's high-water marks.  The host can then grow once
+    (:func:`grow_rollback`) and re-run deterministically; the
+    discarded run's decisions were going to be re-computed anyway,
+    and the watermarks only size growth, never decisions.
+
+    The latch is sticky *across* calls: a donated call entered with
+    ``overflow`` already set returns its input state unchanged (its
+    decisions are garbage and must be discarded) — this is what lets
+    the service pipeline chunks without a per-chunk overflow read.
+    """
+    bf = jnp.asarray(backfill_id, jnp.int32)
+
+    def step(s, r):
+        return _admit_impl(s, r, policy_id, bf, n_pe=n_pe,
+                           auto_release=auto_release,
+                           use_kernel=use_kernel)
+
+    out, dec = jax.lax.scan(step, state, batch)
+    ovf = state.overflow | out.overflow
+    rolled = _where_tree(jnp.any(ovf), state, out)
+    rolled = rolled._replace(
+        overflow=ovf,
+        hw_records=jnp.maximum(state.hw_records, out.hw_records),
+        hw_pending=jnp.maximum(state.hw_pending, out.hw_pending))
+    return rolled, dec
+
+
 # ---------------------------------------------------------------------------
 # host wrappers: overflow -> grow -> deterministic re-run
 # ---------------------------------------------------------------------------
+
+
+class GrowthError(RuntimeError):
+    """Overflow with growth exhausted or forbidden.
+
+    ``state``, when set, is the rolled-back pre-run state of a
+    *donated* attempt: the caller's input buffers were consumed, so a
+    donating caller must reinstall this state to stay usable (the
+    service backends do).  Non-donated attempts leave the caller's
+    state untouched and set ``state=None``.
+    """
+
+    def __init__(self, msg: str, state: Optional[SchedulerState] = None):
+        super().__init__(msg)
+        self.state = state
 
 
 def grown_capacities(state: SchedulerState, need_records: int,
@@ -861,11 +920,25 @@ def _grown(state: SchedulerState, run: SchedulerState) -> SchedulerState:
         state, new_capacity=new_cap, new_pending_capacity=new_pend)
 
 
+def grow_rollback(state: SchedulerState) -> SchedulerState:
+    """Grow a rolled-back (latched) state and clear its latch.
+
+    The donated-path counterpart of :func:`_grown`: a
+    :func:`admit_stream_donated` overflow returns the pre-run state
+    carrying the failed run's watermarks, so the rollback state *is*
+    its own growth reference.  ``grow_state`` copies the latch
+    verbatim, which would keep every retry a no-op — clear it.
+    """
+    out = _grown(state, state)
+    return out._replace(overflow=jnp.zeros_like(out.overflow))
+
+
 def admit_stream_grow(state: SchedulerState, batch: RequestBatch,
                       policy, *, n_pe: int, backfill=BF_NONE,
                       auto_release: bool = True,
                       use_kernel: bool = False,
-                      max_growths: int = MAX_DOUBLINGS
+                      max_growths: int = MAX_DOUBLINGS,
+                      donate: bool = False
                       ) -> Tuple[SchedulerState, Decision]:
     """Run :func:`admit_stream`, growing capacity on overflow.
 
@@ -877,25 +950,39 @@ def admit_stream_grow(state: SchedulerState, batch: RequestBatch,
     recompiles.  ``max_growths=0`` forbids growth entirely: the first
     overflow raises before any state mutation (the service's
     ``auto_grow=False`` mode).
+
+    ``donate=True`` dispatches :func:`admit_stream_donated` instead —
+    the caller's state buffers are consumed and must not be reused
+    (the overflow retry re-materializes via :func:`grow_rollback`; a
+    terminal overflow raises :class:`GrowthError` carrying the
+    rolled-back state so the caller can reinstall it).  Decisions are
+    bit-identical to the non-donated path.
     """
     pid = jnp.int32(
         policy if isinstance(policy, (int, np.integer))
         else policy_index(policy))
     bfid = as_backfill_id(backfill)
+    fn = admit_stream_donated if donate else admit_stream
     start = state
     for attempt in range(max_growths + 1):
-        out, dec = admit_stream(start, batch, pid, bfid, n_pe=n_pe,
-                                auto_release=auto_release,
-                                use_kernel=use_kernel)
+        out, dec = fn(start, batch, pid, bfid, n_pe=n_pe,
+                      auto_release=auto_release,
+                      use_kernel=use_kernel)
         if not bool(out.overflow):
             return out, dec
         if attempt < max_growths:
-            start = _grown(start, out)
-    raise RuntimeError(
+            # donated: `out` IS the rolled-back pre-run state (fresh
+            # buffers), so growth re-materializes outside the donated
+            # dispatch and the retry owns its input exclusively again
+            start = grow_rollback(out) if donate else _grown(start, out)
+    raise GrowthError(
         f"admit_stream still overflowing after {max_growths + 1} "
-        f"attempts (last tried capacity {start.tl.capacity}, "
-        f"pending {start.pending_capacity}; needed records "
-        f"{int(out.hw_records)}, pending {int(out.hw_pending)})")
+        f"attempts (last tried capacity "
+        f"{(out if donate else start).tl.capacity}, "
+        f"pending {(out if donate else start).pending_capacity}; "
+        f"needed records {int(out.hw_records)}, "
+        f"pending {int(out.hw_pending)})",
+        state=out if donate else None)
 
 
 def admit_stream_auto(state: SchedulerState, batch: RequestBatch,

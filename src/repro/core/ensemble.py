@@ -144,6 +144,46 @@ def admit_stream_ensemble(states: SchedulerState, batches: RequestBatch,
     return jax.vmap(one)(states, batches, pids, bids)
 
 
+@functools.partial(
+    jax.jit, static_argnames=("n_pe", "auto_release", "use_kernel"),
+    donate_argnums=(0,))
+def admit_stream_ensemble_donated(
+        states: SchedulerState, batches: RequestBatch,
+        pids: jax.Array, bids: jax.Array = None, *,
+        n_pe: int, auto_release: bool = True,
+        use_kernel: bool = False
+        ) -> Tuple[SchedulerState, Decision]:
+    """:func:`admit_stream_ensemble` with donated state buffers.
+
+    The ensemble counterpart of
+    :func:`repro.core.batch.admit_stream_donated`: XLA reuses the
+    stacked state buffers for the output (allocation-free steady
+    state, sharding preserved), and overflow rolls the *whole
+    ensemble* back to the pre-call state inside the dispatch —
+    matching the collective grow-once protocol, which re-runs every
+    lane from the pre-run snapshot anyway.  The rollback latch is
+    sticky across calls (any lane latched -> the call is
+    state-preserving), so chunked offers can pipeline with a single
+    deferred overflow read (DESIGN.md §8).
+    """
+    if bids is None:
+        bids = jnp.zeros_like(pids)
+
+    def one(s, b, p, bf):
+        return batch_lib.admit_stream(s, b, p, bf, n_pe=n_pe,
+                                      auto_release=auto_release,
+                                      use_kernel=use_kernel)
+
+    out, dec = jax.vmap(one)(states, batches, pids, bids)
+    ovf = states.overflow | out.overflow
+    rolled = batch_lib._where_tree(jnp.any(ovf), states, out)
+    rolled = rolled._replace(
+        overflow=ovf,
+        hw_records=jnp.maximum(states.hw_records, out.hw_records),
+        hw_pending=jnp.maximum(states.hw_pending, out.hw_pending))
+    return rolled, dec
+
+
 @functools.partial(jax.jit, static_argnames=("n_pe", "use_kernel"))
 def find_allocation_ensemble(states: SchedulerState, req: RequestBatch,
                              pid: jax.Array, *, n_pe: int,
@@ -203,11 +243,28 @@ def release_until_ensemble(states: SchedulerState, t_now: int, *,
         f"{cap}, pending {pend})")
 
 
+def grow_rollback_ensemble(states: SchedulerState) -> SchedulerState:
+    """Grow a rolled-back (latched) ensemble and clear every latch.
+
+    The collective counterpart of
+    :func:`repro.core.batch.grow_rollback`: a donated overflow
+    returned the pre-run stacked state carrying the failed run's
+    per-lane watermarks, so it is its own growth reference — grow all
+    lanes once to the worst watermark.
+    """
+    new_cap, new_pend = batch_lib.grown_capacities(
+        member(states, 0), int(jnp.max(states.hw_records)),
+        int(jnp.max(states.hw_pending)))
+    out = grow_ensemble(states, new_cap, new_pend)
+    return out._replace(overflow=jnp.zeros_like(out.overflow))
+
+
 def admit_stream_ensemble_auto(
     states: SchedulerState, batches: RequestBatch, policies, *,
     n_pe: int, backfills=None, auto_release: bool = True,
     use_kernel: bool = False,
     max_growths: int = batch_lib.MAX_DOUBLINGS,
+    donate: bool = False,
 ) -> Tuple[SchedulerState, Decision]:
     """Run :func:`admit_stream_ensemble`, growing on any lane overflow.
 
@@ -218,26 +275,39 @@ def admit_stream_ensemble_auto(
     decisions), so the result equals E independent auto runs.
     ``max_growths=0`` raises on the first overflow instead (before any
     state mutation).
+
+    ``donate=True`` dispatches
+    :func:`admit_stream_ensemble_donated`: the caller's stacked state
+    is consumed (growth re-materializes from the in-dispatch rollback
+    via :func:`grow_rollback_ensemble`; a terminal overflow raises
+    :class:`~repro.core.batch.GrowthError` carrying the rolled-back
+    state).  Decisions are bit-identical to the non-donated path.
     """
     pids = policies if isinstance(policies, jax.Array) \
         else policy_ids(policies)
     bids = backfill_ids(backfills, pids.shape[0])
+    fn = admit_stream_ensemble_donated if donate \
+        else admit_stream_ensemble
     start = states
     for attempt in range(max_growths + 1):
-        out, dec = admit_stream_ensemble(
+        out, dec = fn(
             start, batches, pids, bids, n_pe=n_pe,
             auto_release=auto_release, use_kernel=use_kernel)
         if not bool(jnp.any(out.overflow)):
             return out, dec
         if attempt < max_growths:
-            need_r = int(jnp.max(out.hw_records))
-            need_p = int(jnp.max(out.hw_pending))
-            probe = member(start, 0)
-            new_cap, new_pend = batch_lib.grown_capacities(
-                probe, need_r, need_p)
-            start = grow_ensemble(start, new_cap, new_pend)
-    cap, pend = lane_capacity(start)
-    raise RuntimeError(
+            if donate:
+                start = grow_rollback_ensemble(out)
+            else:
+                need_r = int(jnp.max(out.hw_records))
+                need_p = int(jnp.max(out.hw_pending))
+                probe = member(start, 0)
+                new_cap, new_pend = batch_lib.grown_capacities(
+                    probe, need_r, need_p)
+                start = grow_ensemble(start, new_cap, new_pend)
+    cap, pend = lane_capacity(out if donate else start)
+    raise batch_lib.GrowthError(
         f"admit_stream_ensemble still overflowing after "
         f"{max_growths + 1} attempts (last tried capacity "
-        f"{cap}, pending {pend})")
+        f"{cap}, pending {pend})",
+        state=out if donate else None)

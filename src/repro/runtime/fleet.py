@@ -52,7 +52,9 @@ from repro.core import timeline as tl_lib
 from repro.core.batch import pad_streams
 from repro.core.policies import policy_index
 from repro.core.types import Allocation, T_INF
+from repro.launch.mesh import resolve_placement
 from repro.roofline import analysis as roof
+from repro.sharding import rules as shard_rules
 
 
 class JobState(str, enum.Enum):
@@ -122,7 +124,7 @@ class PartitionedCore:
 
     def __init__(self, n_chips: int, n_partitions: int,
                  capacity: int = 128, pending_capacity: int = 256,
-                 use_kernel: bool = False):
+                 use_kernel: bool = False, placement="auto"):
         if n_partitions < 1 or n_chips % n_partitions:
             raise ValueError(
                 f"n_chips={n_chips} not divisible into "
@@ -131,12 +133,19 @@ class PartitionedCore:
         self.n_partitions = n_partitions
         self.chips_per_part = n_chips // n_partitions
         self.use_kernel = use_kernel
-        self.states = ens_lib.init_ensemble(
+        # partition axis -> mesh data axis (DESIGN.md §8): the bulk
+        # admission dispatch steps each device's partition slice
+        # locally; decisions are placement-invariant
+        self.mesh = resolve_placement(placement, n_partitions)
+        self.states = self._put(ens_lib.init_ensemble(
             n_partitions, capacity, self.chips_per_part,
-            pending_capacity)
+            pending_capacity))
         # committed PE-seconds per partition (least-loaded routing)
         self.load = [0.0] * n_partitions
         self._rr = 0                      # round-robin cursor
+
+    def _put(self, tree):
+        return shard_rules.shard_ensemble(self.mesh, tree)
 
     # -- global chip ids <-> (lane, local) -----------------------------
     def _split(self, pes: Sequence[int]):
@@ -177,10 +186,10 @@ class PartitionedCore:
             # watermark protocol (DESIGN.md §3/§4): grow every lane
             # once to the needed record count
             cap = self.states.tl.times.shape[-1]
-            self.states = ens_lib.grow_ensemble(
+            self.states = self._put(ens_lib.grow_ensemble(
                 self.states,
                 max(2 * cap, tl_lib.next_pow2(int(n_keep))),
-                self.states.pend_te.shape[-1])
+                self.states.pend_te.shape[-1]))
         raise RuntimeError("partition timeline kept overflowing")
 
     def add_allocation(self, t_s: int, t_e: int,
@@ -274,11 +283,13 @@ class PartitionedCore:
             slot.append((lane, len(streams[lane])))
             streams[lane].append(req)
         batch, _ = pad_streams(streams, self.chips_per_part)
-        self.states, dec = ens_lib.admit_stream_ensemble_auto(
-            self.states, batch,
+        states, dec = ens_lib.admit_stream_ensemble_auto(
+            self.states, self._put(batch),
             jnp.full((E,), policy_index(policy), jnp.int32),
             n_pe=self.chips_per_part, auto_release=False,
             use_kernel=self.use_kernel)
+        # growth (if any) re-materialized the lanes; re-pin placement
+        self.states = self._put(states)
         dec = jax.tree_util.tree_map(np.asarray, dec)   # one sync
         allocs = []
         for lane, pos in slot:

@@ -14,7 +14,7 @@ communication pattern.
 """
 from __future__ import annotations
 
-from typing import Any
+from typing import Any, Optional
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -152,6 +152,51 @@ def batch_spec(ndim: int, batch_axis: int = 0) -> P:
     axes: list = [None] * ndim
     axes[batch_axis] = ("pod", "data")
     return P(*axes)
+
+
+# --------------------------------------------------------------------------
+# scheduler-ensemble lane sharding (DESIGN.md §8)
+# --------------------------------------------------------------------------
+#
+# The stacked SchedulerState / RequestBatch pytrees of
+# :mod:`repro.core.ensemble` carry their ensemble (lane) axis as the
+# *leading* axis of every leaf, so one rule covers the whole tree:
+# shard axis 0 over the mesh's data axes and replicate the rest.
+# ``fit_sharding`` drops the data axes per-leaf whenever the lane
+# count does not divide (the service layer builds divisor meshes via
+# ``launch.mesh.make_lane_mesh``, so this is a belt-and-braces
+# fallback, never a silent correctness change).
+
+LANE_DATA_AXES = ("pod", "data")
+
+
+def lane_spec(ndim: int) -> P:
+    """Leading lane axis over the data mesh axes, rest replicated."""
+    return P(*((LANE_DATA_AXES,) + (None,) * (ndim - 1)))
+
+
+def ensemble_specs(tree) -> Any:
+    """PartitionSpec pytree for a stacked (leading-lane-axis) pytree."""
+    return jax.tree.map(lambda x: lane_spec(max(x.ndim, 1)), tree)
+
+
+def ensemble_shardings(mesh: Mesh, tree) -> Any:
+    """NamedSharding pytree: lane axis over ``mesh``'s data axes."""
+    return jax.tree.map(
+        lambda x: fit_sharding(mesh, x.shape, lane_spec(max(x.ndim, 1))),
+        tree)
+
+
+def shard_ensemble(mesh: Optional[Mesh], tree) -> Any:
+    """Place a stacked ensemble pytree lane-sharded on ``mesh``.
+
+    One ``device_put`` per leaf (async; a no-op for leaves already
+    carrying the target sharding).  ``mesh=None`` returns the tree
+    untouched — the unsharded single-device path.
+    """
+    if mesh is None:
+        return tree
+    return jax.device_put(tree, ensemble_shardings(mesh, tree))
 
 
 def fit_sharding(mesh: Mesh, shape, spec: P) -> NamedSharding:

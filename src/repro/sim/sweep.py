@@ -82,6 +82,8 @@ def simulate_grid(
     use_kernel: bool = False,
     cross_check: bool = False,
     record_decisions: bool = False,
+    placement="auto",
+    donate: bool = True,
     **overrides,
 ) -> GridResult:
     """Run the whole experiment matrix as one vmapped on-device scan.
@@ -96,6 +98,13 @@ def simulate_grid(
     flex]``.  ``cross_check=True`` re-runs every cell on the host
     oracle (event loop / :class:`~repro.core.hostsched.BackfillOracle`)
     and asserts per-job decision identity.
+
+    ``placement`` shards the cell axis over the local devices
+    (``ServiceConfig.placement``, DESIGN.md §8): on an N-device host
+    each device scans ``cells/N`` lanes of the same single dispatch,
+    with bit-identical decisions to ``placement="single"``.
+    ``donate=False`` disables state-buffer donation (keeps the old
+    allocation behaviour; decisions are unaffected either way).
     """
     spec = dataclasses.replace(spec or GridSpec(), **overrides)
     P, B, L, S, F = spec.shape
@@ -122,7 +131,8 @@ def simulate_grid(
         n_pe=spec.n_pe, lanes=len(cells), capacity=capacity,
         pending_capacity=pending_capacity, use_kernel=use_kernel,
         backfill=backfill, backfill_queue=spec.park_capacity,
-        chunk_size=None)).session()
+        chunk_size=None, placement=placement,
+        donate=donate)).session()
     t0 = _time.perf_counter()
     res = session.offer((batch, valid), policy=pids)
     dec = res.decision
