@@ -88,3 +88,37 @@ PR5_SERVICE_WARM = {"rescan_per_group": 2884.7, "ring_chunked": 1953.0}
 
 def speedup_vs_pr5(value: float, baseline: float) -> float:
     return round(value / max(baseline, 1e-9), 2)
+
+
+# --------------------------------------------------------------------------
+# PR 6 baselines (the BENCH_*.json rows committed by PR 6)
+# --------------------------------------------------------------------------
+
+# admissions/sec of the scanned device path (BENCH_admission.json)
+PR6_ADMISSION_STREAM = {
+    "FF": 14024.7, "PE_B": 14132.1, "PE_W": 11237.8, "Du_B": 14368.1,
+    "Du_W": 14880.9, "PEDu_B": 13494.4, "PEDu_W": 13528.4,
+}
+
+# Section-6 grid cells/sec (BENCH_sweep.json)
+PR6_SWEEP_CELLS = {
+    "host_loop": 38.52, "device_scan": 107.34, "vmapped_grid": 77.16,
+}
+
+# warm decisions/sec per backfill mode (BENCH_backfill.json)
+PR6_BACKFILL_DPS = {
+    "none": 14625.6, "easy": 2541.5, "conservative": 13725.0,
+    "none_idle": 7189.1, "easy_idle": 6892.1,
+}
+# warm step-cost ratios vs the plain (mode "none") scan
+PR6_BACKFILL_COST = {
+    "none": 1.0, "easy": 5.75, "conservative": 1.07,
+    "none_idle": 1.0, "easy_idle": 1.04,
+}
+
+# warm requests/sec of the streaming variants (BENCH_service.json)
+PR6_SERVICE_WARM = {"rescan_per_group": 3965.5, "ring_chunked": 2370.9}
+
+
+def speedup_vs_pr6(value: float, baseline: float) -> float:
+    return round(value / max(baseline, 1e-9), 2)

@@ -28,9 +28,12 @@ from benchmarks._measure import (
     PR4_BACKFILL_DPS,
     PR5_BACKFILL_COST,
     PR5_BACKFILL_DPS,
+    PR6_BACKFILL_COST,
+    PR6_BACKFILL_DPS,
     median,
     speedup_vs_pr4,
     speedup_vs_pr5,
+    speedup_vs_pr6,
 )
 from repro.core import batch as batch_lib
 from repro.core import timeline as tl_lib
@@ -157,6 +160,11 @@ def backfill_throughput(n_jobs: int = 240, n_pe: int = 16,
                 row["warm_decisions_per_s"],
                 PR5_BACKFILL_DPS[row["mode"]])
             row["pr5_cost_vs_plain"] = PR5_BACKFILL_COST[row["mode"]]
+        if row["mode"] in PR6_BACKFILL_DPS:
+            row["speedup_vs_pr6"] = speedup_vs_pr6(
+                row["warm_decisions_per_s"],
+                PR6_BACKFILL_DPS[row["mode"]])
+            row["pr6_cost_vs_plain"] = PR6_BACKFILL_COST[row["mode"]]
     by = {r["mode"]: r for r in rows}
     assert by["conservative"]["accepted"] == by["none"]["accepted"], \
         "conservative must be decision-identical to none"

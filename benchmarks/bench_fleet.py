@@ -1,0 +1,156 @@
+"""Batched fleet ingress vs sequential probe-commit (DESIGN.md §9).
+
+One section into ``BENCH_fleet.json``:
+
+* ``fleet_routing`` — the same contended request stream admitted into
+  a fresh E-partition fleet two ways.  ``batched`` is the PR 7 ingress
+  (:meth:`PartitionedCore.admit_stream_allocations` with
+  ``best_acceptance``): bounded probe → match → grouped-commit rounds,
+  a constant number of device dispatches for the whole batch.
+  ``sequential`` is the pre-PR 7 shape — one ``find_allocation`` probe
+  plus one ``add_allocation`` commit per request, O(N) blocking
+  round-trips.  Decisions are asserted bit-identical; rows carry warm
+  requests/sec and the measured dispatch counts, and the section
+  asserts the complexity claim directly: batched dispatches stay under
+  the round bound while sequential dispatches scale with N.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from benchmarks._measure import median_wall
+from repro.core import ARRequest, Policy
+from repro.core import ensemble as ens_lib
+from repro.runtime.fleet import PartitionedCore
+
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+BENCH_FLEET_PATH = str(_ROOT / "BENCH_fleet.json")
+
+
+def _gen(n: int, seed: int, spacing: int = 12, dmin: int = 50,
+         dmax: int = 500, slack: float = 0.8, wmax: int = 30,
+         pemax: int = 17) -> List[ARRequest]:
+    """Contended arrival stream (PE widths up to one partition)."""
+    rng = np.random.default_rng(seed)
+    reqs, t = [], 0
+    for _ in range(n):
+        t += int(rng.integers(0, spacing))
+        dur = int(rng.integers(dmin, dmax))
+        r = t + int(rng.integers(0, wmax))
+        t_dl = r + int(dur * (1.0 + slack * rng.random()))
+        reqs.append(ARRequest(t_a=t, t_r=r, t_du=dur, t_dl=t_dl,
+                              n_pe=int(rng.integers(1, pemax))))
+    return reqs
+
+
+def _key(a):
+    return None if a is None else (a.t_s, a.t_e, tuple(a.pe_ids))
+
+
+def fleet_routing(n_req: int = 128, n_chips: int = 64,
+                  n_parts: int = 4, capacity: int = 256,
+                  seed: int = 7, repeats: int = 5,
+                  out_path: Optional[str] = BENCH_FLEET_PATH
+                  ) -> List[Dict]:
+    """Requests/sec of batched vs sequential best-acceptance ingress.
+
+    Every run starts from a fresh fleet (ingress is a cold-timeline
+    operation); the first run per variant is the jit warmup.  The
+    batched matcher must admit the whole batch in at most
+    ``3 * match_max_rounds + 1`` dispatches (probe + match + grouped
+    commit per round, one fused tail) regardless of ``n_req``; the
+    sequential loop pays at least one probe dispatch per request.
+    """
+    reqs = _gen(n_req, seed=seed)
+    policy = Policy.FF
+
+    def run_batched() -> float:
+        core = PartitionedCore(n_chips, n_parts, capacity=capacity)
+        t0 = time.perf_counter()
+        allocs = core.admit_stream_allocations(
+            reqs, policy, routing="best_acceptance")
+        wall = time.perf_counter() - t0
+        run_batched.allocs = allocs
+        run_batched.dispatches = core.dispatches
+        run_batched.rounds = core.last_match_rounds
+        return wall
+
+    def run_sequential() -> float:
+        core = PartitionedCore(n_chips, n_parts, capacity=capacity)
+        t0 = time.perf_counter()
+        allocs = []
+        for r in reqs:
+            a = core.find_allocation(r, policy)
+            if a is not None:
+                core.add_allocation(a.t_s, a.t_e, a.pe_ids)
+            allocs.append(a)
+        wall = time.perf_counter() - t0
+        run_sequential.allocs = allocs
+        run_sequential.dispatches = core.dispatches
+        run_sequential.rounds = 0
+        return wall
+
+    rows: List[Dict] = []
+    walls: Dict[str, float] = {}
+    for variant, run in (("batched", run_batched),
+                         ("sequential", run_sequential)):
+        run()                                    # compile + warm
+        steady0 = ens_lib.match_stream_ensemble._cache_size()
+        wall = median_wall(run, repeats)
+        steady_recompiles = (
+            ens_lib.match_stream_ensemble._cache_size() - steady0)
+        walls[variant] = wall
+        rows.append({
+            "variant": variant,
+            "n_requests": n_req,
+            "n_partitions": n_parts,
+            "accepted": sum(a is not None for a in run.allocs),
+            "warm_wall_s": round(wall, 4),
+            "warm_req_per_s": round(n_req / max(wall, 1e-9), 1),
+            "dispatches": run.dispatches,
+            "match_rounds": run.rounds,
+            "steady_recompiles": steady_recompiles,
+        })
+    by = {r["variant"]: r for r in rows}
+    assert ([_key(a) for a in run_batched.allocs]
+            == [_key(a) for a in run_sequential.allocs]), \
+        "batched matcher diverged from sequential probe-commit"
+    bound = 3 * PartitionedCore.match_max_rounds + 1
+    assert by["batched"]["dispatches"] <= bound, \
+        f"batched ingress is not constant-dispatch: " \
+        f"{by['batched']['dispatches']} > {bound}"
+    assert by["sequential"]["dispatches"] >= n_req, \
+        "sequential baseline lost its per-request probe dispatches"
+    assert by["batched"]["steady_recompiles"] == 0, \
+        "warmed batched ingress recompiled the fused matcher"
+    for row in rows:
+        row["decisions_bit_identical"] = True
+        row["speedup_vs_sequential"] = round(
+            walls["sequential"] / max(walls[row["variant"]], 1e-9), 2)
+    if out_path:
+        payload = {
+            "bench": "fleet",
+            "fleet_routing": {
+                "n_requests": n_req, "n_chips": n_chips,
+                "n_partitions": n_parts, "capacity": capacity,
+                "seed": seed, "repeats": repeats,
+                "dispatch_bound": bound,
+                "note": ("same stream, fresh fleet per run, "
+                         "warmed-up median walls; batched = bounded "
+                         "probe/match/grouped-commit rounds (PR 7), "
+                         "sequential = per-request probe+commit; "
+                         "decisions asserted bit-identical; batched "
+                         "dispatches must stay under the round bound "
+                         "while sequential scales with N"),
+                "rows": rows,
+            },
+        }
+        with open(out_path, "w") as fh:
+            json.dump(payload, fh, indent=2)
+            fh.write("\n")
+    return rows

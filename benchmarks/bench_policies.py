@@ -88,8 +88,9 @@ def admission_throughput(n_jobs: int = 240, n_pe: int = 64,
     (:mod:`benchmarks._measure`).
     """
     from benchmarks._measure import (
-        PR4_ADMISSION_STREAM, PR5_ADMISSION_STREAM, median_wall,
-        speedup_vs_pr4, speedup_vs_pr5)
+        PR4_ADMISSION_STREAM, PR5_ADMISSION_STREAM,
+        PR6_ADMISSION_STREAM, median_wall, speedup_vs_pr4,
+        speedup_vs_pr5, speedup_vs_pr6)
 
     jobs = generate(WorkloadParams(n_jobs=n_jobs, n_pe=n_pe, seed=seed,
                                    u_low=2.0, u_med=4.0, u_hi=6.0))
@@ -129,6 +130,9 @@ def admission_throughput(n_jobs: int = 240, n_pe: int = 64,
         row["speedup_vs_pr5"] = speedup_vs_pr5(
             row["device_stream_adm_per_s"],
             PR5_ADMISSION_STREAM[pol.value])
+        row["speedup_vs_pr6"] = speedup_vs_pr6(
+            row["device_stream_adm_per_s"],
+            PR6_ADMISSION_STREAM[pol.value])
         rows.append(row)
     if out_path:
         payload = {
@@ -174,8 +178,8 @@ def sweep_throughput(n_jobs: int = 120, n_pe: int = 64,
     trajectories stay comparable.
     """
     from benchmarks._measure import (
-        PR4_SWEEP_CELLS, PR5_SWEEP_CELLS, median_wall,
-        speedup_vs_pr4, speedup_vs_pr5)
+        PR4_SWEEP_CELLS, PR5_SWEEP_CELLS, PR6_SWEEP_CELLS,
+        median_wall, speedup_vs_pr4, speedup_vs_pr5, speedup_vs_pr6)
     from repro.sim.workload import generate_filtered
 
     spec = GridSpec(
@@ -225,6 +229,8 @@ def sweep_throughput(n_jobs: int = 120, n_pe: int = 64,
             row["cells_per_s"], PR4_SWEEP_CELLS[row["variant"]])
         row["speedup_vs_pr5"] = speedup_vs_pr5(
             row["cells_per_s"], PR5_SWEEP_CELLS[row["variant"]])
+        row["speedup_vs_pr6"] = speedup_vs_pr6(
+            row["cells_per_s"], PR6_SWEEP_CELLS[row["variant"]])
     if out_path:
         payload = {
             "bench": "sweep_throughput",

@@ -65,8 +65,8 @@ def service_throughput(n_jobs: int = 240, n_pe: int = 64,
     prior-PR baselines (:mod:`benchmarks._measure`).
     """
     from benchmarks._measure import (
-        PR4_SERVICE_WARM, PR5_SERVICE_WARM, median,
-        speedup_vs_pr4, speedup_vs_pr5)
+        PR4_SERVICE_WARM, PR5_SERVICE_WARM, PR6_SERVICE_WARM, median,
+        speedup_vs_pr4, speedup_vs_pr5, speedup_vs_pr6)
 
     jobs = sorted(
         [j for j in generate(WorkloadParams(
@@ -130,6 +130,8 @@ def service_throughput(n_jobs: int = 240, n_pe: int = 64,
             row["warm_req_per_s"], PR4_SERVICE_WARM[row["variant"]])
         row["speedup_vs_pr5"] = speedup_vs_pr5(
             row["warm_req_per_s"], PR5_SERVICE_WARM[row["variant"]])
+        row["speedup_vs_pr6"] = speedup_vs_pr6(
+            row["warm_req_per_s"], PR6_SERVICE_WARM[row["variant"]])
     assert rows[0]["accepted"] == rows[1]["accepted"], \
         "streaming variants diverged"
     if out_path:

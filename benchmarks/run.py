@@ -8,12 +8,12 @@ the paper's 10^4-job workloads (slow); default is a reduced size that
 preserves every reported ordering.
 
 ``--check`` is the perf-regression mode (CI ``perf-smoke``): it
-re-measures the five BENCH benchmarks at reduced sizes and compares
+re-measures the six BENCH benchmarks at reduced sizes and compares
 the freshly measured *ratios* — device-vs-host throughput, backfill
 mode cost vs the plain scan, ring-vs-rescan streaming,
-sharded-vs-single mesh placement and pipelined-vs-eager chunked
-offers — against the committed ``BENCH_*.json`` files with a
-tolerance band.  Ratios only:
+sharded-vs-single mesh placement, pipelined-vs-eager chunked offers
+and batched-vs-sequential fleet ingress — against the committed
+``BENCH_*.json`` files with a tolerance band.  Ratios only:
 absolute wall times are meaningless on shared runners, but a device
 path that regresses from 3x-faster-than-host to slower-than-host
 moves its ratio far beyond any plausible machine noise.
@@ -58,7 +58,7 @@ def check(tolerance: float) -> int:
     are tighter than shared-runner noise on tens-of-ms walls.  No
     absolute wall-time asserts anywhere.
     """
-    from benchmarks import bench_backfill, bench_mesh, \
+    from benchmarks import bench_backfill, bench_fleet, bench_mesh, \
         bench_policies, bench_service
 
     failures = []
@@ -160,6 +160,20 @@ def check(tolerance: float) -> int:
     gate("mesh/offer_overlap:pipelined_vs_eager", fresh, committed,
          "ge")
 
+    # -- fleet: batched matcher vs sequential probe-commit ------------
+    ref = {r["variant"]: r
+           for r in _committed("fleet")["fleet_routing"]["rows"]}
+    got = {r["variant"]: r for r in bench_fleet.fleet_routing(
+        repeats=3, out_path=None)}
+    fresh = got["batched"]["warm_req_per_s"] / max(
+        got["sequential"]["warm_req_per_s"], 1e-9)
+    committed = ref["batched"]["warm_req_per_s"] / max(
+        ref["sequential"]["warm_req_per_s"], 1e-9)
+    gate("fleet/batched_vs_sequential:warm", fresh, committed, "ge")
+    gate("fleet/batched:dispatches",
+         float(got["batched"]["dispatches"]),
+         float(ref["batched"]["dispatches"]), "le")
+
     _emit("perf_check", checks)
     if failures:
         print(f"\n# PERF CHECK FAILED: {len(failures)} gate(s) out of "
@@ -186,7 +200,7 @@ def main() -> None:
     t0 = time.time()
 
     from benchmarks import bench_backfill, bench_datastructure, \
-        bench_mesh, bench_policies, bench_service
+        bench_fleet, bench_mesh, bench_policies, bench_service
     from benchmarks.bench_roofline import ART_OPT, roofline_rows
 
     sections = {
@@ -213,6 +227,9 @@ def main() -> None:
         "mesh_offer_overlap":
             lambda: bench_mesh.offer_overlap(
                 n_jobs=600 if args.full else 240),
+        "fleet_routing":
+            lambda: bench_fleet.fleet_routing(
+                n_req=256 if args.full else 128),
         "datastructure_op_costs":
             lambda: bench_datastructure.op_costs(
                 n_jobs=800 if args.full else 300),

@@ -87,8 +87,10 @@ class ServiceConfig:
         modes never recompiles.  ``backfill_queue`` sizes the queue
         (static shape; a full queue degrades gracefully: delayed
         requests commit immovably as under ``none``).  Backfilling
-        needs the device engine with ``auto_release=True`` and no
-        partitions.  :meth:`~repro.api.Session.pending` exposes the
+        needs the device engine with ``auto_release=True``.
+        Partitioned sessions backfill too (every partition lane
+        carries its own deferral queue) but share a single mode
+        across lanes.  :meth:`~repro.api.Session.pending` exposes the
         live queue.
 
     Placement and donation (DESIGN.md §8)
@@ -114,8 +116,11 @@ class ServiceConfig:
 
     ``auto_release=False`` hands completion release to the caller
     (``cancel`` / ``delete_allocation``) instead of the on-device
-    pending buffer — the fleet's mode, and the only mode partitioned
-    sessions support (their core has no pending buffer).
+    pending buffer — the fleet's mode.  Partitioned sessions support
+    both: with ``auto_release=True`` every partition lane carries a
+    pending-release buffer and :meth:`~repro.api.Session.tick`
+    advances all lanes in one dispatch (required when partitions
+    backfill).
 
     ``engine_kwargs`` forwards host/list-engine constructor knobs
     (e.g. ``HostScheduler``'s ``candidate_chunk``); device knobs are
@@ -167,11 +172,6 @@ class ServiceConfig:
             raise ValueError(
                 f"n_pe={self.n_pe} not divisible into "
                 f"{self.n_partitions} partitions")
-        if self.n_partitions > 1 and self.auto_release:
-            raise ValueError(
-                "partitioned sessions have no pending-release buffer "
-                "— completions are the caller's (cancel / "
-                "delete_allocation); set auto_release=False")
         if self.n_partitions > 1 and not self.auto_grow:
             raise ValueError(
                 "the partitioned core grows internally; "
@@ -209,6 +209,11 @@ class ServiceConfig:
                 raise ValueError(
                     f"unknown backfill modes {unknown}; pick from "
                     f"{BACKFILLS}")
+            if self.n_partitions > 1:
+                raise ValueError(
+                    "partition lanes share one backfill mode; pass a "
+                    "single name (per-lane tuples are for ensemble "
+                    "sessions)")
             if len(bf) != self.lanes:
                 raise ValueError(
                     f"{len(bf)} backfill modes for {self.lanes} lanes "
@@ -232,10 +237,6 @@ class ServiceConfig:
                 raise ValueError(
                     "backfilling runs on the device deferral queue; "
                     "use engine='device'")
-            if self.n_partitions > 1:
-                raise ValueError(
-                    "backfilling is per-timeline; partitioned "
-                    "sessions do not support it")
             if not self.auto_release:
                 raise ValueError(
                     "backfilling promotes parked reservations through "

@@ -63,7 +63,6 @@ from repro.launch.mesh import data_shards, resolve_placement
 from repro.sharding import rules as shard_rules
 
 
-@dataclasses.dataclass
 class OfferResult:
     """Outcome of one :meth:`Session.offer` call.
 
@@ -75,24 +74,58 @@ class OfferResult:
     rejection) in the order the requests were offered.  Host/list
     sessions build ``decision`` from numpy and leave ``batch`` unset;
     partitioned sessions provide allocations only.
+
+    Pipelined sessions return *deferred* results: the offer's chunks
+    are in flight with their overflow latches unread, and any field
+    access (or the next state-reading session verb) drains the whole
+    in-flight queue in one device sync (DESIGN.md §9).
     """
 
-    decision: Optional[Decision]
-    batch: Optional[RequestBatch]
-    valid: Optional[np.ndarray]
-    _allocations: Optional[List[Optional[Allocation]]] = None
+    def __init__(self, decision: Optional[Decision] = None,
+                 batch: Optional[RequestBatch] = None,
+                 valid: Optional[np.ndarray] = None,
+                 _allocations: Optional[
+                     List[Optional[Allocation]]] = None,
+                 _finalize: Optional[Any] = None):
+        self._decision = decision
+        self._batch = batch
+        self._valid = valid
+        self._allocations = _allocations
+        self._finalize = _finalize
+
+    def _materialize(self) -> None:
+        if self._finalize is not None:
+            fin, self._finalize = self._finalize, None
+            fin()
+
+    @property
+    def decision(self) -> Optional[Decision]:
+        self._materialize()
+        return self._decision
+
+    @property
+    def batch(self) -> Optional[RequestBatch]:
+        self._materialize()
+        return self._batch
+
+    @property
+    def valid(self) -> Optional[np.ndarray]:
+        self._materialize()
+        return self._valid
 
     @property
     def n_offered(self) -> int:
-        if self.valid is not None:
-            return int(np.asarray(self.valid).sum())
+        self._materialize()
+        if self._valid is not None:
+            return int(np.asarray(self._valid).sum())
         return len(self._allocations or [])
 
     @property
     def n_accepted(self) -> int:
-        if self.decision is not None:
-            acc = np.asarray(self.decision.accepted)
-            return int((acc & np.asarray(self.valid)).sum())
+        self._materialize()
+        if self._decision is not None:
+            acc = np.asarray(self._decision.accepted)
+            return int((acc & np.asarray(self._valid)).sum())
         return sum(a is not None for a in (self._allocations or []))
 
     def allocations(self) -> List[Optional[Allocation]]:
@@ -101,18 +134,19 @@ class OfferResult:
         Single-lane sessions only (on ensemble results, index
         ``decision``/``valid`` per lane instead).
         """
+        self._materialize()
         if self._allocations is not None:
             return self._allocations
-        if self.decision is None:
+        if self._decision is None:
             return []
-        acc = np.asarray(self.decision.accepted)
+        acc = np.asarray(self._decision.accepted)
         if acc.ndim != 1:
             raise ValueError(
                 "allocations() is per-lane on ensemble results; use "
                 "decision/valid with a lane index")
-        allocs = batch_lib.decisions_to_allocations(self.decision)
+        allocs = batch_lib.decisions_to_allocations(self._decision)
         self._allocations = [
-            a for a, v in zip(allocs, self.valid) if v]
+            a for a, v in zip(allocs, self._valid) if v]
         return self._allocations
 
 
@@ -461,6 +495,9 @@ class _StreamBackend(_BackendBase):
             batch_lib.as_backfill_id(cfg.backfill)
         self.ring = RequestRing(cfg.ring_capacity) \
             if cfg.chunk_size else None
+        # pipelined offers whose overflow latches are still unread:
+        # one dict per offer, drained together in one device sync
+        self._inflight: List[dict] = []
 
     @property
     def _state(self):
@@ -502,7 +539,26 @@ class _StreamBackend(_BackendBase):
     def pending(self, lane: int = 0) -> list:
         if lane != 0:
             raise ValueError("lane applies to ensemble sessions")
+        self._drain_inflight()
         return batch_lib.parked_entries(self._state)
+
+    # three ops + records read (or mutate) the live state: settle any
+    # in-flight pipelined offers first
+    def find_allocation(self, req, policy, t_now=None):
+        self._drain_inflight()
+        return self.engine.find_allocation(req, policy, t_now=t_now)
+
+    def add_allocation(self, t_s, t_e, pes):
+        self._drain_inflight()
+        self.engine.add_allocation(t_s, t_e, list(pes))
+
+    def delete_allocation(self, t_s, t_e, pes):
+        self._drain_inflight()
+        self.engine.delete_allocation(t_s, t_e, list(pes))
+
+    def records(self):
+        self._drain_inflight()
+        return self.engine.records()
 
     def offer(self, requests, *, policy, routing, flush) -> OfferResult:
         if routing is not None:
@@ -543,6 +599,7 @@ class _StreamBackend(_BackendBase):
         self.counters["offered"] += len(reqs)
         if self._donate_ok() and self.growth_budget > 0:
             return self._offer_pipelined(reqs, pid, flush)
+        self._drain_inflight()
         return self._offer_eager(reqs, pid, flush)
 
     def _offer_eager(self, reqs, pid, flush) -> OfferResult:
@@ -590,11 +647,17 @@ class _StreamBackend(_BackendBase):
         through :func:`~repro.core.batch.admit_stream_donated`
         (allocation-free, async), and while the device runs chunk k
         the host pops and uploads chunk k+1 from the ring.  The
-        overflow latches of all chunks are read *once* at the end; on
-        overflow (rare) the sticky in-dispatch rollback left the state
-        exactly at the first latched chunk, so the tail replays
-        deterministically on a grown state — decisions bit-identical
-        to the eager per-chunk path (DESIGN.md §8).
+        overflow latches are not read here at all: the offer registers
+        itself on ``_inflight`` and returns a *deferred*
+        :class:`OfferResult`, so consecutive offers keep pipelining
+        with zero device syncs between them.  The first result-field
+        access or state-reading verb calls :meth:`_drain_inflight`,
+        which reads every outstanding latch in one stacked
+        ``device_get`` (DESIGN.md §8/§9).  On overflow (rare) the
+        sticky in-dispatch rollback left the state exactly at the
+        first latched chunk, so the tail replays deterministically on
+        a grown state — decisions bit-identical to the eager
+        per-chunk path.
         """
         chunk = self.cfg.chunk_size
         decs: List[Decision] = []
@@ -644,39 +707,99 @@ class _StreamBackend(_BackendBase):
             drain(lambda: self.ring.count > 0)
         if not decs:
             return _empty_result()
-        # the offer's single synchronization point: all latches at once
-        latched = np.asarray(jax.device_get(jnp.stack(ovfs)))
-        if latched.any():
-            self._replay_overflow(int(latched.argmax()), batches, pid,
-                                  decs, valids, ltas)
-        res = OfferResult(decision=_concat_tree(decs, axis=0),
-                          batch=_concat_tree(batches, axis=0),
-                          valid=np.concatenate(valids))
-        self._defer_accepted(res.decision, res.valid)
+        res = OfferResult(_finalize=self._drain_inflight)
+        self._inflight.append(dict(ovfs=ovfs, decs=decs,
+                                   batches=batches, valids=valids,
+                                   ltas=ltas, pid=pid, result=res))
         return res
 
-    def _replay_overflow(self, j: int, batches, pid, decs, valids,
-                         ltas) -> None:
-        """Re-run chunks ``j..`` after a deferred-overflow rollback.
+    def _drain_inflight(self) -> None:
+        """Settle every in-flight pipelined offer in one device sync.
 
-        Chunks before ``j`` committed normally; the sticky latch made
-        every dispatch from ``j`` on state-preserving, so ``_state``
-        is the pre-chunk-``j`` state sized by the failed tail's
-        watermarks.  Grow once from the rollback and re-admit the tail
-        eagerly, replacing its (garbage) decisions — observably
-        identical to growing at chunk ``j`` in the eager path.
+        Reads all outstanding overflow latches with a single stacked
+        ``device_get``.  In the common all-clear case every offer's
+        decisions are already correct and just need concatenating.  On
+        a latch, the sticky in-dispatch rollback made every dispatch
+        from the first latched chunk on state-preserving, so
+        ``_state`` is the pre-latch state sized by the failed tail's
+        watermarks: grow once from the rollback, replay the owning
+        offer's tail, then replay *all* chunks of every later offer
+        (their original decisions are garbage) — observably identical
+        to the eager per-chunk path.
         """
-        before = self._capacities()
-        self._state = batch_lib.grow_rollback(self._state)
-        self._grow_guard(before, self._capacities())
+        if not self._inflight:
+            return
+        inflight, self._inflight = self._inflight, []
+        all_ovfs = [o for ctx in inflight for o in ctx["ovfs"]]
+        # the drain's single synchronization point: all latches at once
+        latched = np.asarray(jax.device_get(jnp.stack(all_ovfs)))
+        err = None
+        if latched.any():
+            g = int(latched.argmax())     # first latched dispatch
+            c = 0                          # -> (offer c, its chunk g)
+            while g >= len(inflight[c]["ovfs"]):
+                g -= len(inflight[c]["ovfs"])
+                c += 1
+            for ci in range(c, len(inflight)):
+                ctx = inflight[ci]
+                err = self._replay_chunks(
+                    g if ci == c else 0, ctx, rollback=(ci == c))
+                if err is not None:
+                    # terminal overflow: every later dispatch was
+                    # state-preserving.  Restage undecided requests in
+                    # arrival order — newest offer pushed first so the
+                    # oldest tail ends up at the ring head.
+                    for later in reversed(inflight[ci + 1:]):
+                        self.counters["chunks"] -= len(
+                            later["batches"])
+                        self._restage_tail(0, later["batches"],
+                                           later["valids"],
+                                           later["ltas"])
+                        del later["decs"][:], later["batches"][:], \
+                            later["valids"][:]
+                    k = ctx["fail_k"]
+                    self._restage_tail(k, ctx["batches"],
+                                       ctx["valids"], ctx["ltas"])
+                    del ctx["decs"][k:], ctx["batches"][k:], \
+                        ctx["valids"][k:]
+                    break
+        for ctx in inflight:
+            res = ctx["result"]
+            res._finalize = None
+            if ctx["decs"]:
+                res._decision = _concat_tree(ctx["decs"], axis=0)
+                res._batch = _concat_tree(ctx["batches"], axis=0)
+                res._valid = np.concatenate(ctx["valids"])
+                self._defer_accepted(res._decision, res._valid)
+            else:
+                res._allocations = []
+        if err is not None:
+            raise err
+
+    def _replay_chunks(self, j: int, ctx: dict, *,
+                       rollback: bool) -> Optional[Exception]:
+        """Re-run one offer's chunks ``j..`` after a latched overflow.
+
+        ``rollback`` grows the rolled-back state first (only the offer
+        owning the first latched chunk; later offers replay on the
+        already-healthy state).  On terminal overflow the offer is
+        truncated at the failing chunk (``ctx["fail_k"]``) and the
+        :class:`~repro.core.batch.GrowthError` is returned for the
+        caller to restage and re-raise.
+        """
+        if rollback:
+            before = self._capacities()
+            self._state = batch_lib.grow_rollback(self._state)
+            self._grow_guard(before, self._capacities())
+        batches, decs = ctx["batches"], ctx["decs"]
         for k in range(j, len(batches)):
             try:
-                decs[k] = self._admit_batch(batches[k], pid)
-            except batch_lib.GrowthError:
-                self._restage_tail(k, batches, valids, ltas)
+                decs[k] = self._admit_batch(batches[k], ctx["pid"])
+            except batch_lib.GrowthError as e:
+                ctx["fail_k"] = k
                 self.counters["chunks"] -= len(batches) - k
-                del decs[k:], batches[k:], valids[k:]
-                raise
+                return e
+        return None
 
     def _restage_tail(self, k: int, batches, valids, ltas) -> None:
         """Return undecided chunks ``k..`` to the front of the ring.
@@ -704,6 +827,7 @@ class _StreamBackend(_BackendBase):
     def tick(self, t: int) -> int:
         if not self.cfg.auto_release:
             return 0
+        self._drain_inflight()
         before_rel = int(self._state.n_released)
         before = self._capacities()
         state = batch_lib.release_until(
@@ -719,6 +843,7 @@ class _StreamBackend(_BackendBase):
                lane: int = 0) -> bool:
         if lane != 0:
             raise ValueError("lane applies to ensemble sessions")
+        self._drain_inflight()
         mask = tl_lib.ids_to_mask32(pe_ids, self._state.tl.words)
         before = self._capacities()
         state, done = batch_lib.cancel_one(
@@ -734,6 +859,7 @@ class _StreamBackend(_BackendBase):
     def cancel_many(self, triples, lane: int = 0) -> List[bool]:
         if lane != 0:
             raise ValueError("lane applies to ensemble sessions")
+        self._drain_inflight()
         W = self._state.tl.words
         entries = [(ts, te, tl_lib.ids_to_mask32(pes, W))
                    for ts, te, pes in triples]
@@ -749,12 +875,14 @@ class _StreamBackend(_BackendBase):
         return done
 
     def snapshot(self):
+        self._drain_inflight()
         self._sync_counters()
         self._retained = True    # snapshot aliases these buffers
         return (self._state,
                 self.ring.snapshot() if self.ring else None)
 
     def restore(self, payload):
+        self._drain_inflight()   # settle results against the old state
         state, ring_snap = payload
         self._state = state
         self._retained = True    # ...and so does a restored payload
@@ -763,6 +891,7 @@ class _StreamBackend(_BackendBase):
             self.ring.restore(ring_snap)
 
     def metrics(self):
+        self._drain_inflight()
         self._sync_counters()
         cap, pend = self._capacities()
         out = dict(capacity=cap, pending_capacity=pend,
@@ -1150,10 +1279,14 @@ class _PartitionBackend(_BackendBase):
         super().__init__(cfg, counters)
         from repro.runtime.fleet import PartitionedCore
 
+        bf = cfg.backfill if isinstance(cfg.backfill, str) \
+            else cfg.backfill[0]
         self.engine = PartitionedCore(
             cfg.n_pe, cfg.n_partitions, capacity=cfg.capacity,
             pending_capacity=cfg.pending_capacity,
-            use_kernel=cfg.use_kernel, placement=cfg.placement)
+            use_kernel=cfg.use_kernel, placement=cfg.placement,
+            park_capacity=cfg.park_capacity, backfill=bf,
+            auto_release=cfg.auto_release)
 
     def offer(self, requests, *, policy, routing, flush) -> OfferResult:
         routing = routing or self.cfg.routing
@@ -1178,18 +1311,54 @@ class _PartitionBackend(_BackendBase):
                            _allocations=allocs)
 
     def tick(self, t: int) -> int:
-        # partitions admit with auto_release off (the client owns
-        # completion release via cancel/delete_allocation)
-        return 0
+        # with auto_release=False the client owns completion release
+        # (cancel/delete_allocation); otherwise advance every lane's
+        # pending buffer in one dispatch
+        if not self.cfg.auto_release:
+            return 0
+        before = int(np.asarray(
+            self.engine.states.n_released).sum())
+        self.engine.release_until(t)
+        released = int(np.asarray(
+            self.engine.states.n_released).sum()) - before
+        self.counters["released"] += released
+        return released
+
+    def pending(self, lane: int = 0) -> list:
+        if not 0 <= lane < self.cfg.n_partitions:
+            raise ValueError(
+                f"lane {lane} out of range for "
+                f"{self.cfg.n_partitions} partitions")
+        if not self.cfg.backfilling:
+            return []
+        return batch_lib.parked_entries(
+            ens_lib.member(self.engine.states, lane))
 
     def cancel(self, t_s, t_e, pe_ids, lane: int = 0) -> bool:
         if lane != 0:
             raise ValueError(
                 "partitioned sessions address reservations by global "
                 "chip ids, not lanes")
-        self.engine.delete_allocation(t_s, t_e, list(pe_ids))
-        self.counters["cancelled"] += 1
-        return True
+        if not self.cfg.auto_release:
+            self.engine.delete_allocation(t_s, t_e, list(pe_ids))
+            self.counters["cancelled"] += 1
+            return True
+        # auto-release lanes track completions in the pending buffer:
+        # cancel through cancel_one so the slot clears with the
+        # interval (a blind delete would double-release at tick)
+        eng = self.engine
+        part, local = eng._split(pe_ids)
+        state = ens_lib.member(eng.states, part)
+        mask = tl_lib.ids_to_mask32(local, state.tl.words)
+        state, done = batch_lib.cancel_one(
+            state, t_s, t_e, mask, require_pending=True,
+            max_growths=0)
+        eng.states = eng._put(
+            ens_lib.set_member(eng.states, part, state))
+        if done:
+            eng._bump_load(part, -(t_e - t_s) * len(local))
+        self.counters["cancelled"] += int(done)
+        return done
 
     def snapshot(self):
         return (self.engine.states, list(self.engine.load),
@@ -1203,9 +1372,23 @@ class _PartitionBackend(_BackendBase):
 
     def metrics(self):
         cap, pend = ens_lib.lane_capacity(self.engine.states)
-        return dict(capacity=cap, pending_capacity=pend,
-                    chips_per_partition=self.engine.chips_per_part,
-                    partition_load=list(self.engine.load))
+        out = dict(capacity=cap, pending_capacity=pend,
+                   chips_per_partition=self.engine.chips_per_part,
+                   partition_load=list(self.engine.load),
+                   dispatches=self.engine.dispatches,
+                   match_rounds=self.engine.last_match_rounds)
+        if self.cfg.backfilling:
+            s = self.engine.states
+            out.update(
+                # per-lane queue depth (park_capacity reads axis 0,
+                # which is the lane axis on a stacked state)
+                park_capacity=int(s.park_seq.shape[-1]),
+                n_parked_now=int(np.asarray(
+                    s.park_seq != T_INF).sum()),
+                n_parked=int(np.asarray(s.n_parked).sum()),
+                n_promoted=int(np.asarray(s.n_promoted).sum()),
+                n_moved=int(np.asarray(s.n_moved).sum()))
+        return out
 
 
 class _HostBackend(_BackendBase):

@@ -178,6 +178,28 @@ def pad_streams(streams, n_pe: int) -> Tuple[RequestBatch, np.ndarray]:
                            for k, v in fields.items()}), valid
 
 
+def scatter_streams(requests: Sequence[ARRequest],
+                    lanes: Sequence[int], n_lanes: int, n_pe: int
+                    ) -> Tuple[RequestBatch, np.ndarray, list]:
+    """Group routed requests into per-lane padded streams.
+
+    ``lanes[i]`` is the lane assigned to ``requests[i]``; the return
+    value is ``(batch, valid, slots)`` where ``batch``/``valid`` come
+    from :func:`pad_streams` over ``n_lanes`` streams and ``slots[i] =
+    (lane, pos)`` locates request i's decision in the ``[C, N]``
+    layout.  Within a lane the arrival order of the input sequence is
+    preserved — the grouped commit admits each lane's requests in the
+    same order a sequential router would have.
+    """
+    streams: list = [[] for _ in range(n_lanes)]
+    slots = []
+    for req, lane in zip(requests, lanes):
+        slots.append((int(lane), len(streams[lane])))
+        streams[lane].append(req)
+    batch, valid = pad_streams(streams, n_pe)
+    return batch, valid, slots
+
+
 class RequestRing:
     """Fixed-capacity FIFO staging ring for streaming admission.
 

@@ -31,6 +31,7 @@ from repro.core import timeline as tl_lib
 from repro.core.batch import Decision, RequestBatch
 from repro.core.policies import policy_index
 from repro.core.timeline import SchedulerState
+from repro.core.types import T_INF
 
 
 def init_ensemble(n_ensemble: int, capacity: int, n_pe: int,
@@ -201,6 +202,140 @@ def find_allocation_ensemble(states: SchedulerState, req: RequestBatch,
             n_pe=n_pe, use_kernel=use_kernel)
 
     return jax.vmap(one)(states)
+
+
+@functools.partial(jax.jit, static_argnames=("n_pe", "use_kernel"))
+@functools.partial(jax.jit, static_argnames=("n_pe", "use_kernel"))
+def find_allocations_ensemble(states: SchedulerState,
+                              reqs: RequestBatch, pid: jax.Array,
+                              *, n_pe: int, use_kernel: bool = False
+                              ) -> search_lib.SearchResult:
+    """Probe N requests against every lane's timeline (no commit).
+
+    The request-batched fleet ingress probe (DESIGN.md §9): an outer
+    vmap over the ``[N]``-leaved request batch of the per-lane search
+    vmap, so one dispatch yields a :class:`SearchResult` with
+    ``[N, E]`` leaves — row i is request i's feasibility / start /
+    score on every partition, all evaluated against the *same*
+    pre-batch state.  Each row uses its own request's ``t_a`` as
+    "now", matching a sequential probe at arrival time.
+    """
+
+    def one_req(r):
+        def one_lane(s):
+            return search_lib.search(
+                s.tl, r.t_r, r.t_du, r.t_dl, r.n_pe, pid, r.t_a,
+                n_pe=n_pe, use_kernel=use_kernel)
+
+        return jax.vmap(one_lane)(states)
+
+    return jax.vmap(one_req)(reqs)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_pe", "auto_release", "use_kernel"))
+def match_stream_ensemble(states: SchedulerState, reqs: RequestBatch,
+                          pid: jax.Array, bids: jax.Array = None, *,
+                          n_pe: int, auto_release: bool = False,
+                          use_kernel: bool = False
+                          ) -> Tuple[SchedulerState, jax.Array,
+                                     batch_lib.Decision]:
+    """Fused sequential best-acceptance matching: one scan, N requests.
+
+    The device mirror of the host probe-commit loop (DESIGN.md §9):
+    a ``lax.scan`` over the arrival-ordered ``[N]`` request batch
+    where each step probes every lane
+    (:func:`find_allocation_ensemble`'s body), picks the earliest
+    feasible start (ties to the lowest lane, as ``np.argmin``) and
+    admits on that lane only — the other lanes admit a never-feasible
+    filler carrying the same arrival time, so with
+    ``auto_release=True`` every lane's release/backfill clock still
+    advances per arrival.  Decisions are bit-identical to N sequential
+    ``find_allocation`` + commit round-trips, at zero host syncs.
+
+    Returns ``(states, lanes, decisions)``: ``lanes`` is ``int32[N]``
+    with the committed lane per request (``-1`` rejected), and
+    ``decisions`` the per-request :class:`~repro.core.batch.Decision`
+    from the chosen lane.  Overflow follows the watermark protocol —
+    on any latched lane, re-run from the pre-call snapshot after
+    growing (:func:`match_stream_ensemble_auto`).
+    """
+    E = ensemble_size(states)
+    if bids is None:
+        bids = jnp.zeros((E,), jnp.int32)
+    pids = jnp.broadcast_to(jnp.asarray(pid, jnp.int32), (E,))
+    lane_ids = jnp.arange(E, dtype=jnp.int32)
+
+    def step(ss, r):
+        def probe(s):
+            return search_lib.search(
+                s.tl, r.t_r, r.t_du, r.t_dl, r.n_pe, pid, r.t_a,
+                n_pe=n_pe, use_kernel=use_kernel)
+
+        res = jax.vmap(probe)(ss)
+        tv = jnp.where(res.found & ~ss.overflow, res.t_s, T_INF)
+        lane = jnp.argmin(tv).astype(jnp.int32)
+        feasible = jnp.min(tv) < T_INF
+        sel = (lane_ids == lane) & feasible
+        per = batch_lib.RequestBatch(
+            t_a=jnp.broadcast_to(r.t_a, (E,)),
+            t_r=jnp.where(sel, r.t_r, r.t_a),
+            t_du=jnp.where(sel, r.t_du, jnp.int32(1)),
+            t_dl=jnp.where(sel, r.t_dl, r.t_a + 1),
+            n_pe=jnp.where(sel, r.n_pe, jnp.int32(n_pe + 1)))
+
+        def one(s, q, p, b):
+            return batch_lib._admit_impl(
+                s, q, p, b, n_pe=n_pe, auto_release=auto_release,
+                use_kernel=use_kernel)
+
+        ss, dec = jax.vmap(one)(ss, per, pids, bids)
+        mine = jax.tree_util.tree_map(lambda x: x[lane], dec)
+        out_lane = jnp.where(mine.accepted & feasible, lane,
+                             jnp.int32(-1))
+        return ss, (out_lane, mine)
+
+    states, (lanes, decs) = jax.lax.scan(step, states, reqs)
+    return states, lanes, decs
+
+
+def match_stream_ensemble_auto(
+    states: SchedulerState, reqs: RequestBatch, pid, *,
+    n_pe: int, backfills=None, auto_release: bool = False,
+    use_kernel: bool = False,
+    max_growths: int = batch_lib.MAX_DOUBLINGS,
+) -> Tuple[SchedulerState, jax.Array, batch_lib.Decision]:
+    """:func:`match_stream_ensemble` with collective overflow growth.
+
+    Same grow-once-and-re-run protocol as
+    :func:`admit_stream_ensemble_auto`: an overflowing run is
+    discarded, every lane grows to the worst high-water mark, and the
+    whole scan re-runs from the pre-call snapshot — lanes that did not
+    overflow reproduce their decisions exactly.
+    """
+    if not isinstance(pid, jax.Array):
+        pid = jnp.int32(pid if isinstance(pid, (int, np.integer))
+                        else policy_index(pid))
+    bids = backfill_ids(backfills, ensemble_size(states))
+    start = states
+    for attempt in range(max_growths + 1):
+        out, lanes, decs = match_stream_ensemble(
+            start, reqs, pid, bids, n_pe=n_pe,
+            auto_release=auto_release, use_kernel=use_kernel)
+        if not bool(jnp.any(out.overflow)):
+            return out, lanes, decs
+        if attempt < max_growths:
+            need_r = int(jnp.max(out.hw_records))
+            need_p = int(jnp.max(out.hw_pending))
+            probe = member(start, 0)
+            new_cap, new_pend = batch_lib.grown_capacities(
+                probe, need_r, need_p)
+            start = grow_ensemble(start, new_cap, new_pend)
+    cap, pend = lane_capacity(start)
+    raise batch_lib.GrowthError(
+        f"match_stream_ensemble still overflowing after "
+        f"{max_growths + 1} attempts (last tried capacity "
+        f"{cap}, pending {pend})")
 
 
 def grow_ensemble(states: SchedulerState, new_capacity: int,

@@ -531,3 +531,110 @@ class BackfillOracle:
 
     def records(self):
         return self.sched.records()
+
+
+class FleetRoutingOracle:
+    """Sequential probe-commit mirror of the partitioned fleet ingress.
+
+    Used only by tests (DESIGN.md §9): ``E`` independent
+    :class:`HostScheduler` lanes admitting one request at a time — the
+    literal pre-batching host loop that
+    :meth:`repro.runtime.fleet.PartitionedCore.admit_stream_allocations`
+    replaced.  The device matcher must reproduce this decision
+    sequence bit-exactly for every routing:
+
+    ``best_acceptance``
+        probe every lane, take the earliest feasible start (ties to
+        the lowest lane), commit, repeat.
+    ``least_loaded``
+        route the whole batch greedily by committed + planned
+        PE-seconds (planned area accumulates on a scratch copy, as the
+        device routing scan does), then probe/commit each request on
+        its routed lane only.
+    ``round_robin``
+        a striding cursor, probe/commit on the routed lane only.
+    """
+
+    def __init__(self, n_chips: int, n_partitions: int):
+        if n_partitions < 1 or n_chips % n_partitions:
+            raise ValueError(
+                f"n_chips={n_chips} not divisible into "
+                f"{n_partitions} partitions")
+        self.chips_per_part = n_chips // n_partitions
+        self.lanes = [HostScheduler(self.chips_per_part)
+                      for _ in range(n_partitions)]
+        self.load = np.zeros(n_partitions, np.float32)
+        self._rr = 0
+
+    def _commit(self, lane: int, alloc: Allocation) -> Allocation:
+        self.lanes[lane].add_allocation(
+            alloc.t_s, alloc.t_e, list(alloc.pe_ids))
+        self.load[lane] += np.float32(
+            (alloc.t_e - alloc.t_s) * len(alloc.pe_ids))
+        off = lane * self.chips_per_part
+        return Allocation(
+            t_s=alloc.t_s, t_e=alloc.t_e,
+            pe_ids=tuple(p + off for p in alloc.pe_ids),
+            rectangle=alloc.rectangle)
+
+    def _admit_best(self, req: ARRequest,
+                    policy: Policy) -> Optional[Allocation]:
+        best_lane, best = -1, None
+        for e, sched in enumerate(self.lanes):
+            a = sched.find_allocation(req, policy)
+            if a is not None and (best is None or a.t_s < best.t_s):
+                best_lane, best = e, a
+        if best is None:
+            return None
+        return self._commit(best_lane, best)
+
+    def admit_batch(self, requests: Sequence[ARRequest],
+                    policy: Policy,
+                    routing: str = "best_acceptance"
+                    ) -> List[Optional[Allocation]]:
+        if routing == "best_acceptance":
+            return [self._admit_best(r, policy) for r in requests]
+        E = len(self.lanes)
+        if routing == "round_robin":
+            lanes = [(self._rr + i) % E
+                     for i in range(len(requests))]
+            self._rr = (self._rr + len(requests)) % E
+        elif routing == "least_loaded":
+            scratch = self.load.copy()
+            lanes = []
+            for r in requests:
+                lane = int(np.argmin(scratch))
+                scratch[lane] += np.float32(r.n_pe) * np.float32(r.t_du)
+                lanes.append(lane)
+        else:
+            raise ValueError(f"unknown routing {routing!r}")
+        out: List[Optional[Allocation]] = []
+        for r, lane in zip(requests, lanes):
+            a = self.lanes[lane].find_allocation(r, policy)
+            out.append(self._commit(lane, a) if a is not None else None)
+        return out
+
+    def records(self) -> List[Tuple[int, frozenset]]:
+        """Merged (time, busy-global-chip-set) view across lanes."""
+        rows = []
+        for e, sched in enumerate(self.lanes):
+            off = e * self.chips_per_part
+            rows.append([(t, frozenset(p + off for p in b))
+                         for t, b in sched.records()])
+        bounds = sorted({t for lane in rows for t, _ in lane})
+        out, prev = [], frozenset()
+        for t in bounds:
+            busy = set()
+            for lane in rows:
+                cur = frozenset()
+                for rt, rb in lane:
+                    if rt <= t:
+                        cur = rb
+                    else:
+                        break
+                busy |= cur
+            busy = frozenset(busy)
+            if busy != prev:
+                out.append((t, busy))
+                prev = busy
+        return out

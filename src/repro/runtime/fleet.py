@@ -35,12 +35,14 @@ from __future__ import annotations
 import dataclasses
 import enum
 import itertools
+import warnings
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.api import ReservationService, ServiceConfig
 from repro.api.config import ROUTINGS  # noqa: F401  (re-export)
@@ -49,7 +51,6 @@ from repro.core import ARRequest, Policy
 from repro.core import batch as batch_lib
 from repro.core import ensemble as ens_lib
 from repro.core import timeline as tl_lib
-from repro.core.batch import pad_streams
 from repro.core.policies import policy_index
 from repro.core.types import Allocation, T_INF
 from repro.launch.mesh import resolve_placement
@@ -106,6 +107,123 @@ def estimate_duration(arch: str, shape_name: str, n_chips: int,
     return max(int(step_s * n_steps) + 1, 60)
 
 
+# -- on-device fleet matching (DESIGN.md §9) ---------------------------
+#
+# Policies whose slot *selection* depends only on occupancy inside the
+# request's own search window [t_r, t_dl): FF orders by start time and
+# the PE policies by free-PE count at the candidate, both window-local
+# quantities.  The duration policies score by rectangle extent, which
+# reaches outside the window to the nearest blocking boundary, so any
+# same-round commit on a lane may move their chosen start.
+_WINDOW_LOCAL_POLICIES = frozenset(
+    (Policy.FF, Policy.PE_B, Policy.PE_W))
+
+
+@jax.jit
+def _match_scan(found, t_s, t_e, t_r, t_dl, pending, window_local,
+                monotone):
+    """One matching round over an ``[N, E]`` probe tensor.
+
+    A ``lax.scan`` over the requests in arrival order.  The carry
+    tracks, per lane, whether this round committed to it plus a
+    bounding interval ``[cmin, cmax)`` over the round's committed
+    slots, and one scalar bounding interval ``[dmin, dmax)`` over the
+    *deferred* requests' search windows.  Request i's probe of lane e
+    is *valid* (still equal to a fresh sequential probe) iff no
+    earlier commit this round can have changed e's answer: for
+    window-local policies that means no committed slot overlapping
+    ``[t_r_i, t_dl_i)``; for rectangle-scored policies any commit on
+    the lane invalidates it.  The bounding intervals are conservative
+    — false overlaps only defer, never misroute.
+
+    Sequential order also demands that a request never finalizes
+    *ahead* of a still-deferred earlier arrival whose eventual commit
+    could change its answer (or be changed by its commit): request i
+    additionally requires its window to be disjoint from every
+    deferred window so far (``clear``); rectangle policies require no
+    deferral at all.
+
+    Finalization (bit-exact vs the sequential probe-commit oracle):
+    pick ``lane* = argmin`` start over *valid feasible* lanes (ties
+    to the lowest index, as ``np.argmin``).  Finalize when every lane
+    is valid and the row is clear — then it equals a fresh sequential
+    probe.  Otherwise finalize only under ready-start dominance:
+    ``t_s[lane*] == t_r_i``, the row is clear, and every lane below
+    ``lane*`` is valid — no lane can start before the ready time and
+    equal starts lose the tie to ``lane*``.  FF starts are monotone
+    under added occupancy, so under FF an invalid lane below ``lane*``
+    whose stale start already exceeds ``t_r_i`` is also safe
+    (``monotone``).  Rejection is final regardless of staleness: a
+    commit only adds occupancy, so a row infeasible on every lane
+    stays infeasible.  Everything else defers to the next round's
+    re-probe.  The first pending request of a round always resolves,
+    so a round finalizes at least one request.
+    """
+    n_lanes = found.shape[1]
+    lane_idx = jnp.arange(n_lanes)
+
+    def step(carry, x):
+        committed, cmin, cmax, dmin, dmax, any_def = carry
+        f, ts, te, tr, tdl, live = x
+        overlap = (tr < cmax) & (tdl > cmin)
+        valid = jnp.where(window_local, ~(committed & overlap),
+                          ~committed)
+        clear = jnp.where(window_local,
+                          ~((tr < dmax) & (tdl > dmin)), ~any_def)
+        tv = jnp.where(f & valid, ts, T_INF)
+        tvs = jnp.where(f, ts, T_INF)         # stale, unmasked
+        best = jnp.min(tv)
+        lane = jnp.argmin(tv).astype(jnp.int32)
+        feasible = best < T_INF
+        all_valid = jnp.all(valid) & clear
+        safe_below = valid | (lane_idx >= lane) \
+            | (monotone & (tvs > tr))
+        dominant = feasible & (best == tr) & clear \
+            & jnp.all(safe_below)
+        assign = live & feasible & (all_valid | dominant)
+        reject = live & ~jnp.any(f)
+        defer = live & ~assign & ~reject
+        onehot = (lane_idx == lane) & assign
+        committed = committed | onehot
+        cmin = jnp.where(onehot, jnp.minimum(cmin, ts), cmin)
+        cmax = jnp.where(onehot, jnp.maximum(cmax, te), cmax)
+        dmin = jnp.where(defer, jnp.minimum(dmin, tr), dmin)
+        dmax = jnp.where(defer, jnp.maximum(dmax, tdl), dmax)
+        any_def = any_def | defer
+        out_lane = jnp.where(assign, lane, jnp.int32(-1))
+        return ((committed, cmin, cmax, dmin, dmax, any_def),
+                (out_lane, reject))
+
+    init = (jnp.zeros((n_lanes,), bool),
+            jnp.full((n_lanes,), T_INF, jnp.int32),
+            jnp.zeros((n_lanes,), jnp.int32),
+            jnp.int32(T_INF), jnp.int32(0), jnp.asarray(False))
+    _, (lanes, rejects) = jax.lax.scan(
+        step, init, (found, t_s, t_e, t_r, t_dl, pending))
+    return lanes, rejects
+
+
+@jax.jit
+def _least_loaded_scan(load, n_pe, t_du):
+    """Greedy least-loaded routing over the device load vector.
+
+    Identical decision sequence to the host greedy it replaces: lane =
+    argmin of committed + planned PE-seconds (float32 on both sides so
+    accumulation order ties break identically), planned area added
+    before the next request.  The scratch copy is never written back —
+    committed load lands only after the grouped commit.
+    """
+
+    def step(ld, x):
+        npe, tdu = x
+        lane = jnp.argmin(ld).astype(jnp.int32)
+        ld = ld.at[lane].add(npe.astype(ld.dtype) * tdu.astype(ld.dtype))
+        return ld, lane
+
+    _, lanes = jax.lax.scan(step, load, (n_pe, t_du))
+    return lanes
+
+
 class PartitionedCore:
     """E cluster partitions behind one vmapped scheduler state.
 
@@ -120,32 +238,101 @@ class PartitionedCore:
     ``add`` / ``delete`` with *global* chip ids — plus the routed bulk
     path :meth:`admit_stream_allocations`.  An allocation never spans
     partitions: requests wider than a partition are rejected.
+
+    Bulk ingress is one-dispatch-shaped for every routing (DESIGN.md
+    §9): ``least_loaded`` routes with a device scan over the
+    device-resident load vector, ``best_acceptance`` runs bounded
+    probe → match → grouped-commit rounds over an ``[N, E]`` probe
+    tensor, and all routings commit through one grouped
+    ``admit_stream_ensemble_auto`` dispatch.  ``self.dispatches``
+    counts device dispatches for the ingress benchmarks.
+
+    With ``backfill`` set (and ``auto_release=True``, required) every
+    partition lane carries the PR 4 deferral queue: rejected requests
+    park (up to ``park_capacity``) and retry as completed
+    reservations release on :meth:`release_until`.
     """
+
+    #: probe → match → commit rounds before the exact sequential
+    #: fallback takes the remaining (pathologically colliding) requests
+    match_max_rounds: int = 8
 
     def __init__(self, n_chips: int, n_partitions: int,
                  capacity: int = 128, pending_capacity: int = 256,
-                 use_kernel: bool = False, placement="auto"):
+                 use_kernel: bool = False, placement="auto",
+                 park_capacity: int = 0, backfill: str = "none",
+                 auto_release: bool = False,
+                 match_rounds: Optional[int] = None):
         if n_partitions < 1 or n_chips % n_partitions:
             raise ValueError(
                 f"n_chips={n_chips} not divisible into "
                 f"{n_partitions} partitions")
+        if backfill != "none" and not auto_release:
+            raise ValueError(
+                "backfilling partitions replay parked requests from "
+                "the pending-release buffer; auto_release must be on")
+        if backfill != "none" and park_capacity <= 0:
+            raise ValueError(
+                "backfilling partitions need park_capacity > 0")
         self.n_chips = n_chips
         self.n_partitions = n_partitions
         self.chips_per_part = n_chips // n_partitions
         self.use_kernel = use_kernel
+        self.backfill = backfill
+        self.auto_release = auto_release
         # partition axis -> mesh data axis (DESIGN.md §8): the bulk
         # admission dispatch steps each device's partition slice
         # locally; decisions are placement-invariant
         self.mesh = resolve_placement(placement, n_partitions)
+        # probe → match rounds pay only when the [N, E] probe tensor
+        # genuinely evaluates in parallel — sharded over >1 device or
+        # offloaded to the availscan kernel.  On a single host device
+        # every probe row is the same serial availability scan the
+        # fused matcher already runs per step, so rounds would only
+        # add redundant re-probe compute: go straight to the exact
+        # fused scan.  ``match_rounds`` overrides the auto choice.
+        if match_rounds is None:
+            probe_parallel = use_kernel or (
+                self.mesh is not None and self.mesh.devices.size > 1)
+            match_rounds = self.match_max_rounds if probe_parallel \
+                else 0
+        self.match_max_rounds = int(match_rounds)
         self.states = self._put(ens_lib.init_ensemble(
             n_partitions, capacity, self.chips_per_part,
-            pending_capacity))
-        # committed PE-seconds per partition (least-loaded routing)
-        self.load = [0.0] * n_partitions
+            pending_capacity, park_capacity))
+        self._backfills = ens_lib.backfill_ids(backfill, n_partitions)
+        # committed PE-seconds per partition (least-loaded routing):
+        # authoritative float32 host ledger + an async device copy so
+        # routing scans never pull load back to the host
+        self._load_host = np.zeros(n_partitions, np.float32)
+        self._load_dev = self._put_load(self._load_host)
         self._rr = 0                      # round-robin cursor
+        self.dispatches = 0               # device dispatch counter
+        self.last_match_rounds = 0        # rounds of the last matcher
 
     def _put(self, tree):
         return shard_rules.shard_ensemble(self.mesh, tree)
+
+    def _put_load(self, arr) -> jax.Array:
+        vec = jnp.asarray(arr, jnp.float32)
+        if self.mesh is not None:
+            vec = jax.device_put(vec, shard_rules.fit_sharding(
+                self.mesh, vec.shape, shard_rules.lane_spec(1)))
+        return vec
+
+    @property
+    def load(self) -> List[float]:
+        """Committed PE-seconds per partition (host view)."""
+        return [float(x) for x in self._load_host]
+
+    @load.setter
+    def load(self, values) -> None:
+        self._load_host = np.asarray(values, np.float32).copy()
+        self._load_dev = self._put_load(self._load_host)
+
+    def _bump_load(self, lane: int, delta: float) -> None:
+        self._load_host[lane] += np.float32(delta)
+        self._load_dev = self._put_load(self._load_host)
 
     # -- global chip ids <-> (lane, local) -----------------------------
     def _split(self, pes: Sequence[int]):
@@ -177,6 +364,7 @@ class PartitionedCore:
                 lambda x: x[lane], self.states.tl)
             new_tl, overflow, n_keep = tl_lib.update(
                 tl, t_s, t_e, mask, is_add=is_add, with_count=True)
+            self.dispatches += 1
             if not bool(overflow):
                 self.states = self.states._replace(
                     tl=jax.tree_util.tree_map(
@@ -196,27 +384,66 @@ class PartitionedCore:
                        pes: Sequence[int]) -> None:
         lane, local = self._split(pes)
         self._lane_update(lane, t_s, t_e, local, is_add=True)
-        self.load[lane] += (t_e - t_s) * len(local)
+        self._bump_load(lane, (t_e - t_s) * len(local))
 
     def delete_allocation(self, t_s: int, t_e: int,
                           pes: Sequence[int]) -> None:
         lane, local = self._split(pes)
         self._lane_update(lane, t_s, t_e, local, is_add=False)
-        self.load[lane] -= (t_e - t_s) * len(local)
+        self._bump_load(lane, -(t_e - t_s) * len(local))
 
-    def find_allocation(self, req: ARRequest, policy: Policy,
-                        t_now: Optional[int] = None
+    def release_until(self, t_now: int) -> None:
+        """Advance the auto-release clock on every partition lane."""
+        self.states = self._put(
+            ens_lib.release_until_ensemble(self.states, t_now))
+        self.dispatches += 1
+
+    # -- pre-staged probe structs (reused placement pin) ---------------
+    def stage_request(self, req: ARRequest) -> batch_lib.RequestBatch:
+        """Stage one request's scalar struct on the fleet placement.
+
+        Pass the result to :meth:`find_allocation` via ``struct=`` to
+        reuse the transfer across repeated probes of the same request
+        (e.g. the malleable-variant sweep probing per chip count).
+        """
+        struct = batch_lib.request_struct(req)
+        if self.mesh is not None:
+            struct = jax.device_put(
+                struct, NamedSharding(self.mesh, PartitionSpec()))
+        return struct
+
+    def stage_requests(self, requests: Sequence[ARRequest]
+                       ) -> batch_lib.RequestBatch:
+        """Stage an ``[N]`` request batch, replicated on the mesh.
+
+        One transfer feeds every probe round of the batched matcher.
+        """
+        batch = batch_lib.requests_to_batch(requests)
+        if self.mesh is not None:
+            batch = jax.device_put(
+                batch, NamedSharding(self.mesh, PartitionSpec()))
+        return batch
+
+    def find_allocation(self, req: Optional[ARRequest], policy: Policy,
+                        t_now: Optional[int] = None, *,
+                        struct: Optional[batch_lib.RequestBatch] = None
                         ) -> Optional[Allocation]:
         """Best-acceptance probe: search every partition in one
         vmapped dispatch, take the earliest feasible start (ties to
-        the lowest lane)."""
-        struct = batch_lib.request_struct(req)
+        the lowest lane).
+
+        ``struct`` (from :meth:`stage_request`) skips the per-call
+        host staging so repeated probes re-use one pinned transfer.
+        """
+        if struct is None:
+            struct = self.stage_request(req)
         if t_now is not None:
             # the search reads its "now" from the struct's t_a
             struct = struct._replace(t_a=jnp.int32(t_now))
         res = ens_lib.find_allocation_ensemble(
             self.states, struct, jnp.int32(policy_index(policy)),
             n_pe=self.chips_per_part, use_kernel=self.use_kernel)
+        self.dispatches += 1
         res = jax.tree_util.tree_map(np.asarray, res)   # one sync
         if not res.found.any():
             return None
@@ -228,79 +455,209 @@ class PartitionedCore:
         return dataclasses.replace(
             alloc, pe_ids=tuple(p + off for p in alloc.pe_ids))
 
-    # -- routed bulk admission (one vmapped dispatch) ------------------
-    def route(self, requests: Sequence[ARRequest],
-              routing: str) -> List[int]:
-        """Assign a partition lane to every request (no commit)."""
+    # -- routed bulk admission (one-dispatch ingress, DESIGN.md §9) ----
+    def route(self, requests: Sequence[ARRequest], routing: str, *,
+              policy: Policy = Policy.FF,
+              legacy_raise: bool = False) -> List[int]:
+        """Assign a partition lane to every request (no commit).
+
+        Every routing returns one lane per request.
+        ``best_acceptance`` returns the matcher's probe preview: one
+        shared ``[N, E]`` probe of the current timelines under
+        ``policy``, each request taking its earliest feasible start
+        (ties to the lowest lane), ``-1`` where no partition can host
+        it.  The preview is commit-free and therefore ignores
+        intra-batch contention — :meth:`admit_stream_allocations` is
+        the authoritative matcher (it re-probes between commit
+        rounds).  ``legacy_raise=True`` restores the pre-PR 7
+        ValueError contract and is deprecated.
+        """
         if routing not in ROUTINGS:
             raise ValueError(
                 f"unknown routing {routing!r}; pick one of {ROUTINGS}")
         if routing == "best_acceptance":
-            raise ValueError(
-                "best_acceptance routes by probing the timelines, not "
-                "by pre-assignment; use admit_stream_allocations")
+            if legacy_raise:
+                warnings.warn(
+                    "route(legacy_raise=True) is deprecated: "
+                    "best_acceptance now returns the matcher's lane "
+                    "preview instead of raising",
+                    DeprecationWarning, stacklevel=2)
+                raise ValueError(
+                    "best_acceptance routes by probing the timelines, "
+                    "not by pre-assignment; use "
+                    "admit_stream_allocations")
+            if not requests:
+                return []
+            reqs = self.stage_requests(requests)
+            res = ens_lib.find_allocations_ensemble(
+                self.states, reqs, jnp.int32(policy_index(policy)),
+                n_pe=self.chips_per_part, use_kernel=self.use_kernel)
+            self.dispatches += 1
+            found = np.asarray(res.found)
+            t_s = np.where(found, np.asarray(res.t_s), T_INF)
+            lanes = np.argmin(t_s, axis=1)
+            return [int(lane) if found[i].any() else -1
+                    for i, lane in enumerate(lanes)]
         E = self.n_partitions
         if routing == "round_robin":
             lanes = [(self._rr + i) % E for i in range(len(requests))]
             self._rr = (self._rr + len(requests)) % E
             return lanes
-        # least_loaded: greedy argmin over committed + planned area
-        load = list(self.load)
-        lanes = []
-        for req in requests:
-            lane = int(np.argmin(load))
-            lanes.append(lane)
-            load[lane] += req.n_pe * req.t_du
-        return lanes
+        # least_loaded: greedy argmin over committed + planned area,
+        # scanned on device over the device-resident load vector
+        if not requests:
+            return []
+        reqs = self.stage_requests(requests)
+        lanes = _least_loaded_scan(self._load_dev, reqs.n_pe,
+                                   reqs.t_du)
+        self.dispatches += 1
+        return [int(x) for x in np.asarray(lanes)]
+
+    def _commit_grouped(self, requests: Sequence[ARRequest],
+                        lanes: Sequence[int], policy: Policy
+                        ) -> List[Optional[Allocation]]:
+        """Commit routed requests in ONE grouped ensemble dispatch."""
+        batch, _, slots = batch_lib.scatter_streams(
+            requests, lanes, self.n_partitions, self.chips_per_part)
+        states, dec = ens_lib.admit_stream_ensemble_auto(
+            self.states, self._put(batch),
+            jnp.full((self.n_partitions,), policy_index(policy),
+                     jnp.int32),
+            n_pe=self.chips_per_part, backfills=self._backfills,
+            auto_release=self.auto_release,
+            use_kernel=self.use_kernel)
+        # growth (if any) re-materialized the lanes; re-pin placement
+        self.states = self._put(states)
+        self.dispatches += 1
+        dec = jax.tree_util.tree_map(np.asarray, dec)   # one sync
+        allocs = []
+        for lane, pos in slots:
+            one = jax.tree_util.tree_map(
+                lambda x, lane=lane, pos=pos: x[lane][pos], dec)
+            alloc = self._globalize(lane, one)
+            if alloc is not None:
+                self._load_host[lane] += np.float32(
+                    (alloc.t_e - alloc.t_s) * len(alloc.pe_ids))
+            allocs.append(alloc)
+        self._load_dev = self._put_load(self._load_host)
+        return allocs
+
+    def _admit_best_acceptance(self, requests: Sequence[ARRequest],
+                               policy: Policy
+                               ) -> List[Optional[Allocation]]:
+        """Batched best-acceptance: probe × match × commit rounds.
+
+        Each round is three dispatches — the ``[N, E]`` probe
+        (:func:`~repro.core.ensemble.find_allocations_ensemble`), the
+        :func:`_match_scan` assignment, and one grouped commit — plus
+        two small host syncs, independent of N.  The matcher
+        finalizes every request whose probe row provably equals a
+        fresh sequential probe (see :func:`_match_scan`); the rest
+        re-probe next round.  When the rounds stop paying (resolution
+        slows, :attr:`match_max_rounds` hit, the core auto-releases
+        so probe staleness is no longer monotone, or the probe cannot
+        parallelize — ``match_max_rounds=0`` on single-device
+        non-kernel cores) the remainder goes
+        through the fused device-sequential matcher
+        (:func:`~repro.core.ensemble.match_stream_ensemble`) in one
+        dispatch.  Either way the total dispatch count is bounded by
+        the round limit — never by N — and decisions are bit-exact vs
+        the sequential probe-commit oracle for every policy.
+        """
+        n_req = len(requests)
+        pid = jnp.int32(policy_index(policy))
+        pending = np.ones(n_req, bool)
+        allocs: List[Optional[Allocation]] = [None] * n_req
+        rounds = 0
+        # the rounds protocol proves probe rows fresh from commits
+        # only ever *adding* occupancy; auto-releasing lanes violate
+        # that, so they go straight to the exact fused matcher (as do
+        # cores whose probe doesn't parallelize: match_max_rounds=0)
+        if not self.auto_release and self.match_max_rounds > 0:
+            reqs = self.stage_requests(requests)
+            window_local = jnp.asarray(
+                policy in _WINDOW_LOCAL_POLICIES)
+            monotone = jnp.asarray(policy == Policy.FF)
+            while pending.any() and rounds < self.match_max_rounds:
+                rounds += 1
+                live = int(pending.sum())
+                res = ens_lib.find_allocations_ensemble(
+                    self.states, reqs, pid, n_pe=self.chips_per_part,
+                    use_kernel=self.use_kernel)
+                res = shard_rules.shard_probe(self.mesh, res)
+                self.dispatches += 1
+                lanes_d, rejects_d = _match_scan(
+                    res.found, res.t_s, res.t_e, reqs.t_r, reqs.t_dl,
+                    jnp.asarray(pending), window_local, monotone)
+                self.dispatches += 1
+                lanes = np.asarray(lanes_d)      # one small sync
+                rejects = np.asarray(rejects_d)
+                take = lanes >= 0
+                pending &= ~(rejects | take)
+                sel = np.flatnonzero(take)
+                if sel.size:
+                    committed = self._commit_grouped(
+                        [requests[i] for i in sel],
+                        lanes[sel].tolist(), policy)
+                    for i, alloc in zip(sel, committed):
+                        allocs[i] = alloc
+                if live - int(pending.sum()) < max(1, live // 4):
+                    break      # colliding tail: fused matcher is cheaper
+        # exact fused device-sequential matcher for the tail
+        if pending.any():
+            idx = np.flatnonzero(pending)
+            tail = [requests[i] for i in idx]
+            # pad to a power of two so tail lengths reuse compilations
+            n_pad = max(tl_lib.next_pow2(len(tail)), 1)
+            fill = batch_lib.filler_request(
+                self.chips_per_part, tail[-1].t_a)
+            batch = self.stage_requests(
+                tail + [fill] * (n_pad - len(tail)))
+            states, lanes_d, decs_d = ens_lib.match_stream_ensemble_auto(
+                self.states, batch, pid, n_pe=self.chips_per_part,
+                backfills=self._backfills,
+                auto_release=self.auto_release,
+                use_kernel=self.use_kernel)
+            self.states = self._put(states)
+            self.dispatches += 1
+            lanes = np.asarray(lanes_d)          # one sync
+            decs = jax.tree_util.tree_map(np.asarray, decs_d)
+            for k, i in enumerate(idx):
+                lane = int(lanes[k])
+                if lane < 0:
+                    continue
+                one = jax.tree_util.tree_map(
+                    lambda x, k=k: x[k], decs)
+                alloc = self._globalize(lane, one)
+                if alloc is not None:
+                    self._load_host[lane] += np.float32(
+                        (alloc.t_e - alloc.t_s) * len(alloc.pe_ids))
+                allocs[i] = alloc
+            self._load_dev = self._put_load(self._load_host)
+        self.last_match_rounds = rounds
+        return allocs
 
     def admit_stream_allocations(
         self, requests: Sequence[ARRequest], policy: Policy,
         routing: str = "round_robin",
     ) -> List[Optional[Allocation]]:
-        """Bulk admission across partitions.
+        """Bulk admission across partitions, one grouped dispatch.
 
-        ``round_robin`` / ``least_loaded`` group the requests per lane
-        and admit all lanes in *one* vmapped ``admit_stream`` dispatch
-        (completion release stays with the fleet: ``auto_release`` is
-        off).  ``best_acceptance`` probes all partitions per request
-        (vmapped search) and commits to the earliest feasible start —
-        sequential commits, maximal acceptance.
+        ``round_robin`` / ``least_loaded`` route up front (host cursor
+        / device load scan) and admit all lanes in one vmapped
+        ``admit_stream`` dispatch.  ``best_acceptance`` runs the
+        batched matcher (:meth:`_admit_best_acceptance`): bounded
+        probe → match → grouped-commit rounds instead of the old
+        per-request probe/commit round-trips, decision-identical to
+        sequential probing.  Completion release stays with the fleet
+        unless the core was built with ``auto_release=True``.
         """
+        if not requests:
+            return []
         if routing == "best_acceptance":
-            out: List[Optional[Allocation]] = []
-            for req in requests:
-                alloc = self.find_allocation(req, policy)
-                if alloc is not None:
-                    self.add_allocation(alloc.t_s, alloc.t_e,
-                                        list(alloc.pe_ids))
-                out.append(alloc)
-            return out
+            return self._admit_best_acceptance(list(requests), policy)
         lanes = self.route(requests, routing)
-        E = self.n_partitions
-        streams: List[List[ARRequest]] = [[] for _ in range(E)]
-        slot: List[tuple] = []            # request i -> (lane, pos)
-        for req, lane in zip(requests, lanes):
-            slot.append((lane, len(streams[lane])))
-            streams[lane].append(req)
-        batch, _ = pad_streams(streams, self.chips_per_part)
-        states, dec = ens_lib.admit_stream_ensemble_auto(
-            self.states, self._put(batch),
-            jnp.full((E,), policy_index(policy), jnp.int32),
-            n_pe=self.chips_per_part, auto_release=False,
-            use_kernel=self.use_kernel)
-        # growth (if any) re-materialized the lanes; re-pin placement
-        self.states = self._put(states)
-        dec = jax.tree_util.tree_map(np.asarray, dec)   # one sync
-        allocs = []
-        for lane, pos in slot:
-            one = jax.tree_util.tree_map(
-                lambda x, lane=lane, pos=pos: x[lane][pos], dec)
-            alloc = self._globalize(lane, one)
-            if alloc is not None:
-                self.load[lane] += \
-                    (alloc.t_e - alloc.t_s) * len(alloc.pe_ids)
-            allocs.append(alloc)
-        return allocs
+        return self._commit_grouped(requests, lanes, policy)
 
     # -- debug / test view ---------------------------------------------
     def records(self) -> List[tuple]:

@@ -199,6 +199,38 @@ def shard_ensemble(mesh: Optional[Mesh], tree) -> Any:
     return jax.device_put(tree, ensemble_shardings(mesh, tree))
 
 
+def probe_spec(ndim: int) -> P:
+    """Spec for ``[N, E, ...]`` fleet-probe tensors (DESIGN.md §9).
+
+    The request-batched probe ``find_allocations_ensemble`` yields
+    leaves whose *second* axis is the lane axis (requests lead): shard
+    axis 1 over the data mesh axes, replicate the request axis and any
+    trailing word axes.
+    """
+    return P(*((None, LANE_DATA_AXES) + (None,) * (ndim - 2)))
+
+
+def probe_shardings(mesh: Mesh, tree) -> Any:
+    """NamedSharding pytree for an ``[N, E, ...]`` probe pytree."""
+    return jax.tree.map(
+        lambda x: fit_sharding(
+            mesh, x.shape,
+            probe_spec(x.ndim) if x.ndim >= 2
+            else P(*([None] * x.ndim))),
+        tree)
+
+
+def shard_probe(mesh: Optional[Mesh], tree) -> Any:
+    """Pin a probe pytree's lane axis (axis 1) onto ``mesh``.
+
+    ``mesh=None`` returns the tree untouched; leaves with fewer than
+    two dims (scalars from degenerate probes) stay replicated.
+    """
+    if mesh is None:
+        return tree
+    return jax.device_put(tree, probe_shardings(mesh, tree))
+
+
 def fit_sharding(mesh: Mesh, shape, spec: P) -> NamedSharding:
     """NamedSharding with indivisible / missing axes dropped per-dim."""
     names = set(mesh.axis_names)

@@ -285,9 +285,15 @@ def test_backfill_config_validation_and_pending_surface():
         ServiceConfig(n_pe=8, engine="host", backfill="easy")
     with pytest.raises(ValueError, match="auto_release"):
         ServiceConfig(n_pe=8, backfill="easy", auto_release=False)
-    with pytest.raises(ValueError, match="partition"):
+    with pytest.raises(ValueError, match="auto_release"):
         ServiceConfig(n_pe=8, n_partitions=2, auto_release=False,
                       chunk_size=None, backfill="easy")
+    with pytest.raises(ValueError, match="single name"):
+        ServiceConfig(n_pe=8, n_partitions=2, chunk_size=None,
+                      backfill=("easy", "none"))
+    # partition lanes backfill with one shared mode
+    assert ServiceConfig(n_pe=8, n_partitions=2, chunk_size=None,
+                         backfill="easy").backfilling
     with pytest.raises(ValueError, match="modes for"):
         ServiceConfig(n_pe=8, backfill=("easy", "none"))
     with pytest.raises(ValueError, match="backfill_queue"):

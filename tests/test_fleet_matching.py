@@ -1,0 +1,289 @@
+"""Batched fleet ingress vs the sequential probe-commit oracle.
+
+PR 7 rebuilt :meth:`PartitionedCore.admit_stream_allocations` so an
+N-request batch costs a bounded number of device dispatches (probe →
+match → grouped-commit rounds plus a fused device-sequential tail)
+instead of O(N) probe/commit round-trips.  The contract is *bit-exact
+decision identity* with the sequential host loop it replaced, locked
+here PR 4-style against :class:`repro.core.hostsched.FleetRoutingOracle`
+for every routing:
+
+* fast gate: 300 jobs, contended traffic, all three routings;
+* slow gate: 1000 jobs × all 7 policies × all 3 routings;
+* mid-batch growth (tiny capacity) must not perturb decisions;
+* dispatch counts are bounded by the round limit, never by N;
+* an 8-device subprocess runs the sharded matcher;
+* partitioned sessions now thread backfill/auto-release through the
+  core (parked requests promote on tick; cancel clears the pending
+  slot).
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.api import ReservationService, ServiceConfig
+from repro.core import ARRequest, Policy
+from repro.core.hostsched import FleetRoutingOracle
+from repro.core.types import ALL_POLICIES
+from repro.runtime.fleet import PartitionedCore
+
+ROUTINGS3 = ("round_robin", "least_loaded", "best_acceptance")
+
+
+def _gen(n, seed, spacing=20, dmin=50, dmax=600, slack=1.0, wmax=30,
+         pemax=17):
+    rng = np.random.default_rng(seed)
+    reqs, t = [], 0
+    for _ in range(n):
+        t += int(rng.integers(0, spacing))
+        dur = int(rng.integers(dmin, dmax))
+        r = t + int(rng.integers(0, wmax))
+        t_dl = r + int(dur * (1.0 + slack * rng.random()))
+        reqs.append(ARRequest(t_a=t, t_r=r, t_du=dur, t_dl=t_dl,
+                              n_pe=int(rng.integers(1, pemax))))
+    return reqs
+
+
+def _key(a):
+    return None if a is None else (a.t_s, a.t_e, tuple(a.pe_ids))
+
+
+def _assert_matches_oracle(n_chips, n_parts, reqs, policy, routing,
+                           capacity=64, match_rounds=8):
+    # match_rounds=8 forces the probe/match/commit rounds protocol on
+    # single-device hosts (where auto mode goes straight to the fused
+    # scan); match_rounds=None covers the auto path
+    core = PartitionedCore(n_chips, n_parts, capacity=capacity,
+                           match_rounds=match_rounds)
+    got = core.admit_stream_allocations(reqs, policy, routing=routing)
+    oracle = FleetRoutingOracle(n_chips, n_parts)
+    exp = oracle.admit_batch(reqs, policy, routing)
+    mism = [i for i in range(len(reqs)) if _key(got[i]) != _key(exp[i])]
+    assert not mism, (
+        f"{routing}/{policy}: request {mism[0]} got "
+        f"{got[mism[0]]} want {exp[mism[0]]}")
+    assert core.records() == oracle.records()
+    return core
+
+
+# ---------------------------------------------------------------------------
+# decision identity vs the sequential oracle
+# ---------------------------------------------------------------------------
+
+
+def test_fast_gate_300_jobs_all_routings():
+    reqs = _gen(300, seed=3, slack=0.6)
+    for routing in ROUTINGS3:
+        for policy in (Policy.FF, Policy.PEDU_W):
+            _assert_matches_oracle(64, 4, reqs, policy, routing)
+
+
+def test_fast_gate_auto_rounds_mode():
+    """The auto heuristic (fused-only on a single device) must make
+    the same decisions as the forced rounds protocol and the oracle."""
+    reqs = _gen(300, seed=3, slack=0.6)
+    for policy in (Policy.FF, Policy.PEDU_W):
+        core = _assert_matches_oracle(64, 4, reqs, policy,
+                                      "best_acceptance",
+                                      match_rounds=None)
+        if core.mesh is None or core.mesh.devices.size == 1:
+            assert core.match_max_rounds == 0
+            assert core.last_match_rounds == 0
+
+
+@pytest.mark.slow
+def test_slow_gate_1000_jobs_all_policies_all_routings():
+    reqs = _gen(1000, seed=17, spacing=10, slack=0.8)
+    for routing in ROUTINGS3:
+        for policy in ALL_POLICIES:
+            _assert_matches_oracle(128, 8, reqs, policy, routing,
+                                   capacity=128)
+
+
+def test_mid_batch_growth_is_decision_invariant():
+    """capacity=8 forces the ensemble to grow mid-batch; the grown
+    replay must reproduce the big-capacity decision sequence."""
+    reqs = _gen(120, seed=11, spacing=8, slack=0.8)
+    for routing in ROUTINGS3:
+        core = _assert_matches_oracle(64, 4, reqs, Policy.FF, routing,
+                                      capacity=8)
+        assert core.states.tl.times.shape[-1] > 8    # actually grew
+
+
+def test_tight_slack_exercises_rejections():
+    reqs = _gen(200, seed=5, slack=0.1, spacing=6)
+    core = _assert_matches_oracle(64, 4, reqs, Policy.PE_B,
+                                  "best_acceptance")
+    # the point of the scenario: a healthy mix of accept and reject
+    assert 0 < core.last_match_rounds <= core.match_max_rounds
+
+
+# ---------------------------------------------------------------------------
+# dispatch complexity: bounded by rounds, never by N
+# ---------------------------------------------------------------------------
+
+
+def test_dispatch_count_constant_in_batch_size():
+    counts = {}
+    for n in (32, 128):
+        core = PartitionedCore(64, 4, capacity=256, match_rounds=8)
+        core.admit_stream_allocations(
+            _gen(n, seed=7), Policy.FF, routing="best_acceptance")
+        # per round: probe + match + grouped commit; plus one fused
+        # tail dispatch.  (No growth at capacity=256.)
+        assert core.dispatches <= 3 * core.match_max_rounds + 1, n
+        counts[n] = core.dispatches
+    # 4x the requests may take MORE rounds, never O(N) dispatches
+    assert counts[128] <= 3 * PartitionedCore.match_max_rounds + 1
+
+    # auto mode on a single device: the whole batch is one fused
+    # matcher dispatch (plus staging), still constant in N
+    core = PartitionedCore(64, 4, capacity=256)
+    core.admit_stream_allocations(_gen(128, seed=7), Policy.FF,
+                                  routing="best_acceptance")
+    assert core.dispatches <= 3 * PartitionedCore.match_max_rounds + 1
+
+    for routing in ("round_robin", "least_loaded"):
+        core = PartitionedCore(64, 4, capacity=256)
+        core.admit_stream_allocations(_gen(128, seed=7), Policy.FF,
+                                      routing=routing)
+        assert core.dispatches <= 2, routing   # route scan + commit
+
+
+def test_route_preview_and_legacy_shim():
+    core = PartitionedCore(64, 4, capacity=64)
+    reqs = _gen(16, seed=2)
+    lanes = core.route(reqs, "best_acceptance")
+    assert len(lanes) == 16 and all(-1 <= l < 4 for l in lanes)
+    # an impossible request previews as unroutable
+    wide = ARRequest(t_a=0, t_r=0, t_du=10, t_dl=20, n_pe=17)
+    assert core.route([wide], "best_acceptance") == [-1]
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError):
+            core.route(reqs, "best_acceptance", legacy_raise=True)
+
+
+def test_least_loaded_device_vector_tracks_commits():
+    core = PartitionedCore(64, 4, capacity=64)
+    oracle = FleetRoutingOracle(64, 4)
+    reqs = _gen(60, seed=9)
+    core.admit_stream_allocations(reqs, Policy.FF,
+                                  routing="least_loaded")
+    oracle.admit_batch(reqs, Policy.FF, "least_loaded")
+    np.testing.assert_allclose(core.load, oracle.load)
+    # the device copy used by the routing scan agrees with the ledger
+    np.testing.assert_allclose(np.asarray(core._load_dev), core.load)
+
+
+# ---------------------------------------------------------------------------
+# partitioned sessions: backfill + auto-release threading (PR 7)
+# ---------------------------------------------------------------------------
+
+
+def test_partition_session_auto_release_ticks_all_lanes():
+    sess = ReservationService(ServiceConfig(
+        n_pe=32, n_partitions=2, chunk_size=None)).session()
+    reqs = [ARRequest(t_a=0, t_r=0, t_du=100, t_dl=400, n_pe=8)
+            for _ in range(4)]
+    res = sess.offer(reqs, routing="round_robin")
+    assert res.n_accepted == 4
+    assert sess.tick(50) == 0
+    assert sess.tick(500) == 4          # both lanes, one dispatch
+    assert sess.records() == []
+    assert sess.metrics()["released"] == 4
+
+
+def test_partition_session_cancel_clears_pending_slot():
+    sess = ReservationService(ServiceConfig(
+        n_pe=32, n_partitions=2, chunk_size=None)).session()
+    res = sess.offer([ARRequest(t_a=0, t_r=0, t_du=100, t_dl=400,
+                                n_pe=8)], routing="round_robin")
+    (alloc,) = res.allocations()
+    assert sess.cancel(alloc) is True
+    assert sess.cancel(alloc) is False   # slot already cleared
+    assert sess.tick(10_000) == 0        # nothing left to release
+    assert sess.records() == []
+
+
+def test_partition_session_backfills_per_lane():
+    sess = ReservationService(ServiceConfig(
+        n_pe=32, n_partitions=2, chunk_size=None, backfill="easy",
+        backfill_queue=8)).session()
+    # saturate both partitions until t=1000
+    blockers = [ARRequest(t_a=0, t_r=0, t_du=1000, t_dl=1000, n_pe=16)
+                for _ in range(2)]
+    assert sess.offer(blockers, routing="round_robin").n_accepted == 2
+    # infeasible before the blockers release, feasible after: parks
+    late = ARRequest(t_a=1, t_r=1, t_du=50, t_dl=2000, n_pe=16)
+    res = sess.offer([late], routing="best_acceptance")
+    assert res.n_accepted == 1           # parked counts as accepted
+    m = sess.metrics()
+    assert m["n_parked_now"] >= 1 and m["park_capacity"] == 8
+    assert any(sess.pending(lane) for lane in (0, 1))
+    sess.tick(1500)
+    m = sess.metrics()
+    assert m["n_parked_now"] == 0 and m["n_promoted"] >= 1
+    assert m["dispatches"] > 0
+
+
+def test_partition_session_best_acceptance_metrics():
+    sess = ReservationService(ServiceConfig(
+        n_pe=64, n_partitions=4, auto_release=False,
+        chunk_size=None)).session()
+    res = sess.offer(_gen(48, seed=4), routing="best_acceptance")
+    assert res.n_offered == 48
+    m = sess.metrics()
+    # single-device auto mode matches in 0 rounds (pure fused scan);
+    # either way the dispatch count is bounded by rounds, never by N
+    assert m["match_rounds"] >= 0
+    assert m["dispatches"] <= 3 * PartitionedCore.match_max_rounds + 1
+
+
+# ---------------------------------------------------------------------------
+# 8-device sharded matcher
+# ---------------------------------------------------------------------------
+
+
+def test_eight_way_sharded_matcher_subprocess():
+    """Force 8 host devices and check the sharded [N, E] probe/match
+    pipeline reproduces the host oracle bit-exactly."""
+    code = """
+import numpy as np
+import jax
+assert jax.device_count() == 8, jax.devices()
+from repro.core import ARRequest, Policy
+from repro.core.hostsched import FleetRoutingOracle
+from repro.runtime.fleet import PartitionedCore
+rng = np.random.default_rng(13)
+reqs, t = [], 0
+for _ in range(96):
+    t += int(rng.integers(0, 12))
+    dur = int(rng.integers(50, 400))
+    r = t + int(rng.integers(0, 30))
+    reqs.append(ARRequest(t_a=t, t_r=r, t_du=dur,
+                          t_dl=r + int(dur * (1 + rng.random())),
+                          n_pe=int(rng.integers(1, 17))))
+core = PartitionedCore(128, 8, capacity=64)
+got = core.admit_stream_allocations(reqs, Policy.FF,
+                                    routing="best_acceptance")
+exp = FleetRoutingOracle(128, 8).admit_batch(reqs, Policy.FF)
+def key(a):
+    return None if a is None else (a.t_s, a.t_e, tuple(a.pe_ids))
+assert [key(a) for a in got] == [key(a) for a in exp]
+assert core.mesh is not None
+print("OK")
+"""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        " --xla_force_host_platform_device_count=8")
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src")] +
+        env.get("PYTHONPATH", "").split(os.pathsep))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=560)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "OK" in out.stdout

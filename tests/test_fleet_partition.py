@@ -120,8 +120,13 @@ def test_partitioned_core_validates_arguments():
         core.add_allocation(0, 10, [63, 64])    # spans partitions
     with pytest.raises(ValueError):
         core.route([], "nearest")          # unknown routing
-    with pytest.raises(ValueError):
-        core.route([], "best_acceptance")  # probe has no pre-route
+    # best_acceptance routes now return the probe preview (PR 7);
+    # the pre-PR 7 ValueError contract survives behind a deprecated
+    # flag for callers that relied on it
+    assert core.route([], "best_acceptance") == []
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError):
+            core.route([], "best_acceptance", legacy_raise=True)
     with pytest.raises(ValueError):
         # a partitioned fleet is always device-backed
         FleetScheduler(n_chips=128, n_partitions=2, engine="host")

@@ -344,10 +344,12 @@ def test_config_validation():
         ServiceConfig(n_pe=8, chunk_size=64, ring_capacity=8)
     with pytest.raises(TypeError, match="unknown device engine"):
         ServiceConfig.from_engine_kwargs(8, "device", buckets=True)
-    # partitioned sessions: completions are the caller's, growth is
+    # partitioned sessions handle completions either way now (lanes
+    # auto-release via tick, or the caller deletes); growth stays
     # internal to the core
-    with pytest.raises(ValueError, match="auto_release=False"):
-        ServiceConfig(n_pe=8, n_partitions=2)
+    assert ServiceConfig(n_pe=8, n_partitions=2).auto_release
+    assert not ServiceConfig(n_pe=8, n_partitions=2,
+                             auto_release=False).auto_release
     with pytest.raises(ValueError, match="auto_grow"):
         ServiceConfig(n_pe=8, n_partitions=2, auto_release=False,
                       auto_grow=False)
