@@ -1,0 +1,134 @@
+"""Tenancy overhead: gated admission step cost and metrics-poll latency.
+
+The multi-tenant subsystem (DESIGN.md §10) rides inside the fused
+admit step — quota gate before the search, fair-share ranking in the
+queue sweeps, per-tenant accumulators after commit — so its cost shows
+up as a *step-cost ratio* against the identical stream with
+``tenants=None``.  Two claims are measured into
+``BENCH_tenancy.json``:
+
+* ``tenancy_on`` vs ``tenancy_off``: warm requests/sec of the same
+  ring-chunked offer stream with and without a 4-tenant table.  The
+  zero-tenant path must stay at the PR 7 cost (it traces the exact
+  PR 7 graph: a ``None`` table contributes no pytree leaves), and the
+  tenanted path should stay within a small constant factor.
+* ``metrics_poll``: polls/sec of ``Session.metrics(tenant=...)`` on an
+  idle session.  The snapshot is cached until the next dispatch, so
+  idle polls perform **zero** device fetches — the row records the
+  fetch count as measured through the ``service._device_fetch`` choke
+  point, and the check gate pins it at 0.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+from typing import Dict, List, Optional
+
+from repro.api import ReservationService, ServiceConfig
+from repro.core.types import Policy
+from repro.sim import WorkloadParams, generate
+from repro.tenancy import TenantSpec
+
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+BENCH_TENANCY_PATH = str(_ROOT / "BENCH_tenancy.json")
+
+N_TENANTS = 4
+
+
+def _jobs(n_jobs: int, n_pe: int, seed: int):
+    jobs = sorted(
+        [j for j in generate(WorkloadParams(
+            n_jobs=n_jobs, n_pe=n_pe, seed=seed,
+            u_low=2.0, u_med=4.0, u_hi=6.0)) if j.n_pe <= n_pe],
+        key=lambda j: j.t_a)
+    import dataclasses
+    return [dataclasses.replace(j, tenant=i % N_TENANTS)
+            for i, j in enumerate(jobs)]
+
+
+def tenancy_throughput(n_jobs: int = 240, n_pe: int = 64,
+                       chunk: int = 64, seed: int = 0,
+                       repeats: int = 5,
+                       out_path: Optional[str] = BENCH_TENANCY_PATH
+                       ) -> List[Dict]:
+    """Warm offer throughput with/without tenants + idle poll rate."""
+    from benchmarks._measure import median, median_wall
+
+    jobs = _jobs(n_jobs, n_pe, seed)
+
+    def run_stream(tenants) -> float:
+        sess = ReservationService(ServiceConfig(
+            n_pe=n_pe, policy=Policy.PE_W, capacity=128,
+            pending_capacity=256, chunk_size=chunk,
+            ring_capacity=2 * chunk, tenants=tenants)).session()
+        t0 = time.perf_counter()
+        i = 0
+        while i < len(jobs):
+            sess.offer(jobs[i:i + chunk])
+            i += chunk
+        sess.metrics()          # decision + counter sync
+        return time.perf_counter() - t0
+
+    spec = TenantSpec(weights=(1.0,) * N_TENANTS)
+    wall_off = median_wall(lambda: run_stream(None), repeats)
+    wall_on = median_wall(lambda: run_stream(spec), repeats)
+
+    # idle metrics polling on a drained multi-tenant session, with the
+    # device-fetch choke point instrumented
+    from repro.api import service as service_mod
+    sess = ReservationService(ServiceConfig(
+        n_pe=n_pe, policy=Policy.PE_W, capacity=128,
+        pending_capacity=256, chunk_size=chunk,
+        ring_capacity=2 * chunk, tenants=spec)).session()
+    sess.offer(jobs)
+    sess.metrics(tenant=0)      # warm the snapshot cache
+    real = service_mod._device_fetch
+    fetches = [0]
+
+    def counting(tree):
+        fetches[0] += 1
+        return real(tree)
+
+    service_mod._device_fetch = counting
+    try:
+        n_polls = 2000
+
+        def poll() -> float:
+            t0 = time.perf_counter()
+            for k in range(n_polls):
+                sess.metrics(tenant=k % N_TENANTS)
+            return time.perf_counter() - t0
+
+        poll_wall = median(poll() for _ in range(max(repeats, 1)))
+        idle_fetches = fetches[0]
+    finally:
+        service_mod._device_fetch = real
+
+    n = len(jobs)
+    rows = [
+        dict(variant="tenancy_off",
+             warm_req_per_s=round(n / wall_off, 1),
+             cost_vs_off=1.0),
+        dict(variant="tenancy_on",
+             warm_req_per_s=round(n / wall_on, 1),
+             cost_vs_off=round(wall_on / max(wall_off, 1e-9), 3)),
+        dict(variant="metrics_poll",
+             polls_per_s=round(n_polls / max(poll_wall, 1e-9), 1),
+             idle_device_fetches=idle_fetches),
+    ]
+    if out_path:
+        with open(out_path, "w") as fh:
+            json.dump({
+                "description": "tenancy-on vs tenancy-off step cost "
+                               "and idle metrics-poll latency",
+                "n_jobs": n, "n_pe": n_pe, "chunk": chunk,
+                "n_tenants": N_TENANTS, "rows": rows,
+            }, fh, indent=2)
+            fh.write("\n")
+    return rows
+
+
+if __name__ == "__main__":
+    for row in tenancy_throughput():
+        print(row)

@@ -8,11 +8,13 @@ the paper's 10^4-job workloads (slow); default is a reduced size that
 preserves every reported ordering.
 
 ``--check`` is the perf-regression mode (CI ``perf-smoke``): it
-re-measures the six BENCH benchmarks at reduced sizes and compares
+re-measures the seven BENCH benchmarks at reduced sizes and compares
 the freshly measured *ratios* — device-vs-host throughput, backfill
 mode cost vs the plain scan, ring-vs-rescan streaming,
-sharded-vs-single mesh placement, pipelined-vs-eager chunked offers
-and batched-vs-sequential fleet ingress — against the committed
+sharded-vs-single mesh placement, pipelined-vs-eager chunked offers,
+batched-vs-sequential fleet ingress and tenancy-on-vs-off gated
+admission (plus the hard zero on idle metrics-poll device fetches) —
+against the committed
 ``BENCH_*.json`` files with a tolerance band.  Ratios only:
 absolute wall times are meaningless on shared runners, but a device
 path that regresses from 3x-faster-than-host to slower-than-host
@@ -59,7 +61,7 @@ def check(tolerance: float) -> int:
     absolute wall-time asserts anywhere.
     """
     from benchmarks import bench_backfill, bench_fleet, bench_mesh, \
-        bench_policies, bench_service
+        bench_policies, bench_service, bench_tenancy
 
     failures = []
     checks = []
@@ -132,6 +134,27 @@ def check(tolerance: float) -> int:
         ref["rescan_per_group"]["warm_req_per_s"], 1e-9)
     gate("service/ring_vs_rescan:warm", fresh, committed, "ge")
 
+    # -- tenancy: gated step cost vs the zero-tenant session ----------
+    # the zero-tenant path must stay at the PR 7 ring-chunked cost
+    # (ratio vs the freshly measured service bench ~ the committed
+    # one), the tenanted path within its committed constant factor,
+    # and idle metrics polls must stay fetch-free (hard 0 gate)
+    ten_ref = {r["variant"]: r for r in _committed("tenancy")["rows"]}
+    ten_got = {r["variant"]: r for r in bench_tenancy.
+               tenancy_throughput(repeats=3, out_path=None)}
+    service_ref = ref
+    fresh = ten_got["tenancy_off"]["warm_req_per_s"] / max(
+        got["ring_chunked"]["warm_req_per_s"], 1e-9)
+    committed = ten_ref["tenancy_off"]["warm_req_per_s"] / max(
+        service_ref["ring_chunked"]["warm_req_per_s"], 1e-9)
+    gate("tenancy/off_vs_pr7_ring:warm", fresh, committed, "ge")
+    gate("tenancy/on_vs_off:cost",
+         ten_got["tenancy_on"]["cost_vs_off"],
+         ten_ref["tenancy_on"]["cost_vs_off"], "le")
+    gate("tenancy/idle_poll:device_fetches",
+         float(ten_got["metrics_poll"]["idle_device_fetches"]),
+         float(ten_ref["metrics_poll"]["idle_device_fetches"]), "le")
+
     # -- mesh: sharded grid vs single placement, pipelined vs eager ---
     # a reduced 168-lane grid keeps the CI lane fast; both gates are
     # ratios of same-machine variants, so the size reduction cancels
@@ -200,7 +223,8 @@ def main() -> None:
     t0 = time.time()
 
     from benchmarks import bench_backfill, bench_datastructure, \
-        bench_fleet, bench_mesh, bench_policies, bench_service
+        bench_fleet, bench_mesh, bench_policies, bench_service, \
+        bench_tenancy
     from benchmarks.bench_roofline import ART_OPT, roofline_rows
 
     sections = {
@@ -221,6 +245,9 @@ def main() -> None:
                 n_jobs=600 if args.full else 240),
         "backfill_throughput":
             lambda: bench_backfill.backfill_throughput(
+                n_jobs=600 if args.full else 240),
+        "tenancy_throughput":
+            lambda: bench_tenancy.tenancy_throughput(
                 n_jobs=600 if args.full else 240),
         "mesh_sharded_grid":
             lambda: bench_mesh.sharded_grid(),

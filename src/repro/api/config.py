@@ -122,6 +122,18 @@ class ServiceConfig:
     advances all lanes in one dispatch (required when partitions
     backfill).
 
+    Multi-tenancy (DESIGN.md §10)
+        ``tenants`` installs a :class:`repro.tenancy.TenantSpec`:
+        per-tenant PE-seconds quotas and concurrency caps gate
+        admission *before* the search, weighted fair-share replaces
+        FCFS in the deferral queue's promote/retry order, and
+        ``Session.tick`` reaps overdue reservations past
+        ``spec.grace``.  On ensemble sessions a tuple gives one spec
+        per lane (``None`` entries leave that lane single-tenant);
+        partitioned sessions share one spec, enforced at the host
+        router.  ``tenants=None`` (default) adds no pytree leaves —
+        the compiled graphs are the ones a tenancy-free build traces.
+
     ``engine_kwargs`` forwards host/list-engine constructor knobs
     (e.g. ``HostScheduler``'s ``candidate_chunk``); device knobs are
     first-class config fields.
@@ -146,6 +158,7 @@ class ServiceConfig:
     backfill_queue: int = 8
     placement: Union[None, str, int] = "auto"
     donate: bool = True
+    tenants: Optional[Any] = None
     engine_kwargs: Optional[Mapping[str, Any]] = None
 
     def __post_init__(self):
@@ -245,6 +258,51 @@ class ServiceConfig:
             if self.backfill_queue < 1:
                 raise ValueError(
                     "backfill_queue must be >= 1 when backfilling")
+        if self.tenants is not None:
+            # hoisted tenant-config validation: every unreachable
+            # combination fails here at construction, not at first
+            # offer (the same discipline as the tuple-backfill hoist)
+            from repro.tenancy import TenantSpec
+            tn = self.tenants
+            if isinstance(tn, (list, tuple)):
+                tn = tuple(tn)
+                object.__setattr__(self, "tenants", tn)
+                if self.n_partitions > 1:
+                    raise ValueError(
+                        "partition lanes share one tenant spec; pass "
+                        "a single TenantSpec (per-lane tuples are for "
+                        "ensemble sessions)")
+                if len(tn) != self.lanes:
+                    raise ValueError(
+                        f"{len(tn)} tenant specs for {self.lanes} "
+                        f"lanes (a tuple gives one spec per ensemble "
+                        f"lane; use None for single-tenant lanes)")
+                bad = [type(s).__name__ for s in tn
+                       if s is not None and not isinstance(s, TenantSpec)]
+                if bad:
+                    raise ValueError(
+                        f"tenants tuple entries must be TenantSpec or "
+                        f"None, got {bad}")
+                specs = [s for s in tn if s is not None]
+            elif isinstance(tn, TenantSpec):
+                specs = [tn]
+            else:
+                raise ValueError(
+                    f"tenants must be a TenantSpec (or a per-lane "
+                    f"tuple of TenantSpec/None), got "
+                    f"{type(tn).__name__}")
+            if self.engine != "device":
+                raise ValueError(
+                    "tenancy lives in the device state pytree; use "
+                    "engine='device'")
+            for s in specs:
+                if s.n_tenants > self.pending_capacity:
+                    raise ValueError(
+                        f"max tenants ({s.n_tenants}) exceeds the "
+                        f"pending-queue size (pending_capacity="
+                        f"{self.pending_capacity}); every tenant must "
+                        f"be able to hold at least one live "
+                        f"reservation")
 
     @property
     def backfilling(self) -> bool:
@@ -257,6 +315,26 @@ class ServiceConfig:
     def park_capacity(self) -> int:
         """Static deferral-queue shape: 0 when no lane backfills."""
         return self.backfill_queue if self.backfilling else 0
+
+    @property
+    def tenancy(self) -> bool:
+        """Whether any lane carries a tenant table."""
+        tn = self.tenants
+        if tn is None:
+            return False
+        if isinstance(tn, tuple):
+            return any(s is not None for s in tn)
+        return True
+
+    @property
+    def lane_tenant_specs(self) -> Optional[Tuple[Any, ...]]:
+        """Per-lane tenant specs (length ``lanes``), or None."""
+        if not self.tenancy:
+            return None
+        tn = self.tenants
+        if isinstance(tn, tuple):
+            return tn
+        return (tn,) * self.lanes
 
     def replace(self, **changes) -> "ServiceConfig":
         return dataclasses.replace(self, **changes)

@@ -155,6 +155,17 @@ def _empty_result() -> OfferResult:
                        _allocations=[])
 
 
+def _device_fetch(tree):
+    """The service's device->host transfer point for metric reads.
+
+    Every poll-path transfer funnels through here so tests can count
+    device syncs (``tests/test_tenancy.py::test_idle_metrics_*``):
+    an idle ``Session.metrics()`` must perform **zero** calls — the
+    device-derived block is cached until the state changes.
+    """
+    return jax.device_get(tree)
+
+
 def _mask_np(pe_ids, words: int) -> np.ndarray:
     """PE ids -> uint32[W] bitmask, numpy-only (no device round-trip)."""
     m = np.zeros(words, np.uint32)
@@ -186,7 +197,7 @@ def _push_front(ring: RequestRing, rows: List[dict], lta: int) -> int:
     kept = rows[:ring.free]
     for row in reversed(kept):
         ring._head = (ring._head - 1) % ring.capacity
-        for f in RequestBatch._fields:
+        for f in ring._fields:
             ring._buf[f][ring._head] = row[f]
         ring.count += 1
         ring.popped -= 1
@@ -207,8 +218,8 @@ class Session:
         self.config = service.config
         cfg = self.config
         self._counters = dict(offered=0, accepted=0, released=0,
-                              cancelled=0, chunks=0, growths=0,
-                              one_shot_scans=0)
+                              reaped=0, cancelled=0, chunks=0,
+                              growths=0, one_shot_scans=0)
         self._backend = _make_backend(cfg, self._counters)
 
     # -- identity ------------------------------------------------------
@@ -319,8 +330,16 @@ class Session:
         """
         return self._backend.pending(lane)
 
-    def metrics(self) -> Dict[str, Any]:
-        """Admission counters plus capacity / streaming geometry."""
+    def metrics(self, tenant: Optional[int] = None) -> Dict[str, Any]:
+        """Admission counters plus capacity / streaming geometry.
+
+        On multi-tenant sessions the ``"tenants"`` key carries the
+        per-tenant telemetry arrays (weights, quotas, usage, live
+        counts, acceptance/slowdown EWMAs — DESIGN.md §10), read in
+        one fused device fetch and cached until the state changes,
+        so polling an idle session costs zero device syncs.
+        ``metrics(tenant=i)`` returns tenant ``i``'s scalar view.
+        """
         # backend.metrics() first: it folds the lazily accumulated
         # device-side accepted count into the shared counters dict
         backend = self._backend.metrics()
@@ -331,6 +350,14 @@ class Session:
                    n_partitions=self.config.n_partitions,
                    chunk_size=self.config.chunk_size,
                    backfill=self.config.backfill)
+        if tenant is not None:
+            snap = out.get("tenants")
+            if snap is None:
+                raise ValueError(
+                    "metrics(tenant=...) needs a multi-tenant "
+                    "session (set ServiceConfig.tenants)")
+            from repro.tenancy import tenant_view
+            return tenant_view(snap, tenant)
         return out
 
     # -- the classic three operations ----------------------------------
@@ -408,6 +435,9 @@ class _BackendBase:
         # next successful admit produces fresh buffers and clears it.
         self._retained = False
         self._acc_dev = None      # lazily synced accepted count
+        # device-derived metrics block, cached until the state
+        # changes: idle polls re-serve it with zero device syncs
+        self._dev_metrics: Optional[Dict[str, Any]] = None
 
     def resolve_policy(self, policy) -> Policy:
         if policy is None:
@@ -450,7 +480,7 @@ class _BackendBase:
     def _sync_counters(self) -> None:
         if self._acc_dev is not None:
             self.counters["accepted"] += int(
-                jax.device_get(self._acc_dev))
+                _device_fetch(self._acc_dev))
             self._acc_dev = None
 
     def pending(self, lane: int = 0) -> list:
@@ -490,10 +520,14 @@ class _StreamBackend(_BackendBase):
             cfg.n_pe, capacity=cfg.capacity, use_kernel=cfg.use_kernel,
             bucketing=cfg.bucketing,
             pending_capacity=cfg.pending_capacity,
-            park_capacity=cfg.park_capacity)
+            park_capacity=cfg.park_capacity,
+            tenants=cfg.tenants)
+        self._n_tenants = cfg.tenants.n_tenants if cfg.tenancy else 0
+        self._grace = cfg.tenants.grace if cfg.tenancy else None
         self._bf = batch_lib.BF_NONE if not cfg.backfilling else \
             batch_lib.as_backfill_id(cfg.backfill)
-        self.ring = RequestRing(cfg.ring_capacity) \
+        self.ring = RequestRing(cfg.ring_capacity,
+                                with_tenant=cfg.tenancy) \
             if cfg.chunk_size else None
         # pipelined offers whose overflow latches are still unread:
         # one dict per offer, drained together in one device sync
@@ -507,6 +541,16 @@ class _StreamBackend(_BackendBase):
     def _state(self, s):
         self.engine.state = s
         self.engine._n_valid = None      # lazily recomputed on search
+        self._dev_metrics = None         # device metrics went stale
+
+    def _check_tenants(self, reqs) -> None:
+        if self._n_tenants:
+            for r in reqs:
+                if r.tenant >= self._n_tenants:
+                    raise ValueError(
+                        f"request tenant {r.tenant} out of range "
+                        f"[0, {self._n_tenants}) for this session's "
+                        f"TenantSpec")
 
     def _capacities(self):
         s = self._state
@@ -584,11 +628,13 @@ class _StreamBackend(_BackendBase):
             self._defer_accepted(res.decision, res.valid)
             return res
         reqs = list(requests)
+        self._check_tenants(reqs)
         if self.ring is None:
             self.counters["offered"] += len(reqs)
             if not reqs:
                 return _empty_result()
-            batch = batch_lib.requests_to_batch(reqs)
+            batch = batch_lib.requests_to_batch(
+                reqs, with_tenant=bool(self._n_tenants))
             dec = self._admit_batch(batch, pid)
             self.counters["one_shot_scans"] += 1
             valid = np.ones(len(reqs), bool)
@@ -732,7 +778,7 @@ class _StreamBackend(_BackendBase):
         inflight, self._inflight = self._inflight, []
         all_ovfs = [o for ctx in inflight for o in ctx["ovfs"]]
         # the drain's single synchronization point: all latches at once
-        latched = np.asarray(jax.device_get(jnp.stack(all_ovfs)))
+        latched = np.asarray(_device_fetch(jnp.stack(all_ovfs)))
         err = None
         if latched.any():
             g = int(latched.argmax())     # first latched dispatch
@@ -811,12 +857,12 @@ class _StreamBackend(_BackendBase):
         session itself stays usable on the rolled-back state.
         """
         rows = []
+        names = self.ring._fields
         for batch, valid in zip(batches[k:], valids[k:]):
             fields = {f: np.asarray(getattr(batch, f))
-                      for f in RequestBatch._fields}
+                      for f in names}
             for i in np.flatnonzero(valid):
-                rows.append({f: int(fields[f][i])
-                             for f in RequestBatch._fields})
+                rows.append({f: int(fields[f][i]) for f in names})
         dropped = _push_front(self.ring, rows, ltas[k])
         if dropped:
             warnings.warn(
@@ -826,7 +872,7 @@ class _StreamBackend(_BackendBase):
 
     def tick(self, t: int) -> int:
         if not self.cfg.auto_release:
-            return 0
+            return self._reap(t)
         self._drain_inflight()
         before_rel = int(self._state.n_released)
         before = self._capacities()
@@ -838,6 +884,32 @@ class _StreamBackend(_BackendBase):
         released = int(state.n_released) - before_rel
         self.counters["released"] += released
         return released
+
+    def _reap(self, t: int) -> int:
+        """Overdue-reservation reaping (DESIGN.md §10).
+
+        With ``auto_release=False`` the caller owns completion release
+        — but a multi-tenant session with a ``grace`` window still
+        reclaims reservations held past ``t_e + grace`` on ``tick``,
+        batch-deleting them and charging the usage (``n_reaped``) to
+        the owning tenant.  Auto-release sessions never reap: their
+        ``tick`` already deletes everything ending by ``t``, which is
+        strictly earlier than ``t - grace``.
+        """
+        if self._grace is None:
+            return 0
+        self._drain_inflight()
+        before_rel = int(self._state.n_released)
+        before = self._capacities()
+        state = batch_lib.reap_until(
+            self._state, t, self._grace,
+            max_growths=self.growth_budget)
+        self._grow_guard(before, (state.tl.capacity,
+                                  state.pending_capacity))
+        self._state = state
+        reaped = int(state.n_released) - before_rel
+        self.counters["reaped"] += reaped
+        return reaped
 
     def cancel(self, t_s: int, t_e: int, pe_ids: List[int],
                lane: int = 0) -> bool:
@@ -890,26 +962,46 @@ class _StreamBackend(_BackendBase):
         if self.ring and ring_snap is not None:
             self.ring.restore(ring_snap)
 
+    def _refresh_dev_metrics(self) -> None:
+        """One fused device read of every state-derived counter."""
+        s = self._state
+        vals: Dict[str, Any] = dict(
+            n_pending=jnp.sum(s.pend_te != T_INF, dtype=jnp.int32))
+        if self.cfg.backfilling:
+            vals.update(
+                n_parked_now=jnp.sum(s.park_seq != T_INF,
+                                     dtype=jnp.int32),
+                n_parked=s.n_parked, n_promoted=s.n_promoted,
+                n_moved=s.n_moved)
+        if s.tenants is not None:
+            from repro.tenancy.telemetry import _PER_TENANT
+            vals["tenants"] = {
+                f: getattr(s.tenants, f)
+                for f in _PER_TENANT + ("occ_ewma",)}
+        host = _device_fetch(vals)
+        self._dev_metrics = {
+            k: ({kk: np.asarray(vv) for kk, vv in v.items()}
+                if k == "tenants" else int(v))
+            for k, v in host.items()}
+
     def metrics(self):
-        self._drain_inflight()
+        # fast path (satellite: idle polls cost no device sync): with
+        # nothing in flight, no deferred accepted count, and a warm
+        # cache, this performs zero device fetches
+        if self._inflight:
+            self._drain_inflight()
         self._sync_counters()
+        if self._dev_metrics is None:
+            self._refresh_dev_metrics()
         cap, pend = self._capacities()
-        out = dict(capacity=cap, pending_capacity=pend,
-                   n_pending=int(np.asarray(
-                       self._state.pend_te != T_INF).sum()))
+        out = dict(capacity=cap, pending_capacity=pend)
+        out.update(self._dev_metrics)
         if self.ring:
             out.update(ring_capacity=self.ring.capacity,
                        ring_staged=self.ring.count,
                        ring_wrapped=self.ring.wrapped)
         if self.cfg.backfilling:
-            s = self._state
-            out.update(
-                park_capacity=s.park_capacity,
-                n_parked_now=int(np.asarray(
-                    s.park_seq != T_INF).sum()),
-                n_parked=int(s.n_parked),
-                n_promoted=int(s.n_promoted),
-                n_moved=int(s.n_moved))
+            out["park_capacity"] = self._state.park_capacity
         return out
 
 
@@ -923,12 +1015,24 @@ class _EnsembleBackend(_BackendBase):
         # vmapped admit scan runs one program with each device owning
         # lanes/n_shards lanes — decisions are placement-invariant.
         self.mesh = resolve_placement(cfg.placement, cfg.lanes)
-        self.states = self._put(ens_lib.init_ensemble(
+        states = ens_lib.init_ensemble(
             cfg.lanes, cfg.capacity, cfg.n_pe, cfg.pending_capacity,
-            cfg.park_capacity))
+            cfg.park_capacity)
+        self._lane_specs = cfg.lane_tenant_specs
+        if self._lane_specs is not None:
+            # per-lane tables stack to one [E, ...] pytree and shard
+            # on the lane axis with everything else (DESIGN.md §10);
+            # None entries become neutral tables, decision-identical
+            # to no table (the FCFS-equivalence invariant)
+            from repro.tenancy import stack_tables
+            states = states._replace(tenants=stack_tables(
+                self._lane_specs, cfg.pending_capacity,
+                cfg.park_capacity))
+        self.states = self._put(states)
         self._bf_ids = self._put(
             ens_lib.backfill_ids(cfg.backfill, cfg.lanes))
-        self.rings = [RequestRing(cfg.ring_capacity)
+        self.rings = [RequestRing(cfg.ring_capacity,
+                                  with_tenant=cfg.tenancy)
                       for _ in range(cfg.lanes)] \
             if cfg.chunk_size else None
 
@@ -936,6 +1040,15 @@ class _EnsembleBackend(_BackendBase):
         """Lane-shard a stacked pytree (no-op on unsharded sessions,
         and for leaves already carrying the target sharding)."""
         return shard_rules.shard_ensemble(self.mesh, tree)
+
+    @property
+    def states(self):
+        return self._states_val
+
+    @states.setter
+    def states(self, s):
+        self._states_val = s
+        self._dev_metrics = None         # device metrics went stale
 
     @property
     def engine(self):
@@ -1023,11 +1136,21 @@ class _EnsembleBackend(_BackendBase):
         if self.rings is not None:
             for ring, stream in zip(self.rings, streams):
                 batch_lib.check_arrival_order(stream, ring.last_t_a)
+        if self._lane_specs is not None:
+            for e, (spec, stream) in enumerate(
+                    zip(self._lane_specs, streams)):
+                limit = spec.n_tenants if spec is not None else 1
+                for r in stream:
+                    if r.tenant >= limit:
+                        raise ValueError(
+                            f"request tenant {r.tenant} out of range "
+                            f"[0, {limit}) for lane {e}'s TenantSpec")
         self.counters["offered"] += sum(map(len, streams))
         if self.rings is None:
             if not any(streams):
                 return _empty_result()
-            batch, valid = batch_lib.pad_streams(streams, self.cfg.n_pe)
+            batch, valid = batch_lib.pad_streams(
+                streams, self.cfg.n_pe, with_tenant=self.cfg.tenancy)
             dec = self._admit_batch(batch, pids)
             self.counters["one_shot_scans"] += 1
             res = OfferResult(decision=dec, batch=batch, valid=valid)
@@ -1168,12 +1291,12 @@ class _EnsembleBackend(_BackendBase):
         dropped = 0
         for e, ring in enumerate(self.rings):
             rows = []
+            names = ring._fields
             for batch, valid in zip(batches[k:], valids[k:]):
                 fields = {f: np.asarray(getattr(batch, f)[e])
-                          for f in RequestBatch._fields}
+                          for f in names}
                 for i in np.flatnonzero(valid[e]):
-                    rows.append({f: int(fields[f][i])
-                                 for f in RequestBatch._fields})
+                    rows.append({f: int(fields[f][i]) for f in names})
             dropped += _push_front(ring, rows, ltas[k][e])
         if dropped:
             warnings.warn(
@@ -1183,7 +1306,7 @@ class _EnsembleBackend(_BackendBase):
 
     def tick(self, t: int) -> int:
         if not self.cfg.auto_release:
-            return 0
+            return self._reap(t)
         before_rel = int(jnp.sum(self.states.n_released))
         before = self._capacities()
         states = ens_lib.release_until_ensemble(
@@ -1193,6 +1316,29 @@ class _EnsembleBackend(_BackendBase):
         released = int(jnp.sum(states.n_released)) - before_rel
         self.counters["released"] += released
         return released
+
+    def _reap(self, t: int) -> int:
+        """Per-lane overdue reaping (see the stream backend's _reap).
+
+        Each lane reaps with its own spec's grace; lanes without one
+        get a ``T_INF`` grace, whose cutoff precedes every arrival.
+        """
+        if self._lane_specs is None:
+            return 0
+        graces = [T_INF if s is None or s.grace is None else s.grace
+                  for s in self._lane_specs]
+        if all(g == T_INF for g in graces):
+            return 0
+        before_rel = int(jnp.sum(self.states.n_released))
+        before = self._capacities()
+        states = ens_lib.reap_until_ensemble(
+            self.states, t, np.asarray(graces, np.int32),
+            max_growths=self.growth_budget)
+        self._grow_guard(before, ens_lib.lane_capacity(states))
+        self.states = self._put(states)
+        reaped = int(jnp.sum(states.n_released)) - before_rel
+        self.counters["reaped"] += reaped
+        return reaped
 
     def cancel(self, t_s, t_e, pe_ids, lane: int = 0) -> bool:
         if not 0 <= lane < self.cfg.lanes:
@@ -1250,25 +1396,44 @@ class _EnsembleBackend(_BackendBase):
             for r, s in zip(self.rings, ring_snaps):
                 r.restore(s)
 
+    def _refresh_dev_metrics(self) -> None:
+        """One fused device read of every state-derived counter."""
+        s = self.states
+        vals: Dict[str, Any] = {}
+        if self.cfg.backfilling:
+            vals.update(
+                n_parked_now=jnp.sum(s.park_seq != T_INF,
+                                     dtype=jnp.int32),
+                n_parked=jnp.sum(s.n_parked),
+                n_promoted=jnp.sum(s.n_promoted),
+                n_moved=jnp.sum(s.n_moved))
+        if s.tenants is not None:
+            from repro.tenancy.telemetry import _PER_TENANT
+            vals["tenants"] = {
+                f: getattr(s.tenants, f)
+                for f in _PER_TENANT + ("occ_ewma",)}
+        host = _device_fetch(vals) if vals else {}
+        self._dev_metrics = {
+            k: ({kk: np.asarray(vv) for kk, vv in v.items()}
+                if k == "tenants" else int(v))
+            for k, v in host.items()}
+
     def metrics(self):
         self._sync_counters()
+        if self._dev_metrics is None:
+            self._refresh_dev_metrics()
         cap, pend = self._capacities()
         out = dict(capacity=cap, pending_capacity=pend,
                    placement_shards=data_shards(self.mesh)
                    if self.mesh is not None else 1)
+        out.update(self._dev_metrics)
         if self.rings:
             out.update(ring_capacity=self.cfg.ring_capacity,
                        ring_staged=sum(r.count for r in self.rings),
                        ring_wrapped=any(r.wrapped for r in self.rings))
         if self.cfg.backfilling:
-            s = self.states
-            out.update(
-                park_capacity=s.park_seq.shape[-1],
-                n_parked_now=int(np.asarray(
-                    s.park_seq != T_INF).sum()),
-                n_parked=int(jnp.sum(s.n_parked)),
-                n_promoted=int(jnp.sum(s.n_promoted)),
-                n_moved=int(jnp.sum(s.n_moved)))
+            out["park_capacity"] = int(
+                self.states.park_seq.shape[-1])
         return out
 
 
@@ -1287,6 +1452,24 @@ class _PartitionBackend(_BackendBase):
             use_kernel=cfg.use_kernel, placement=cfg.placement,
             park_capacity=cfg.park_capacity, backfill=bf,
             auto_release=cfg.auto_release)
+        # partitions enforce tenancy at the host router (the lane
+        # states keep tenants=None): a HostTenantAccounts gate before
+        # routing, and a completion ledger attributing each held
+        # reservation to its tenant for release / overdue reaping
+        self._accounts = None
+        self._grace = None
+        if cfg.tenancy:
+            from repro.tenancy import HostTenantAccounts
+            self._accounts = HostTenantAccounts(cfg.tenants)
+            self._grace = cfg.tenants.grace
+        self._ledger: list = []   # heap of (t_e, seq, tid, t_s, ids)
+        self._lseq = 0
+
+    def _ledger_release(self, t: int) -> None:
+        """Mirror the engine's completion releases ending by ``t``."""
+        while self._ledger and self._ledger[0][0] <= t:
+            _, _, tid, _, _ = heapq.heappop(self._ledger)
+            self._accounts.release(tid)
 
     def offer(self, requests, *, policy, routing, flush) -> OfferResult:
         routing = routing or self.cfg.routing
@@ -1302,27 +1485,89 @@ class _PartitionBackend(_BackendBase):
         self.counters["offered"] += len(reqs)
         if not reqs:
             return _empty_result()
-        allocs = self.engine.admit_stream_allocations(
-            reqs, self.resolve_policy(policy), routing)
+        pol = self.resolve_policy(policy)
+        if self._accounts is None:
+            allocs = self.engine.admit_stream_allocations(
+                reqs, pol, routing)
+        else:
+            allocs = self._offer_gated(reqs, pol, routing)
         self.counters["accepted"] += \
             sum(a is not None for a in allocs)
         self.counters["one_shot_scans"] += 1
         return OfferResult(decision=None, batch=None, valid=None,
                            _allocations=allocs)
 
+    def _offer_gated(self, reqs, pol, routing):
+        """Quota-gated routing: reject over-quota before the probe.
+
+        Same gate order as the device path (DESIGN.md §10): releases
+        ending by the arrival settle first (so ``live`` reflects the
+        post-release population), then the float32 quota /
+        concurrency check, then routing for requests that pass.
+        Occupancy EWMA is not tracked at the router (no single
+        machine occupancy exists across partitions): ``occ_frac=0``.
+        """
+        acc = self._accounts
+        allocs: List[Optional[Allocation]] = []
+        for req in reqs:
+            if acc.n_tenants and req.tenant >= acc.n_tenants:
+                raise ValueError(
+                    f"request tenant {req.tenant} out of range "
+                    f"[0, {acc.n_tenants}) for this session's "
+                    f"TenantSpec")
+            if self.cfg.auto_release:
+                self._ledger_release(req.t_a)
+            tid = acc.clip_tid(req.tenant)
+            if not acc.allowed(tid, req.n_pe, req.t_du):
+                acc.record(tid, accepted=False, blocked=True,
+                           parked=False, occ_frac=np.float32(0.0))
+                allocs.append(None)
+                continue
+            alloc = self.engine.admit_stream_allocations(
+                [req], pol, routing)[0]
+            acc.record(tid, accepted=alloc is not None,
+                       blocked=False, parked=False,
+                       occ_frac=np.float32(0.0),
+                       t_e=alloc.t_e if alloc else -1,
+                       t_r=req.t_r, t_du=req.t_du, n_pe=req.n_pe)
+            if alloc is not None:
+                heapq.heappush(
+                    self._ledger,
+                    (alloc.t_e, self._lseq, tid, alloc.t_s,
+                     tuple(alloc.pe_ids)))
+                self._lseq += 1
+            allocs.append(alloc)
+        return allocs
+
     def tick(self, t: int) -> int:
         # with auto_release=False the client owns completion release
         # (cancel/delete_allocation); otherwise advance every lane's
         # pending buffer in one dispatch
         if not self.cfg.auto_release:
-            return 0
+            return self._reap(t)
         before = int(np.asarray(
             self.engine.states.n_released).sum())
         self.engine.release_until(t)
+        if self._accounts is not None:
+            self._ledger_release(t)
         released = int(np.asarray(
             self.engine.states.n_released).sum()) - before
         self.counters["released"] += released
         return released
+
+    def _reap(self, t: int) -> int:
+        """Ledger-driven overdue reaping at the host router."""
+        if self._accounts is None or self._grace is None:
+            return 0
+        reaped = 0
+        cutoff = t - self._grace
+        while self._ledger and self._ledger[0][0] <= cutoff:
+            t_e, _, tid, t_s, ids = heapq.heappop(self._ledger)
+            self.engine.delete_allocation(t_s, t_e, list(ids))
+            self._accounts.reap(tid)
+            reaped += 1
+        self.counters["reaped"] += reaped
+        return reaped
 
     def pending(self, lane: int = 0) -> list:
         if not 0 <= lane < self.cfg.n_partitions:
@@ -1341,6 +1586,7 @@ class _PartitionBackend(_BackendBase):
                 "chip ids, not lanes")
         if not self.cfg.auto_release:
             self.engine.delete_allocation(t_s, t_e, list(pe_ids))
+            self._ledger_cancel(t_s, t_e, pe_ids)
             self.counters["cancelled"] += 1
             return True
         # auto-release lanes track completions in the pending buffer:
@@ -1357,18 +1603,40 @@ class _PartitionBackend(_BackendBase):
             ens_lib.set_member(eng.states, part, state))
         if done:
             eng._bump_load(part, -(t_e - t_s) * len(local))
+            self._ledger_cancel(t_s, t_e, pe_ids)
         self.counters["cancelled"] += int(done)
         return done
 
+    def _ledger_cancel(self, t_s, t_e, pe_ids) -> None:
+        """Drop a cancelled reservation's ledger entry (if tracked)."""
+        if self._accounts is None:
+            return
+        key = (t_e, t_s, tuple(pe_ids))
+        for i, ent in enumerate(self._ledger):
+            if (ent[0], ent[3], ent[4]) == key:
+                self._accounts.release(ent[2])
+                self._ledger.pop(i)
+                heapq.heapify(self._ledger)
+                return
+
     def snapshot(self):
+        tenancy = None
+        if self._accounts is not None:
+            tenancy = (copy.deepcopy(self._accounts),
+                       list(self._ledger), self._lseq)
         return (self.engine.states, list(self.engine.load),
-                self.engine._rr)
+                self.engine._rr, tenancy)
 
     def restore(self, payload):
-        states, load, rr = payload
+        states, load, rr, tenancy = payload
         self.engine.states = states
         self.engine.load = list(load)
         self.engine._rr = rr
+        if tenancy is not None:
+            accounts, ledger, lseq = tenancy
+            self._accounts = copy.deepcopy(accounts)
+            self._ledger = list(ledger)
+            self._lseq = lseq
 
     def metrics(self):
         cap, pend = ens_lib.lane_capacity(self.engine.states)
@@ -1388,6 +1656,9 @@ class _PartitionBackend(_BackendBase):
                 n_parked=int(np.asarray(s.n_parked).sum()),
                 n_promoted=int(np.asarray(s.n_promoted).sum()),
                 n_moved=int(np.asarray(s.n_moved).sum()))
+        if self._accounts is not None:
+            out["tenants"] = self._accounts.snapshot()
+            out["ledger_depth"] = len(self._ledger)
         return out
 
 

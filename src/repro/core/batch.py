@@ -35,6 +35,7 @@ from repro.core import search as search_lib
 from repro.core import timeline as tl_lib
 from repro.core.policies import policy_index
 from repro.core.timeline import SchedulerState
+from repro.tenancy import table as tenancy_lib
 from repro.core.types import (
     Allocation,
     ARRequest,
@@ -77,7 +78,10 @@ class RequestBatch(NamedTuple):
 
     Each field is ``int32[N]``; a slice along the leading axis is a
     single request, which is exactly what ``lax.scan`` feeds to the
-    fused step.
+    fused step.  ``tenant`` is the optional ownership column of
+    multi-tenant sessions (DESIGN.md §10): ``None`` — the default —
+    contributes no pytree leaf, so zero-tenant batches keep their
+    exact pre-tenancy structure (and compiled graphs).
     """
 
     t_a: jax.Array
@@ -85,6 +89,14 @@ class RequestBatch(NamedTuple):
     t_du: jax.Array
     t_dl: jax.Array
     n_pe: jax.Array
+    tenant: Optional[jax.Array] = None
+
+
+#: The paper's five request coordinates — the always-present subset of
+#: :class:`RequestBatch` fields.  Staging/padding sites iterate this
+#: (not ``RequestBatch._fields``) so the optional tenant column is
+#: materialised only for multi-tenant sessions.
+REQ_FIELDS: Tuple[str, ...] = ("t_a", "t_r", "t_du", "t_dl", "n_pe")
 
 
 class Decision(NamedTuple):
@@ -101,7 +113,8 @@ class Decision(NamedTuple):
     #                       (reservation may still move under EASY)
 
 
-def requests_to_batch(jobs: Sequence[ARRequest]) -> RequestBatch:
+def requests_to_batch(jobs: Sequence[ARRequest],
+                      with_tenant: bool = False) -> RequestBatch:
     """Pack host requests into the device struct-of-arrays layout."""
     return RequestBatch(
         t_a=jnp.asarray([j.t_a for j in jobs], jnp.int32),
@@ -109,15 +122,19 @@ def requests_to_batch(jobs: Sequence[ARRequest]) -> RequestBatch:
         t_du=jnp.asarray([j.t_du for j in jobs], jnp.int32),
         t_dl=jnp.asarray([j.t_dl for j in jobs], jnp.int32),
         n_pe=jnp.asarray([j.n_pe for j in jobs], jnp.int32),
+        tenant=jnp.asarray([j.tenant for j in jobs], jnp.int32)
+        if with_tenant else None,
     )
 
 
-def request_struct(req: ARRequest) -> RequestBatch:
+def request_struct(req: ARRequest,
+                   with_tenant: bool = False) -> RequestBatch:
     """A single request as a scalar struct (for :func:`admit`)."""
     return RequestBatch(
         t_a=jnp.int32(req.t_a), t_r=jnp.int32(req.t_r),
         t_du=jnp.int32(req.t_du), t_dl=jnp.int32(req.t_dl),
-        n_pe=jnp.int32(req.n_pe))
+        n_pe=jnp.int32(req.n_pe),
+        tenant=jnp.int32(req.tenant) if with_tenant else None)
 
 
 def filler_request(n_pe: int, t_a: int) -> ARRequest:
@@ -145,7 +162,8 @@ def check_arrival_order(requests: Sequence[ARRequest],
         last = r.t_a
 
 
-def pad_streams(streams, n_pe: int) -> Tuple[RequestBatch, np.ndarray]:
+def pad_streams(streams, n_pe: int, with_tenant: bool = False
+                ) -> Tuple[RequestBatch, np.ndarray]:
     """Stack variable-length request streams into ``[C, N]`` + mask.
 
     Padding requests (:func:`filler_request`) ask for ``n_pe + 1`` PEs
@@ -153,13 +171,15 @@ def pad_streams(streams, n_pe: int) -> Tuple[RequestBatch, np.ndarray]:
     timeline; they arrive after the stream's last real request, so they
     cannot reorder releases either.  Decisions at padded positions must
     be masked out with the returned ``valid`` array (the ensemble
-    consumers do).
+    consumers do).  ``with_tenant`` adds the tenant ownership column
+    (filler positions carry tenant 0, which the admit step never
+    charges — filler is detected by its infeasible PE ask).
     """
     C = len(streams)
     N = max((len(s) for s in streams), default=0)
     N = max(N, 1)
-    fields = {f: np.zeros((C, N), np.int32)
-              for f in RequestBatch._fields}
+    names = REQ_FIELDS + (("tenant",) if with_tenant else ())
+    fields = {f: np.zeros((C, N), np.int32) for f in names}
     valid = np.zeros((C, N), bool)
     for c, stream in enumerate(streams):
         last = stream[-1].t_a if stream else 0
@@ -169,11 +189,8 @@ def pad_streams(streams, n_pe: int) -> Tuple[RequestBatch, np.ndarray]:
                 valid[c, i] = True
             else:
                 r = filler_request(n_pe, last)
-            fields["t_a"][c, i] = r.t_a
-            fields["t_r"][c, i] = r.t_r
-            fields["t_du"][c, i] = r.t_du
-            fields["t_dl"][c, i] = r.t_dl
-            fields["n_pe"][c, i] = r.n_pe
+            for f in names:
+                fields[f][c, i] = getattr(r, f)
     return RequestBatch(**{k: jnp.asarray(v)
                            for k, v in fields.items()}), valid
 
@@ -212,12 +229,14 @@ class RequestRing:
     reallocates, and a full ring rejects the push (callers drain first).
     """
 
-    def __init__(self, capacity: int):
+    def __init__(self, capacity: int, with_tenant: bool = False):
         if capacity < 1:
             raise ValueError("ring capacity must be >= 1")
         self.capacity = capacity
+        self._fields = REQ_FIELDS + (("tenant",) if with_tenant
+                                     else ())
         self._buf = {f: np.zeros(capacity, np.int32)
-                     for f in RequestBatch._fields}
+                     for f in self._fields}
         self._head = 0          # index of the oldest staged request
         self.count = 0          # staged (not yet popped) requests
         self.pushed = 0         # lifetime pushes
@@ -246,11 +265,8 @@ class RequestRing:
             i = (self._head + self.count) % self.capacity
             if self.pushed >= self.capacity:
                 self.wrapped = True
-            self._buf["t_a"][i] = r.t_a
-            self._buf["t_r"][i] = r.t_r
-            self._buf["t_du"][i] = r.t_du
-            self._buf["t_dl"][i] = r.t_dl
-            self._buf["n_pe"][i] = r.n_pe
+            for f in self._fields:
+                self._buf[f][i] = getattr(r, f)
             self.count += 1
             self.pushed += 1
             self.last_t_a = r.t_a
@@ -266,7 +282,7 @@ class RequestRing:
             else min(n, chunk, self.count)
         idx = (self._head + np.arange(chunk)) % self.capacity
         fields = {f: self._buf[f][idx].copy()
-                  for f in RequestBatch._fields}
+                  for f in self._fields}
         valid = np.arange(chunk) < n
         if n > 0:
             self.last_popped_t_a = int(fields["t_a"][n - 1])
@@ -275,7 +291,7 @@ class RequestRing:
             # a still-staged one — stamping past staged requests would
             # release their predecessors early and change decisions
             pad = filler_request(n_pe, self.last_popped_t_a)
-            for f in RequestBatch._fields:
+            for f in self._fields:
                 fields[f][n:] = getattr(pad, f)
         self._head = (self._head + n) % self.capacity
         self.count -= n
@@ -325,14 +341,15 @@ def pop_chunk_ensemble(rings: Sequence[RequestRing], chunk: int,
     below a full chunk keeps its requests staged and contributes only
     filler (the ``flush=False`` contract: partial remainders wait).
     """
+    names = rings[0]._fields if rings else REQ_FIELDS
     fields = {f: np.zeros((len(rings), chunk), np.int32)
-              for f in RequestBatch._fields}
+              for f in names}
     valid = np.zeros((len(rings), chunk), bool)
     for e, ring in enumerate(rings):
         n = 0 if full_only and ring.count < chunk else None
         lane_fields, lane_valid = ring._pop_chunk_host(chunk, n_pe,
                                                        n=n)
-        for f in RequestBatch._fields:
+        for f in names:
             fields[f][e] = lane_fields[f]
         valid[e] = lane_valid
     return RequestBatch(**{k: jnp.asarray(v)
@@ -352,11 +369,16 @@ def _promote_due(state: SchedulerState,
     to): its reservation becomes immovable and moves to the
     pending-release buffer, freeing the queue slot.  All due entries
     promote in one vectorised pass (DESIGN.md §7): the k-th due entry
-    in FCFS order takes the k-th free pending slot in index order —
-    exactly the assignment the old one-at-a-time ``while_loop``
+    in promotion order takes the k-th free pending slot in index order
+    — exactly the assignment the old one-at-a-time ``while_loop``
     produced, without threading the full state through a loop carry.
     The whole pass sits behind ``lax.cond`` on a due-entry predicate,
     so steps with an idle queue pay one ``any`` reduction.
+
+    Promotion order is FCFS (sequence number); multi-tenant states
+    rank by the weighted fair-share key instead — highest
+    ``weight * wait`` first, seq breaking ties — which reduces
+    *bit-identically* to FCFS under equal weights (DESIGN.md §10).
     """
     t_now = jnp.asarray(t_now, jnp.int32)
     K = state.pending_capacity
@@ -366,10 +388,21 @@ def _promote_due(state: SchedulerState,
         free = s.pend_te == T_INF
         n_free = jnp.sum(free).astype(jnp.int32)
         n_due = jnp.sum(due).astype(jnp.int32)
-        # FCFS rank among due entries (sequence numbers are unique)
         seq = jnp.where(due, s.park_seq, T_INF)
-        rank = jnp.sum((seq[None, :] < seq[:, None]) & due[None, :],
-                       axis=1).astype(jnp.int32)
+        if s.tenants is not None:
+            # weighted fair-share rank: count due entries strictly
+            # ahead (higher key, or equal key and earlier seq)
+            key = tenancy_lib.fair_key(s.tenants, t_now)
+            ahead = due[None, :] & (
+                (key[None, :] > key[:, None])
+                | ((key[None, :] == key[:, None])
+                   & (seq[None, :] < seq[:, None])))
+            rank = jnp.sum(ahead, axis=1).astype(jnp.int32)
+        else:
+            # FCFS rank among due entries (sequence numbers are unique)
+            rank = jnp.sum(
+                (seq[None, :] < seq[:, None]) & due[None, :],
+                axis=1).astype(jnp.int32)
         promoted = due & (rank < n_free)
         # k-th free pending slot (index order) for FCFS rank k
         frank = (jnp.cumsum(free) - 1).astype(jnp.int32)
@@ -387,7 +420,7 @@ def _promote_due(state: SchedulerState,
         ovf = n_due > n_free
         n_prom = jnp.minimum(n_due, n_free)
         used0 = jnp.sum(~free).astype(jnp.int32)
-        return s._replace(
+        out = s._replace(
             pend_ts=scat(s.pend_ts, s.park_ts, jnp.int32(0)),
             pend_te=scat(s.pend_te, s.park_te, jnp.int32(0)),
             pend_mask=scat(s.pend_mask, s.park_mask, jnp.uint32(0)),
@@ -402,6 +435,18 @@ def _promote_due(state: SchedulerState,
                 s.hw_pending,
                 jnp.where(ovf, jnp.int32(K + 1), used0 + n_prom)),
         )
+        if s.tenants is not None:
+            # ownership follows the reservation: queue slot -> pending
+            # slot (the scatter reuses `dest`); freed queue slots
+            # return to unowned
+            tn = s.tenants
+            out = out._replace(tenants=tn._replace(
+                pend_tenant=scat(tn.pend_tenant, tn.park_tenant,
+                                 jnp.int32(-1)),
+                park_tenant=jnp.where(promoted, -1, tn.park_tenant),
+                park_ta=jnp.where(promoted, 0, tn.park_ta),
+            ))
+        return out
 
     pred = (jnp.any((state.park_seq < T_INF)
                     & (state.park_ts <= t_now)) & ~state.overflow)
@@ -435,8 +480,8 @@ def release_due(state: SchedulerState, t_now: jax.Array) -> SchedulerState:
     return _release_pending(state, t_now)
 
 
-def _release_pending(state: SchedulerState,
-                     t_now: jax.Array) -> SchedulerState:
+def _release_pending(state: SchedulerState, t_now: jax.Array, *,
+                     count_reaped: bool = False) -> SchedulerState:
     """The release loop proper (no promotion).
 
     Reservations never share a PE over overlapping intervals, so the
@@ -446,6 +491,11 @@ def _release_pending(state: SchedulerState,
     loop (DESIGN.md §7).  Up to :data:`RELEASE_CHUNK` due reservations
     are deleted per ``update_many`` call; the ``while_loop`` only
     iterates when more completions than that fall due at once.
+
+    Multi-tenant states return each freed slot's ownership and
+    decrement the owner's live count; with ``count_reaped`` (the
+    overdue-reaping entry, :func:`reap_until`) the deletion is also
+    charged to the owner's ``n_reaped`` counter.
     """
     t_now = jnp.asarray(t_now, jnp.int32)
     CH = min(RELEASE_CHUNK, state.pending_capacity)
@@ -472,7 +522,7 @@ def _release_pending(state: SchedulerState,
             with_count=True)
         # slots are freed even on overflow so the loop always makes
         # progress; an overflowed stream is re-run anyway.
-        return s._replace(
+        out = s._replace(
             tl=_where_tree(ovf, s.tl, new_tl),
             pend_ts=jnp.where(chosen, T_INF, s.pend_ts),
             pend_te=jnp.where(chosen, T_INF, s.pend_te),
@@ -483,8 +533,59 @@ def _release_pending(state: SchedulerState,
             overflow=s.overflow | ovf,
             hw_records=jnp.maximum(s.hw_records, n_keep),
         )
+        if s.tenants is not None:
+            tn = s.tenants
+            T = tn.n_tenants
+            tid = jnp.clip(tn.pend_tenant, 0, T - 1)
+            dec = jnp.where(chosen & (tn.pend_tenant >= 0), 1,
+                            0).astype(jnp.int32)
+            upd = dict(
+                live=tn.live.at[tid].add(-dec),
+                pend_tenant=jnp.where(chosen, -1, tn.pend_tenant))
+            if count_reaped:
+                upd["n_reaped"] = tn.n_reaped.at[tid].add(dec)
+            out = out._replace(tenants=tn._replace(**upd))
+        return out
 
     return jax.lax.while_loop(pending_due, release_chunk, state)
+
+
+@jax.jit
+def reap_step(state: SchedulerState, t_now: jax.Array,
+              grace: jax.Array) -> SchedulerState:
+    """Batch-delete reservations overdue past the tenant grace window.
+
+    A reservation is overdue at ``t_now`` iff ``t_e + grace <=
+    t_now``, i.e. ``t_e <= t_now - grace`` — so reaping *is* the
+    fused release loop evaluated at the shifted cutoff, with the
+    freed slots additionally charged to their owners' ``n_reaped``.
+    Only meaningful for sessions that track completions themselves
+    (``auto_release=False``): with auto-release every reservation is
+    released at ``t_e``, before any grace window can elapse.
+    """
+    cutoff = (jnp.asarray(t_now, jnp.int32)
+              - jnp.asarray(grace, jnp.int32))
+    return _release_pending(state, cutoff, count_reaped=True)
+
+
+def reap_until(state: SchedulerState, t_now: int, grace: int, *,
+               max_growths: int = MAX_DOUBLINGS) -> SchedulerState:
+    """Host wrapper of :func:`reap_step` with overflow growth.
+
+    The tenancy half of ``Session.tick(t)`` (DESIGN.md §10): mirrors
+    :func:`release_until`'s grow-and-rerun loop — a deletion can
+    split a merged record and overflow the timeline.
+    """
+    start = state
+    for attempt in range(max_growths + 1):
+        out = reap_step(start, jnp.int32(t_now), jnp.int32(grace))
+        if not bool(out.overflow):
+            return out
+        if attempt < max_growths:
+            start = _grown(start, out)
+    raise RuntimeError(
+        f"reap_until still overflowing after {max_growths + 1} "
+        f"attempts (last tried capacity {start.tl.capacity})")
 
 
 def _retry_parked(state: SchedulerState, t_now: jax.Array,
@@ -512,7 +613,7 @@ def _retry_parked(state: SchedulerState, t_now: jax.Array,
         def body(_, carry):
             s, done = carry
             cand = (s.park_seq < T_INF) & ~done
-            i = jnp.argmin(jnp.where(cand, s.park_seq, T_INF))
+            i = _select_next(s, cand, t_now)
             act = jnp.any(cand) & ~s.overflow
             t_du = s.park_te[i] - s.park_ts[i]
             tl1, ovf1, nk1 = tl_lib.update(
@@ -558,6 +659,23 @@ def _retry_parked(state: SchedulerState, t_now: jax.Array,
     # admit step whether or not the sweep fired.
 
 
+def _select_next(s: SchedulerState, cand: jax.Array,
+                 t_now: jax.Array) -> jax.Array:
+    """Index of the next queue entry to serve among ``cand`` slots.
+
+    FCFS (minimum sequence number); multi-tenant states pick the
+    maximum weighted fair-share key instead, seq breaking ties —
+    bit-identical to FCFS under equal weights (DESIGN.md §10).  Safe
+    when nothing is a candidate (callers gate on ``jnp.any(cand)``).
+    """
+    if s.tenants is None:
+        return jnp.argmin(jnp.where(cand, s.park_seq, T_INF))
+    key = tenancy_lib.fair_key(s.tenants, t_now)
+    best = jnp.max(jnp.where(cand, key, -jnp.inf))
+    return jnp.argmin(jnp.where(cand & (key == best), s.park_seq,
+                                T_INF))
+
+
 def _no_displace(state: SchedulerState, req: RequestBatch,
                  policy_id: jax.Array):
     zero = jnp.int32(0)
@@ -591,7 +709,7 @@ def _displace(state: SchedulerState, req: RequestBatch,
     Q = state.park_capacity
     s = state
     active = s.park_seq < T_INF
-    head = jnp.argmin(jnp.where(active, s.park_seq, T_INF))
+    head = _select_next(s, active, req.t_a)
     nonhead = active & (jnp.arange(Q) != head)
 
     # batched lift: every non-head parked reservation comes off the
@@ -618,7 +736,7 @@ def _displace(state: SchedulerState, req: RequestBatch,
     def re_body(_, carry):
         tl, ovf, hw, ok, done, pts, pte, pmk, moved = carry
         cand = nonhead & ~done
-        i = jnp.argmin(jnp.where(cand, s.park_seq, T_INF))
+        i = _select_next(s, cand, req.t_a)
         act = jnp.any(cand) & ok & ~ovf
         t_du = s.park_te[i] - s.park_ts[i]
         res = search_lib.replacement_search(
@@ -695,6 +813,46 @@ def _admit_impl(state: SchedulerState, req: RequestBatch,
         state = state._replace(park_retry=jnp.asarray(False))
     elif auto_release:
         state = release_due(state, req.t_a)
+    tenancy = state.tenants is not None
+    # tenancy needs the pending buffer as its reservation ledger even
+    # without auto-release (overdue reaping batch-deletes from it;
+    # client cancels clear it); zero-tenant callers keep their exact
+    # pre-tenancy graphs.
+    track_pending = auto_release or tenancy
+    if tenancy:
+        # ---- quota gate (DESIGN.md §10): after queue work — the
+        # gate must see post-release live counts, like the host
+        # oracle — but strictly *before* search.
+        tn0 = state.tenants
+        T = tn0.n_tenants
+        tid = jnp.clip(
+            jnp.asarray(0 if req.tenant is None else req.tenant,
+                        jnp.int32), 0, T - 1)
+        # filler padding (requests_to_batch rings/grids) asks for
+        # n_pe + 1 PEs; it belongs to no tenant and must neither be
+        # gated nor charged
+        real = req.n_pe <= jnp.int32(n_pe)
+        demand = (req.n_pe.astype(jnp.float32)
+                  * req.t_du.astype(jnp.float32))
+        orig_tr, orig_tdu = req.t_r, req.t_du
+        occ_row = tl_lib.occupancy_at(
+            state.tl, jnp.asarray(req.t_a, jnp.int32))
+        occ_frac = (jax.lax.population_count(occ_row).sum()
+                    .astype(jnp.float32) / jnp.float32(n_pe))
+        within = ((tn0.used[tid] + demand <= tn0.quota[tid])
+                  & (tn0.live[tid] < tn0.max_live[tid]))
+        blocked = real & ~within
+        # an over-quota request is rewritten never-feasible (the
+        # filler trick): search, displacement, commit and park all
+        # no-op naturally, with zero extra branches in the hot path
+        req = req._replace(
+            t_r=jnp.where(blocked, req.t_a, req.t_r),
+            t_du=jnp.where(blocked, jnp.int32(1), req.t_du),
+            t_dl=jnp.where(blocked, req.t_a + jnp.int32(1),
+                           req.t_dl),
+            n_pe=jnp.where(blocked, jnp.int32(n_pe + 1), req.n_pe))
+    else:
+        blocked = jnp.asarray(False)
     # NB: searches at full capacity S — the per-request engine's
     # power-of-two bucketing needs the host-visible record count, which
     # does not exist inside a fixed-shape scan.  The fusion win (no
@@ -713,7 +871,10 @@ def _admit_impl(state: SchedulerState, req: RequestBatch,
         # With fewer than two live entries there is nothing to lift —
         # the transaction would re-run the identical failed search —
         # so it is skipped (identical decisions, no wasted searches).
+        # over-quota requests never displace: the transaction's lifts
+        # could latch overflow for work the gate already rejected
         can_try = ((bf == BF_EASY) & ~res.found & ~state.overflow
+                   & ~blocked
                    & (jnp.sum(state.park_seq < T_INF) >= 2))
         state, dres = jax.lax.cond(
             can_try,
@@ -743,7 +904,7 @@ def _admit_impl(state: SchedulerState, req: RequestBatch,
             with_count=True)
         ovf = ovf & need_add
         hw_pending = s.hw_pending
-        if auto_release:
+        if track_pending:
             free = s.pend_te == T_INF
             slot = jnp.argmax(free)
             n_used = jnp.sum(~free).astype(jnp.int32) + 1
@@ -773,6 +934,14 @@ def _admit_impl(state: SchedulerState, req: RequestBatch,
             hw_records=jnp.maximum(s.hw_records, n_keep),
             hw_pending=hw_pending,
         )
+        if tenancy:
+            # ownership of the new pending slot (queue slots are
+            # owned by park_write below)
+            tn = s.tenants
+            out = out._replace(tenants=tn._replace(
+                pend_tenant=jnp.where(
+                    wr, tn.pend_tenant.at[slot].set(tid),
+                    tn.pend_tenant)))
         if backfilling:
             # park bookkeeping sits behind its own cond: an accept
             # that starts at its ready time (the overwhelmingly
@@ -781,7 +950,7 @@ def _admit_impl(state: SchedulerState, req: RequestBatch,
             def park_write(o: SchedulerState) -> SchedulerState:
                 pslot = jnp.argmax(free_park)
                 live = jnp.sum(~free_park).astype(jnp.int32) + 1
-                return o._replace(
+                o = o._replace(
                     park_ts=o.park_ts.at[pslot].set(t_s),
                     park_te=o.park_te.at[pslot].set(t_e),
                     park_mask=o.park_mask.at[pslot].set(pe_mask),
@@ -793,6 +962,15 @@ def _admit_impl(state: SchedulerState, req: RequestBatch,
                     n_parked=o.n_parked + 1,
                     hw_parked=jnp.maximum(o.hw_parked, live),
                 )
+                if tenancy:
+                    tno = o.tenants
+                    o = o._replace(tenants=tno._replace(
+                        park_tenant=tno.park_tenant.at[pslot].set(
+                            tid),
+                        # the fair-share wait clock starts at arrival
+                        park_ta=tno.park_ta.at[pslot].set(req.t_a),
+                    ))
+                return o
 
             out = jax.lax.cond(parks & ~ovf, park_write,
                                lambda o: o, out)
@@ -800,6 +978,45 @@ def _admit_impl(state: SchedulerState, req: RequestBatch,
 
     state = jax.lax.cond(found, commit, lambda s: s, state)
     accepted = found & ~state.overflow
+    if tenancy:
+        # ---- per-tenant accounting and telemetry EWMAs: lazy
+        # device-resident accumulators (one scatter block per step,
+        # nothing read back).  Filler padding (real=False) and
+        # overflowed steps (re-run from the pre-run snapshot anyway)
+        # charge nothing, so the table matches the host oracle, which
+        # sees neither.  Expression shapes mirror
+        # HostTenantAccounts.record float32-for-float32.
+        tn = state.tenants
+        ok_upd = real & ~state.overflow
+        one = jnp.float32(1.0)
+        a = tn.alpha
+        acc_i = jnp.where(ok_upd & accepted, 1, 0).astype(jnp.int32)
+        rej_i = jnp.where(ok_upd & ~accepted, 1, 0).astype(jnp.int32)
+        qrej_i = jnp.where(ok_upd & blocked, 1, 0).astype(jnp.int32)
+        prk_i = jnp.where(ok_upd & accepted & parks, 1,
+                          0).astype(jnp.int32)
+        acc_x = jnp.where(accepted, one, jnp.float32(0.0))
+        new_acc = tn.acc_ewma[tid] * (one - a) + acc_x * a
+        slow_x = ((t_e - orig_tr).astype(jnp.float32)
+                  / orig_tdu.astype(jnp.float32))
+        new_slow = tn.slow_ewma[tid] * (one - a) + slow_x * a
+        new_occ = tn.occ_ewma * (one - a) + occ_frac * a
+        state = state._replace(tenants=tn._replace(
+            used=tn.used.at[tid].add(
+                jnp.where(ok_upd & accepted, demand,
+                          jnp.float32(0.0))),
+            live=tn.live.at[tid].add(acc_i),
+            n_accepted=tn.n_accepted.at[tid].add(acc_i),
+            n_rejected=tn.n_rejected.at[tid].add(rej_i),
+            n_quota_rejected=tn.n_quota_rejected.at[tid].add(qrej_i),
+            n_parked=tn.n_parked.at[tid].add(prk_i),
+            acc_ewma=tn.acc_ewma.at[tid].set(
+                jnp.where(ok_upd, new_acc, tn.acc_ewma[tid])),
+            slow_ewma=tn.slow_ewma.at[tid].set(
+                jnp.where(ok_upd & accepted, new_slow,
+                          tn.slow_ewma[tid])),
+            occ_ewma=jnp.where(ok_upd, new_occ, tn.occ_ewma),
+        ))
     return state, Decision(
         accepted=accepted,
         t_s=jnp.where(accepted, t_s, jnp.int32(-1)),
@@ -1143,6 +1360,28 @@ def cancel_step(state: SchedulerState, t_s: jax.Array, t_e: jax.Array,
             # EASY retry-on-release sweep for the next admit step
             park_retry=out.park_retry | do,
         )
+    if state.tenants is not None:
+        tn = state.tenants
+        T = tn.n_tenants
+        ctid = jnp.clip(tn.pend_tenant[slot], 0, T - 1)
+        dec = jnp.where(clear & (tn.pend_tenant[slot] >= 0), 1,
+                        0).astype(jnp.int32)
+        upd = dict(
+            live=tn.live.at[ctid].add(-dec),
+            pend_tenant=jnp.where(
+                clear, tn.pend_tenant.at[slot].set(-1),
+                tn.pend_tenant))
+        if state.park_capacity:
+            ptid = jnp.clip(tn.park_tenant[pslot], 0, T - 1)
+            pdec = jnp.where(pclear & (tn.park_tenant[pslot] >= 0),
+                             1, 0).astype(jnp.int32)
+            upd["live"] = upd["live"].at[ptid].add(-pdec)
+            upd["park_tenant"] = jnp.where(
+                pclear, tn.park_tenant.at[pslot].set(-1),
+                tn.park_tenant)
+            upd["park_ta"] = jnp.where(
+                pclear, tn.park_ta.at[pslot].set(0), tn.park_ta)
+        out = out._replace(tenants=tn._replace(**upd))
     return out, do
 
 
@@ -1232,6 +1471,24 @@ def cancel_many_step(state: SchedulerState, t_s: jax.Array,
             # EASY retry-on-release sweep for the next admit step
             park_retry=out.park_retry | jnp.any(do),
         )
+    if state.tenants is not None:
+        tn = state.tenants
+        T = tn.n_tenants
+        ctid = jnp.clip(tn.pend_tenant, 0, T - 1)
+        dec = jnp.where(clear & (tn.pend_tenant >= 0), 1,
+                        0).astype(jnp.int32)
+        upd = dict(
+            live=tn.live.at[ctid].add(-dec),
+            pend_tenant=jnp.where(clear, -1, tn.pend_tenant))
+        if state.park_capacity:
+            ptid = jnp.clip(tn.park_tenant, 0, T - 1)
+            pdec = jnp.where(pclear & (tn.park_tenant >= 0), 1,
+                             0).astype(jnp.int32)
+            upd["live"] = upd["live"].at[ptid].add(-pdec)
+            upd["park_tenant"] = jnp.where(pclear, -1,
+                                           tn.park_tenant)
+            upd["park_ta"] = jnp.where(pclear, 0, tn.park_ta)
+        out = out._replace(tenants=tn._replace(**upd))
     return out, do
 
 
@@ -1312,14 +1569,22 @@ def parked_entries(state: SchedulerState) -> List[dict]:
     tdl = np.asarray(state.park_tdl)
     npe = np.asarray(state.park_npe)
     masks = np.asarray(state.park_mask)
+    tenant = (np.asarray(state.tenants.park_tenant)
+              if state.tenants is not None else None)
+    t_a = (np.asarray(state.tenants.park_ta)
+           if state.tenants is not None else None)
     out = []
     for i in np.argsort(seq, kind="stable"):
         if seq[i] >= T_INF:
             continue
-        out.append(dict(
+        entry = dict(
             seq=int(seq[i]), t_s=int(ts[i]), t_e=int(te[i]),
             t_r=int(tr[i]), t_dl=int(tdl[i]), n_pe=int(npe[i]),
-            pe_ids=mask32_to_ids(masks[i])))
+            pe_ids=mask32_to_ids(masks[i]))
+        if tenant is not None:
+            entry["tenant"] = int(tenant[i])
+            entry["t_a"] = int(t_a[i])
+        out.append(entry)
     return out
 
 

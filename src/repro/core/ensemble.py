@@ -36,10 +36,17 @@ from repro.core.types import T_INF
 
 def init_ensemble(n_ensemble: int, capacity: int, n_pe: int,
                   pending_capacity: int = 256,
-                  park_capacity: int = 0) -> SchedulerState:
-    """E fresh all-free lanes as one stacked state pytree."""
+                  park_capacity: int = 0,
+                  tenants=None) -> SchedulerState:
+    """E fresh all-free lanes as one stacked state pytree.
+
+    ``tenants`` is an optional single-lane
+    :class:`~repro.tenancy.TenantTable` broadcast to every lane (pass a
+    pre-stacked table via :func:`stack_states` of per-lane
+    ``init_state`` calls for heterogeneous lanes instead).
+    """
     one = tl_lib.init_state(capacity, n_pe, pending_capacity,
-                            park_capacity)
+                            park_capacity, tenants=tenants)
     return jax.tree_util.tree_map(
         lambda x: jnp.broadcast_to(x, (n_ensemble,) + x.shape), one)
 
@@ -348,6 +355,42 @@ def grow_ensemble(states: SchedulerState, new_capacity: int,
 
 release_due_ensemble = jax.jit(
     jax.vmap(batch_lib.release_due, in_axes=(0, None)))
+
+
+reap_step_ensemble = jax.jit(
+    jax.vmap(batch_lib.reap_step, in_axes=(0, None, 0)))
+
+
+def reap_until_ensemble(states: SchedulerState, t_now: int,
+                        grace, *,
+                        max_growths: int = batch_lib.MAX_DOUBLINGS
+                        ) -> SchedulerState:
+    """Per-lane overdue-reservation reaping with collective growth.
+
+    The ensemble counterpart of :func:`repro.core.batch.reap_until`
+    (DESIGN.md §10): every lane batch-deletes reservations whose end
+    passed more than ``grace`` ago (one shared grace or one per lane;
+    ``T_INF`` disables a lane), charging usage back to the owning
+    tenants, under the same worst-lane grow-once protocol as
+    :func:`release_until_ensemble`.
+    """
+    g = jnp.broadcast_to(jnp.asarray(grace, jnp.int32),
+                         (ensemble_size(states),))
+    start = states
+    for attempt in range(max_growths + 1):
+        out = reap_step_ensemble(start, jnp.int32(t_now), g)
+        if not bool(jnp.any(out.overflow)):
+            return out
+        if attempt < max_growths:
+            new_cap, new_pend = batch_lib.grown_capacities(
+                member(start, 0), int(jnp.max(out.hw_records)),
+                int(jnp.max(out.hw_pending)))
+            start = grow_ensemble(start, new_cap, new_pend)
+    cap, pend = lane_capacity(start)
+    raise RuntimeError(
+        f"reap_until_ensemble still overflowing after "
+        f"{max_growths + 1} attempts (last tried capacity "
+        f"{cap}, pending {pend})")
 
 
 def release_until_ensemble(states: SchedulerState, t_now: int, *,

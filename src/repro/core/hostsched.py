@@ -349,8 +349,9 @@ class BackfillOracle:
         self.policy = policy
         self.mode = BackfillMode(mode)
         self.Q = park_capacity
-        self.parked: List[dict] = []      # FCFS by ['seq']
-        self.completions: List[tuple] = []  # heap (t_e, seq, t_s, ids)
+        self.parked: List[dict] = []      # ordered by _order_key
+        # heap (t_e, heap_seq, t_s, ids, tenant); tenant -1 = anonymous
+        self.completions: List[tuple] = []
         self._next_seq = 0
         self._heap_seq = 0
         self.n_parked = self.n_promoted = self.n_moved = 0
@@ -358,18 +359,39 @@ class BackfillOracle:
         # (seq, old_t_s, new_t_s, was_head, event) per reservation move
         self.moves: List[tuple] = []
 
+    # -- tenancy hooks (DESIGN.md §10) ---------------------------------
+    # The base oracle is single-tenant: FCFS order, anonymous owners,
+    # no accounting.  TenantOracle overrides exactly these four hooks;
+    # everything else (promote / release / retry / displace / commit)
+    # stays shared, so the two oracles differ only where the device
+    # paths differ.
+    def _order_key(self, entry: dict, t_now: int) -> tuple:
+        """Queue-sweep priority of a parked entry (ascending)."""
+        return (entry["seq"],)
+
+    def _tenant_of(self, req: ARRequest) -> int:
+        return -1
+
+    def _on_release(self, tenant: int) -> None:
+        """A held reservation left the machine (release or cancel)."""
+
+    def _on_reap(self, tenant: int) -> None:
+        """A held reservation was reaped overdue."""
+
     # -- helpers -------------------------------------------------------
-    def _heap_push(self, t_s: int, t_e: int, ids) -> None:
+    def _heap_push(self, t_s: int, t_e: int, ids,
+                   tenant: int = -1) -> None:
         heapq.heappush(self.completions,
-                       (t_e, self._heap_seq, t_s, tuple(ids)))
+                       (t_e, self._heap_seq, t_s, tuple(ids), tenant))
         self._heap_seq += 1
 
     def _promote_due(self, t_now: int) -> None:
-        self.parked.sort(key=lambda p: p["seq"])
+        self.parked.sort(key=lambda p: self._order_key(p, t_now))
         still = []
         for p in self.parked:
             if p["t_s"] <= t_now:
-                self._heap_push(p["t_s"], p["t_e"], p["pe_ids"])
+                self._heap_push(p["t_s"], p["t_e"], p["pe_ids"],
+                                p.get("tenant", -1))
                 self.n_promoted += 1
             else:
                 still.append(p)
@@ -377,8 +399,9 @@ class BackfillOracle:
 
     def _release_due(self, t_now: int) -> None:
         while self.completions and self.completions[0][0] <= t_now:
-            t_e, _, t_s, ids = heapq.heappop(self.completions)
+            t_e, _, t_s, ids, tenant = heapq.heappop(self.completions)
             self.sched.delete_allocation(t_s, t_e, list(ids))
+            self._on_release(tenant)
 
     def _replacement(self, entry: dict, t_now: int,
                      policy: Policy) -> Optional[Allocation]:
@@ -391,24 +414,29 @@ class BackfillOracle:
 
     def _retry_parked(self, t_now: int) -> None:
         """EASY retry-on-release sweep: pull reservations earlier
-        (never later), FCFS; runs once after a cancel armed the
-        latch (only a cancel frees *future* capacity)."""
-        for p in sorted(self.parked, key=lambda q: q["seq"]):
+        (never later), in ``_order_key`` order (FCFS, or weighted
+        fair-share on the tenant oracle); runs once after a cancel
+        armed the latch (only a cancel frees *future* capacity)."""
+        for p in sorted(self.parked,
+                        key=lambda q: self._order_key(q, t_now)):
             self.sched.delete_allocation(p["t_s"], p["t_e"],
                                          list(p["pe_ids"]))
             alloc = self._replacement(p, t_now, Policy.FF)
             if alloc is not None and alloc.t_s < p["t_s"]:
                 self.moves.append((p["seq"], p["t_s"], alloc.t_s,
-                                   self._is_head(p), "retry"))
+                                   self._is_head(p, t_now), "retry"))
                 p["t_s"], p["t_e"] = alloc.t_s, alloc.t_e
                 p["pe_ids"] = alloc.pe_ids
                 self.n_moved += 1
             self.sched.add_allocation(p["t_s"], p["t_e"],
                                       list(p["pe_ids"]))
 
-    def _is_head(self, entry: dict) -> bool:
-        return bool(self.parked) and \
-            entry["seq"] == min(p["seq"] for p in self.parked)
+    def _is_head(self, entry: dict, t_now: int) -> bool:
+        if not self.parked:
+            return False
+        head = min(self.parked,
+                   key=lambda p: self._order_key(p, t_now))
+        return entry["seq"] == head["seq"]
 
     def _commit_or_park(self, req: ARRequest, t_s: int, t_e: int,
                         pe_ids) -> bool:
@@ -418,21 +446,23 @@ class BackfillOracle:
         if parks:
             self.parked.append(dict(
                 seq=self._next_seq, t_s=t_s, t_e=t_e, t_r=req.t_r,
-                t_dl=req.t_dl, n_pe=req.n_pe, pe_ids=tuple(pe_ids)))
+                t_dl=req.t_dl, n_pe=req.n_pe, pe_ids=tuple(pe_ids),
+                tenant=self._tenant_of(req), t_a=req.t_a))
             self._next_seq += 1
             self.n_parked += 1
         else:
-            self._heap_push(t_s, t_e, pe_ids)
+            self._heap_push(t_s, t_e, pe_ids, self._tenant_of(req))
         return parks
 
     def _displace(self, req: ARRequest) -> Optional[Allocation]:
         """The EASY transaction: move non-head reservations for req."""
         snap = (self.sched.times.copy(), self.sched.occ.copy(),
                 [dict(p) for p in self.parked])
-        head_seq = min(p["seq"] for p in self.parked)
+        head_seq = min(self.parked,
+                       key=lambda p: self._order_key(p, req.t_a))["seq"]
         nonhead = sorted((p for p in self.parked
                           if p["seq"] != head_seq),
-                         key=lambda p: p["seq"])
+                         key=lambda p: self._order_key(p, req.t_a))
         for p in nonhead:
             self.sched.delete_allocation(p["t_s"], p["t_e"],
                                          list(p["pe_ids"]))
@@ -509,6 +539,7 @@ class BackfillOracle:
         for p in self.parked:
             if (p["t_s"], p["t_e"], tuple(p["pe_ids"])) == key:
                 self.parked.remove(p)
+                self._on_release(p.get("tenant", -1))
                 break
         else:
             match = [c for c in self.completions
@@ -517,6 +548,7 @@ class BackfillOracle:
                 return False
             self.completions.remove(match[0])
             heapq.heapify(self.completions)
+            self._on_release(match[0][4])
         self.sched.delete_allocation(t_s, t_e, list(pe_ids))
         self.retry_flag = True
         return True
@@ -531,6 +563,89 @@ class BackfillOracle:
 
     def records(self):
         return self.sched.records()
+
+
+class TenantOracle(BackfillOracle):
+    """Differential mirror of the multi-tenant device admit path.
+
+    Wraps :class:`BackfillOracle` with the same
+    :class:`repro.tenancy.HostTenantAccounts` arithmetic the device
+    tenancy gate uses (identical f32 operation order, so the mirrored
+    counters are bit-exact): the quota gate runs *after* queue work and
+    *before* the placement search, the parked-queue sweeps order by the
+    weighted fair-share key instead of FCFS, and ``reap`` deletes
+    overdue completions past ``t_e + grace`` charging the owner.
+    """
+
+    def __init__(self, n_pe: int, policy: Policy, mode, spec,
+                 park_capacity: int = 8):
+        super().__init__(n_pe, policy, mode, park_capacity)
+        from repro.tenancy import HostTenantAccounts
+        self.spec = spec
+        self.accounts = HostTenantAccounts(spec)
+        self.grace = spec.grace
+        self.n_reaped = 0
+
+    # -- hook overrides ------------------------------------------------
+    def _order_key(self, entry: dict, t_now: int) -> tuple:
+        # device fair_key: weight[tid] * f32(t_now - park_ta), max-key
+        # min-seq — negate for the host's ascending sorts.
+        tid = self.accounts.clip_tid(entry.get("tenant", 0))
+        wait = np.float32(np.int32(t_now) - np.int32(entry["t_a"]))
+        return (-(self.accounts.weight[tid] * wait), entry["seq"])
+
+    def _tenant_of(self, req: ARRequest) -> int:
+        return int(req.tenant)
+
+    def _on_release(self, tenant: int) -> None:
+        self.accounts.release(tenant)
+
+    def _on_reap(self, tenant: int) -> None:
+        self.accounts.reap(tenant)
+
+    # -- gated admission ----------------------------------------------
+    def admit(self, req: ARRequest) -> Tuple[bool, int, bool]:
+        t_now = req.t_a
+        # Queue work precedes the gate (device: gate is computed after
+        # _promote_due/_release_due/_retry_parked, before the search).
+        # super().admit() re-runs these sweeps at the same t_now: both
+        # are no-ops then (nothing new is due, retry latch consumed).
+        self._promote_due(t_now)
+        self._release_due(t_now)
+        if self.mode == BackfillMode.EASY and self.parked \
+                and self.retry_flag:
+            self._retry_parked(t_now)
+        self.retry_flag = False
+        # occupancy sampled post-queue-work, like the device occ_ewma
+        occ_frac = (np.float32(popcount(self.sched._busy_row_at(t_now)))
+                    / np.float32(self.n_pe))
+        tid = self.accounts.clip_tid(self._tenant_of(req))
+        if not self.accounts.allowed(tid, req.n_pe, req.t_du):
+            self.accounts.record(tid, accepted=False, blocked=True,
+                                 parked=False, occ_frac=occ_frac)
+            return False, -1, False
+        accepted, t_s, parked = super().admit(req)
+        self.accounts.record(
+            tid, accepted=accepted, blocked=False, parked=parked,
+            occ_frac=occ_frac,
+            t_e=(t_s + req.t_du) if accepted else -1,
+            t_r=req.t_r, t_du=req.t_du, n_pe=req.n_pe)
+        return accepted, t_s, parked
+
+    def reap(self, t_now: int) -> int:
+        """Delete reservations overdue past ``t_e + grace``; mirrors
+        :func:`repro.core.batch.reap_step` (no promotion first)."""
+        if self.grace is None:
+            return 0
+        cutoff = t_now - self.grace
+        reaped = 0
+        while self.completions and self.completions[0][0] <= cutoff:
+            t_e, _, t_s, ids, tenant = heapq.heappop(self.completions)
+            self.sched.delete_allocation(t_s, t_e, list(ids))
+            self._on_reap(tenant)
+            reaped += 1
+        self.n_reaped += reaped
+        return reaped
 
 
 class FleetRoutingOracle:

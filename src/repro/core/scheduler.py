@@ -42,7 +42,8 @@ class DeviceEngine:
 
     def __init__(self, n_pe: int, capacity: int = 256,
                  use_kernel: bool = False, bucketing: bool = True,
-                 pending_capacity: int = 256, park_capacity: int = 0):
+                 pending_capacity: int = 256, park_capacity: int = 0,
+                 tenants=None):
         self.n_pe = n_pe
         self.use_kernel = use_kernel
         # §Perf iteration A3: the dense search costs O(P*S*n_pe) at the
@@ -54,8 +55,12 @@ class DeviceEngine:
         # lazily on the next search so the streaming hot path never
         # pays the device reduction)
         self._n_valid: Optional[int] = 0
+        table = None
+        if tenants is not None:
+            from repro.tenancy import init_table
+            table = init_table(tenants, pending_capacity, park_capacity)
         self.state = tl_lib.init_state(capacity, n_pe, pending_capacity,
-                                       park_capacity)
+                                       park_capacity, tenants=table)
 
     # -- helpers -------------------------------------------------------
     @property

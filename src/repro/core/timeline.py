@@ -19,7 +19,7 @@ Invariants (asserted in tests, preserved by ``update``):
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Tuple, Union
+from typing import Any, NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -117,6 +117,11 @@ class SchedulerState(NamedTuple):
     n_promoted: jax.Array  # int32 scalar: lifetime promotions
     n_moved: jax.Array     # int32 scalar: lifetime reservation moves
     hw_parked: jax.Array   # int32 scalar: max live queue entries
+    #: Optional multi-tenant table (``repro.tenancy.TenantTable``,
+    #: DESIGN.md §10).  ``None`` — the default — contributes no pytree
+    #: leaves, so zero-tenant sessions trace, donate, and shard the
+    #: byte-identical graphs they had before tenancy existed.
+    tenants: Optional[Any] = None
 
     @property
     def pending_capacity(self) -> int:
@@ -129,12 +134,15 @@ class SchedulerState(NamedTuple):
 
 def init_state(capacity: int, n_pe: int,
                pending_capacity: int = 256,
-               park_capacity: int = 0) -> SchedulerState:
+               park_capacity: int = 0,
+               tenants: Optional[Any] = None) -> SchedulerState:
     """Fresh all-free scheduler state.
 
     ``park_capacity`` sizes the backfilling deferral queue; the default
     0 statically disables every backfill code path (identical compiled
-    graphs to the pre-backfill core).
+    graphs to the pre-backfill core).  ``tenants`` optionally attaches
+    a ``repro.tenancy.TenantTable`` (its buffer columns must match
+    ``pending_capacity`` / ``park_capacity``).
     """
     return SchedulerState(
         tl=empty(capacity, n_pe),
@@ -161,6 +169,7 @@ def init_state(capacity: int, n_pe: int,
         n_promoted=jnp.int32(0),
         n_moved=jnp.int32(0),
         hw_parked=jnp.int32(0),
+        tenants=tenants,
     )
 
 
@@ -188,6 +197,11 @@ def grow_state(state: SchedulerState,
                 [out.pend_mask,
                  jnp.zeros((pad, out.pend_mask.shape[1]), jnp.uint32)]),
         )
+        if out.tenants is not None:
+            out = out._replace(tenants=out.tenants._replace(
+                pend_tenant=jnp.concatenate(
+                    [out.tenants.pend_tenant,
+                     jnp.full((pad,), -1, jnp.int32)])))
     return out
 
 

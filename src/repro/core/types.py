@@ -88,6 +88,8 @@ class ARRequest:
       t_dl: deadline, ``t_dl >= t_r + t_du``.  Equality means an
             *immediate* deadline; inequality a *general* deadline.
       n_pe: number of processing elements required.
+      tenant: owning tenant id for multi-tenant sessions (DESIGN.md
+            §10); ignored (and harmless) when tenancy is off.
     """
 
     t_a: int
@@ -95,6 +97,7 @@ class ARRequest:
     t_du: int
     t_dl: int
     n_pe: int
+    tenant: int = 0
 
     def __post_init__(self) -> None:
         if self.t_r < self.t_a:
@@ -107,6 +110,8 @@ class ARRequest:
                 f"{self.t_r + self.t_du}")
         if self.n_pe <= 0:
             raise ValueError(f"n_pe={self.n_pe} must be positive")
+        if self.tenant < 0:
+            raise ValueError(f"tenant={self.tenant} must be >= 0")
 
     @property
     def latest_start(self) -> int:

@@ -44,7 +44,11 @@ class GridSpec:
     Figs. 4-5); ``flex_factors`` set both the AR-time and deadline
     factor (Figs. 6-7); ``backfill_modes`` adds the deferral-queue
     scenario axis (DESIGN.md §6) with ``park_capacity`` queue slots per
-    lane.  ``base`` supplies every other workload knob.
+    lane.  ``tenant_mixes`` adds the multi-tenancy axis (DESIGN.md
+    §10): each entry is a :class:`repro.tenancy.TenantSpec` (jobs are
+    assigned tenants round-robin) or ``None`` for the single-tenant
+    baseline; the default ``(None,)`` keeps the legacy 5-axis result
+    shapes.  ``base`` supplies every other workload knob.
     """
 
     policies: Tuple[Policy, ...] = ALL_POLICIES
@@ -52,16 +56,20 @@ class GridSpec:
     seeds: Tuple[int, ...] = (0, 1, 2)
     flex_factors: Tuple[float, ...] = (3.0,)
     backfill_modes: Tuple[str, ...] = ("none",)
+    tenant_mixes: Tuple[Optional[object], ...] = (None,)
     base: WorkloadParams = WorkloadParams()
     n_pe: int = 64
     n_jobs: int = 200
     park_capacity: int = 8
 
     @property
-    def shape(self) -> Tuple[int, int, int, int, int]:
-        return (len(self.policies), len(self.backfill_modes),
+    def shape(self) -> Tuple[int, ...]:
+        base = (len(self.policies), len(self.backfill_modes),
                 len(self.arrival_factors), len(self.seeds),
                 len(self.flex_factors))
+        if len(self.tenant_mixes) > 1:
+            return base + (len(self.tenant_mixes),)
+        return base
 
     @property
     def n_cells(self) -> int:
@@ -107,8 +115,9 @@ def simulate_grid(
     allocation behaviour; decisions are unaffected either way).
     """
     spec = dataclasses.replace(spec or GridSpec(), **overrides)
-    P, B, L, S, F = spec.shape
-    # one workload per (load, seed, flex), shared across policy/mode
+    shape = spec.shape
+    # one workload per (load, seed, flex), shared across policy/mode;
+    # tenant mixes re-stamp the shared stream round-robin
     workloads = {}
     for load, seed, flex in itertools.product(
             spec.arrival_factors, spec.seeds, spec.flex_factors):
@@ -116,12 +125,25 @@ def simulate_grid(
             spec.workload_params(load, seed, flex), max_pe=spec.n_pe)
         workloads[(load, seed, flex)] = sorted(
             jobs, key=lambda j: j.t_a)
+    mixes = spec.tenant_mixes
+    tenanted = {}
+    for key, jobs in workloads.items():
+        for m, mix in enumerate(mixes):
+            if mix is None:
+                tenanted[key + (m,)] = jobs
+            else:
+                T = mix.n_tenants
+                tenanted[key + (m,)] = [
+                    dataclasses.replace(j, tenant=i % T)
+                    for i, j in enumerate(jobs)]
     cells = list(itertools.product(
         spec.policies, spec.backfill_modes, spec.arrival_factors,
-        spec.seeds, spec.flex_factors))
-    streams = [workloads[(lo, se, fl)]
-               for _, _, lo, se, fl in cells]
-    batch, valid = pad_streams(streams, spec.n_pe)
+        spec.seeds, spec.flex_factors, range(len(mixes))))
+    streams = [tenanted[(lo, se, fl, m)]
+               for _, _, lo, se, fl, m in cells]
+    tenancy = any(mix is not None for mix in mixes)
+    batch, valid = pad_streams(streams, spec.n_pe,
+                               with_tenant=tenancy)
     pids = jnp.asarray([policy_index(p) for p, *_ in cells],
                        jnp.int32)
     backfill = tuple(m for _, m, *_ in cells)
@@ -131,8 +153,9 @@ def simulate_grid(
         n_pe=spec.n_pe, lanes=len(cells), capacity=capacity,
         pending_capacity=pending_capacity, use_kernel=use_kernel,
         backfill=backfill, backfill_queue=spec.park_capacity,
-        chunk_size=None, placement=placement,
-        donate=donate)).session()
+        chunk_size=None, placement=placement, donate=donate,
+        tenants=(tuple(mixes[c[-1]] for c in cells)
+                 if tenancy else None))).session()
     t0 = _time.perf_counter()
     res = session.offer((batch, valid), policy=pids)
     dec = res.decision
@@ -145,11 +168,11 @@ def simulate_grid(
         seeds=spec.seeds,
         flex_factors=spec.flex_factors,
         backfill_modes=spec.backfill_modes,
-        acceptance=acc_rate.reshape(P, B, L, S, F),
-        slowdown=slowdown.reshape(P, B, L, S, F),
-        utilization=util.reshape(P, B, L, S, F),
-        n_jobs=n_val.reshape(P, B, L, S, F).astype(int),
-        n_accepted=n_acc.reshape(P, B, L, S, F).astype(int),
+        acceptance=acc_rate.reshape(shape),
+        slowdown=slowdown.reshape(shape),
+        utilization=util.reshape(shape),
+        n_jobs=n_val.reshape(shape).astype(int),
+        n_accepted=n_acc.reshape(shape).astype(int),
         wall_seconds=wall,
     )
     if record_decisions or cross_check:
@@ -163,21 +186,26 @@ def simulate_grid(
             arr = np.empty(len(cells), dtype=object)
             for c in range(len(cells)):
                 arr[c] = traces[c]
-            result.decisions = arr.reshape(P, B, L, S, F).tolist()
+            result.decisions = arr.reshape(shape).tolist()
     if cross_check:
-        _cross_check_cells(cells, streams, traces, spec.n_pe,
+        _cross_check_cells(cells, mixes, streams, traces, spec.n_pe,
                            spec.park_capacity)
     return result
 
 
-def _cross_check_cells(cells, streams, traces, n_pe: int,
+def _cross_check_cells(cells, mixes, streams, traces, n_pe: int,
                        park_capacity: int) -> None:
     """Assert every cell is decision-identical to its host oracle."""
-    from repro.core.hostsched import BackfillOracle
+    from repro.core.hostsched import BackfillOracle, TenantOracle
     from repro.sim.simulator import simulate
 
-    for c, (policy, mode, load, seed, flex) in enumerate(cells):
-        if mode == "none":
+    for c, (policy, mode, load, seed, flex, m) in enumerate(cells):
+        mix = mixes[m]
+        if mix is not None:
+            orc = TenantOracle(n_pe, policy, mode, mix,
+                               park_capacity=park_capacity)
+            ref = [orc.admit(r)[:2] for r in streams[c]]
+        elif mode == "none":
             ref = simulate(streams[c], n_pe, policy, engine="host",
                            record_decisions=True).decisions
         else:
@@ -189,6 +217,7 @@ def _cross_check_cells(cells, streams, traces, n_pe: int,
                     enumerate(zip(ref, traces[c])) if x != y]
             raise AssertionError(
                 f"grid cell (policy={policy.value}, backfill={mode}, "
-                f"load={load}, seed={seed}, flex={flex}) diverges "
+                f"load={load}, seed={seed}, flex={flex}, "
+                f"tenant_mix={m}) diverges "
                 f"from the host oracle at job indices {diff[:10]} "
                 f"({len(diff)}/{len(streams[c])} total)")

@@ -1,0 +1,19 @@
+"""Multi-tenant admission: quotas, fair-share, reaping (DESIGN.md §10).
+
+Public surface:
+
+- :class:`TenantSpec` — host-side config (``ServiceConfig.tenants``).
+- :class:`TenantTable` — device-resident per-tenant state pytree,
+  threaded through the fused admit step as the optional
+  ``SchedulerState.tenants`` field.
+- :func:`snapshot` / :func:`tenant_view` — poll-cheap telemetry.
+"""
+from .table import (HostTenantAccounts, TenantSpec, TenantTable,
+                    fair_key, grow_table, init_table, stack_tables)
+from .telemetry import snapshot, tenant_view
+
+__all__ = [
+    "TenantSpec", "TenantTable", "HostTenantAccounts",
+    "init_table", "stack_tables", "grow_table", "fair_key",
+    "snapshot", "tenant_view",
+]

@@ -1,0 +1,81 @@
+"""The deprecation-shim sweep: every remaining legacy entry point
+must still warn, warn exactly once per call site pattern, and keep
+behaving — so downstream users get the migration message without a
+behaviour cliff.  Individual equivalence gates live next to their
+subsystems (``test_service.py``, ``test_fleet_partition.py``); this
+sweep is the single checklist of what is still deprecated.
+"""
+import warnings
+
+import pytest
+
+from repro.core import batch as batch_lib
+from repro.core import timeline as tl_lib
+from repro.core.scheduler import DeviceScheduler, make_scheduler
+from repro.core.types import ARRequest, Policy
+
+
+def test_make_scheduler_warns_for_every_engine():
+    for engine in ("host", "list", "device"):
+        with pytest.warns(DeprecationWarning,
+                          match="make_scheduler is deprecated"):
+            eng = make_scheduler(8, engine)
+        assert eng is not None
+
+
+def test_device_scheduler_class_warns_once_per_construction():
+    with pytest.warns(DeprecationWarning,
+                      match="DeviceScheduler is deprecated"):
+        sched = DeviceScheduler(capacity=16, n_pe=8)
+    # the shim still schedules
+    req = ARRequest(t_a=0, t_r=0, t_du=5, t_dl=20, n_pe=2)
+    assert sched.find_allocation(req, Policy.FF) is not None
+
+
+def test_admit_stream_auto_warns_and_forwards():
+    state = tl_lib.init_state(16, 8, 16)
+    batch = batch_lib.requests_to_batch(
+        [ARRequest(t_a=0, t_r=0, t_du=5, t_dl=20, n_pe=2)])
+    with pytest.warns(DeprecationWarning,
+                      match="admit_stream_auto is deprecated"):
+        _, dec = batch_lib.admit_stream_auto(
+            state, batch, Policy.FF, n_pe=8)
+    assert bool(dec.accepted[0])
+
+
+def test_route_legacy_raise_warns_then_raises():
+    from repro.api import ReservationService, ServiceConfig
+
+    sess = ReservationService(ServiceConfig(
+        n_pe=8, n_partitions=2, auto_release=False,
+        chunk_size=None)).session()
+    core = sess.engine
+    reqs = [ARRequest(t_a=0, t_r=0, t_du=5, t_dl=20, n_pe=2)]
+    # the modern contract: a commit-free lane preview, no warning
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        lanes = core.route(reqs, "best_acceptance")
+    assert len(lanes) == len(reqs)
+    with pytest.warns(DeprecationWarning,
+                      match="legacy_raise=True.*deprecated"):
+        with pytest.raises(ValueError, match="best_acceptance"):
+            core.route(reqs, "best_acceptance", legacy_raise=True)
+
+
+def test_no_other_entry_point_warns_by_default():
+    """The supported surface is warning-free: building a service,
+    offering, polling metrics and ticking must not emit
+    DeprecationWarning."""
+    from repro.api import ReservationService, ServiceConfig
+    from repro.tenancy import TenantSpec
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        sess = ReservationService(ServiceConfig(
+            n_pe=8, capacity=32, chunk_size=4, ring_capacity=8,
+            tenants=TenantSpec(weights=(1.0, 1.0)))).session()
+        sess.offer([ARRequest(t_a=0, t_r=0, t_du=5, t_dl=20, n_pe=2,
+                              tenant=1)])
+        sess.metrics()
+        sess.metrics(tenant=1)
+        sess.tick(3)

@@ -43,7 +43,7 @@ def _stack(streams):
     return batch_lib.RequestBatch(*[
         jnp.stack([getattr(batch_lib.requests_to_batch(s), f)
                    for s in streams])
-        for f in batch_lib.RequestBatch._fields])
+        for f in batch_lib.REQ_FIELDS])
 
 
 def _independent(stream, policy, capacity=64, pending=32):
@@ -140,7 +140,8 @@ def test_admit_ensemble_single_step():
             for k in (1, 8, 16)]
     req_batch = _stack([[r] for r in reqs])
     one_step = batch_lib.RequestBatch(
-        *[f[:, 0] for f in req_batch])      # [E] scalars per lane
+        *[getattr(req_batch, f)[:, 0]       # [E] scalars per lane
+          for f in batch_lib.REQ_FIELDS])
     states = ens_lib.init_ensemble(3, 32, N_PE, 8)
     out, dec = ens_lib.admit_ensemble(
         states, one_step, ens_lib.policy_ids([Policy.FF] * 3),

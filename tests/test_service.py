@@ -529,3 +529,40 @@ def test_offer_result_empty_and_prepacked_guard():
     with pytest.raises(ValueError, match="bypasses the ring"):
         sess.offer(batch_lib.requests_to_batch(
             [ARRequest(t_a=0, t_r=0, t_du=5, t_dl=10, n_pe=1)]))
+
+
+def test_push_front_recovers_arrival_order_across_repeated_latches():
+    """Three consecutive latched offers restage to the ring *front*:
+    contents stay in arrival order through physical wraparound, and
+    ``last_popped_t_a`` stays rewound to the newest decided arrival
+    so later partial chunks cannot release undecided predecessors."""
+    import warnings
+
+    sess = ReservationService(ServiceConfig(
+        n_pe=16, capacity=8, pending_capacity=4, auto_grow=False,
+        chunk_size=8, ring_capacity=16)).session()
+    ring = sess._backend.ring
+    # feasible warm-up advances the ring head and the filler stamp
+    warm = [ARRequest(t_a=i, t_r=i, t_du=1, t_dl=i + 4, n_pe=1)
+            for i in range(10)]
+    res = sess.offer(warm)
+    assert int(np.asarray(res.decision.accepted).sum()) == 10
+    assert ring._head == 10 and ring.last_popped_t_a == 9
+    # three overflowing waves, each fully restaged (no drops)
+    over = [ARRequest(t_a=100 + i, t_r=100 + i, t_du=5000,
+                      t_dl=100 + i + 5000, n_pe=1)
+            for i in range(16)]
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", RuntimeWarning)
+        for lo, hi in ((0, 6), (6, 11), (11, 16)):
+            with pytest.raises(RuntimeError, match="overflowing"):
+                sess.offer(over[lo:hi])
+            assert ring.count == hi           # everything restaged...
+            assert ring._head == 10           # ...at the front
+            assert ring.last_popped_t_a == 9  # stamp stays rewound
+    assert sess.metrics()["growths"] == 0
+    # count 16 at head 10 means the ring physically wrapped; popping
+    # must replay the undecided requests in exact arrival order
+    batch, valid = ring.pop_chunk(ring.count, 16)
+    assert np.asarray(batch.t_a)[np.asarray(valid)].tolist() \
+        == [100 + i for i in range(16)]

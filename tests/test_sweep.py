@@ -248,7 +248,8 @@ def test_zero_acceptance_cell_is_nan_safe():
         state, batch, Policy.PE_W, n_pe=n_pe)
     stacked = batch_lib.Decision(*[jnp.asarray(f)[None] for f in dec])
     sb = batch_lib.RequestBatch(
-        *[jnp.asarray(f)[None] for f in batch])
+        *[jnp.asarray(getattr(batch, f))[None]
+          for f in batch_lib.REQ_FIELDS])
     valid = np.ones((1, len(jobs)), bool)
     with warnings.catch_warnings():
         warnings.simplefilter("error")       # any warning fails
