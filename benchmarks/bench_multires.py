@@ -1,0 +1,116 @@
+"""Multi-resource timeline overhead: R=1 parity cost and the R curve.
+
+The vector timeline (DESIGN.md §11) concatenates one packed bitplane
+per resource on the occupancy word axis, and the fit test AND-reduces
+per-plane feasibility.  Two claims are measured into
+``BENCH_multires.json``:
+
+* ``r1`` vs ``legacy``: warm requests/sec of the same ring-chunked
+  offer stream on an ``rspec=(n_pe,)`` session vs a plain one.  The
+  R=1 layout is byte-identical to the legacy timeline, so this ratio
+  prices only the rspec code path (demand columns in the ring, the
+  masked popcount contraction) and must stay a small constant factor.
+* ``r2`` / ``r4``: the cost curve as planes are added.  Each plane
+  adds words to every occupancy row and one more feasibility reduce,
+  so cost should grow roughly linearly in total words — the gate pins
+  the R=4 ratio so a superlinear regression (e.g. a per-plane rescan)
+  fails the band.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import time
+from typing import Dict, List, Optional, Tuple
+
+from repro.api import ReservationService, ServiceConfig
+from repro.core.types import Policy
+from repro.sim import WorkloadParams, generate
+
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+BENCH_MULTIRES_PATH = str(_ROOT / "BENCH_multires.json")
+
+#: secondary-plane unit counts of the R=2 / R=4 variants
+R2_TAIL: Tuple[int, ...] = (8,)
+R4_TAIL: Tuple[int, ...] = (8, 4, 16)
+
+
+def _jobs(n_jobs: int, n_pe: int, seed: int):
+    return sorted(
+        [j for j in generate(WorkloadParams(
+            n_jobs=n_jobs, n_pe=n_pe, seed=seed,
+            u_low=2.0, u_med=4.0, u_hi=6.0)) if j.n_pe <= n_pe],
+        key=lambda j: j.t_a)
+
+
+def _stamp(jobs, n_pe: int, tail: Tuple[int, ...]):
+    """Half-intensity secondary demand, scaled by the job's PE share."""
+    out = []
+    for j in jobs:
+        dem = tuple(
+            min(u, max(0, int(round(0.5 * u * (j.n_pe / n_pe)))))
+            for u in tail)
+        out.append(dataclasses.replace(j, demand=(j.n_pe,) + dem))
+    return out
+
+
+def multires_throughput(n_jobs: int = 240, n_pe: int = 64,
+                        chunk: int = 64, seed: int = 0,
+                        repeats: int = 5,
+                        out_path: Optional[str] = BENCH_MULTIRES_PATH
+                        ) -> List[Dict]:
+    """Warm ring-chunked offer throughput across resource counts."""
+    from benchmarks._measure import median_wall
+
+    base = _jobs(n_jobs, n_pe, seed)
+    variants = [
+        ("legacy", None, base),
+        ("r1", (n_pe,), base),
+        ("r2", (n_pe,) + R2_TAIL, _stamp(base, n_pe, R2_TAIL)),
+        ("r4", (n_pe,) + R4_TAIL, _stamp(base, n_pe, R4_TAIL)),
+    ]
+
+    def run_stream(resources, jobs) -> float:
+        sess = ReservationService(ServiceConfig(
+            n_pe=n_pe, policy=Policy.PE_W, capacity=128,
+            pending_capacity=256, chunk_size=chunk,
+            ring_capacity=2 * chunk, resources=resources)).session()
+        t0 = time.perf_counter()
+        i = 0
+        while i < len(jobs):
+            sess.offer(jobs[i:i + chunk])
+            i += chunk
+        sess.metrics()          # decision + counter sync
+        return time.perf_counter() - t0
+
+    walls = {name: median_wall(lambda r=res, j=jobs: run_stream(r, j),
+                               repeats)
+             for name, res, jobs in variants}
+    n = len(base)
+    legacy = walls["legacy"]
+    rows = [
+        dict(variant=name,
+             n_resources=1 if res is None else len(res),
+             occ_words=((n_pe + 31) // 32 if res is None else
+                        sum((u + 31) // 32 for u in res)),
+             warm_req_per_s=round(n / walls[name], 1),
+             cost_vs_legacy=round(walls[name] / max(legacy, 1e-9), 3))
+        for name, res, _ in variants]
+    if out_path:
+        with open(out_path, "w") as fh:
+            json.dump({
+                "description": "multi-resource timeline step cost: "
+                               "R=1 parity overhead and the plane-"
+                               "count cost curve",
+                "n_jobs": n, "n_pe": n_pe, "chunk": chunk,
+                "r2_tail": list(R2_TAIL), "r4_tail": list(R4_TAIL),
+                "rows": rows,
+            }, fh, indent=2)
+            fh.write("\n")
+    return rows
+
+
+if __name__ == "__main__":
+    for row in multires_throughput():
+        print(row)

@@ -8,13 +8,15 @@ the paper's 10^4-job workloads (slow); default is a reduced size that
 preserves every reported ordering.
 
 ``--check`` is the perf-regression mode (CI ``perf-smoke``): it
-re-measures the seven BENCH benchmarks at reduced sizes and compares
+re-measures the eight BENCH benchmarks at reduced sizes and compares
 the freshly measured *ratios* — device-vs-host throughput, backfill
 mode cost vs the plain scan, ring-vs-rescan streaming,
 sharded-vs-single mesh placement, pipelined-vs-eager chunked offers,
-batched-vs-sequential fleet ingress and tenancy-on-vs-off gated
-admission (plus the hard zero on idle metrics-poll device fetches) —
-against the committed
+batched-vs-sequential fleet ingress, tenancy-on-vs-off gated
+admission (plus the hard zero on idle metrics-poll device fetches)
+and the multi-resource timeline cost curve (R=1 parity overhead and
+the R=4 plane cost vs the legacy single-plane session) — against the
+committed
 ``BENCH_*.json`` files with a tolerance band.  Ratios only:
 absolute wall times are meaningless on shared runners, but a device
 path that regresses from 3x-faster-than-host to slower-than-host
@@ -61,7 +63,7 @@ def check(tolerance: float) -> int:
     absolute wall-time asserts anywhere.
     """
     from benchmarks import bench_backfill, bench_fleet, bench_mesh, \
-        bench_policies, bench_service, bench_tenancy
+        bench_multires, bench_policies, bench_service, bench_tenancy
 
     failures = []
     checks = []
@@ -155,6 +157,19 @@ def check(tolerance: float) -> int:
          float(ten_got["metrics_poll"]["idle_device_fetches"]),
          float(ten_ref["metrics_poll"]["idle_device_fetches"]), "le")
 
+    # -- multires: plane-count cost vs the legacy single-plane path ---
+    # both gates are cost ratios against the SAME freshly measured
+    # legacy stream, so machine speed cancels: r1 prices the rspec
+    # code path on a byte-identical layout, r4 pins the plane cost
+    # curve (a superlinear regression blows far past the band)
+    mr_ref = {r["variant"]: r for r in _committed("multires")["rows"]}
+    mr_got = {r["variant"]: r for r in bench_multires.
+              multires_throughput(repeats=3, out_path=None)}
+    for variant in ("r1", "r4"):
+        gate(f"multires/{variant}_vs_legacy:cost",
+             mr_got[variant]["cost_vs_legacy"],
+             mr_ref[variant]["cost_vs_legacy"], "le")
+
     # -- mesh: sharded grid vs single placement, pipelined vs eager ---
     # a reduced 168-lane grid keeps the CI lane fast; both gates are
     # ratios of same-machine variants, so the size reduction cancels
@@ -223,8 +238,8 @@ def main() -> None:
     t0 = time.time()
 
     from benchmarks import bench_backfill, bench_datastructure, \
-        bench_fleet, bench_mesh, bench_policies, bench_service, \
-        bench_tenancy
+        bench_fleet, bench_mesh, bench_multires, bench_policies, \
+        bench_service, bench_tenancy
     from benchmarks.bench_roofline import ART_OPT, roofline_rows
 
     sections = {
@@ -248,6 +263,9 @@ def main() -> None:
                 n_jobs=600 if args.full else 240),
         "tenancy_throughput":
             lambda: bench_tenancy.tenancy_throughput(
+                n_jobs=600 if args.full else 240),
+        "multires_throughput":
+            lambda: bench_multires.multires_throughput(
                 n_jobs=600 if args.full else 240),
         "mesh_sharded_grid":
             lambda: bench_mesh.sharded_grid(),

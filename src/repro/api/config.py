@@ -134,6 +134,18 @@ class ServiceConfig:
         router.  ``tenants=None`` (default) adds no pytree leaves —
         the compiled graphs are the ones a tenancy-free build traces.
 
+    Multi-resource and heterogeneous lanes (DESIGN.md §11)
+        ``resources`` generalises the machine from one PE pool to a
+        static per-resource unit vector (e.g. ``(64, 4, 8)`` = PEs,
+        GPUs, licenses); ``resources[0]`` must equal ``n_pe``.  Every
+        resource gets its own packed bitplane on the timeline word
+        axis and requests may carry a full ``demand`` vector.
+        ``machine_sizes`` gives ensemble lanes heterogeneous machine
+        sizes: one live-PE count per lane, each ``0 < m <= n_pe``
+        (lanes keep the padded ``n_pe`` word shape; dead PEs are
+        masked out of every fit test).  Both are device-engine
+        features and exclusive with ``n_partitions > 1``.
+
     ``engine_kwargs`` forwards host/list-engine constructor knobs
     (e.g. ``HostScheduler``'s ``candidate_chunk``); device knobs are
     first-class config fields.
@@ -159,6 +171,8 @@ class ServiceConfig:
     placement: Union[None, str, int] = "auto"
     donate: bool = True
     tenants: Optional[Any] = None
+    resources: Optional[Tuple[int, ...]] = None
+    machine_sizes: Optional[Tuple[int, ...]] = None
     engine_kwargs: Optional[Mapping[str, Any]] = None
 
     def __post_init__(self):
@@ -303,6 +317,78 @@ class ServiceConfig:
                         f"{self.pending_capacity}); every tenant must "
                         f"be able to hold at least one live "
                         f"reservation")
+        if self.resources is not None:
+            rs = tuple(int(x) for x in self.resources)
+            object.__setattr__(self, "resources", rs)
+            if not rs or rs[0] != self.n_pe:
+                raise ValueError(
+                    f"resources[0] must equal n_pe={self.n_pe}: "
+                    f"got {rs}")
+            if any(x < 1 for x in rs):
+                raise ValueError(
+                    f"every resource needs >= 1 unit: got {rs}")
+            if self.engine != "device":
+                raise ValueError(
+                    "multi-resource timelines live in the device "
+                    "state pytree; use engine='device'")
+            if self.n_partitions > 1:
+                raise ValueError(
+                    "resources and n_partitions>1 are not supported "
+                    "together (partitions slice the single PE pool)")
+        if self.machine_sizes is not None:
+            ms = tuple(int(x) for x in self.machine_sizes)
+            object.__setattr__(self, "machine_sizes", ms)
+            if self.engine != "device":
+                raise ValueError(
+                    "machine_sizes masks the device timeline; use "
+                    "engine='device'")
+            if self.n_partitions > 1:
+                raise ValueError(
+                    "machine_sizes and n_partitions>1 are not "
+                    "supported together")
+            if self.tenants is not None:
+                raise ValueError(
+                    "machine_sizes with tenants is not supported "
+                    "(tenant PE-seconds accounting assumes "
+                    "homogeneous lanes)")
+            if len(ms) != self.lanes:
+                raise ValueError(
+                    f"{len(ms)} machine_sizes for {self.lanes} lanes "
+                    f"(one live-PE count per ensemble lane)")
+            bad = [m for m in ms if not 0 < m <= self.n_pe]
+            if bad:
+                raise ValueError(
+                    f"machine_sizes entries must be in (0, n_pe="
+                    f"{self.n_pe}]: got {bad}")
+
+    @property
+    def rspec(self):
+        """The session's :class:`~repro.core.resources.ResourceSpec`.
+
+        ``None`` on plain single-resource configs; ``machine_sizes``
+        without ``resources`` implies an R=1 spec (heterogeneous
+        lanes need the masked fit-test path).
+        """
+        if self.resources is None and self.machine_sizes is None:
+            return None
+        from repro.core.resources import ResourceSpec
+        return ResourceSpec(self.resources
+                            if self.resources is not None
+                            else (self.n_pe,))
+
+    @property
+    def extra_demand(self) -> int:
+        """Staged demand-tail width (R-1) for rings and batches."""
+        spec = self.rspec
+        return 0 if spec is None else spec.R - 1
+
+    @property
+    def machine_units(self) -> Optional[Tuple[Tuple[int, ...], ...]]:
+        """Per-lane live-unit tuples for heterogeneous ensembles."""
+        if self.machine_sizes is None:
+            return None
+        spec = self.rspec
+        return tuple((m,) + spec.units[1:] for m in self.machine_sizes)
 
     @property
     def backfilling(self) -> bool:

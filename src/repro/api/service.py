@@ -174,6 +174,27 @@ def _mask_np(pe_ids, words: int) -> np.ndarray:
     return m
 
 
+def _check_demands(rspec, reqs) -> None:
+    """Validate request demand vectors against the session's layout.
+
+    On multi-resource sessions every carried ``demand`` must match the
+    :class:`~repro.core.resources.ResourceSpec` (length, plane-0 ==
+    ``n_pe``, per-plane range); on plain sessions a demand naming
+    secondary resources is an error — silently dropping it would admit
+    requests against resources the session does not model.
+    """
+    if rspec is not None:
+        for r in reqs:
+            rspec.demand_tail(r.demand, r.n_pe)
+        return
+    for r in reqs:
+        if r.demand is not None and len(r.demand) > 1:
+            raise ValueError(
+                f"request carries a {len(r.demand)}-resource demand "
+                f"but this session is single-resource; set "
+                f"ServiceConfig.resources")
+
+
 
 
 def _concat_tree(chunks: List[Any], axis: int):
@@ -516,18 +537,22 @@ class _StreamBackend(_BackendBase):
 
     def __init__(self, cfg, counters):
         super().__init__(cfg, counters)
+        mu = cfg.machine_units
         self.engine = DeviceEngine(
             cfg.n_pe, capacity=cfg.capacity, use_kernel=cfg.use_kernel,
             bucketing=cfg.bucketing,
             pending_capacity=cfg.pending_capacity,
             park_capacity=cfg.park_capacity,
-            tenants=cfg.tenants)
+            tenants=cfg.tenants, rspec=cfg.rspec,
+            live_units=mu[0] if mu is not None else None)
+        self._rspec = cfg.rspec
         self._n_tenants = cfg.tenants.n_tenants if cfg.tenancy else 0
         self._grace = cfg.tenants.grace if cfg.tenancy else None
         self._bf = batch_lib.BF_NONE if not cfg.backfilling else \
             batch_lib.as_backfill_id(cfg.backfill)
         self.ring = RequestRing(cfg.ring_capacity,
-                                with_tenant=cfg.tenancy) \
+                                with_tenant=cfg.tenancy,
+                                extra_demand=cfg.extra_demand) \
             if cfg.chunk_size else None
         # pipelined offers whose overflow latches are still unread:
         # one dict per offer, drained together in one device sync
@@ -551,6 +576,7 @@ class _StreamBackend(_BackendBase):
                         f"request tenant {r.tenant} out of range "
                         f"[0, {self._n_tenants}) for this session's "
                         f"TenantSpec")
+        _check_demands(self._rspec, reqs)
 
     def _capacities(self):
         s = self._state
@@ -634,7 +660,8 @@ class _StreamBackend(_BackendBase):
             if not reqs:
                 return _empty_result()
             batch = batch_lib.requests_to_batch(
-                reqs, with_tenant=bool(self._n_tenants))
+                reqs, with_tenant=bool(self._n_tenants),
+                extra_demand=self.cfg.extra_demand)
             dec = self._admit_batch(batch, pid)
             self.counters["one_shot_scans"] += 1
             valid = np.ones(len(reqs), bool)
@@ -1017,7 +1044,8 @@ class _EnsembleBackend(_BackendBase):
         self.mesh = resolve_placement(cfg.placement, cfg.lanes)
         states = ens_lib.init_ensemble(
             cfg.lanes, cfg.capacity, cfg.n_pe, cfg.pending_capacity,
-            cfg.park_capacity)
+            cfg.park_capacity, rspec=cfg.rspec,
+            machine_units=cfg.machine_units)
         self._lane_specs = cfg.lane_tenant_specs
         if self._lane_specs is not None:
             # per-lane tables stack to one [E, ...] pytree and shard
@@ -1032,7 +1060,8 @@ class _EnsembleBackend(_BackendBase):
         self._bf_ids = self._put(
             ens_lib.backfill_ids(cfg.backfill, cfg.lanes))
         self.rings = [RequestRing(cfg.ring_capacity,
-                                  with_tenant=cfg.tenancy)
+                                  with_tenant=cfg.tenancy,
+                                  extra_demand=cfg.extra_demand)
                       for _ in range(cfg.lanes)] \
             if cfg.chunk_size else None
 
@@ -1145,12 +1174,15 @@ class _EnsembleBackend(_BackendBase):
                         raise ValueError(
                             f"request tenant {r.tenant} out of range "
                             f"[0, {limit}) for lane {e}'s TenantSpec")
+        for stream in streams:
+            _check_demands(self.cfg.rspec, stream)
         self.counters["offered"] += sum(map(len, streams))
         if self.rings is None:
             if not any(streams):
                 return _empty_result()
             batch, valid = batch_lib.pad_streams(
-                streams, self.cfg.n_pe, with_tenant=self.cfg.tenancy)
+                streams, self.cfg.n_pe, with_tenant=self.cfg.tenancy,
+                extra_demand=self.cfg.extra_demand)
             dec = self._admit_batch(batch, pids)
             self.counters["one_shot_scans"] += 1
             res = OfferResult(decision=dec, batch=batch, valid=valid)
@@ -1701,6 +1733,7 @@ class _HostBackend(_BackendBase):
                 "offer immediately")
         pol = self.resolve_policy(policy)
         reqs = list(requests)
+        _check_demands(None, reqs)
         batch_lib.check_arrival_order(reqs, self._last_ta)
         self.counters["offered"] += len(reqs)
         if not reqs:

@@ -81,7 +81,10 @@ class RequestBatch(NamedTuple):
     fused step.  ``tenant`` is the optional ownership column of
     multi-tenant sessions (DESIGN.md §10): ``None`` — the default —
     contributes no pytree leaf, so zero-tenant batches keep their
-    exact pre-tenancy structure (and compiled graphs).
+    exact pre-tenancy structure (and compiled graphs).  ``demand`` is
+    the optional multi-resource tail column (DESIGN.md §11):
+    ``int32[N, R-1]`` secondary-plane demands (plane 0 *is* ``n_pe``);
+    ``None`` for single-resource sessions, again leaf-free.
     """
 
     t_a: jax.Array
@@ -90,6 +93,7 @@ class RequestBatch(NamedTuple):
     t_dl: jax.Array
     n_pe: jax.Array
     tenant: Optional[jax.Array] = None
+    demand: Optional[jax.Array] = None   # int32[N, R-1] tail demands
 
 
 #: The paper's five request coordinates — the always-present subset of
@@ -97,6 +101,42 @@ class RequestBatch(NamedTuple):
 #: (not ``RequestBatch._fields``) so the optional tenant column is
 #: materialised only for multi-tenant sessions.
 REQ_FIELDS: Tuple[str, ...] = ("t_a", "t_r", "t_du", "t_dl", "n_pe")
+
+
+def _req_field(r: ARRequest, f: str):
+    """Read one staging column off a host request.
+
+    ``demand<k>`` columns (k >= 1) read plane ``k`` of the request's
+    demand vector; requests without one stage zeros there (PEs only).
+    Everything else is a plain attribute.
+    """
+    if f.startswith("demand"):
+        k = int(f[len("demand"):])
+        return 0 if r.demand is None else int(r.demand[k])
+    return getattr(r, f)
+
+
+def _demand_fields(extra_demand: int) -> Tuple[str, ...]:
+    """Staging column names of the demand tail (planes 1..R-1)."""
+    return tuple(f"demand{k}" for k in range(1, extra_demand + 1))
+
+
+def _fields_to_batch(fields: dict) -> RequestBatch:
+    """Column dict (possibly with demand<k> columns) -> RequestBatch.
+
+    The per-plane demand columns are stacked into the single
+    ``int32[..., R-1]`` tail array along a new trailing axis; without
+    any such column ``demand`` stays ``None`` (leaf-free).
+    """
+    plain = {k: jnp.asarray(v) for k, v in fields.items()
+             if not k.startswith("demand")}
+    dcols = sorted((k for k in fields if k.startswith("demand")),
+                   key=lambda k: int(k[len("demand"):]))
+    if dcols:
+        plain["demand"] = jnp.stack(
+            [jnp.asarray(fields[k], jnp.int32) for k in dcols],
+            axis=-1)
+    return RequestBatch(**plain)
 
 
 class Decision(NamedTuple):
@@ -114,8 +154,13 @@ class Decision(NamedTuple):
 
 
 def requests_to_batch(jobs: Sequence[ARRequest],
-                      with_tenant: bool = False) -> RequestBatch:
-    """Pack host requests into the device struct-of-arrays layout."""
+                      with_tenant: bool = False,
+                      extra_demand: int = 0) -> RequestBatch:
+    """Pack host requests into the device struct-of-arrays layout.
+
+    ``extra_demand`` (= R - 1) adds the multi-resource tail column;
+    jobs without a demand vector contribute zero tail demand.
+    """
     return RequestBatch(
         t_a=jnp.asarray([j.t_a for j in jobs], jnp.int32),
         t_r=jnp.asarray([j.t_r for j in jobs], jnp.int32),
@@ -124,17 +169,24 @@ def requests_to_batch(jobs: Sequence[ARRequest],
         n_pe=jnp.asarray([j.n_pe for j in jobs], jnp.int32),
         tenant=jnp.asarray([j.tenant for j in jobs], jnp.int32)
         if with_tenant else None,
+        demand=jnp.asarray(
+            [[_req_field(j, f) for f in _demand_fields(extra_demand)]
+             for j in jobs], jnp.int32) if extra_demand else None,
     )
 
 
 def request_struct(req: ARRequest,
-                   with_tenant: bool = False) -> RequestBatch:
+                   with_tenant: bool = False,
+                   extra_demand: int = 0) -> RequestBatch:
     """A single request as a scalar struct (for :func:`admit`)."""
     return RequestBatch(
         t_a=jnp.int32(req.t_a), t_r=jnp.int32(req.t_r),
         t_du=jnp.int32(req.t_du), t_dl=jnp.int32(req.t_dl),
         n_pe=jnp.int32(req.n_pe),
-        tenant=jnp.int32(req.tenant) if with_tenant else None)
+        tenant=jnp.int32(req.tenant) if with_tenant else None,
+        demand=jnp.asarray(
+            [_req_field(req, f) for f in _demand_fields(extra_demand)],
+            jnp.int32) if extra_demand else None)
 
 
 def filler_request(n_pe: int, t_a: int) -> ARRequest:
@@ -162,7 +214,8 @@ def check_arrival_order(requests: Sequence[ARRequest],
         last = r.t_a
 
 
-def pad_streams(streams, n_pe: int, with_tenant: bool = False
+def pad_streams(streams, n_pe: int, with_tenant: bool = False,
+                extra_demand: int = 0
                 ) -> Tuple[RequestBatch, np.ndarray]:
     """Stack variable-length request streams into ``[C, N]`` + mask.
 
@@ -178,7 +231,8 @@ def pad_streams(streams, n_pe: int, with_tenant: bool = False
     C = len(streams)
     N = max((len(s) for s in streams), default=0)
     N = max(N, 1)
-    names = REQ_FIELDS + (("tenant",) if with_tenant else ())
+    names = (REQ_FIELDS + (("tenant",) if with_tenant else ())
+             + _demand_fields(extra_demand))
     fields = {f: np.zeros((C, N), np.int32) for f in names}
     valid = np.zeros((C, N), bool)
     for c, stream in enumerate(streams):
@@ -190,13 +244,13 @@ def pad_streams(streams, n_pe: int, with_tenant: bool = False
             else:
                 r = filler_request(n_pe, last)
             for f in names:
-                fields[f][c, i] = getattr(r, f)
-    return RequestBatch(**{k: jnp.asarray(v)
-                           for k, v in fields.items()}), valid
+                fields[f][c, i] = _req_field(r, f)
+    return _fields_to_batch(fields), valid
 
 
 def scatter_streams(requests: Sequence[ARRequest],
-                    lanes: Sequence[int], n_lanes: int, n_pe: int
+                    lanes: Sequence[int], n_lanes: int, n_pe: int,
+                    extra_demand: int = 0
                     ) -> Tuple[RequestBatch, np.ndarray, list]:
     """Group routed requests into per-lane padded streams.
 
@@ -213,7 +267,8 @@ def scatter_streams(requests: Sequence[ARRequest],
     for req, lane in zip(requests, lanes):
         slots.append((int(lane), len(streams[lane])))
         streams[lane].append(req)
-    batch, valid = pad_streams(streams, n_pe)
+    batch, valid = pad_streams(streams, n_pe,
+                               extra_demand=extra_demand)
     return batch, valid, slots
 
 
@@ -229,12 +284,14 @@ class RequestRing:
     reallocates, and a full ring rejects the push (callers drain first).
     """
 
-    def __init__(self, capacity: int, with_tenant: bool = False):
+    def __init__(self, capacity: int, with_tenant: bool = False,
+                 extra_demand: int = 0):
         if capacity < 1:
             raise ValueError("ring capacity must be >= 1")
         self.capacity = capacity
-        self._fields = REQ_FIELDS + (("tenant",) if with_tenant
-                                     else ())
+        self._fields = (REQ_FIELDS + (("tenant",) if with_tenant
+                                      else ())
+                        + _demand_fields(extra_demand))
         self._buf = {f: np.zeros(capacity, np.int32)
                      for f in self._fields}
         self._head = 0          # index of the oldest staged request
@@ -266,7 +323,7 @@ class RequestRing:
             if self.pushed >= self.capacity:
                 self.wrapped = True
             for f in self._fields:
-                self._buf[f][i] = getattr(r, f)
+                self._buf[f][i] = _req_field(r, f)
             self.count += 1
             self.pushed += 1
             self.last_t_a = r.t_a
@@ -292,7 +349,7 @@ class RequestRing:
             # release their predecessors early and change decisions
             pad = filler_request(n_pe, self.last_popped_t_a)
             for f in self._fields:
-                fields[f][n:] = getattr(pad, f)
+                fields[f][n:] = _req_field(pad, f)
         self._head = (self._head + n) % self.capacity
         self.count -= n
         self.popped += n
@@ -307,8 +364,7 @@ class RequestRing:
         ``False`` in the returned ``valid`` mask.
         """
         fields, valid = self._pop_chunk_host(chunk, n_pe)
-        return RequestBatch(**{k: jnp.asarray(v)
-                               for k, v in fields.items()}), valid
+        return _fields_to_batch(fields), valid
 
     def snapshot(self) -> dict:
         """Copy of the ring's mutable state (see :meth:`restore`)."""
@@ -352,8 +408,7 @@ def pop_chunk_ensemble(rings: Sequence[RequestRing], chunk: int,
         for f in names:
             fields[f][e] = lane_fields[f]
         valid[e] = lane_valid
-    return RequestBatch(**{k: jnp.asarray(v)
-                           for k, v in fields.items()}), valid
+    return _fields_to_batch(fields), valid
 
 
 def _where_tree(pred, if_true, if_false):
@@ -622,7 +677,9 @@ def _retry_parked(state: SchedulerState, t_now: jax.Array,
             res = search_lib.replacement_search(
                 tl1, s.park_tr[i], t_du, s.park_tdl[i],
                 s.park_npe[i], jnp.int32(0), t_now, n_pe=n_pe,
-                use_kernel=use_kernel)
+                use_kernel=use_kernel, rspec=s.rspec,
+                demand_tail=_park_demand(s, i),
+                valid_mask=s.lane_valid)
             better = act & ~ovf1 & res.found & (res.t_s < s.park_ts[i])
             new_ts = jnp.where(better, res.t_s, s.park_ts[i])
             new_te = new_ts + t_du
@@ -657,6 +714,11 @@ def _retry_parked(state: SchedulerState, t_now: jax.Array,
     return jax.lax.cond(pred, sweep, lambda s: s, state)
     # NB: the caller (_admit_impl) consumes the park_retry latch per
     # admit step whether or not the sweep fired.
+
+
+def _park_demand(s: SchedulerState, i: jax.Array):
+    """Demand tail of queue entry ``i`` (``None`` on R=1 states)."""
+    return None if s.park_dem is None else s.park_dem[i]
 
 
 def _select_next(s: SchedulerState, cand: jax.Array,
@@ -723,8 +785,12 @@ def _displace(state: SchedulerState, req: RequestBatch,
 
     res_r = search_lib.search(
         tl, req.t_r, req.t_du, req.t_dl, req.n_pe, policy_id,
-        req.t_a, n_pe=n_pe, use_kernel=use_kernel)
-    ok = res_r.found & ~ovf
+        req.t_a, n_pe=n_pe, use_kernel=use_kernel, rspec=s.rspec,
+        demand_tail=req.demand, valid_mask=s.lane_valid)
+    # a t_e at the horizon sentinel would commit as a no-op record
+    # (timeline.update clamps it away) — reject it instead, matching
+    # the admit step's guard
+    ok = res_r.found & ~ovf & (res_r.t_e < jnp.int32(T_INF))
     tl2, o2, nk2 = tl_lib.update(
         tl, jnp.where(ok, res_r.t_s, 0), jnp.where(ok, res_r.t_e, 1),
         jnp.where(ok, res_r.pe_mask, jnp.uint32(0)), is_add=True,
@@ -741,7 +807,9 @@ def _displace(state: SchedulerState, req: RequestBatch,
         t_du = s.park_te[i] - s.park_ts[i]
         res = search_lib.replacement_search(
             tl, s.park_tr[i], t_du, s.park_tdl[i], s.park_npe[i],
-            jnp.int32(0), req.t_a, n_pe=n_pe, use_kernel=use_kernel)
+            jnp.int32(0), req.t_a, n_pe=n_pe, use_kernel=use_kernel,
+            rspec=s.rspec, demand_tail=_park_demand(s, i),
+            valid_mask=s.lane_valid)
         okp = act & res.found
         tl2, o2, nk = tl_lib.update(
             tl, jnp.where(okp, res.t_s, 0),
@@ -837,6 +905,10 @@ def _admit_impl(state: SchedulerState, req: RequestBatch,
         orig_tr, orig_tdu = req.t_r, req.t_du
         occ_row = tl_lib.occupancy_at(
             state.tl, jnp.asarray(req.t_a, jnp.int32))
+        if state.rspec is not None:
+            # telemetry stays a PE-utilisation fraction: count only
+            # the primary plane's words of the multi-resource row
+            occ_row = occ_row[state.rspec.plane_slice(0)]
         occ_frac = (jax.lax.population_count(occ_row).sum()
                     .astype(jnp.float32) / jnp.float32(n_pe))
         within = ((tn0.used[tid] + demand <= tn0.quota[tid])
@@ -860,8 +932,13 @@ def _admit_impl(state: SchedulerState, req: RequestBatch,
     # let overflow growth size S to the workload.
     res = search_lib.search(
         state.tl, req.t_r, req.t_du, req.t_dl, req.n_pe, policy_id,
-        req.t_a, n_pe=n_pe, use_kernel=use_kernel)
-    found = res.found & ~state.overflow
+        req.t_a, n_pe=n_pe, use_kernel=use_kernel, rspec=state.rspec,
+        demand_tail=req.demand, valid_mask=state.lane_valid)
+    # reject a win whose end clamps to the horizon sentinel: committing
+    # it would be a silent no-op under timeline.update's T_INF guard,
+    # leaving an "accepted" decision with no occupancy behind it
+    found = (res.found & ~state.overflow
+             & (res.t_e < jnp.int32(T_INF)))
     t_s, t_e, pe_mask = res.t_s, res.t_e, res.pe_mask
     n_free, t_begin, t_end = res.n_free, res.t_begin, res.t_end
     need_add = jnp.asarray(True)
@@ -962,6 +1039,14 @@ def _admit_impl(state: SchedulerState, req: RequestBatch,
                     n_parked=o.n_parked + 1,
                     hw_parked=jnp.maximum(o.hw_parked, live),
                 )
+                if o.park_dem is not None:
+                    # the queue entry keeps its demand tail so later
+                    # re-placements (EASY sweep / displacement) search
+                    # with the full vector
+                    dem_row = (req.demand if req.demand is not None
+                               else jnp.zeros_like(o.park_dem[0]))
+                    o = o._replace(
+                        park_dem=o.park_dem.at[pslot].set(dem_row))
                 if tenancy:
                     tno = o.tenants
                     o = o._replace(tenants=tno._replace(
@@ -1253,9 +1338,11 @@ def admit_one(state: SchedulerState, req: ARRequest, policy, *,
     """Single fused admission with growth retry; host-typed result."""
     pid = jnp.int32(policy_index(policy))
     bfid = as_backfill_id(backfill)
+    xd = 0 if state.rspec is None else state.rspec.R - 1
     start = state
     for attempt in range(MAX_DOUBLINGS + 1):
-        out, dec = admit(start, request_struct(req), pid, bfid,
+        out, dec = admit(start, request_struct(req, extra_demand=xd),
+                         pid, bfid,
                          n_pe=n_pe, auto_release=auto_release,
                          use_kernel=use_kernel)
         if not bool(out.overflow):
@@ -1569,6 +1656,8 @@ def parked_entries(state: SchedulerState) -> List[dict]:
     tdl = np.asarray(state.park_tdl)
     npe = np.asarray(state.park_npe)
     masks = np.asarray(state.park_mask)
+    dem = (np.asarray(state.park_dem)
+           if state.park_dem is not None else None)
     tenant = (np.asarray(state.tenants.park_tenant)
               if state.tenants is not None else None)
     t_a = (np.asarray(state.tenants.park_ta)
@@ -1581,6 +1670,9 @@ def parked_entries(state: SchedulerState) -> List[dict]:
             seq=int(seq[i]), t_s=int(ts[i]), t_e=int(te[i]),
             t_r=int(tr[i]), t_dl=int(tdl[i]), n_pe=int(npe[i]),
             pe_ids=mask32_to_ids(masks[i]))
+        if dem is not None:
+            entry["demand"] = ((int(npe[i]),)
+                               + tuple(int(x) for x in dem[i]))
         if tenant is not None:
             entry["tenant"] = int(tenant[i])
             entry["t_a"] = int(t_a[i])

@@ -37,18 +37,36 @@ from repro.core.types import T_INF
 def init_ensemble(n_ensemble: int, capacity: int, n_pe: int,
                   pending_capacity: int = 256,
                   park_capacity: int = 0,
-                  tenants=None) -> SchedulerState:
+                  tenants=None, rspec=None,
+                  machine_units=None) -> SchedulerState:
     """E fresh all-free lanes as one stacked state pytree.
 
     ``tenants`` is an optional single-lane
     :class:`~repro.tenancy.TenantTable` broadcast to every lane (pass a
     pre-stacked table via :func:`stack_states` of per-lane
     ``init_state`` calls for heterogeneous lanes instead).
+
+    ``rspec`` installs a shared multi-resource layout (DESIGN.md §11);
+    ``machine_units`` — one live-unit tuple per lane — then shrinks
+    each lane's valid mask for heterogeneous machine sizes, all lanes
+    keeping the same padded word shape.
     """
     one = tl_lib.init_state(capacity, n_pe, pending_capacity,
-                            park_capacity, tenants=tenants)
-    return jax.tree_util.tree_map(
+                            park_capacity, tenants=tenants,
+                            rspec=rspec)
+    out = jax.tree_util.tree_map(
         lambda x: jnp.broadcast_to(x, (n_ensemble,) + x.shape), one)
+    if machine_units is not None:
+        if rspec is None:
+            raise ValueError("machine_units requires rspec")
+        if len(machine_units) != n_ensemble:
+            raise ValueError(
+                f"{len(machine_units)} machine_units entries for "
+                f"{n_ensemble} lanes")
+        out = out._replace(lane_valid=jnp.stack(
+            [jnp.asarray(rspec.valid_mask_np(mu))
+             for mu in machine_units]))
+    return out
 
 
 def stack_states(states: Sequence[SchedulerState]) -> SchedulerState:
@@ -206,12 +224,12 @@ def find_allocation_ensemble(states: SchedulerState, req: RequestBatch,
     def one(s):
         return search_lib.search(
             s.tl, req.t_r, req.t_du, req.t_dl, req.n_pe, pid, req.t_a,
-            n_pe=n_pe, use_kernel=use_kernel)
+            n_pe=n_pe, use_kernel=use_kernel, rspec=s.rspec,
+            demand_tail=req.demand, valid_mask=s.lane_valid)
 
     return jax.vmap(one)(states)
 
 
-@functools.partial(jax.jit, static_argnames=("n_pe", "use_kernel"))
 @functools.partial(jax.jit, static_argnames=("n_pe", "use_kernel"))
 def find_allocations_ensemble(states: SchedulerState,
                               reqs: RequestBatch, pid: jax.Array,
@@ -232,7 +250,8 @@ def find_allocations_ensemble(states: SchedulerState,
         def one_lane(s):
             return search_lib.search(
                 s.tl, r.t_r, r.t_du, r.t_dl, r.n_pe, pid, r.t_a,
-                n_pe=n_pe, use_kernel=use_kernel)
+                n_pe=n_pe, use_kernel=use_kernel, rspec=s.rspec,
+                demand_tail=r.demand, valid_mask=s.lane_valid)
 
         return jax.vmap(one_lane)(states)
 
@@ -277,7 +296,8 @@ def match_stream_ensemble(states: SchedulerState, reqs: RequestBatch,
         def probe(s):
             return search_lib.search(
                 s.tl, r.t_r, r.t_du, r.t_dl, r.n_pe, pid, r.t_a,
-                n_pe=n_pe, use_kernel=use_kernel)
+                n_pe=n_pe, use_kernel=use_kernel, rspec=s.rspec,
+                demand_tail=r.demand, valid_mask=s.lane_valid)
 
         res = jax.vmap(probe)(ss)
         tv = jnp.where(res.found & ~ss.overflow, res.t_s, T_INF)
@@ -289,7 +309,9 @@ def match_stream_ensemble(states: SchedulerState, reqs: RequestBatch,
             t_r=jnp.where(sel, r.t_r, r.t_a),
             t_du=jnp.where(sel, r.t_du, jnp.int32(1)),
             t_dl=jnp.where(sel, r.t_dl, r.t_a + 1),
-            n_pe=jnp.where(sel, r.n_pe, jnp.int32(n_pe + 1)))
+            n_pe=jnp.where(sel, r.n_pe, jnp.int32(n_pe + 1)),
+            demand=(None if r.demand is None else
+                    jnp.broadcast_to(r.demand, (E,) + r.demand.shape)))
 
         def one(s, q, p, b):
             return batch_lib._admit_impl(

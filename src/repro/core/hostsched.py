@@ -81,6 +81,30 @@ def lowest_bits(mask: np.ndarray, k: int) -> np.ndarray:
     return out
 
 
+def _policy_primary(policy: Policy, n_free: np.ndarray,
+                    t_begin: np.ndarray,
+                    t_end: np.ndarray) -> np.ndarray:
+    """Lexicographic primary key, identical to ``types.policy_score``
+    but vectorised (the ``t_s`` tiebreak stays with the caller)."""
+    dur = (t_end - t_begin).astype(np.float64)
+    nf = n_free.astype(np.float64)
+    if policy == Policy.FF:
+        return np.zeros_like(nf)
+    if policy == Policy.PE_B:
+        return nf
+    if policy == Policy.PE_W:
+        return -nf
+    if policy == Policy.DU_B:
+        return dur
+    if policy == Policy.DU_W:
+        return -dur
+    if policy == Policy.PEDU_B:
+        return nf * dur
+    if policy == Policy.PEDU_W:
+        return -nf * dur
+    raise ValueError(policy)  # pragma: no cover
+
+
 class HostScheduler:
     """Vectorised availability timeline + the three paper operations."""
 
@@ -191,9 +215,9 @@ class HostScheduler:
             cands.append(shifted[(shifted >= lo) & (shifted <= hi)])
         return np.unique(np.concatenate(cands))
 
-    def _rectangles(self, starts: np.ndarray, t_du: int,
-                    t_now: int) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-        """Vectorised rectangle computation for all candidate starts.
+    def _rect_core(self, starts: np.ndarray, t_du: int,
+                   t_now: int) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Free-word rectangles ``(free[P, W], t_begin, t_end)``.
 
         §Perf iteration A2 (EXPERIMENTS.md): windows over a *sorted*
         timeline cover contiguous slot ranges ``[lo_c, hi_c)``, so the
@@ -202,10 +226,16 @@ class HostScheduler:
         and the rectangle bounds expand outward with an early-
         terminating frontier (geometric expected step count), instead
         of testing every (slot, candidate) pair.
+
+        The popcount stays with the caller: :meth:`_rectangles` takes
+        one global count, the multi-resource subclass contracts
+        ``free`` against each plane's mask instead.
         """
         P = starts.shape[0]
         if self.n_slots == 0:
-            return (np.full(P, self.n_pe, np.int64),
+            free = np.broadcast_to(
+                self._pe_mask, (P, self.W)).copy()
+            return (free,
                     np.minimum(t_now, starts.astype(np.int64)),
                     np.full(P, T_INF, np.int64))
         a = starts.astype(np.int64)
@@ -227,7 +257,6 @@ class HostScheduler:
                 self.occ, np.minimum(idx, self.n_slots - 1), axis=0)
             busy[nonempty] = seg[0::2]
         free = ~busy & self._pe_mask                # [P, W]
-        n_free = popcount(free)
         nxt = self._next_times()
         # ---- rectangle bounds --------------------------------------
         # hybrid (§Perf A2b): a one-shot dense [S,P,W] pass wins while
@@ -244,7 +273,7 @@ class HostScheduler:
             right = blocking & (self.times[:, None] >= b[None, :])
             t_end = np.where(right, self.times[:, None],
                              np.int64(T_INF)).min(axis=0)
-            return n_free, t_begin, t_end
+            return free, t_begin, t_end
         t_begin = np.full(P, np.int64(t_now))
         t_end = np.full(P, np.int64(T_INF))
         # left: first blocking slot at lo-1, lo-2, ... (usually 1 step)
@@ -270,7 +299,13 @@ class HostScheduler:
             act = act[~blocked]
             pos[act] += 1
             act = act[pos[act] < self.n_slots]
-        return n_free, t_begin, t_end
+        return free, t_begin, t_end
+
+    def _rectangles(self, starts: np.ndarray, t_du: int,
+                    t_now: int) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Vectorised rectangles ``(n_free, t_begin, t_end)``."""
+        free, t_begin, t_end = self._rect_core(starts, t_du, t_now)
+        return popcount(free), t_begin, t_end
 
     def find_allocation(
         self,
@@ -284,27 +319,9 @@ class HostScheduler:
         feas = n_free >= req.n_pe
         if not feas.any():
             return None
-        # Lexicographic (primary, t_s) minimisation, identical to
-        # types.policy_score but vectorised.
-        dur = (t_end - t_begin).astype(np.float64)
-        nf = n_free.astype(np.float64)
-        if policy == Policy.FF:
-            primary = np.zeros_like(nf)
-        elif policy == Policy.PE_B:
-            primary = nf
-        elif policy == Policy.PE_W:
-            primary = -nf
-        elif policy == Policy.DU_B:
-            primary = dur
-        elif policy == Policy.DU_W:
-            primary = -dur
-        elif policy == Policy.PEDU_B:
-            primary = nf * dur
-        elif policy == Policy.PEDU_W:
-            primary = -nf * dur
-        else:  # pragma: no cover
-            raise ValueError(policy)
-        primary = np.where(feas, primary, np.inf)
+        primary = np.where(
+            feas, _policy_primary(policy, n_free, t_begin, t_end),
+            np.inf)
         tiebreak = np.where(feas, starts, T_INF)
         order = np.lexsort((tiebreak, primary))
         best = int(order[0])
@@ -326,6 +343,87 @@ class HostScheduler:
     def records(self) -> List[Tuple[int, frozenset]]:
         return [(int(t), frozenset(ids_from_mask(row)))
                 for t, row in zip(self.times, self.occ)]
+
+
+class MultiHostScheduler(HostScheduler):
+    """Host mirror of the multi-resource timeline (DESIGN.md §11).
+
+    The bit space is the device's *global* bit space — ``rspec
+    .total_words * 32`` bits with plane ``r`` on the contiguous range
+    starting at ``rspec.bit_offset(r)`` — so host unit ids equal the
+    ids :func:`repro.core.batch.mask32_to_ids` decodes from device
+    masks, and records compare verbatim in the differential suites.
+    ``live_units`` shrinks planes for heterogeneous machine lanes;
+    bits outside a plane's live range never join ``_pe_mask`` and so
+    are never counted or allocated.
+
+    Feasibility is the vector test: every plane's free count must
+    cover its demand.  Policy scoring stays on the primary-plane
+    (PE) count, exactly like the device path.
+    """
+
+    def __init__(self, rspec, live_units=None,
+                 candidate_chunk: int = 128):
+        super().__init__(rspec.total_bits,
+                         candidate_chunk=candidate_chunk)
+        self.rspec = rspec
+        valid = rspec.valid_bits_np(live_units)
+        self._pe_mask = mask_from_ids(
+            np.nonzero(valid)[0], rspec.total_bits)
+        self._plane_masks = []
+        for r in range(rspec.R):
+            o = rspec.bit_offset(r)
+            w = rspec.words_per[r] * 32
+            ids = o + np.nonzero(valid[o:o + w])[0]
+            self._plane_masks.append(
+                mask_from_ids(ids, rspec.total_bits))
+
+    def _demand_vec(self, req: ARRequest) -> Tuple[int, ...]:
+        tail = self.rspec.demand_tail(
+            getattr(req, "demand", None), req.n_pe)
+        return (int(req.n_pe),) + tail
+
+    def find_allocation(
+        self,
+        req: ARRequest,
+        policy: Policy,
+        t_now: Optional[int] = None,
+    ) -> Optional[Allocation]:
+        t_now = req.t_a if t_now is None else t_now
+        demand = self._demand_vec(req)
+        starts = self.candidate_starts(req)
+        free, t_begin, t_end = self._rect_core(
+            starts, req.t_du, t_now)
+        plane_free = np.stack(
+            [popcount(free & pm) for pm in self._plane_masks],
+            axis=1)                                     # [P, R]
+        n_free = plane_free[:, 0]
+        feas = np.all(
+            plane_free >= np.asarray(demand, np.int64)[None, :],
+            axis=1)
+        if not feas.any():
+            return None
+        primary = np.where(
+            feas, _policy_primary(policy, n_free, t_begin, t_end),
+            np.inf)
+        tiebreak = np.where(feas, starts, T_INF)
+        order = np.lexsort((tiebreak, primary))
+        best = int(order[0])
+        rect = Rectangle(
+            t_s=int(starts[best]), t_begin=int(t_begin[best]),
+            t_end=int(t_end[best]), n_free=int(n_free[best]))
+        busy = self.window_busy(rect.t_s, rect.t_s + req.t_du)
+        free_w = ~busy & self._pe_mask
+        # lowest free units per plane, like the device winning mask
+        chosen = np.zeros_like(free_w)
+        for r, pm in enumerate(self._plane_masks):
+            chosen |= lowest_bits(free_w & pm, demand[r])
+        return Allocation(
+            t_s=rect.t_s,
+            t_e=rect.t_s + req.t_du,
+            pe_ids=ids_from_mask(chosen),
+            rectangle=rect,
+        )
 
 
 class BackfillOracle:
@@ -409,7 +507,7 @@ class BackfillOracle:
         req = ARRequest(
             t_a=t_now, t_r=max(entry["t_r"], t_now),
             t_du=entry["t_e"] - entry["t_s"], t_dl=entry["t_dl"],
-            n_pe=entry["n_pe"])
+            n_pe=entry["n_pe"], demand=entry.get("demand"))
         return self.sched.find_allocation(req, policy, t_now=t_now)
 
     def _retry_parked(self, t_now: int) -> None:
@@ -447,7 +545,8 @@ class BackfillOracle:
             self.parked.append(dict(
                 seq=self._next_seq, t_s=t_s, t_e=t_e, t_r=req.t_r,
                 t_dl=req.t_dl, n_pe=req.n_pe, pe_ids=tuple(pe_ids),
-                tenant=self._tenant_of(req), t_a=req.t_a))
+                tenant=self._tenant_of(req), t_a=req.t_a,
+                demand=req.demand))
             self._next_seq += 1
             self.n_parked += 1
         else:
@@ -556,13 +655,36 @@ class BackfillOracle:
     def pending(self) -> List[dict]:
         """FCFS deferral-queue view, same layout as the device
         :func:`repro.core.batch.parked_entries`."""
-        return [dict(seq=p["seq"], t_s=p["t_s"], t_e=p["t_e"],
+        out = []
+        for p in sorted(self.parked, key=lambda q: q["seq"]):
+            d = dict(seq=p["seq"], t_s=p["t_s"], t_e=p["t_e"],
                      t_r=p["t_r"], t_dl=p["t_dl"], n_pe=p["n_pe"],
                      pe_ids=tuple(p["pe_ids"]))
-                for p in sorted(self.parked, key=lambda q: q["seq"])]
+            if p.get("demand") is not None:
+                d["demand"] = tuple(p["demand"])
+            out.append(d)
+        return out
 
     def records(self):
         return self.sched.records()
+
+
+class MultiResourceOracle(BackfillOracle):
+    """Differential mirror of the multi-resource device admit path.
+
+    :class:`BackfillOracle` with its timeline swapped for a
+    :class:`MultiHostScheduler` — every shared sweep (promote /
+    release / retry / displace / commit-or-park) already threads the
+    request's ``demand`` vector through the parked entries, so the
+    vector feasibility test is the only behavioural difference.
+    ``live_units`` mirrors a heterogeneous machine lane.
+    """
+
+    def __init__(self, rspec, policy: Policy, mode,
+                 park_capacity: int = 8, live_units=None):
+        super().__init__(rspec.n_pe, policy, mode, park_capacity)
+        self.rspec = rspec
+        self.sched = MultiHostScheduler(rspec, live_units=live_units)
 
 
 class TenantOracle(BackfillOracle):

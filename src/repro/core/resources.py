@@ -1,0 +1,155 @@
+"""Static multi-resource layout descriptor (DESIGN.md §11).
+
+The availability timeline generalises from one packed PE bitmask per
+record to a *resource occupancy matrix*: one packed bitplane per
+resource, concatenated along the existing uint32 word axis.  Plane
+``r`` covers ``units[r]`` schedulable units and occupies the word
+range ``[word_offsets[r], word_offsets[r] + words_per[r])``; resource
+0 is always the paper's PE plane.  With ``R == 1`` the layout is
+byte-identical to the scalar timeline, which is what makes the R=1
+bit-identity argument a layout statement rather than a code-path one.
+
+:class:`ResourceSpec` is *static* configuration: it is registered as a
+zero-leaf pytree node (the spec itself is the aux data), so it can ride
+inside :class:`~repro.core.timeline.SchedulerState` without adding
+array leaves — legacy ``rspec=None`` states keep their exact treedef,
+and rspec-carrying states stay hashable/static under ``jit``, ``vmap``
+and donation for free.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+_WORD = 32
+
+
+def _n_words(units: int) -> int:
+    return (units + _WORD - 1) // _WORD
+
+
+@dataclasses.dataclass(frozen=True)
+class ResourceSpec:
+    """Per-resource unit counts; ``units[0]`` is the primary PE plane.
+
+    Frozen and hashable: two specs with equal ``units`` are
+    interchangeable as static jit arguments.
+    """
+
+    units: Tuple[int, ...]
+
+    def __post_init__(self) -> None:
+        units = tuple(int(u) for u in self.units)
+        if not units:
+            raise ValueError("ResourceSpec needs at least one resource")
+        if any(u <= 0 for u in units):
+            raise ValueError(f"resource units must be positive: {units}")
+        object.__setattr__(self, "units", units)
+
+    @property
+    def R(self) -> int:
+        return len(self.units)
+
+    @property
+    def n_pe(self) -> int:
+        return self.units[0]
+
+    @property
+    def words_per(self) -> Tuple[int, ...]:
+        return tuple(_n_words(u) for u in self.units)
+
+    @property
+    def word_offsets(self) -> Tuple[int, ...]:
+        offs, acc = [], 0
+        for w in self.words_per:
+            offs.append(acc)
+            acc += w
+        return tuple(offs)
+
+    @property
+    def total_words(self) -> int:
+        return sum(self.words_per)
+
+    @property
+    def total_bits(self) -> int:
+        return self.total_words * _WORD
+
+    def plane_slice(self, r: int) -> slice:
+        """Word-axis slice of plane ``r``."""
+        off = self.word_offsets[r]
+        return slice(off, off + self.words_per[r])
+
+    def bit_offset(self, r: int) -> int:
+        """Global bit id of unit 0 of plane ``r``."""
+        return self.word_offsets[r] * _WORD
+
+    def valid_bits_np(self,
+                      live_units: Optional[Sequence[int]] = None
+                      ) -> np.ndarray:
+        """0/1 uint32[total_bits]: the schedulable units of each plane.
+
+        ``live_units`` optionally shrinks planes for heterogeneous
+        machine lanes (``live_units[r] <= units[r]``); padding between
+        ``live_units[r]`` and the plane's word boundary stays 0, so
+        popcount contractions over masked free words never see it.
+        """
+        live = self.units if live_units is None else tuple(live_units)
+        if len(live) != self.R:
+            raise ValueError(
+                f"live_units has {len(live)} entries, spec has {self.R}")
+        bits = np.zeros(self.total_bits, dtype=np.uint32)
+        for r, (u, lu) in enumerate(zip(self.units, live)):
+            lu = int(lu)
+            if not 0 < lu <= u:
+                raise ValueError(
+                    f"live_units[{r}]={lu} outside (0, {u}]")
+            o = self.bit_offset(r)
+            bits[o:o + lu] = 1
+        return bits
+
+    def valid_mask_np(self,
+                      live_units: Optional[Sequence[int]] = None
+                      ) -> np.ndarray:
+        """Packed uint32[total_words] valid-unit mask (see above)."""
+        bits = self.valid_bits_np(live_units)
+        b = bits.reshape(self.total_words, _WORD)
+        shifts = np.arange(_WORD, dtype=np.uint32)
+        return ((b << shifts).sum(axis=1)).astype(np.uint32)
+
+    def demand_tail(self, demand: Optional[Sequence[int]],
+                    n_pe: int) -> Tuple[int, ...]:
+        """Validate a request's demand vector, return planes 1..R-1.
+
+        ``demand`` is the full per-resource vector; ``None`` means
+        "PEs only" (zero demand on every secondary plane).  Plane 0
+        must agree with the request's ``n_pe`` so the primary-plane
+        feasibility test can keep riding on ``n_pe`` unchanged.
+        """
+        if demand is None:
+            return (0,) * (self.R - 1)
+        d = tuple(int(x) for x in demand)
+        if len(d) != self.R:
+            raise ValueError(
+                f"demand has {len(d)} entries, spec has {self.R}")
+        if d[0] != int(n_pe):
+            raise ValueError(
+                f"demand[0]={d[0]} must equal n_pe={int(n_pe)}")
+        for r, x in enumerate(d):
+            if not 0 <= x <= self.units[r]:
+                raise ValueError(
+                    f"demand[{r}]={x} outside [0, {self.units[r]}]")
+        return d[1:]
+
+
+# Zero-leaf pytree registration: the spec is its own aux data.  It
+# contributes nothing to flattened leaves (so tree_map / broadcast /
+# donation ignore it) and everything to the treedef (so jit treats it
+# as static and retraces when — and only when — the spec changes).
+jax.tree_util.register_pytree_node(
+    ResourceSpec,
+    lambda r: ((), r),
+    lambda aux, _: aux,
+)

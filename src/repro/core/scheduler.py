@@ -43,7 +43,7 @@ class DeviceEngine:
     def __init__(self, n_pe: int, capacity: int = 256,
                  use_kernel: bool = False, bucketing: bool = True,
                  pending_capacity: int = 256, park_capacity: int = 0,
-                 tenants=None):
+                 tenants=None, rspec=None, live_units=None):
         self.n_pe = n_pe
         self.use_kernel = use_kernel
         # §Perf iteration A3: the dense search costs O(P*S*n_pe) at the
@@ -60,7 +60,9 @@ class DeviceEngine:
             from repro.tenancy import init_table
             table = init_table(tenants, pending_capacity, park_capacity)
         self.state = tl_lib.init_state(capacity, n_pe, pending_capacity,
-                                       park_capacity, tenants=table)
+                                       park_capacity, tenants=table,
+                                       rspec=rspec,
+                                       live_units=live_units)
 
     # -- helpers -------------------------------------------------------
     @property
@@ -72,7 +74,11 @@ class DeviceEngine:
         self._n_valid = None
 
     def _mask32(self, pes: Sequence[int]) -> jnp.ndarray:
-        return tl_lib.ids_to_mask32(pes, self.tl.words)
+        # on multi-resource states ids are *global* bit ids spanning
+        # every plane, so the word-width bound applies; single-resource
+        # states validate against the machine size
+        limit = None if self.state.rspec is not None else self.n_pe
+        return tl_lib.ids_to_mask32(pes, self.tl.words, n_pe=limit)
 
     def _update(self, t_s: int, t_e: int, pes, is_add: bool) -> None:
         mask = pes if not isinstance(pes, (list, tuple, set, range)) \
@@ -114,11 +120,21 @@ class DeviceEngine:
     def find_allocation(self, req: ARRequest, policy: Policy,
                         t_now: Optional[int] = None) -> Optional[Allocation]:
         t_now = req.t_a if t_now is None else t_now
+        kw = {}
+        spec = self.state.rspec
+        if spec is not None:
+            kw = dict(
+                rspec=spec,
+                demand_tail=jnp.asarray(
+                    spec.demand_tail(req.demand, req.n_pe),
+                    jnp.int32),
+                valid_mask=self.state.lane_valid)
         res = search_lib.find_allocation(
             self._search_view(),
             jnp.int32(req.t_r), jnp.int32(req.t_du), jnp.int32(req.t_dl),
             jnp.int32(req.n_pe), jnp.int32(policy_index(policy)),
-            jnp.int32(t_now), n_pe=self.n_pe, use_kernel=self.use_kernel)
+            jnp.int32(t_now), n_pe=self.n_pe, use_kernel=self.use_kernel,
+            **kw)
         return batch_lib.search_result_to_allocation(res)
 
     # -- the fused batched path (DESIGN.md §3) -------------------------
@@ -149,7 +165,10 @@ class DeviceEngine:
         Overflow mid-scan grows the state and re-runs deterministically.
         """
         if not isinstance(requests, batch_lib.RequestBatch):
-            requests = batch_lib.requests_to_batch(list(requests))
+            xd = (0 if self.state.rspec is None
+                  else self.state.rspec.R - 1)
+            requests = batch_lib.requests_to_batch(
+                list(requests), extra_demand=xd)
         self.state, dec = batch_lib.admit_stream_grow(
             self.state, requests, policy, n_pe=self.n_pe,
             auto_release=auto_release, use_kernel=self.use_kernel)

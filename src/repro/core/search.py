@@ -16,7 +16,7 @@ pure-jnp path (and the oracle the kernel is tested against).
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -39,13 +39,20 @@ class SearchResult(NamedTuple):
 
 
 class Rectangles(NamedTuple):
-    """Per-candidate maximum availability rectangles."""
+    """Per-candidate maximum availability rectangles.
+
+    ``n_free`` counts plane-0 (PE) units; under a multi-resource
+    layout ``n_free_tail`` carries the free-unit counts of planes
+    1..R-1 (``None`` on the scalar path — the field defaults keep the
+    legacy pytree structure unchanged).
+    """
 
     starts: jax.Array    # int32[P]
     n_free: jax.Array    # int32[P]
     t_begin: jax.Array   # int32[P]
     t_end: jax.Array     # int32[P]
     valid: jax.Array     # bool[P]
+    n_free_tail: Optional[jax.Array] = None  # int32[P, R-1]
 
 
 def candidate_starts(tl: Timeline, t_r: jax.Array, t_du: jax.Array,
@@ -88,7 +95,7 @@ def candidate_starts(tl: Timeline, t_r: jax.Array, t_du: jax.Array,
 
 def availability_rectangles(
     tl: Timeline, starts: jax.Array, t_du: jax.Array, t_now: jax.Array,
-    n_pe: int,
+    n_pe: int, *, rspec=None, valid_mask: Optional[jax.Array] = None,
 ) -> Rectangles:
     """Maximum availability rectangle per candidate (Algorithm 3 l.6-9).
 
@@ -105,23 +112,48 @@ def availability_rectangles(
     element-for-element; sentinels can never win selection (invalid
     candidates are never feasible) and the all-infeasible fallback
     index 0 is always a live candidate.
+
+    Multi-resource layouts (DESIGN.md §11) pass ``rspec``: the free
+    union is masked with the lane's ``valid_mask`` (defaulting to the
+    spec's full padded layout) and popcounted *per bitplane*, yielding
+    the plane-0 ``n_free`` the policies score plus ``n_free_tail`` for
+    the vector fit test.  With ``R == 1`` and a full valid mask the
+    counts — and the blocking booleans, since occupancy bits only ever
+    appear on valid units — are identical to the scalar path.
     """
     nxt = tl_lib.next_times(tl)
     valid = starts < T_INF
     a = jnp.minimum(starts, T_INF - t_du)       # avoid int32 overflow
     b = a + t_du
-    # window overlap and busy-PE union (bitwise OR over packed words)
+    # window overlap and busy-unit union (bitwise OR over packed words)
     ov = ((tl.times[None, :] < b[:, None]) &
           (nxt[None, :] > a[:, None]))                          # [P, S]
     busy_w = jax.lax.reduce(
         jnp.where(ov[:, :, None], tl.occ[None, :, :], jnp.uint32(0)),
         np.uint32(0), jax.lax.bitwise_or, (1,))                 # [P, W]
-    # occupancy words never set bits past n_pe (timeline invariant),
-    # so the popcount of the busy union counts real PEs only
-    n_free = (n_pe - jnp.sum(
-        jax.lax.population_count(busy_w), axis=1).astype(jnp.int32))
-    free_w = ~busy_w                                            # [P, W]
-    # blocking slots: a slot blocks iff it occupies any free PE
+    n_free_tail = None
+    if rspec is None:
+        # occupancy words never set bits past n_pe (timeline
+        # invariant), so the popcount of the busy union counts real
+        # PEs only
+        n_free = (n_pe - jnp.sum(
+            jax.lax.population_count(busy_w), axis=1).astype(jnp.int32))
+        free_w = ~busy_w                                        # [P, W]
+    else:
+        if valid_mask is None:
+            valid_mask = jnp.asarray(rspec.valid_mask_np())
+        free_w = ~busy_w & valid_mask[None, :]                  # [P, W]
+        counts = jax.lax.population_count(free_w)
+        plane_free = [
+            jnp.sum(counts[:, rspec.plane_slice(r)],
+                    axis=1).astype(jnp.int32)
+            for r in range(rspec.R)]
+        n_free = plane_free[0]
+        if rspec.R > 1:
+            n_free_tail = jnp.stack(plane_free[1:], axis=1)
+        else:
+            n_free_tail = jnp.zeros((starts.shape[0], 0), jnp.int32)
+    # blocking slots: a slot blocks iff it occupies any free unit
     # (bitwise AND against the free-word union; junk free bits past
     # n_pe never match because occupancy words are clean there)
     blocking = jnp.any(
@@ -132,11 +164,14 @@ def availability_rectangles(
     right = blocking & (tl.times[None, :] >= b[:, None])
     t_end = jnp.min(jnp.where(right, tl.times[None, :], T_INF), axis=1)
     zero = jnp.int32(0)
-    return Rectangles(starts=starts,
-                      n_free=jnp.where(valid, n_free, zero),
-                      t_begin=jnp.where(valid, t_begin, zero),
-                      t_end=jnp.where(valid, t_end, zero),
-                      valid=valid)
+    return Rectangles(
+        starts=starts,
+        n_free=jnp.where(valid, n_free, zero),
+        t_begin=jnp.where(valid, t_begin, zero),
+        t_end=jnp.where(valid, t_end, zero),
+        valid=valid,
+        n_free_tail=(None if n_free_tail is None
+                     else jnp.where(valid[:, None], n_free_tail, zero)))
 
 
 def _winning_pe_mask(tl: Timeline, t_s: jax.Array, t_du: jax.Array,
@@ -154,6 +189,32 @@ def _winning_pe_mask(tl: Timeline, t_s: jax.Array, t_du: jax.Array,
     return tl_lib.pack_bits(sel_padded[None, :])[0]
 
 
+def _winning_mask_mr(tl: Timeline, t_s: jax.Array, t_du: jax.Array,
+                     n_req: jax.Array, demand_tail: jax.Array,
+                     rspec, valid_mask: jax.Array) -> jax.Array:
+    """Lowest-index free *valid* units per plane over the window.
+
+    The plane-0 pick matches :func:`_winning_pe_mask` bit-for-bit on
+    a full-width lane (invalid bits are never free, so the cumsum
+    walks the same unit order); secondary planes allocate their
+    ``demand_tail[r-1]`` units the same way in their own bit range.
+    """
+    a = jnp.minimum(t_s, T_INF - t_du)
+    busy = tl_lib.window_busy(tl, a, a + t_du)      # uint32[W]
+    free_w = ~busy & valid_mask
+    out = []
+    for r in range(rspec.R):
+        wr = rspec.words_per[r]
+        fb = tl_lib.unpack_bits(
+            free_w[None, rspec.plane_slice(r)],
+            wr * 32)[0].astype(jnp.int32)           # [wr*32]
+        need = n_req if r == 0 else demand_tail[r - 1]
+        sel = (fb == 1) & (jnp.cumsum(fb) <= need)
+        out.append(tl_lib.pack_bits(
+            sel.astype(jnp.uint32)[None, :])[0])
+    return jnp.concatenate(out)
+
+
 def search(
     tl: Timeline,
     t_r: jax.Array,
@@ -165,6 +226,9 @@ def search(
     *,
     n_pe: int,
     use_kernel: bool = False,
+    rspec=None,
+    demand_tail: Optional[jax.Array] = None,
+    valid_mask: Optional[jax.Array] = None,
 ) -> SearchResult:
     """Full Algorithm 3: candidates -> rectangles -> policy -> PE pick.
 
@@ -174,18 +238,38 @@ def search(
     program, and :mod:`repro.core.ensemble` vmaps it over stacked
     timelines (all inputs tolerate a leading ensemble axis — the
     kernel path included).
+
+    ``rspec`` switches to the multi-resource vector fit (DESIGN.md
+    §11): a candidate is feasible iff plane 0 fits ``n_req`` *and*
+    every secondary plane fits its ``demand_tail`` entry, policies
+    keep scoring the plane-0 ``n_free``, and the winning mask spans
+    all planes.  ``valid_mask`` (default: the spec's full layout)
+    carries per-lane machine sizes.
     """
     starts = candidate_starts(tl, t_r, t_du, t_dl)
+    if rspec is not None:
+        if valid_mask is None:
+            valid_mask = jnp.asarray(rspec.valid_mask_np())
+        if demand_tail is None:
+            demand_tail = jnp.zeros((rspec.R - 1,), jnp.int32)
+        demand_tail = jnp.asarray(demand_tail, jnp.int32)
     if use_kernel:
         from repro.kernels import ops as kernel_ops
         # fused path: rectangles + policy selection in one kernel —
         # the per-candidate vectors never round-trip through HBM
         sel = kernel_ops.search_select(
-            tl, starts, t_du, t_now, n_req, policy_id, n_pe=n_pe)
+            tl, starts, t_du, t_now, n_req, policy_id, n_pe=n_pe,
+            rspec=rspec, demand_tail=demand_tail,
+            valid_mask=valid_mask)
         if sel is not None:
             found = sel["found"]
             t_s = starts[sel["best"]]
-            pe_mask = _winning_pe_mask(tl, t_s, t_du, n_req, n_pe)
+            if rspec is None:
+                pe_mask = _winning_pe_mask(tl, t_s, t_du, n_req, n_pe)
+            else:
+                pe_mask = _winning_mask_mr(
+                    tl, t_s, t_du, n_req, demand_tail, rspec,
+                    valid_mask)
             return SearchResult(
                 found=found,
                 t_s=t_s,
@@ -198,13 +282,21 @@ def search(
     # jnp reference path — also the fallback when search_select
     # returned None (shape beyond the kernel VMEM budget; the unfused
     # kernel entry exists for the element-wise oracle tests)
-    rects = availability_rectangles(tl, starts, t_du, t_now, n_pe)
+    rects = availability_rectangles(tl, starts, t_du, t_now, n_pe,
+                                    rspec=rspec, valid_mask=valid_mask)
     feasible = rects.valid & (rects.n_free >= n_req)
+    if rspec is not None and rspec.R > 1:
+        feasible = feasible & jnp.all(
+            rects.n_free_tail >= demand_tail[None, :], axis=1)
     duration = rects.t_end - rects.t_begin
     best, found = policies_lib.select(
         policy_id, rects.n_free, duration, rects.starts, feasible)
     t_s = rects.starts[best]
-    pe_mask = _winning_pe_mask(tl, t_s, t_du, n_req, n_pe)
+    if rspec is None:
+        pe_mask = _winning_pe_mask(tl, t_s, t_du, n_req, n_pe)
+    else:
+        pe_mask = _winning_mask_mr(
+            tl, t_s, t_du, n_req, demand_tail, rspec, valid_mask)
     return SearchResult(
         found=found,
         t_s=t_s,
@@ -217,7 +309,7 @@ def search(
 
 
 find_allocation = functools.partial(
-    jax.jit, static_argnames=("n_pe", "use_kernel"))(search)
+    jax.jit, static_argnames=("n_pe", "use_kernel", "rspec"))(search)
 
 
 def replacement_search(
@@ -231,6 +323,9 @@ def replacement_search(
     *,
     n_pe: int,
     use_kernel: bool = False,
+    rspec=None,
+    demand_tail: Optional[jax.Array] = None,
+    valid_mask: Optional[jax.Array] = None,
 ) -> SearchResult:
     """The backfill feasibility check: re-place a parked reservation.
 
@@ -243,4 +338,6 @@ def replacement_search(
     and the EASY displacement transaction (:mod:`repro.core.batch`).
     """
     return search(tl, jnp.maximum(t_r, t_now), t_du, t_dl, n_req,
-                  policy_id, t_now, n_pe=n_pe, use_kernel=use_kernel)
+                  policy_id, t_now, n_pe=n_pe, use_kernel=use_kernel,
+                  rspec=rspec, demand_tail=demand_tail,
+                  valid_mask=valid_mask)

@@ -8,17 +8,29 @@ and use ``jax.lax`` control flow only — no host round-trips.
 Layout
 ------
 ``times : int32[S]``      sorted boundaries; ``T_INF`` marks padding
-``occ   : uint32[S, W]``  busy-PE bitmask during ``[times[i], times[i+1])``
+``occ   : uint32[S, W]``  busy-unit bitmask during ``[times[i], times[i+1])``
+
+``W`` packs one bitplane per resource, concatenated on the word axis
+(DESIGN.md §11): plane ``r`` of a
+:class:`~repro.core.resources.ResourceSpec` owns the word range
+``rspec.plane_slice(r)`` and bit ``u`` of that plane is unit ``u`` of
+resource ``r``.  The default scalar configuration (``rspec=None``) is
+the single PE plane ``W == n_words(n_pe)`` — the paper's layout — and
+every operation below is word-count agnostic, so both configurations
+run the same code.
 
 Invariants (asserted in tests, preserved by ``update``):
   * valid entries are strictly sorted and precede all padding;
   * consecutive valid rows differ (merged records, paper's "clean");
   * the first valid row is non-empty; occupancy after the last valid
-    boundary is empty (all free), as is before the first.
+    boundary is empty (all free), as is before the first;
+  * bits past each plane's unit count (and outside a lane's valid
+    mask) are never set.
 """
 from __future__ import annotations
 
 import functools
+import operator
 from typing import Any, NamedTuple, Optional, Tuple, Union
 
 import jax
@@ -57,10 +69,14 @@ class Timeline(NamedTuple):
         return jnp.sum(self.times < T_INF).astype(jnp.int32)
 
 
-def empty(capacity: int, n_pe: int) -> Timeline:
+def empty(capacity: int, n_pe: int,
+          words: Optional[int] = None) -> Timeline:
+    """All-free timeline; ``words`` overrides the single-plane width
+    (multi-resource layouts pass ``rspec.total_words``)."""
+    W = n_words(n_pe) if words is None else int(words)
     return Timeline(
         times=jnp.full((capacity,), T_INF, dtype=jnp.int32),
-        occ=jnp.zeros((capacity, n_words(n_pe)), dtype=jnp.uint32),
+        occ=jnp.zeros((capacity, W), dtype=jnp.uint32),
     )
 
 
@@ -122,6 +138,18 @@ class SchedulerState(NamedTuple):
     #: leaves, so zero-tenant sessions trace, donate, and shard the
     #: byte-identical graphs they had before tenancy existed.
     tenants: Optional[Any] = None
+    #: Multi-resource extension (DESIGN.md §11), all ``None`` by
+    #: default so scalar states keep their exact treedef and graphs:
+    #: ``park_dem`` holds the secondary-plane demand vectors of parked
+    #: requests (plane 0 stays in ``park_npe``); ``lane_valid`` is the
+    #: packed valid-unit mask of this lane (heterogeneous machine
+    #: sizes shrink it below the spec's padded word layout); ``rspec``
+    #: is the static :class:`~repro.core.resources.ResourceSpec` —
+    #: a zero-leaf pytree node, so it lives in the treedef, not in
+    #: the buffers.
+    park_dem: Optional[jax.Array] = None   # int32[Q, R-1]
+    lane_valid: Optional[jax.Array] = None  # uint32[W]
+    rspec: Optional[Any] = None
 
     @property
     def pending_capacity(self) -> int:
@@ -135,7 +163,9 @@ class SchedulerState(NamedTuple):
 def init_state(capacity: int, n_pe: int,
                pending_capacity: int = 256,
                park_capacity: int = 0,
-               tenants: Optional[Any] = None) -> SchedulerState:
+               tenants: Optional[Any] = None,
+               rspec: Optional[Any] = None,
+               live_units=None) -> SchedulerState:
     """Fresh all-free scheduler state.
 
     ``park_capacity`` sizes the backfilling deferral queue; the default
@@ -143,12 +173,32 @@ def init_state(capacity: int, n_pe: int,
     graphs to the pre-backfill core).  ``tenants`` optionally attaches
     a ``repro.tenancy.TenantTable`` (its buffer columns must match
     ``pending_capacity`` / ``park_capacity``).
+
+    ``rspec`` (a :class:`~repro.core.resources.ResourceSpec` with
+    ``units[0] == n_pe``) switches the state to the multi-resource
+    layout: the occupancy and every reservation mask widen to
+    ``rspec.total_words`` words, secondary-plane demands of parked
+    requests persist in ``park_dem``, and ``live_units`` optionally
+    shrinks this lane's schedulable units per plane (heterogeneous
+    machine sizes; ``live_units[0] <= n_pe``).
     """
+    if rspec is not None and rspec.n_pe != n_pe:
+        raise ValueError(
+            f"rspec.units[0]={rspec.n_pe} must equal n_pe={n_pe}")
+    if live_units is not None and rspec is None:
+        raise ValueError("live_units requires rspec")
+    words = n_words(n_pe) if rspec is None else rspec.total_words
+    park_dem = None
+    if rspec is not None and rspec.R > 1 and park_capacity > 0:
+        park_dem = jnp.zeros((park_capacity, rspec.R - 1), jnp.int32)
+    lane_valid = None
+    if rspec is not None:
+        lane_valid = jnp.asarray(rspec.valid_mask_np(live_units))
     return SchedulerState(
-        tl=empty(capacity, n_pe),
+        tl=empty(capacity, n_pe, words=words),
         pend_ts=jnp.full((pending_capacity,), T_INF, jnp.int32),
         pend_te=jnp.full((pending_capacity,), T_INF, jnp.int32),
-        pend_mask=jnp.zeros((pending_capacity, n_words(n_pe)),
+        pend_mask=jnp.zeros((pending_capacity, words),
                             jnp.uint32),
         n_accepted=jnp.int32(0),
         n_released=jnp.int32(0),
@@ -157,7 +207,7 @@ def init_state(capacity: int, n_pe: int,
         hw_pending=jnp.int32(0),
         park_ts=jnp.full((park_capacity,), T_INF, jnp.int32),
         park_te=jnp.full((park_capacity,), T_INF, jnp.int32),
-        park_mask=jnp.zeros((park_capacity, n_words(n_pe)),
+        park_mask=jnp.zeros((park_capacity, words),
                             jnp.uint32),
         park_tr=jnp.zeros((park_capacity,), jnp.int32),
         park_tdl=jnp.zeros((park_capacity,), jnp.int32),
@@ -170,6 +220,9 @@ def init_state(capacity: int, n_pe: int,
         n_moved=jnp.int32(0),
         hw_parked=jnp.int32(0),
         tenants=tenants,
+        park_dem=park_dem,
+        lane_valid=lane_valid,
+        rspec=rspec,
     )
 
 
@@ -213,11 +266,39 @@ def pe_valid_mask(n_pe: int) -> np.ndarray:
     return pack_bits(bits[None, :])[0]
 
 
-def ids_to_mask32(pe_ids, words: int) -> jax.Array:
-    """Sorted-or-not PE id sequence -> uint32[words] bitmask."""
+def ids_to_mask32(pe_ids, words: int,
+                  n_pe: Optional[int] = None) -> jax.Array:
+    """Sorted-or-not PE id sequence -> uint32[words] bitmask.
+
+    Host-side only: ids must be concrete non-negative integers below
+    ``n_pe`` (below ``words * 32`` when ``n_pe`` is ``None``), with no
+    duplicates.  Traced values are rejected with a ``TypeError`` — a
+    tracer cannot be scattered into a host numpy buffer, and silently
+    mis-building a mask would corrupt the timeline invariants.
+    """
+    if isinstance(pe_ids, jax.core.Tracer):
+        raise TypeError(
+            "ids_to_mask32 is host-side: got a traced id sequence; "
+            "build masks inside jit with pack_bits instead")
+    limit = words * _WORD if n_pe is None else int(n_pe)
     bits = np.zeros(words * _WORD, dtype=np.uint32)
     for i in pe_ids:
-        bits[i] = 1
+        if isinstance(i, jax.core.Tracer):
+            raise TypeError(
+                f"ids_to_mask32 is host-side: got traced id {i!r}")
+        try:
+            idx = int(operator.index(
+                i.item() if isinstance(i, (jax.Array, np.ndarray))
+                else i))
+        except TypeError as e:
+            raise TypeError(
+                f"PE id {i!r} is not an integer") from e
+        if not 0 <= idx < limit:
+            raise ValueError(
+                f"PE id {idx} out of range [0, {limit})")
+        if bits[idx]:
+            raise ValueError(f"duplicate PE id {idx}")
+        bits[idx] = 1
     return jnp.asarray(pack_bits(bits[None, :])[0])
 
 
@@ -306,6 +387,16 @@ def update(tl: Timeline, t_s: jax.Array, t_e: jax.Array,
     S = tl.capacity
     t_s = jnp.asarray(t_s, jnp.int32)
     t_e = jnp.asarray(t_e, jnp.int32)
+    # 0. clamp malformed intervals to a provable no-op.  A ``t_e`` at
+    #    or past the ``T_INF`` sentinel would make the half-open range
+    #    update ``t < t_e`` cover the padding tail forever (occupancy
+    #    that can never be released — a silently corrupted invariant);
+    #    map such intervals to the empty ``[T_INF, T_INF) x 0`` update,
+    #    whose inserted boundary rows the merge pass drops.
+    valid_iv = (t_s < t_e) & (t_e < T_INF)
+    t_s = jnp.where(valid_iv, t_s, T_INF)
+    t_e = jnp.where(valid_iv, t_e, T_INF)
+    mask = jnp.where(valid_iv, mask, jnp.zeros_like(mask))
     # 1. merged positions of the two inserted boundary records: after
     #    all originals of equal time ('right'), and — matching the
     #    retained lexsort oracle's stable tie-break — the t_s record
@@ -411,7 +502,10 @@ def update_many(tl: Timeline, t_s: jax.Array, t_e: jax.Array,
     K = t_s.shape[0]
     t_s = jnp.asarray(t_s, jnp.int32)
     t_e = jnp.asarray(t_e, jnp.int32)
-    active = jnp.asarray(active, bool)
+    # malformed intervals (t_e at/past the T_INF sentinel) would smear
+    # their mask over the padding tail; deactivate them — the same
+    # no-op clamp as :func:`update`.
+    active = jnp.asarray(active, bool) & (t_s < t_e) & (t_e < T_INF)
     R = S + 2 * K
     # 1. boundary records: both endpoints of every active interval;
     #    inactive intervals contribute T_INF rows, which the merge

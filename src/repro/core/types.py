@@ -90,6 +90,11 @@ class ARRequest:
       n_pe: number of processing elements required.
       tenant: owning tenant id for multi-tenant sessions (DESIGN.md
             §10); ignored (and harmless) when tenancy is off.
+      demand: optional full per-resource demand vector for
+            multi-resource sessions (DESIGN.md §11); ``demand[0]``
+            must equal ``n_pe`` (validated against the session's
+            :class:`~repro.core.resources.ResourceSpec` at offer
+            time).  ``None`` means "PEs only".
     """
 
     t_a: int
@@ -98,6 +103,7 @@ class ARRequest:
     t_dl: int
     n_pe: int
     tenant: int = 0
+    demand: Optional[Tuple[int, ...]] = None
 
     def __post_init__(self) -> None:
         if self.t_r < self.t_a:
@@ -112,6 +118,15 @@ class ARRequest:
             raise ValueError(f"n_pe={self.n_pe} must be positive")
         if self.tenant < 0:
             raise ValueError(f"tenant={self.tenant} must be >= 0")
+        if self.demand is not None:
+            d = tuple(int(x) for x in self.demand)
+            if not d or d[0] != self.n_pe:
+                raise ValueError(
+                    f"demand[0] must equal n_pe={self.n_pe}: "
+                    f"got {d}")
+            if any(x < 0 for x in d):
+                raise ValueError(f"demand must be >= 0: got {d}")
+            object.__setattr__(self, "demand", d)
 
     @property
     def latest_start(self) -> int:

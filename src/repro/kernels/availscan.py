@@ -72,6 +72,33 @@ def _tile_rects(a, b, times, nxt, occ):
     return nfree, tb, te
 
 
+def _tile_rects_mr(a, b, times, nxt, occ, psel):
+    """Multi-resource tile (DESIGN.md §11): a third MXU dot against the
+    plane-selector matrix ``psel[bit, r]`` (1 iff the global bit is a
+    *valid* unit of resource plane ``r``) yields per-plane free-unit
+    counts in one contraction — column 0 is the policy-scored PE count,
+    columns 1..R-1 feed the vector fit test.  The blocking contraction
+    is unchanged: occupancy bits only exist on valid units, so the
+    unmasked free operand ANDs to the same booleans."""
+    ov = ((times[None, :] < b[:, None]) &
+          (nxt[None, :] > a[:, None])).astype(jnp.float32)     # [Pt, S]
+    busy = jax.lax.dot(ov, occ,
+                       preferred_element_type=jnp.float32)     # [Pt, bit]
+    free = (busy < 0.5).astype(jnp.float32)
+    nfree_planes = jax.lax.dot(
+        free, psel,
+        preferred_element_type=jnp.float32).astype(jnp.int32)  # [Pt, 128]
+    blocking = jax.lax.dot_general(
+        free, occ,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) > 0.5              # [Pt, S]
+    left = blocking & (nxt[None, :] <= a[:, None])
+    tb = jnp.max(jnp.where(left, nxt[None, :], -T_INF), axis=1)
+    right = blocking & (times[None, :] >= b[:, None])
+    te = jnp.min(jnp.where(right, times[None, :], T_INF), axis=1)
+    return nfree_planes, tb, te
+
+
 def _availscan_kernel(nlive_ref, a_ref, b_ref, times_ref, nxt_ref,
                       occ_ref, nfree_ref, tb_ref, te_ref, *, pt):
     i = pl.program_id(0)
@@ -159,6 +186,85 @@ def availscan(
     )(jnp.reshape(n_live, (1,)).astype(jnp.int32), a_p, b_p,
       times[None, :], nxt[None, :], occ_bits)
     return nfree[:P, 0], tb[:P, 0], te[:P, 0]
+
+
+def _availscan_kernel_mr(nlive_ref, a_ref, b_ref, times_ref, nxt_ref,
+                         occ_ref, psel_ref, nfp_ref, tb_ref, te_ref,
+                         *, pt):
+    i = pl.program_id(0)
+    live = i * pt < nlive_ref[0]
+
+    @pl.when(live)
+    def _():
+        nfp, tb, te = _tile_rects_mr(
+            a_ref[:, 0], b_ref[:, 0], times_ref[0, :], nxt_ref[0, :],
+            occ_ref[...], psel_ref[...])
+        nfp_ref[...] = nfp
+        tb_ref[:, 0] = tb
+        te_ref[:, 0] = te
+
+    @pl.when(~live)
+    def _():
+        nfp_ref[...] = jnp.zeros((pt, _LANE), jnp.int32)
+        tb_ref[:, 0] = jnp.full((pt,), -T_INF, jnp.int32)
+        te_ref[:, 0] = jnp.full((pt,), T_INF, jnp.int32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("pt", "interpret"))
+def availscan_mr(
+    occ_bits: jax.Array,   # f32[S, n_bits_padded] 0/1 occupancy
+    psel: jax.Array,       # f32[n_bits_padded, 128] plane selector
+    times: jax.Array,      # i32[S]
+    nxt: jax.Array,        # i32[S]
+    a: jax.Array,          # i32[P] window starts (overflow-clamped)
+    b: jax.Array,          # i32[P] window ends
+    n_live: jax.Array,     # i32 scalar: live (compacted) candidates
+    *,
+    pt: int = DEFAULT_PT,
+    interpret: bool = True,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Multi-resource :func:`availscan`: same tile-skip scan, but the
+    free counts come back per plane (``n_free_planes[P, 128]``, column
+    ``r`` = valid free units of resource ``r``) and need no padding
+    correction — the plane selector already excludes padding and
+    masked-out units."""
+    S, n_bits_p = occ_bits.shape
+    assert S % _LANE == 0 and n_bits_p % _LANE == 0, (S, n_bits_p)
+    P = a.shape[0]
+    P_pad = -(-P // pt) * pt
+    a_p = _pad_to(a, P_pad, T_INF - 1)[:, None]
+    b_p = _pad_to(b, P_pad, T_INF)[:, None]
+    grid = (P_pad // pt,)
+    nfp, tb, te = pl.pallas_call(
+        functools.partial(_availscan_kernel_mr, pt=pt),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((pt, 1), lambda i, s: (i, 0)),      # a
+                pl.BlockSpec((pt, 1), lambda i, s: (i, 0)),      # b
+                pl.BlockSpec((1, S), lambda i, s: (0, 0)),       # times
+                pl.BlockSpec((1, S), lambda i, s: (0, 0)),       # nxt
+                pl.BlockSpec((S, n_bits_p), lambda i, s: (0, 0)),  # occ
+                pl.BlockSpec((n_bits_p, _LANE),
+                             lambda i, s: (0, 0)),               # psel
+            ],
+            out_specs=[
+                pl.BlockSpec((pt, _LANE), lambda i, s: (i, 0)),
+                pl.BlockSpec((pt, 1), lambda i, s: (i, 0)),
+                pl.BlockSpec((pt, 1), lambda i, s: (i, 0)),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((P_pad, _LANE), jnp.int32),
+            jax.ShapeDtypeStruct((P_pad, 1), jnp.int32),
+            jax.ShapeDtypeStruct((P_pad, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(jnp.reshape(n_live, (1,)).astype(jnp.int32), a_p, b_p,
+      times[None, :], nxt[None, :], occ_bits, psel)
+    return nfp[:P, :], tb[:P, 0], te[:P, 0]
 
 
 def _integer_keys_tile(policy_id, n_free, duration):
@@ -297,4 +403,128 @@ def availscan_select(
         interpret=interpret,
     )(scalars.astype(jnp.int32), starts_p, a_p, b_p, times[None, :],
       nxt[None, :], occ_bits)
+    return acc[0]
+
+
+def _availscan_select_kernel_mr(scal_ref, starts_ref, a_ref, b_ref,
+                                times_ref, nxt_ref, occ_ref, psel_ref,
+                                acc_ref, *, pt, n_res):
+    i = pl.program_id(0)
+    n_live = scal_ref[0]
+    policy_id = scal_ref[1]
+    n_req = scal_ref[2]
+    t_now = scal_ref[3]
+
+    @pl.when(i == 0)
+    def _():
+        lane = jax.lax.iota(jnp.int32, 8)
+        acc_ref[0, :] = jnp.where(lane < 4, _BIG, 0)
+
+    @pl.when(i * pt < n_live)
+    def _():
+        starts = starts_ref[:, 0]
+        a = a_ref[:, 0]
+        nfp_raw, tb_raw, te_raw = _tile_rects_mr(
+            a, b_ref[:, 0], times_ref[0, :], nxt_ref[0, :],
+            occ_ref[...], psel_ref[...])
+        valid = starts < T_INF
+        zero = jnp.zeros((pt,), jnp.int32)
+        # plane-0 counts are already valid-masked by the selector —
+        # no pad correction; otherwise the exact post-processing of
+        # the ops.py wrapper / jnp reference
+        n_free = jnp.where(valid, nfp_raw[:, 0], zero)
+        t_begin = jnp.where(
+            valid, jnp.minimum(jnp.maximum(tb_raw, t_now), a), zero)
+        t_end = jnp.where(valid, te_raw, zero)
+        # vector fit: AND-reduce the per-plane demand tests (the
+        # demand tail rides in the scalar-prefetch operand; n_res is
+        # static, so this loop unrolls at trace time)
+        feasible = valid & (n_free >= n_req)
+        for r in range(1, n_res):
+            feasible = feasible & (nfp_raw[:, r] >= scal_ref[3 + r])
+        key1, key2 = _integer_keys_tile(policy_id, n_free,
+                                        t_end - t_begin)
+        key1 = jnp.where(feasible, key1, _BIG)
+        key2 = jnp.where(feasible, key2, _BIG)
+        tb = jnp.where(feasible, starts, _BIG)
+        idx = i * pt + jax.lax.iota(jnp.int32, pt)
+        m1 = jnp.min(key1)
+        e1 = key1 == m1
+        m2 = jnp.min(jnp.where(e1, key2, _BIG))
+        e2 = e1 & (key2 == m2)
+        m3 = jnp.min(jnp.where(e2, tb, _BIG))
+        e3 = e2 & (tb == m3)
+        m4 = jnp.min(jnp.where(e3, idx, _BIG))
+        win = e3 & (idx == m4)
+
+        def pick(v):
+            return jnp.sum(jnp.where(win, v, 0).astype(jnp.int32))
+
+        row = jnp.stack([m1, m2, m3, m4, pick(n_free), pick(t_begin),
+                         pick(t_end), pick(feasible.astype(jnp.int32))])
+        acc = acc_ref[0, :]
+        less = (row[0] < acc[0]) | (
+            (row[0] == acc[0]) & ((row[1] < acc[1]) | (
+                (row[1] == acc[1]) & ((row[2] < acc[2]) | (
+                    (row[2] == acc[2]) & (row[3] < acc[3]))))))
+        acc_ref[0, :] = jnp.where(less, row, acc)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("pt", "n_res", "interpret"))
+def availscan_select_mr(
+    occ_bits: jax.Array,   # f32[S, n_bits_padded] 0/1 occupancy
+    psel: jax.Array,       # f32[n_bits_padded, 128] plane selector
+    times: jax.Array,      # i32[S]
+    nxt: jax.Array,        # i32[S]
+    starts: jax.Array,     # i32[P] candidate starts (T_INF padded)
+    a: jax.Array,          # i32[P] window starts (overflow-clamped)
+    b: jax.Array,          # i32[P] window ends
+    scalars: jax.Array,    # i32[3+n_res]: n_live, policy, n_req,
+    #                        t_now, demand[1..n_res-1]
+    *,
+    pt: int = DEFAULT_PT,
+    n_res: int = 1,
+    interpret: bool = True,
+) -> jax.Array:
+    """Multi-resource :func:`availscan_select` (DESIGN.md §11).
+
+    Same one-row fused epilogue, but feasibility AND-reduces the
+    per-plane fit tests against the demand tail carried in the
+    scalar-prefetch operand, and ``n_free`` comes valid-masked from
+    the plane-selector contraction (no pad correction).  A separate
+    kernel so the scalar layout of the R=1 legacy kernel — and its
+    compiled graph — stays untouched.
+    """
+    S, n_bits_p = occ_bits.shape
+    assert S % _LANE == 0 and n_bits_p % _LANE == 0, (S, n_bits_p)
+    assert scalars.shape[0] == 3 + n_res, (scalars.shape, n_res)
+    P = a.shape[0]
+    P_pad = -(-P // pt) * pt
+    starts_p = _pad_to(starts, P_pad, T_INF)[:, None]
+    a_p = _pad_to(a, P_pad, T_INF - 1)[:, None]
+    b_p = _pad_to(b, P_pad, T_INF)[:, None]
+    grid = (P_pad // pt,)
+    acc = pl.pallas_call(
+        functools.partial(_availscan_select_kernel_mr, pt=pt,
+                          n_res=n_res),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((pt, 1), lambda i, s: (i, 0)),      # starts
+                pl.BlockSpec((pt, 1), lambda i, s: (i, 0)),      # a
+                pl.BlockSpec((pt, 1), lambda i, s: (i, 0)),      # b
+                pl.BlockSpec((1, S), lambda i, s: (0, 0)),       # times
+                pl.BlockSpec((1, S), lambda i, s: (0, 0)),       # nxt
+                pl.BlockSpec((S, n_bits_p), lambda i, s: (0, 0)),  # occ
+                pl.BlockSpec((n_bits_p, _LANE),
+                             lambda i, s: (0, 0)),               # psel
+            ],
+            out_specs=pl.BlockSpec((1, 8), lambda i, s: (0, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((1, 8), jnp.int32),
+        interpret=interpret,
+    )(scalars.astype(jnp.int32), starts_p, a_p, b_p, times[None, :],
+      nxt[None, :], occ_bits, psel)
     return acc[0]

@@ -26,6 +26,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import search as search_lib
 from repro.core import timeline as tl_lib
@@ -63,11 +64,71 @@ def _padded_operands(tl: Timeline, n_pe: int):
     return occ_bits, times, nxt, n_pe_pad
 
 
+def _padded_operands_mr(tl: Timeline, rspec,
+                        valid_mask: Optional[jax.Array]):
+    """Multi-resource operands: the bit axis spans every plane's word
+    range, and the plane-selector matrix ``psel[bit, r]`` (1 iff the
+    bit is a valid unit of plane ``r``) both excludes padding/masked
+    units from the free counts and routes each plane to its own output
+    lane — so no pad correction exists on this path."""
+    if rspec.R > _k._LANE:
+        return None
+    S = tl.capacity
+    n_bits = rspec.total_bits
+    S_pad = _round_up(max(S, _k._LANE), _k._LANE)
+    n_bits_pad = _round_up(max(n_bits, _k._LANE), _k._LANE)
+    if S_pad * n_bits_pad > _MAX_OCC_ELEMS:
+        return None
+    occ_bits = tl_lib.unpack_bits(tl.occ, n_bits).astype(jnp.float32)
+    occ_bits = jnp.pad(
+        occ_bits, ((0, S_pad - S), (0, n_bits_pad - n_bits)))
+    times = jnp.pad(tl.times, (0, S_pad - S), constant_values=T_INF)
+    nxt = jnp.pad(tl_lib.next_times(tl), (0, S_pad - S),
+                  constant_values=T_INF)
+    if valid_mask is None:
+        valid_mask = jnp.asarray(rspec.valid_mask_np())
+    plane_id = np.full(n_bits_pad, -1, np.int32)
+    for r in range(rspec.R):
+        o = rspec.bit_offset(r)
+        plane_id[o:o + rspec.words_per[r] * 32] = r
+    vb = tl_lib.unpack_bits(
+        valid_mask[None, :], n_bits)[0].astype(jnp.float32)
+    vb = jnp.pad(vb, (0, n_bits_pad - n_bits))
+    psel = (jnp.asarray(plane_id)[:, None] ==
+            jnp.arange(_k._LANE, dtype=jnp.int32)[None, :]
+            ).astype(jnp.float32) * vb[:, None]
+    return occ_bits, times, nxt, psel
+
+
 def availability_rectangles(
     tl: Timeline, starts: jax.Array, t_du: jax.Array, t_now: jax.Array,
-    n_pe: int,
+    n_pe: int, *, rspec=None, valid_mask: Optional[jax.Array] = None,
 ) -> search_lib.Rectangles:
     """Kernel-backed drop-in for ``search.availability_rectangles``."""
+    if rspec is not None:
+        ops = _padded_operands_mr(tl, rspec, valid_mask)
+        if ops is None:
+            return search_lib.availability_rectangles(
+                tl, starts, t_du, t_now, n_pe, rspec=rspec,
+                valid_mask=valid_mask)
+        occ_bits, times, nxt, psel = ops
+        valid = starts < T_INF
+        n_live = jnp.sum(valid).astype(jnp.int32)
+        a = jnp.minimum(starts, T_INF - t_du)
+        b = a + t_du
+        nfp_raw, tb_raw, te_raw = _k.availscan_mr(
+            occ_bits, psel, times, nxt, a, b, n_live,
+            interpret=_interpret_mode())
+        zero = jnp.int32(0)
+        t_begin = jnp.minimum(jnp.maximum(tb_raw, t_now), a)
+        return search_lib.Rectangles(
+            starts=starts,
+            n_free=jnp.where(valid, nfp_raw[:, 0], zero),
+            t_begin=jnp.where(valid, t_begin, zero),
+            t_end=jnp.where(valid, te_raw, zero),
+            valid=valid,
+            n_free_tail=jnp.where(
+                valid[:, None], nfp_raw[:, 1:rspec.R], zero))
     ops = _padded_operands(tl, n_pe)
     if ops is None:
         return search_lib.availability_rectangles(
@@ -98,7 +159,9 @@ def availability_rectangles(
 
 def search_select(
     tl: Timeline, starts: jax.Array, t_du: jax.Array, t_now: jax.Array,
-    n_req: jax.Array, policy_id: jax.Array, n_pe: int,
+    n_req: jax.Array, policy_id: jax.Array, n_pe: int, *,
+    rspec=None, demand_tail: Optional[jax.Array] = None,
+    valid_mask: Optional[jax.Array] = None,
 ) -> Optional[dict]:
     """Fused availscan + policy selection on the kernel path.
 
@@ -107,7 +170,31 @@ def search_select(
     candidate: ``found``, ``best`` (index into ``starts``) and its
     post-processed ``n_free`` / ``t_begin`` / ``t_end`` — bit-identical
     to ``availability_rectangles`` + ``policies.select``.
+
+    ``rspec`` dispatches to the multi-resource kernel: the demand tail
+    joins the scalar-prefetch row and feasibility AND-reduces across
+    planes (DESIGN.md §11).
     """
+    if rspec is not None:
+        ops = _padded_operands_mr(tl, rspec, valid_mask)
+        if ops is None:
+            return None
+        occ_bits, times, nxt, psel = ops
+        n_live = jnp.sum(starts < T_INF).astype(jnp.int32)
+        a = jnp.minimum(starts, T_INF - t_du)
+        b = a + t_du
+        if demand_tail is None:
+            demand_tail = jnp.zeros((rspec.R - 1,), jnp.int32)
+        scalars = jnp.concatenate([
+            jnp.stack([n_live, jnp.asarray(policy_id, jnp.int32),
+                       jnp.asarray(n_req, jnp.int32),
+                       jnp.asarray(t_now, jnp.int32)]),
+            jnp.asarray(demand_tail, jnp.int32)])
+        acc = _k.availscan_select_mr(
+            occ_bits, psel, times, nxt, starts, a, b, scalars,
+            n_res=rspec.R, interpret=_interpret_mode())
+        return dict(found=acc[7] > 0, best=acc[3], n_free=acc[4],
+                    t_begin=acc[5], t_end=acc[6])
     ops = _padded_operands(tl, n_pe)
     if ops is None:
         return None

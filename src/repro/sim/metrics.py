@@ -51,7 +51,12 @@ class SimResult:
 
     @property
     def utilization(self) -> float:
-        denom = self.n_pe * max(self.span, 1.0)
+        # a run with no makespan (or no machine) has no utilization:
+        # NaN, so nanmean_safe-style aggregations mask it instead of
+        # averaging in a silently wrong busy_area / n_pe ratio
+        denom = self.n_pe * self.span
+        if denom <= 0:
+            return float("nan")
         return self.busy_area / denom
 
     def summary(self) -> str:

@@ -48,7 +48,13 @@ class GridSpec:
     §10): each entry is a :class:`repro.tenancy.TenantSpec` (jobs are
     assigned tenants round-robin) or ``None`` for the single-tenant
     baseline; the default ``(None,)`` keeps the legacy 5-axis result
-    shapes.  ``base`` supplies every other workload knob.
+    shapes.  ``resources`` generalises the machine to a multi-resource
+    layout (DESIGN.md §11; ``resources[0]`` must equal ``n_pe``) and
+    ``resource_mixes`` adds the secondary-demand axis: each entry is a
+    tuple of R-1 intensity fractions — job ``j`` gets
+    ``demand[r] = min(units[r], round(f_r * units[r] * j.n_pe /
+    n_pe))`` on plane ``r`` — or ``None`` for PE-only demand.
+    ``base`` supplies every other workload knob.
     """
 
     policies: Tuple[Policy, ...] = ALL_POLICIES
@@ -57,10 +63,20 @@ class GridSpec:
     flex_factors: Tuple[float, ...] = (3.0,)
     backfill_modes: Tuple[str, ...] = ("none",)
     tenant_mixes: Tuple[Optional[object], ...] = (None,)
+    resources: Optional[Tuple[int, ...]] = None
+    resource_mixes: Tuple[Optional[Tuple[float, ...]], ...] = (None,)
     base: WorkloadParams = WorkloadParams()
     n_pe: int = 64
     n_jobs: int = 200
     park_capacity: int = 8
+
+    @property
+    def rspec(self):
+        """The grid's :class:`~repro.core.resources.ResourceSpec`."""
+        if self.resources is None:
+            return None
+        from repro.core.resources import ResourceSpec
+        return ResourceSpec(self.resources)
 
     @property
     def shape(self) -> Tuple[int, ...]:
@@ -68,7 +84,9 @@ class GridSpec:
                 len(self.arrival_factors), len(self.seeds),
                 len(self.flex_factors))
         if len(self.tenant_mixes) > 1:
-            return base + (len(self.tenant_mixes),)
+            base = base + (len(self.tenant_mixes),)
+        if len(self.resource_mixes) > 1:
+            base = base + (len(self.resource_mixes),)
         return base
 
     @property
@@ -136,14 +154,27 @@ def simulate_grid(
                 tenanted[key + (m,)] = [
                     dataclasses.replace(j, tenant=i % T)
                     for i, j in enumerate(jobs)]
+    rmixes = spec.resource_mixes
+    rspec = spec.rspec
+    if rspec is None and any(rm is not None for rm in rmixes):
+        raise ValueError(
+            "resource_mixes needs GridSpec.resources")
+    stamped = {}
+    for key, jobs in tenanted.items():
+        for rm, fracs in enumerate(rmixes):
+            stamped[key + (rm,)] = jobs if fracs is None else \
+                _stamp_demand(jobs, rspec, fracs)
     cells = list(itertools.product(
         spec.policies, spec.backfill_modes, spec.arrival_factors,
-        spec.seeds, spec.flex_factors, range(len(mixes))))
-    streams = [tenanted[(lo, se, fl, m)]
-               for _, _, lo, se, fl, m in cells]
+        spec.seeds, spec.flex_factors, range(len(mixes)),
+        range(len(rmixes))))
+    streams = [stamped[(lo, se, fl, m, rm)]
+               for _, _, lo, se, fl, m, rm in cells]
     tenancy = any(mix is not None for mix in mixes)
     batch, valid = pad_streams(streams, spec.n_pe,
-                               with_tenant=tenancy)
+                               with_tenant=tenancy,
+                               extra_demand=(rspec.R - 1
+                                             if rspec else 0))
     pids = jnp.asarray([policy_index(p) for p, *_ in cells],
                        jnp.int32)
     backfill = tuple(m for _, m, *_ in cells)
@@ -154,7 +185,8 @@ def simulate_grid(
         pending_capacity=pending_capacity, use_kernel=use_kernel,
         backfill=backfill, backfill_queue=spec.park_capacity,
         chunk_size=None, placement=placement, donate=donate,
-        tenants=(tuple(mixes[c[-1]] for c in cells)
+        resources=spec.resources,
+        tenants=(tuple(mixes[c[-2]] for c in cells)
                  if tenancy else None))).session()
     t0 = _time.perf_counter()
     res = session.offer((batch, valid), policy=pids)
@@ -189,19 +221,53 @@ def simulate_grid(
             result.decisions = arr.reshape(shape).tolist()
     if cross_check:
         _cross_check_cells(cells, mixes, streams, traces, spec.n_pe,
-                           spec.park_capacity)
+                           spec.park_capacity, rspec)
     return result
 
 
+def _stamp_demand(jobs, rspec, fracs):
+    """Stamp a per-resource demand vector onto each job.
+
+    Secondary-plane demand scales with the job's PE fraction:
+    ``demand[r] = min(units[r], round(f_r * units[r] * n_pe / n_pe0))``
+    — an ``f_r`` of 1.0 means a whole-machine job wants the whole
+    plane, clamped to the plane size.
+    """
+    if len(fracs) != rspec.R - 1:
+        raise ValueError(
+            f"resource mix has {len(fracs)} fractions for "
+            f"{rspec.R - 1} secondary resources")
+    out = []
+    for j in jobs:
+        tail = tuple(
+            min(rspec.units[r + 1],
+                max(0, int(round(float(f) * rspec.units[r + 1]
+                                 * (j.n_pe / rspec.n_pe)))))
+            for r, f in enumerate(fracs))
+        out.append(dataclasses.replace(j, demand=(j.n_pe,) + tail))
+    return out
+
+
 def _cross_check_cells(cells, mixes, streams, traces, n_pe: int,
-                       park_capacity: int) -> None:
+                       park_capacity: int, rspec=None) -> None:
     """Assert every cell is decision-identical to its host oracle."""
-    from repro.core.hostsched import BackfillOracle, TenantOracle
+    from repro.core.hostsched import (BackfillOracle,
+                                      MultiResourceOracle,
+                                      TenantOracle)
     from repro.sim.simulator import simulate
 
-    for c, (policy, mode, load, seed, flex, m) in enumerate(cells):
+    for c, (policy, mode, load, seed, flex, m, rm) in enumerate(cells):
         mix = mixes[m]
-        if mix is not None:
+        if rspec is not None:
+            if mix is not None:
+                raise NotImplementedError(
+                    "cross_check with both tenant_mixes and "
+                    "resources is not supported (no multi-resource "
+                    "tenant oracle)")
+            ref = MultiResourceOracle(
+                rspec, policy, mode,
+                park_capacity=park_capacity).run(streams[c])
+        elif mix is not None:
             orc = TenantOracle(n_pe, policy, mode, mix,
                                park_capacity=park_capacity)
             ref = [orc.admit(r)[:2] for r in streams[c]]
@@ -218,6 +284,6 @@ def _cross_check_cells(cells, mixes, streams, traces, n_pe: int,
             raise AssertionError(
                 f"grid cell (policy={policy.value}, backfill={mode}, "
                 f"load={load}, seed={seed}, flex={flex}, "
-                f"tenant_mix={m}) diverges "
+                f"tenant_mix={m}, resource_mix={rm}) diverges "
                 f"from the host oracle at job indices {diff[:10]} "
                 f"({len(diff)}/{len(streams[c])} total)")

@@ -1,0 +1,451 @@
+"""Multi-resource timelines and heterogeneous lanes (DESIGN.md §11).
+
+Three invariants anchor this suite:
+
+1. **R=1 bit-identity** — an ``rspec=(n_pe,)`` state produces the
+   exact same compiled decisions as a legacy ``rspec=None`` state on
+   every field, policy and backfill mode (the layout is byte-identical
+   so this is a code-path regression gate).
+2. **Host-mirror differential** — device decisions on R >= 2 layouts
+   match :class:`repro.core.hostsched.MultiResourceOracle` bit-exactly
+   on both the jnp and kernel search paths.
+3. **Plane confinement** — chosen unit ids always live inside their
+   resource's bit range and never exceed the per-plane demand.
+
+Plus the PR's edge-case regression sweep: the T_INF horizon guard,
+``ids_to_mask32`` validation, and the zero-span utilization NaN.
+"""
+import dataclasses
+import random
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import batch as batch_lib
+from repro.core import timeline as tl_lib
+from repro.core.hostsched import MultiResourceOracle
+from repro.core.resources import ResourceSpec
+from repro.core.types import ALL_POLICIES, ARRequest, Policy, T_INF
+
+
+def _random_jobs(n, rspec, seed=0, horizon=2000):
+    rng = random.Random(seed)
+    jobs, t = [], 0
+    for _ in range(n):
+        t += rng.randint(0, 6)
+        n_pe = rng.randint(1, rspec.n_pe)
+        du = rng.randint(1, 40)
+        slack = rng.randint(0, 60)
+        tail = tuple(rng.randint(0, u) for u in rspec.units[1:])
+        tr = t + rng.randint(0, 5)
+        jobs.append(ARRequest(
+            t_a=t, t_r=tr, t_du=du, t_dl=tr + du + slack, n_pe=n_pe,
+            demand=(n_pe,) + tail))
+    return jobs
+
+
+def _run_device(jobs, rspec, policy, mode, use_kernel, n_pe):
+    xd = rspec.R - 1 if rspec is not None else 0
+    state = tl_lib.init_state(256, n_pe, 256, park_capacity=8,
+                              rspec=rspec)
+    batch = batch_lib.requests_to_batch(jobs, extra_demand=xd)
+    state, dec = batch_lib.admit_stream_grow(
+        state, batch, policy, backfill=batch_lib.as_backfill_id(mode),
+        n_pe=n_pe, use_kernel=use_kernel)
+    acc = np.asarray(dec.accepted)
+    ts = np.asarray(dec.t_s)
+    return [(bool(a), int(t)) for a, t in zip(acc, ts)], dec
+
+
+# ---------------------------------------------------------------------------
+# layout
+# ---------------------------------------------------------------------------
+
+
+def test_resource_spec_layout():
+    spec = ResourceSpec((33, 4, 64))
+    assert spec.R == 3 and spec.n_pe == 33
+    assert spec.words_per == (2, 1, 2)
+    assert spec.word_offsets == (0, 2, 3)
+    assert spec.total_words == 5 and spec.total_bits == 160
+    assert spec.plane_slice(1) == slice(2, 3)
+    assert spec.bit_offset(2) == 96
+    bits = spec.valid_bits_np()
+    # per-plane valid bits: exactly units[r] set, padding zero
+    assert bits[:33].all() and not bits[33:64].any()
+    assert bits[64:68].all() and not bits[68:96].any()
+    assert bits[96:160].all()
+    # heterogeneous shrink
+    hv = spec.valid_bits_np((16, 2, 64))
+    assert hv[:16].all() and not hv[16:64].any()
+    assert hv[64:66].all() and not hv[66:96].any()
+
+
+def test_resource_spec_r1_layout_is_legacy():
+    spec = ResourceSpec((64,))
+    assert spec.total_words == tl_lib.n_words(64)
+    assert np.array_equal(spec.valid_mask_np(),
+                          tl_lib.pe_valid_mask(64))
+
+
+def test_demand_tail_validation():
+    spec = ResourceSpec((8, 4))
+    assert spec.demand_tail(None, 3) == (0,)
+    assert spec.demand_tail((3, 2), 3) == (2,)
+    with pytest.raises(ValueError):
+        spec.demand_tail((4, 2), 3)       # plane 0 != n_pe
+    with pytest.raises(ValueError):
+        spec.demand_tail((3,), 3)         # wrong length
+    with pytest.raises(ValueError):
+        spec.demand_tail((3, 5), 3)       # over plane size
+
+
+def test_arrequest_demand_validation():
+    with pytest.raises(ValueError):
+        ARRequest(t_a=0, t_r=0, t_du=1, t_dl=2, n_pe=2, demand=(3, 1))
+    with pytest.raises(ValueError):
+        ARRequest(t_a=0, t_r=0, t_du=1, t_dl=2, n_pe=2, demand=(2, -1))
+    r = ARRequest(t_a=0, t_r=0, t_du=1, t_dl=2, n_pe=2,
+                  demand=[2, 1])
+    assert r.demand == (2, 1)
+
+
+# ---------------------------------------------------------------------------
+# R=1 bit-identity with the legacy path
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_r1_decisions_bit_identical(use_kernel):
+    n_pe = 48
+    rspec = ResourceSpec((n_pe,))
+    rng = random.Random(7)
+    jobs, t = [], 0
+    for _ in range(120):
+        t += rng.randint(0, 4)
+        du = rng.randint(1, 30)
+        jobs.append(ARRequest(
+            t_a=t, t_r=t, t_du=du, t_dl=t + du + rng.randint(0, 50),
+            n_pe=rng.randint(1, n_pe)))
+    for policy in (Policy.FF, Policy.PE_W, Policy.PEDU_B):
+        for mode in ("none", "easy", "conservative"):
+            _, legacy = _run_device(jobs, None, policy, mode,
+                                    use_kernel, n_pe)
+            _, mr = _run_device(jobs, rspec, policy, mode,
+                                use_kernel, n_pe)
+            for f in legacy._fields:
+                assert np.array_equal(
+                    np.asarray(getattr(legacy, f)),
+                    np.asarray(getattr(mr, f))), (policy, mode, f)
+
+
+@pytest.mark.slow
+def test_r1_full_policy_matrix_bit_identical():
+    """1000 jobs x 7 policies x 3 backfill modes, legacy == R=1."""
+    n_pe = 64
+    rspec = ResourceSpec((n_pe,))
+    rng = random.Random(3)
+    jobs, t = [], 0
+    for _ in range(1000):
+        t += rng.randint(0, 3)
+        du = rng.randint(1, 25)
+        tr = t + rng.randint(0, 4)
+        jobs.append(ARRequest(
+            t_a=t, t_r=tr, t_du=du, t_dl=tr + du + rng.randint(0, 80),
+            n_pe=rng.randint(1, n_pe)))
+    for policy in ALL_POLICIES:
+        for mode in ("none", "easy", "conservative"):
+            ref, _ = _run_device(jobs, None, policy, mode, False, n_pe)
+            got, _ = _run_device(jobs, rspec, policy, mode, False,
+                                 n_pe)
+            assert ref == got, (policy, mode)
+
+
+# ---------------------------------------------------------------------------
+# R>=2 differential vs the host mirror
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+@pytest.mark.parametrize("mode", ["none", "easy", "conservative"])
+def test_multires_matches_host_oracle(mode, use_kernel):
+    rspec = ResourceSpec((32, 4, 8))
+    jobs = _random_jobs(150, rspec, seed=11)
+    for policy in (Policy.FF, Policy.PE_B, Policy.PEDU_W):
+        ref = MultiResourceOracle(rspec, policy, mode,
+                                  park_capacity=8).run(jobs)
+        got, _ = _run_device(jobs, rspec, policy, mode, use_kernel,
+                             rspec.n_pe)
+        diff = [i for i, (x, y) in enumerate(zip(ref, got)) if x != y]
+        assert not diff, (policy, mode, diff[:5])
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_multires_oracle_differential_slow(use_kernel):
+    rspec = ResourceSpec((64, 6, 3, 40))
+    jobs = _random_jobs(500, rspec, seed=29)
+    for policy in ALL_POLICIES:
+        for mode in ("none", "easy", "conservative"):
+            ref = MultiResourceOracle(rspec, policy, mode,
+                                      park_capacity=8).run(jobs)
+            got, _ = _run_device(jobs, rspec, policy, mode,
+                                 use_kernel, rspec.n_pe)
+            assert ref == got, (policy, mode)
+
+
+def test_chosen_units_confined_to_planes():
+    rspec = ResourceSpec((16, 4))
+    jobs = _random_jobs(60, rspec, seed=5)
+    _, dec = _run_device(jobs, rspec, Policy.FF, "none", False, 16)
+    acc = np.asarray(dec.accepted)
+    masks = np.asarray(dec.pe_mask)
+    gpu0 = rspec.bit_offset(1)
+    for i, j in enumerate(jobs):
+        if not acc[i]:
+            continue
+        ids = batch_lib.mask32_to_ids(masks[i])
+        pes = [b for b in ids if b < 16]
+        gpus = [b for b in ids if gpu0 <= b < gpu0 + 4]
+        assert len(pes) == j.demand[0]
+        assert len(gpus) == j.demand[1]
+        assert len(ids) == len(pes) + len(gpus)  # nothing in padding
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous machine lanes
+# ---------------------------------------------------------------------------
+
+
+def test_heterogeneous_lane_valid_mask_blocks_dead_pes():
+    from repro.api import ReservationService, ServiceConfig
+    cfg = ServiceConfig(n_pe=32, lanes=3, machine_sizes=(32, 20, 8),
+                        engine="device", chunk_size=None)
+    s = ReservationService(cfg).session()
+    req = [ARRequest(t_a=0, t_r=0, t_du=5, t_dl=50, n_pe=16)]
+    res = s.offer([req, req, req])
+    acc = np.asarray(res.decision.accepted)[:, 0]
+    assert acc.tolist() == [True, True, False]
+    # chosen PEs stay below each lane's live size
+    masks = np.asarray(res.decision.pe_mask)
+    for lane, size in ((0, 32), (1, 20)):
+        ids = batch_lib.mask32_to_ids(masks[lane, 0])
+        assert max(ids) < size and len(ids) == 16
+
+
+def test_heterogeneous_lanes_with_resources():
+    from repro.api import ReservationService, ServiceConfig
+    cfg = ServiceConfig(n_pe=16, lanes=2, machine_sizes=(16, 4),
+                        resources=(16, 2), engine="device",
+                        chunk_size=None)
+    s = ReservationService(cfg).session()
+    req = [ARRequest(t_a=0, t_r=0, t_du=5, t_dl=50, n_pe=8,
+                     demand=(8, 1))]
+    res = s.offer([req, req])
+    acc = np.asarray(res.decision.accepted)[:, 0]
+    assert acc.tolist() == [True, False]   # lane 1: only 4 live PEs
+
+
+def test_machine_units_requires_rspec():
+    from repro.core import ensemble as ens_lib
+    with pytest.raises(ValueError, match="rspec"):
+        ens_lib.init_ensemble(2, 32, 16, machine_units=((16,), (8,)))
+    with pytest.raises(ValueError, match="lanes"):
+        ens_lib.init_ensemble(2, 32, 16, rspec=ResourceSpec((16,)),
+                              machine_units=((16,),))
+
+
+# ---------------------------------------------------------------------------
+# service-level validation and staging
+# ---------------------------------------------------------------------------
+
+
+def test_service_demand_validation():
+    from repro.api import ReservationService, ServiceConfig
+    s = ReservationService(ServiceConfig(
+        n_pe=8, resources=(8, 2), engine="device")).session()
+    with pytest.raises(ValueError, match="demand"):
+        s.offer([ARRequest(t_a=0, t_r=0, t_du=1, t_dl=10, n_pe=1,
+                           demand=(1, 3))])
+    plain = ReservationService(ServiceConfig(n_pe=8)).session()
+    with pytest.raises(ValueError, match="single-resource"):
+        plain.offer([ARRequest(t_a=0, t_r=0, t_du=1, t_dl=10, n_pe=1,
+                               demand=(1, 1))])
+
+
+def test_config_validation():
+    from repro.api import ServiceConfig
+    with pytest.raises(ValueError, match="resources"):
+        ServiceConfig(n_pe=8, resources=(4, 2))
+    with pytest.raises(ValueError, match="device"):
+        ServiceConfig(n_pe=8, engine="host", resources=(8, 2))
+    with pytest.raises(ValueError, match="machine_sizes"):
+        ServiceConfig(n_pe=8, lanes=2, machine_sizes=(8,))
+    with pytest.raises(ValueError):
+        ServiceConfig(n_pe=8, lanes=2, machine_sizes=(8, 9))
+    cfg = ServiceConfig(n_pe=8, resources=(8, 2, 2))
+    assert cfg.rspec.R == 3 and cfg.extra_demand == 2
+    hom = ServiceConfig(n_pe=8)
+    assert hom.rspec is None and hom.extra_demand == 0
+    het = ServiceConfig(n_pe=8, lanes=2, machine_sizes=(8, 4))
+    assert het.rspec.units == (8,)          # implicit R=1 spec
+    assert het.machine_units == ((8,), (4,))
+
+
+def test_ring_demand_staging_roundtrip():
+    """Chunked ring staging must carry demand columns bit-exactly."""
+    from repro.api import ReservationService, ServiceConfig
+    rspec = ResourceSpec((16, 4))
+    jobs = _random_jobs(40, rspec, seed=17)
+    chunked = ReservationService(ServiceConfig(
+        n_pe=16, resources=(16, 4), engine="device",
+        chunk_size=8, ring_capacity=32)).session()
+    oneshot = ReservationService(ServiceConfig(
+        n_pe=16, resources=(16, 4), engine="device",
+        chunk_size=None)).session()
+    d1 = chunked.offer(jobs).decision
+    d2 = oneshot.offer(jobs).decision
+    n = len(jobs)
+    assert np.array_equal(np.asarray(d1.accepted)[:n],
+                          np.asarray(d2.accepted))
+    assert np.array_equal(np.asarray(d1.t_s)[:n],
+                          np.asarray(d2.t_s))
+
+
+# ---------------------------------------------------------------------------
+# edge-case regression sweep (satellites)
+# ---------------------------------------------------------------------------
+
+
+def test_update_clamps_horizon_interval():
+    """An interval touching T_INF must not corrupt the timeline."""
+    tl = tl_lib.empty(16, 8)
+    mask = tl_lib.ids_to_mask32([0, 1], tl.words)
+    for t_s, t_e in ((T_INF - 5, T_INF), (T_INF, T_INF + 0),
+                     (5, 5), (7, 3)):
+        new_tl, ovf = tl_lib.update(tl, t_s, t_e, mask, is_add=True)
+        assert not bool(ovf)
+        assert np.array_equal(np.asarray(new_tl.times),
+                              np.asarray(tl.times)), (t_s, t_e)
+        assert np.array_equal(np.asarray(new_tl.occ),
+                              np.asarray(tl.occ)), (t_s, t_e)
+
+
+def test_admit_rejects_horizon_window():
+    """A request whose window ends at T_INF is rejected, not half-
+    committed (the admit-step guard of the T_INF clamp)."""
+    n_pe = 8
+    state = tl_lib.init_state(32, n_pe, 16)
+    req = ARRequest(t_a=0, t_r=T_INF - 10, t_du=10, t_dl=T_INF,
+                    n_pe=2)
+    state, alloc = batch_lib.admit_one(state, req, Policy.FF,
+                                       n_pe=n_pe)
+    assert alloc is None
+    times = np.asarray(state.tl.times)
+    assert (times >= T_INF).all()      # nothing committed
+
+
+def test_ids_to_mask32_validation():
+    with pytest.raises(ValueError, match="out of range"):
+        tl_lib.ids_to_mask32([8], 1, n_pe=8)
+    with pytest.raises(ValueError, match="out of range"):
+        tl_lib.ids_to_mask32([32], 1)          # beyond word width
+    with pytest.raises(ValueError, match="duplicate"):
+        tl_lib.ids_to_mask32([3, 3], 1)
+    with pytest.raises(ValueError, match="out of range"):
+        tl_lib.ids_to_mask32([-1], 1)
+    with pytest.raises(TypeError, match="not an integer"):
+        tl_lib.ids_to_mask32([1.5], 1)
+
+    def traced(ids):
+        return tl_lib.ids_to_mask32([ids], 1)
+
+    with pytest.raises(TypeError, match="host-side"):
+        jax.jit(traced)(jnp.int32(1))
+    # valid call still packs correctly
+    m = np.asarray(tl_lib.ids_to_mask32([0, 31], 1, n_pe=32))
+    assert m[0] == np.uint32(0x80000001)
+
+
+def test_every_tail_width_roundtrip_and_no_leak():
+    """Exhaustive mirror of the hypothesis tail-width properties.
+
+    Runs even without hypothesis installed: every ``n_pe % 32 != 0``
+    tail width (1..31, across one- and two-word sizes) must pack /
+    unpack bit-exactly, keep ``pe_valid_mask`` confined to the first
+    ``n_pe`` bits, and report exactly ``n_pe`` free units on an empty
+    timeline (``n_pe + 1`` infeasible) — i.e. word-padding bits never
+    leak into the popcount contractions.
+    """
+    from repro.core import search as search_lib
+
+    rng = np.random.default_rng(42)
+    for n_pe in list(range(1, 32)) + [33, 47, 63]:
+        W = tl_lib.n_words(n_pe)
+        bits = np.zeros(W * 32, np.uint32)
+        on = rng.choice(n_pe, size=rng.integers(0, n_pe + 1),
+                        replace=False)
+        bits[on] = 1
+        words = tl_lib.pack_bits(bits[None, :])
+        back = np.asarray(tl_lib.unpack_bits(jnp.asarray(words),
+                                             W * 32))[0]
+        assert np.array_equal(back.astype(np.uint32), bits), n_pe
+        vm = tl_lib.pe_valid_mask(n_pe)
+        vb = np.asarray(tl_lib.unpack_bits(jnp.asarray(vm)[None, :],
+                                           W * 32))[0]
+        assert vb[:n_pe].all() and not vb[n_pe:].any(), n_pe
+        tl = tl_lib.empty(4, n_pe)
+        res = search_lib.search(
+            tl, jnp.int32(0), jnp.int32(5), jnp.int32(1000),
+            jnp.int32(n_pe), jnp.int32(0), jnp.int32(0), n_pe=n_pe)
+        assert bool(res.found) and int(res.n_free) == n_pe, n_pe
+        over = search_lib.search(
+            tl, jnp.int32(0), jnp.int32(5), jnp.int32(1000),
+            jnp.int32(n_pe + 1), jnp.int32(0), jnp.int32(0),
+            n_pe=n_pe)
+        assert not bool(over.found), n_pe
+
+
+def test_zero_span_utilization_is_nan():
+    from repro.sim.metrics import SimResult, nanmean_safe
+    r = SimResult(policy="FF", n_jobs=0, n_accepted=0, busy_area=5.0,
+                  span=0.0, n_pe=8)
+    assert np.isnan(r.utilization)
+    no_pe = SimResult(policy="FF", n_jobs=0, n_accepted=0,
+                      busy_area=0.0, span=10.0, n_pe=0)
+    assert np.isnan(no_pe.utilization)
+    # aggregations mask, not propagate
+    assert nanmean_safe([r.utilization, 0.5]) == 0.5
+    ok = SimResult(policy="FF", n_jobs=1, n_accepted=1,
+                   busy_area=40.0, span=10.0, n_pe=8)
+    assert ok.utilization == pytest.approx(0.5)
+
+
+# ---------------------------------------------------------------------------
+# grid integration
+# ---------------------------------------------------------------------------
+
+
+def test_grid_resource_mix_axis_cross_checked():
+    from repro.sim.sweep import GridSpec, simulate_grid
+    spec = GridSpec(policies=(Policy.FF, Policy.PE_W),
+                    backfill_modes=("none", "easy"),
+                    arrival_factors=(1.0,), seeds=(0,),
+                    n_pe=32, n_jobs=40,
+                    resources=(32, 4),
+                    resource_mixes=(None, (1.0,)))
+    res = simulate_grid(spec, cross_check=True)
+    assert res.acceptance.shape == spec.shape == (2, 2, 1, 1, 1, 2)
+    # saturating the GPU plane can only reduce acceptance
+    assert (res.n_accepted[..., 1] <= res.n_accepted[..., 0]).all()
+
+
+def test_grid_resource_mix_requires_resources():
+    from repro.sim.sweep import GridSpec, simulate_grid
+    with pytest.raises(ValueError, match="resources"):
+        simulate_grid(GridSpec(policies=(Policy.FF,),
+                               arrival_factors=(1.0,), seeds=(0,),
+                               n_jobs=5, resource_mixes=((0.5,),)))

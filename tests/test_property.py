@@ -126,3 +126,63 @@ def test_timeline_invariants(ops):
             assert not occ[n_valid - 1].any()
         # 4. padding rows are zeroed
         assert not occ[n_valid:].any()
+
+
+# ---------------------------------------------------------------------------
+# packed-word tail widths (n_pe % 32 != 0)
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(1, 160).filter(lambda n: n % 32), st.data())
+@settings(max_examples=40, deadline=None)
+def test_tail_width_pack_unpack_roundtrip(n_pe, data):
+    """Every non-word-aligned machine size round-trips bit-exactly."""
+    W = tl_lib.n_words(n_pe)
+    on = data.draw(st.sets(st.integers(0, n_pe - 1)))
+    bits = np.zeros(W * 32, np.uint32)
+    for i in on:
+        bits[i] = 1
+    words = tl_lib.pack_bits(bits[None, :])
+    back = np.asarray(tl_lib.unpack_bits(jnp.asarray(words), n_pe))[0]
+    assert set(np.flatnonzero(back).tolist()) == on
+    # the packed words carry nothing beyond bit n_pe - 1
+    full = np.asarray(
+        tl_lib.unpack_bits(jnp.asarray(words), W * 32))[0]
+    assert not full[n_pe:].any()
+
+
+@given(st.integers(1, 160).filter(lambda n: n % 32))
+@settings(max_examples=40, deadline=None)
+def test_tail_width_pe_valid_mask(n_pe):
+    """pe_valid_mask sets exactly the first n_pe bits, tail zero."""
+    vm = tl_lib.pe_valid_mask(n_pe)
+    W = tl_lib.n_words(n_pe)
+    assert vm.shape == (W,)
+    assert int(popcount(vm)) == n_pe
+    bits = np.asarray(tl_lib.unpack_bits(jnp.asarray(vm)[None, :],
+                                         W * 32))[0]
+    assert bits[:n_pe].all() and not bits[n_pe:].any()
+
+
+@given(st.integers(1, 130).filter(lambda n: n % 32))
+@settings(max_examples=15, deadline=None)
+def test_tail_bits_never_leak_into_free_count(n_pe):
+    """The padding bits of the last word are never counted free.
+
+    On an all-free timeline the search must report exactly ``n_pe``
+    free units — and a request for ``n_pe + 1`` must be infeasible —
+    for every tail width.  A leak of the word-padding bits into the
+    popcount contraction would break both.
+    """
+    from repro.core import search as search_lib
+
+    tl = tl_lib.empty(16, n_pe)
+    res = search_lib.search(
+        tl, jnp.int32(0), jnp.int32(5), jnp.int32(1000),
+        jnp.int32(n_pe), jnp.int32(0), jnp.int32(0), n_pe=n_pe)
+    assert bool(res.found)
+    assert int(res.n_free) == n_pe
+    over = search_lib.search(
+        tl, jnp.int32(0), jnp.int32(5), jnp.int32(1000),
+        jnp.int32(n_pe + 1), jnp.int32(0), jnp.int32(0), n_pe=n_pe)
+    assert not bool(over.found)
