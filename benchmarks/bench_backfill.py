@@ -26,14 +26,17 @@ import numpy as np
 from benchmarks._measure import (
     PR4_BACKFILL_COST,
     PR4_BACKFILL_DPS,
+    PR5_ADMISSION_HOST,
     PR5_BACKFILL_COST,
     PR5_BACKFILL_DPS,
+    PR6_ADMISSION_HOST,
     PR6_BACKFILL_COST,
     PR6_BACKFILL_DPS,
+    PR9_ADMISSION_HOST,
+    PR9_BACKFILL_COST,
+    PR9_BACKFILL_DPS,
+    host_yardstick,
     median,
-    speedup_vs_pr4,
-    speedup_vs_pr5,
-    speedup_vs_pr6,
 )
 from repro.core import batch as batch_lib
 from repro.core import timeline as tl_lib
@@ -146,25 +149,33 @@ def backfill_throughput(n_jobs: int = 240, n_pe: int = 16,
             "warm_decisions_per_s": round(
                 len(jobs) / max(warm, 1e-9), 1),
         })
+    # cross-PR speedups, machine-normalised: the frozen warm dps are
+    # scaled by this runner's FF host-loop yardstick over the same
+    # era's committed host number (benchmarks._measure; PR 4 rows
+    # were re-measured on the PR 5 runner, so they share its host)
+    yard = host_yardstick()
+    eras = (
+        ("pr4", PR4_BACKFILL_DPS, PR4_BACKFILL_COST,
+         PR5_ADMISSION_HOST),
+        ("pr5", PR5_BACKFILL_DPS, PR5_BACKFILL_COST,
+         PR5_ADMISSION_HOST),
+        ("pr6", PR6_BACKFILL_DPS, PR6_BACKFILL_COST,
+         PR6_ADMISSION_HOST),
+        ("pr9", PR9_BACKFILL_DPS, PR9_BACKFILL_COST,
+         PR9_ADMISSION_HOST),
+    )
     for row in rows:
         base = "none_idle" if row["mode"].endswith("_idle") else "none"
         row["warm_cost_vs_plain"] = round(
             walls[row["mode"]] / max(walls[base], 1e-9), 2)
-        if row["mode"] in PR4_BACKFILL_DPS:
-            row["speedup_vs_pr4"] = speedup_vs_pr4(
-                row["warm_decisions_per_s"],
-                PR4_BACKFILL_DPS[row["mode"]])
-            row["pr4_cost_vs_plain"] = PR4_BACKFILL_COST[row["mode"]]
-        if row["mode"] in PR5_BACKFILL_DPS:
-            row["speedup_vs_pr5"] = speedup_vs_pr5(
-                row["warm_decisions_per_s"],
-                PR5_BACKFILL_DPS[row["mode"]])
-            row["pr5_cost_vs_plain"] = PR5_BACKFILL_COST[row["mode"]]
-        if row["mode"] in PR6_BACKFILL_DPS:
-            row["speedup_vs_pr6"] = speedup_vs_pr6(
-                row["warm_decisions_per_s"],
-                PR6_BACKFILL_DPS[row["mode"]])
-            row["pr6_cost_vs_plain"] = PR6_BACKFILL_COST[row["mode"]]
+        for era, dps, cost, hosts in eras:
+            if row["mode"] not in dps:
+                continue
+            m = yard / max(hosts["FF"], 1e-9)
+            row[f"speedup_vs_{era}"] = round(
+                row["warm_decisions_per_s"]
+                / max(dps[row["mode"]] * m, 1e-9), 2)
+            row[f"{era}_cost_vs_plain"] = cost[row["mode"]]
     by = {r["mode"]: r for r in rows}
     assert by["conservative"]["accepted"] == by["none"]["accepted"], \
         "conservative must be decision-identical to none"

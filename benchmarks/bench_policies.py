@@ -71,81 +71,123 @@ def flex_sweep(n_jobs: int = 2000, seed: int = 0) -> List[Dict]:
 def admission_throughput(n_jobs: int = 240, n_pe: int = 64,
                          seed: int = 0, capacity: int = 32,
                          repeats: int = 5,
+                         index_tile: Optional[int] = 16,
                          out_path: Optional[str] = BENCH_ADMISSION_PATH
                          ) -> List[Dict]:
     """Admissions/sec: per-request loops vs the scanned device path.
 
     Three variants over the same workload and all seven policies: the
     host numpy loop, the per-request device loop (one host round-trip
-    per job), and the fused ``admit_stream`` scan (DESIGN.md §3/§7).
+    per job), and the fused ``admit_stream`` scan (DESIGN.md §3/§7)
+    with the hierarchical availability index attached
+    (``index_tile``, DESIGN.md §12 — decisions are bit-identical to
+    the index-free scan; ``None`` measures the index-free graphs).
     Device variants start at a modest ``capacity`` and rely on the
     grow-once overflow protocol (included in wall time): static shapes
     then track the workload's live records instead of a pessimistic
     preset, which is where the sort-free hot path gets its constant
     factors.  Wall times are warmed-up medians of ``repeats`` runs;
-    each device_stream row carries ``speedup_vs_pr4`` /
-    ``speedup_vs_pr5`` against the frozen prior-PR baselines
-    (:mod:`benchmarks._measure`).
+    each row carries machine-normalised ``speedup_vs_pr4/5/6/9``
+    columns — device_stream over the frozen prior-PR rows scaled by
+    the host-geomean :func:`benchmarks._measure.machine_factor`, so
+    runner speed divides out of the trajectory.
     """
     from benchmarks._measure import (
-        PR4_ADMISSION_STREAM, PR5_ADMISSION_STREAM,
-        PR6_ADMISSION_STREAM, median_wall, speedup_vs_pr4,
-        speedup_vs_pr5, speedup_vs_pr6)
+        PR4_ADMISSION_STREAM, PR5_ADMISSION_HOST, PR5_ADMISSION_STREAM,
+        PR5_STREAM_YARDSTICK_HOST, PR6_ADMISSION_HOST,
+        PR6_ADMISSION_STREAM, PR9_ADMISSION_HOST,
+        PR9_ADMISSION_STREAM, machine_factor, median)
 
     jobs = generate(WorkloadParams(n_jobs=n_jobs, n_pe=n_pe, seed=seed,
                                    u_low=2.0, u_med=4.0, u_hi=6.0))
     jobs = [j for j in jobs if j.n_pe <= n_pe]
+    names = ("host_loop", "device_loop", "device_stream")
+    acc: Dict = {}
+
+    def _run(pol, name) -> float:
+        if name == "host_loop":
+            res = simulate(jobs, n_pe, pol, engine="host")
+        elif name == "device_loop":
+            res = simulate(jobs, n_pe, pol, engine="device",
+                           engine_kwargs={"capacity": capacity})
+        else:
+            res = simulate_batched(jobs, n_pe, pol, capacity=capacity,
+                                   index_tile=index_tile)
+        acc[(pol.value, name)] = res.acceptance_rate
+        return res.wall_seconds
+
+    # warmup round: jit caches + the grow-once overflow fixed point
+    for pol in ALL_POLICIES:
+        for name in names:
+            _run(pol, name)
+    # measurement rounds are policy-major: runner speed drifts
+    # monotonically over a process's life, so measuring each policy's
+    # repeats back-to-back (the old protocol) hands late-ordered
+    # policies a systematically slower runner than early ones — and
+    # than the frozen cross-PR baselines.  Round-robin spreads every
+    # policy and variant uniformly across the process lifetime.
+    # the stream runs are ~20x shorter than the loop variants, so
+    # their medians are jitter-dominated at the same sample count —
+    # oversample them (near-free) to match the loops' precision
+    stream_oversample = 3
+    walls: Dict = {p.value: {n: [] for n in names}
+                   for p in ALL_POLICIES}
+    for _ in range(max(repeats, 1)):
+        for pol in ALL_POLICIES:
+            for name in names:
+                n_samp = (stream_oversample
+                          if name == "device_stream" else 1)
+                for _s in range(n_samp):
+                    walls[pol.value][name].append(_run(pol, name))
     rows: List[Dict] = []
     for pol in ALL_POLICIES:
-        acc = {}
-
-        def _wall(res, name):
-            acc[name] = res.acceptance_rate
-            return res.wall_seconds
-
-        variants = {
-            "host_loop": lambda p=pol: _wall(simulate(
-                jobs, n_pe, p, engine="host"), "host_loop"),
-            "device_loop": lambda p=pol: _wall(simulate(
-                jobs, n_pe, p, engine="device",
-                engine_kwargs={"capacity": capacity}), "device_loop"),
-            "device_stream": lambda p=pol: _wall(simulate_batched(
-                jobs, n_pe, p, capacity=capacity), "device_stream"),
-        }
         row: Dict = {"policy": pol.value}
-        for name, fn in variants.items():
-            wall = median_wall(fn, repeats)
+        for name in names:
+            wall = median(walls[pol.value][name])
             row[f"{name}_adm_per_s"] = round(
                 len(jobs) / max(wall, 1e-9), 1)
-        row["acceptance"] = round(acc["device_stream"], 4)
+        row["acceptance"] = round(acc[(pol.value, "device_stream")], 4)
         row["stream_speedup_vs_device_loop"] = round(
             row["device_stream_adm_per_s"]
             / max(row["device_loop_adm_per_s"], 1e-9), 1)
         row["stream_speedup_vs_host"] = round(
             row["device_stream_adm_per_s"]
             / max(row["host_loop_adm_per_s"], 1e-9), 2)
-        row["speedup_vs_pr4"] = speedup_vs_pr4(
-            row["device_stream_adm_per_s"],
-            PR4_ADMISSION_STREAM[pol.value])
-        row["speedup_vs_pr5"] = speedup_vs_pr5(
-            row["device_stream_adm_per_s"],
-            PR5_ADMISSION_STREAM[pol.value])
-        row["speedup_vs_pr6"] = speedup_vs_pr6(
-            row["device_stream_adm_per_s"],
-            PR6_ADMISSION_STREAM[pol.value])
         rows.append(row)
+    # cross-PR speedups: scale every frozen baseline by this runner's
+    # host-geomean machine factor, then compare the fresh stream rows
+    fresh_hosts = {r["policy"]: r["host_loop_adm_per_s"] for r in rows}
+    eras = (
+        ("speedup_vs_pr4", PR4_ADMISSION_STREAM, PR5_ADMISSION_HOST),
+        ("speedup_vs_pr5", PR5_ADMISSION_STREAM,
+         PR5_STREAM_YARDSTICK_HOST),
+        ("speedup_vs_pr6", PR6_ADMISSION_STREAM, PR6_ADMISSION_HOST),
+        ("speedup_vs_pr9", PR9_ADMISSION_STREAM, PR9_ADMISSION_HOST),
+    )
+    for col, frozen_stream, frozen_hosts in eras:
+        m = machine_factor(fresh_hosts, frozen_hosts)
+        for row in rows:
+            base = frozen_stream[row["policy"]] * m
+            row[col] = round(
+                row["device_stream_adm_per_s"] / max(base, 1e-9), 2)
     if out_path:
         payload = {
             "bench": "admission_throughput",
             "n_jobs": len(jobs), "n_pe": n_pe, "seed": seed,
             "capacity": capacity, "repeats": repeats,
+            "index_tile": index_tile,
             "note": ("admissions/sec, warmed-up median of "
-                     f"{repeats} runs; wall time counts scheduler "
+                     f"{repeats} policy-major round-robin rounds "
+                     "(uniform runner-drift exposure per policy); "
+                     "wall time counts scheduler "
                      "work only, grow-once overflow sizing included; "
                      "device variants start at capacity "
                      f"{capacity} (occupancy-aware, DESIGN.md §7); "
-                     "speedup_vs_pr4/pr5 compare device_stream to the "
-                     "frozen prior-PR rows"),
+                     f"device_stream runs index_tile={index_tile} "
+                     "(DESIGN.md §12, decisions bit-identical); "
+                     "speedup_vs_pr4/5/6/9 compare device_stream to "
+                     "the frozen prior-PR rows scaled by the "
+                     "host-geomean machine factor"),
             "rows": rows,
         }
         with open(out_path, "w") as fh:
@@ -179,7 +221,7 @@ def sweep_throughput(n_jobs: int = 120, n_pe: int = 64,
     """
     from benchmarks._measure import (
         PR4_SWEEP_CELLS, PR5_SWEEP_CELLS, PR6_SWEEP_CELLS,
-        median_wall, speedup_vs_pr4, speedup_vs_pr5, speedup_vs_pr6)
+        PR9_SWEEP_CELLS, median_wall)
     from repro.sim.workload import generate_filtered
 
     spec = GridSpec(
@@ -222,15 +264,21 @@ def sweep_throughput(n_jobs: int = 120, n_pe: int = 64,
             "wall_s": round(wall, 4),
             "cells_per_s": round(len(cells) / max(wall, 1e-9), 2),
         })
+    # cross-PR speedups, machine-normalised by the host-loop variant
+    # (the one yardstick both runners executed unchanged)
+    fresh_host = len(cells) / max(walls["host_loop"], 1e-9)
+    eras = (("speedup_vs_pr4", PR4_SWEEP_CELLS),
+            ("speedup_vs_pr5", PR5_SWEEP_CELLS),
+            ("speedup_vs_pr6", PR6_SWEEP_CELLS),
+            ("speedup_vs_pr9", PR9_SWEEP_CELLS))
     for row in rows:
         row["speedup_vs_host_loop"] = round(
             walls["host_loop"] / max(walls[row["variant"]], 1e-9), 2)
-        row["speedup_vs_pr4"] = speedup_vs_pr4(
-            row["cells_per_s"], PR4_SWEEP_CELLS[row["variant"]])
-        row["speedup_vs_pr5"] = speedup_vs_pr5(
-            row["cells_per_s"], PR5_SWEEP_CELLS[row["variant"]])
-        row["speedup_vs_pr6"] = speedup_vs_pr6(
-            row["cells_per_s"], PR6_SWEEP_CELLS[row["variant"]])
+        for col, frozen in eras:
+            m = fresh_host / max(frozen["host_loop"], 1e-9)
+            row[col] = round(
+                row["cells_per_s"] / max(frozen[row["variant"]] * m,
+                                         1e-9), 2)
     if out_path:
         payload = {
             "bench": "sweep_throughput",
@@ -245,8 +293,9 @@ def sweep_throughput(n_jobs: int = 120, n_pe: int = 64,
                      f"{repeats} runs; wall time counts scheduler/"
                      "dispatch work only, grow-once overflow sizing "
                      "included (device variants start at capacity "
-                     f"{capacity}); speedup_vs_pr4/pr5 compare to "
-                     "the frozen prior-PR rows"),
+                     f"{capacity}); speedup_vs_pr4/5/6/9 compare to "
+                     "the frozen prior-PR rows scaled by the "
+                     "host-loop machine factor"),
             "rows": rows,
         }
         with open(out_path, "w") as fh:

@@ -65,8 +65,9 @@ def service_throughput(n_jobs: int = 240, n_pe: int = 64,
     prior-PR baselines (:mod:`benchmarks._measure`).
     """
     from benchmarks._measure import (
-        PR4_SERVICE_WARM, PR5_SERVICE_WARM, PR6_SERVICE_WARM, median,
-        speedup_vs_pr4, speedup_vs_pr5, speedup_vs_pr6)
+        PR4_SERVICE_WARM, PR5_ADMISSION_HOST, PR5_SERVICE_WARM,
+        PR6_ADMISSION_HOST, PR6_SERVICE_WARM, PR9_ADMISSION_HOST,
+        PR9_SERVICE_WARM, host_yardstick, median)
 
     jobs = sorted(
         [j for j in generate(WorkloadParams(
@@ -122,16 +123,21 @@ def service_throughput(n_jobs: int = 240, n_pe: int = 64,
             "warm_req_per_s": round(len(jobs) / max(warm, 1e-9), 1),
             "accepted": fn.accepted,
         })
+    # machine-normalised cross-PR speedups (see bench_backfill)
+    yard = host_yardstick()
+    eras = (("speedup_vs_pr4", PR4_SERVICE_WARM, PR5_ADMISSION_HOST),
+            ("speedup_vs_pr5", PR5_SERVICE_WARM, PR5_ADMISSION_HOST),
+            ("speedup_vs_pr6", PR6_SERVICE_WARM, PR6_ADMISSION_HOST),
+            ("speedup_vs_pr9", PR9_SERVICE_WARM, PR9_ADMISSION_HOST))
     for row in rows:
         row["cold_speedup_vs_rescan"] = round(
             walls["rescan_per_group"] / max(
                 walls[row["variant"]], 1e-9), 2)
-        row["speedup_vs_pr4"] = speedup_vs_pr4(
-            row["warm_req_per_s"], PR4_SERVICE_WARM[row["variant"]])
-        row["speedup_vs_pr5"] = speedup_vs_pr5(
-            row["warm_req_per_s"], PR5_SERVICE_WARM[row["variant"]])
-        row["speedup_vs_pr6"] = speedup_vs_pr6(
-            row["warm_req_per_s"], PR6_SERVICE_WARM[row["variant"]])
+        for col, warm, hosts in eras:
+            m = yard / max(hosts["FF"], 1e-9)
+            row[col] = round(
+                row["warm_req_per_s"]
+                / max(warm[row["variant"]] * m, 1e-9), 2)
     assert rows[0]["accepted"] == rows[1]["accepted"], \
         "streaming variants diverged"
     if out_path:

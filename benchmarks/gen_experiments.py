@@ -2,11 +2,17 @@
 the dry-run artifacts.  Usage:
 
     PYTHONPATH=src python -m benchmarks.gen_experiments > /tmp/tables.md
+
+Refresh the artifacts first with ``python -m repro.launch.dryrun``;
+the ``experiments_tables`` section of :mod:`benchmarks.run` reports
+each table's row count (or that the artifacts are missing) without
+dumping the markdown into the CSV stream.
 """
 from __future__ import annotations
 
 import json
 from pathlib import Path
+from typing import Dict, List
 
 ART = Path("artifacts/dryrun")
 
@@ -70,6 +76,24 @@ def roofline_table(mesh: str = "single") -> str:
             f"**{t['dominant']}** | {a['model_flops']:.3e} | "
             f"{t['useful_ratio']:.3f} | {lever} |")
     return "\n".join(lines)
+
+
+def tables() -> List[Dict]:
+    """Row-per-table summary for the benchmark harness.
+
+    The markdown itself goes to stdout via ``__main__``; the harness
+    section only reports what would be generated, so a tree without
+    dry-run artifacts still lists cleanly.
+    """
+    if not ART.is_dir() or not any(ART.glob("*.json")):
+        return [{"table": "dryrun", "status": "no artifacts "
+                 "(run python -m repro.launch.dryrun)", "data_rows": 0}]
+    specs = (("dryrun", dryrun_table()),
+             ("roofline_single", roofline_table("single")),
+             ("roofline_multi", roofline_table("multi")))
+    return [{"table": name, "status": "ok",
+             "data_rows": max(len(md.splitlines()) - 2, 0)}
+            for name, md in specs]
 
 
 if __name__ == "__main__":

@@ -1,7 +1,9 @@
 """Benchmark harness: one section per paper table/figure + roofline.
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run --list
     PYTHONPATH=src python -m benchmarks.run --check [--tolerance T]
+    PYTHONPATH=src python -m benchmarks.run --profile [--profile-dir D]
 
 Prints CSV blocks: ``name,...columns`` per section.  ``--full`` uses
 the paper's 10^4-job workloads (slow); default is a reduced size that
@@ -17,10 +19,17 @@ admission (plus the hard zero on idle metrics-poll device fetches)
 and the multi-resource timeline cost curve (R=1 parity overhead and
 the R=4 plane cost vs the legacy single-plane session) — against the
 committed
-``BENCH_*.json`` files with a tolerance band.  Ratios only:
+``BENCH_*.json`` files with a tolerance band, plus the hierarchical-
+index floors: per-policy machine-normalised ``speedup_vs_pr5 >= 1.0``
+and the index on-vs-off ratios (standard-stream floor, saturated
+early-reject speedup, BENCH_index.json).  Ratios only:
 absolute wall times are meaningless on shared runners, but a device
 path that regresses from 3x-faster-than-host to slower-than-host
 moves its ratio far beyond any plausible machine noise.
+
+``--profile`` writes a ``jax.profiler`` trace (one warmed
+``admit_stream`` + one vmapped sweep-grid dispatch) to
+``--profile-dir`` for the CI artifact upload.
 """
 from __future__ import annotations
 
@@ -62,8 +71,9 @@ def check(tolerance: float) -> int:
     are tighter than shared-runner noise on tens-of-ms walls.  No
     absolute wall-time asserts anywhere.
     """
-    from benchmarks import bench_backfill, bench_fleet, bench_mesh, \
-        bench_multires, bench_policies, bench_service, bench_tenancy
+    from benchmarks import bench_backfill, bench_fleet, bench_index, \
+        bench_mesh, bench_multires, bench_policies, bench_service, \
+        bench_tenancy
 
     failures = []
     checks = []
@@ -102,6 +112,25 @@ def check(tolerance: float) -> int:
         r["device_stream_adm_per_s"] / max(
             r["host_loop_adm_per_s"], 1e-9) for r in ref_rows)
     gate("admission/median:stream_vs_host", fresh, committed, "ge")
+
+    # -- admission: per-policy machine-normalised PR 5 floor ----------
+    # the PR 5 regression rows must stay recovered: every freshly
+    # measured speedup_vs_pr5 (host-geomean normalised, so runner
+    # speed cancels) holds the 1.0 floor
+    for r in rows:
+        gate(f"admission/{r['policy']}:speedup_vs_pr5",
+             r["speedup_vs_pr5"], 1.0, "ge")
+
+    # -- index: on-vs-off ratio floors (BENCH_index.json) -------------
+    # standard stream may not dip below the per-policy floor; the
+    # saturated early-reject cell must keep its speedup.  Both are
+    # same-machine A/B ratios, immune to runner speed.
+    idx_rows = bench_index.index_throughput(repeats=3, out_path=None)
+    for r in idx_rows:
+        label = (f"index/{r['policy']}:on_vs_off"
+                 if r["cell"] == "standard"
+                 else "index/saturated:on_vs_off")
+        gate(label, r["ratio_on_vs_off"], r["floor"], "ge")
 
     # -- sweep: vmapped grid vs host loop -----------------------------
     ref = {r["variant"]: r for r in _committed("sweep")["rows"]}
@@ -222,24 +251,68 @@ def check(tolerance: float) -> int:
     return len(failures)
 
 
+def profile(outdir: str) -> None:
+    """Capture a ``jax.profiler`` trace of the two hot dispatch paths.
+
+    One warmed ``admit_stream`` scan (the standard admission workload,
+    index on) and one warmed vmapped sweep-grid dispatch — both run
+    once outside the trace so compilation and the grow-once overflow
+    protocol settle, then once inside it.  The trace directory is the
+    CI ``perf-profile`` artifact; open it with any Perfetto/
+    TensorBoard trace viewer.
+    """
+    import jax
+
+    from repro.core.types import ALL_POLICIES, Policy
+    from repro.sim import (GridSpec, WorkloadParams, generate,
+                           simulate_batched, simulate_grid)
+
+    jobs = [j for j in generate(WorkloadParams(
+        n_jobs=240, n_pe=64, seed=0,
+        u_low=2.0, u_med=4.0, u_hi=6.0)) if j.n_pe <= 64]
+    spec = GridSpec(
+        policies=ALL_POLICIES, arrival_factors=(1.0,), seeds=(0,),
+        flex_factors=(3.0,),
+        base=WorkloadParams(u_low=2.0, u_med=4.0, u_hi=6.0),
+        n_pe=64, n_jobs=120)
+    # warm: compile + grow to steady-state shapes
+    simulate_batched(jobs, 64, Policy.PE_W, capacity=32, index_tile=16)
+    simulate_grid(spec, capacity=32)
+    with jax.profiler.trace(outdir):
+        simulate_batched(jobs, 64, Policy.PE_W, capacity=32,
+                         index_tile=16)
+        simulate_grid(spec, capacity=32)
+    print(f"# profiler trace written to {outdir}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale 10^4-job sweeps")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--list", action="store_true",
+                    help="print every section name and exit")
     ap.add_argument("--check", action="store_true",
                     help="ratio-gate regression mode vs BENCH_*.json")
     ap.add_argument("--tolerance", type=float, default=0.5,
                     help="allowed relative ratio drift in --check")
+    ap.add_argument("--profile", action="store_true",
+                    help="write a jax.profiler trace of one warmed "
+                         "admit_stream + sweep-grid dispatch")
+    ap.add_argument("--profile-dir", default="artifacts/profile",
+                    help="trace output directory for --profile")
     args = ap.parse_args()
     if args.check:
         sys.exit(1 if check(args.tolerance) else 0)
+    if args.profile:
+        profile(args.profile_dir)
+        return
     n_jobs = 10_000 if args.full else 2_000
     t0 = time.time()
 
     from benchmarks import bench_backfill, bench_datastructure, \
-        bench_fleet, bench_mesh, bench_multires, bench_policies, \
-        bench_service, bench_tenancy
+        bench_fleet, bench_index, bench_mesh, bench_multires, \
+        bench_policies, bench_service, bench_tenancy, gen_experiments
     from benchmarks.bench_roofline import ART_OPT, roofline_rows
 
     sections = {
@@ -275,6 +348,9 @@ def main() -> None:
         "fleet_routing":
             lambda: bench_fleet.fleet_routing(
                 n_req=256 if args.full else 128),
+        "index_throughput":
+            lambda: bench_index.index_throughput(
+                n_jobs=600 if args.full else 240),
         "datastructure_op_costs":
             lambda: bench_datastructure.op_costs(
                 n_jobs=800 if args.full else 300),
@@ -287,7 +363,13 @@ def main() -> None:
             lambda: roofline_rows("multi"),
         "roofline_optimized_single_pod":
             lambda: roofline_rows("single", ART_OPT),
+        "experiments_tables":
+            lambda: gen_experiments.tables(),
     }
+    if args.list:
+        for name in sections:
+            print(name)
+        return
     for name, fn in sections.items():
         if args.only and args.only != name:
             continue

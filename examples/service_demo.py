@@ -10,6 +10,13 @@ the device never re-pads and never recompiles after the first chunk,
 no matter how the groups are sized.
 
     PYTHONPATH=src python examples/service_demo.py [--n-jobs 400]
+        [--index-tile T]
+
+``--index-tile`` attaches the hierarchical availability index
+(DESIGN.md §12) to the session's timeline: admission decisions are
+bit-identical either way (the index only prunes provably hopeless
+work), which the CI smoke verifies by diffing this demo's output
+between an indexed and an index-free run.
 """
 from __future__ import annotations
 
@@ -28,6 +35,10 @@ def main() -> None:
     ap.add_argument("--n-pe", type=int, default=64)
     ap.add_argument("--chunk", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--index-tile", type=int, default=None,
+                    help="tile size for the hierarchical availability "
+                         "index (None = index off; decisions are "
+                         "identical either way)")
     args = ap.parse_args()
     random.seed(args.seed)
 
@@ -38,10 +49,11 @@ def main() -> None:
 
     svc = ReservationService(ServiceConfig(
         n_pe=args.n_pe, policy=Policy.PE_W, chunk_size=args.chunk,
-        ring_capacity=4 * args.chunk))
+        ring_capacity=4 * args.chunk, index_tile=args.index_tile))
     session = svc.session()
     print(f"service up: n_pe={args.n_pe}, policy=PE_W, "
-          f"chunk={args.chunk} (fixed admission shape)\n")
+          f"chunk={args.chunk} (fixed admission shape), "
+          f"index_tile={args.index_tile}\n")
 
     # -- arrivals in irregular groups, decisions per group -------------
     compiles_after_warmup = None

@@ -146,6 +146,16 @@ class ServiceConfig:
         masked out of every fit test).  Both are device-engine
         features and exclusive with ``n_partitions > 1``.
 
+    Hierarchical availability index (DESIGN.md §12)
+        ``index_tile`` attaches per-tile availability summaries to
+        every device timeline: candidate pruning, early-reject
+        admission and fleet probe prefiltering consume them, with
+        decisions provably bit-identical to the index-free path
+        (conservative pruning).  A power of two dividing ``capacity``
+        (tile size in timeline records); ``None`` (default) adds no
+        pytree leaves — the compiled graphs are exactly the ones an
+        index-free build traces.
+
     ``engine_kwargs`` forwards host/list-engine constructor knobs
     (e.g. ``HostScheduler``'s ``candidate_chunk``); device knobs are
     first-class config fields.
@@ -173,6 +183,7 @@ class ServiceConfig:
     tenants: Optional[Any] = None
     resources: Optional[Tuple[int, ...]] = None
     machine_sizes: Optional[Tuple[int, ...]] = None
+    index_tile: Optional[int] = None
     engine_kwargs: Optional[Mapping[str, Any]] = None
 
     def __post_init__(self):
@@ -360,6 +371,22 @@ class ServiceConfig:
                 raise ValueError(
                     f"machine_sizes entries must be in (0, n_pe="
                     f"{self.n_pe}]: got {bad}")
+        if self.index_tile is not None:
+            it = int(self.index_tile)
+            object.__setattr__(self, "index_tile", it)
+            if self.engine != "device":
+                raise ValueError(
+                    "the availability index lives in the device state "
+                    "pytree; use engine='device'")
+            if it < 1 or (it & (it - 1)) != 0:
+                raise ValueError(
+                    f"index_tile must be a positive power of two "
+                    f"(so every grown capacity stays divisible): "
+                    f"got {it}")
+            if self.capacity % it:
+                raise ValueError(
+                    f"capacity ({self.capacity}) must be divisible "
+                    f"by index_tile ({it})")
 
     @property
     def rspec(self):

@@ -544,7 +544,8 @@ class _StreamBackend(_BackendBase):
             pending_capacity=cfg.pending_capacity,
             park_capacity=cfg.park_capacity,
             tenants=cfg.tenants, rspec=cfg.rspec,
-            live_units=mu[0] if mu is not None else None)
+            live_units=mu[0] if mu is not None else None,
+            index_tile=cfg.index_tile)
         self._rspec = cfg.rspec
         self._n_tenants = cfg.tenants.n_tenants if cfg.tenancy else 0
         self._grace = cfg.tenants.grace if cfg.tenancy else None
@@ -1045,7 +1046,8 @@ class _EnsembleBackend(_BackendBase):
         states = ens_lib.init_ensemble(
             cfg.lanes, cfg.capacity, cfg.n_pe, cfg.pending_capacity,
             cfg.park_capacity, rspec=cfg.rspec,
-            machine_units=cfg.machine_units)
+            machine_units=cfg.machine_units,
+            index_tile=cfg.index_tile)
         self._lane_specs = cfg.lane_tenant_specs
         if self._lane_specs is not None:
             # per-lane tables stack to one [E, ...] pytree and shard
@@ -1483,7 +1485,8 @@ class _PartitionBackend(_BackendBase):
             pending_capacity=cfg.pending_capacity,
             use_kernel=cfg.use_kernel, placement=cfg.placement,
             park_capacity=cfg.park_capacity, backfill=bf,
-            auto_release=cfg.auto_release)
+            auto_release=cfg.auto_release,
+            index_tile=cfg.index_tile)
         # partitions enforce tenancy at the host router (the lane
         # states keep tenants=None): a HostTenantAccounts gate before
         # routing, and a completion ledger attributing each held

@@ -1,0 +1,182 @@
+"""Hierarchical availability index: per-tile timeline summaries (DESIGN.md §12).
+
+The paper's central claim is a data structure "that enables efficient
+search and update operations" — yet the flat packed-bitmask timeline
+makes every search contract all ``S`` records.  This module adds the
+classic augmented-summary fix (cf. the Enhanced Red-Black-Tree paper,
+PAPERS.md): the ``S`` timeline records are grouped into ``NT = S / T``
+tiles of ``T`` consecutive records, and three tiny summary arrays ride
+next to the timeline:
+
+``idx_occ : uint32[NT, W]``
+    bitwise OR of the tile's occupancy rows — the union of every busy
+    unit over the tile's span.
+``idx_minfree : int32[NT, R]``
+    ``units[r] - popcount_r(idx_occ[k])``: an *upper bound* on the free
+    units any window fully containing tile ``k`` can see (the window's
+    busy union is a superset of the tile OR), per resource plane.
+``idx_maxfree : int32[NT, R]``
+    max over the tile's rows of the row's free units: an upper bound
+    on the free units of any window that covers *at least one* row of
+    tile ``k`` (a window's free count never exceeds any covering
+    row's).
+
+Both bounds are *conservative by construction*: they only ever prove
+infeasibility that the exact search would also find, so consumers
+(candidate pruning, early-reject admission, fleet probe prefiltering —
+see :mod:`repro.core.search`) keep decisions bit-identical.
+
+Padding rows (``times == T_INF``, ``occ == 0``) contribute nothing to
+``idx_occ`` and a full-free row to ``idx_maxfree`` — exactly the
+semantics of the all-free region they stand for, so partially-padded
+tail tiles need no special casing.
+
+:class:`IndexSpec` is static configuration and registers as a zero-leaf
+pytree node (the :class:`~repro.core.resources.ResourceSpec` idiom), so
+an indexed timeline adds exactly three array leaves and ``ispec=None``
+timelines keep their legacy leaf set.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_WORD = 32
+
+
+def _n_words(units: int) -> int:
+    return (units + _WORD - 1) // _WORD
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexSpec:
+    """Static layout of the hierarchical availability index.
+
+    ``tile`` records per summary tile (a power of two, so every grown
+    power-of-two capacity stays divisible), plus the per-plane unit
+    counts and packed word widths needed to popcount summaries without
+    reaching back to a :class:`~repro.core.resources.ResourceSpec`
+    (scalar timelines have none).  Frozen and hashable: equal specs are
+    interchangeable static jit arguments.
+    """
+
+    tile: int
+    units: Tuple[int, ...]
+    words_per: Tuple[int, ...]
+
+    def __post_init__(self) -> None:
+        tile = int(self.tile)
+        if tile < 1 or (tile & (tile - 1)) != 0:
+            raise ValueError(
+                f"index tile must be a positive power of two: {tile}")
+        units = tuple(int(u) for u in self.units)
+        words = tuple(int(w) for w in self.words_per)
+        if not units or len(units) != len(words):
+            raise ValueError(
+                f"units/words_per mismatch: {units} vs {words}")
+        object.__setattr__(self, "tile", tile)
+        object.__setattr__(self, "units", units)
+        object.__setattr__(self, "words_per", words)
+
+    @property
+    def R(self) -> int:
+        return len(self.units)
+
+    @property
+    def total_words(self) -> int:
+        return sum(self.words_per)
+
+    @property
+    def word_offsets(self) -> Tuple[int, ...]:
+        offs, acc = [], 0
+        for w in self.words_per:
+            offs.append(acc)
+            acc += w
+        return tuple(offs)
+
+    def plane_slice(self, r: int) -> slice:
+        off = self.word_offsets[r]
+        return slice(off, off + self.words_per[r])
+
+    def n_tiles(self, capacity: int) -> int:
+        if capacity % self.tile != 0:
+            raise ValueError(
+                f"capacity {capacity} not divisible by tile {self.tile}")
+        return capacity // self.tile
+
+
+def make_index_spec(tile: int, n_pe: int, rspec=None) -> IndexSpec:
+    """Build the spec for a scalar (``rspec=None``) or vector layout."""
+    if rspec is None:
+        return IndexSpec(tile=tile, units=(int(n_pe),),
+                         words_per=(_n_words(int(n_pe)),))
+    return IndexSpec(tile=tile, units=tuple(rspec.units),
+                     words_per=tuple(rspec.words_per))
+
+
+def plane_counts(words: jax.Array, ispec: IndexSpec) -> jax.Array:
+    """Per-plane popcount of packed rows: ``[..., W] -> int32[..., R]``."""
+    c = jax.lax.population_count(words)
+    return jnp.stack(
+        [jnp.sum(c[..., ispec.plane_slice(r)], axis=-1)
+         for r in range(ispec.R)], axis=-1).astype(jnp.int32)
+
+
+def build_summaries(times: jax.Array, occ: jax.Array, ispec: IndexSpec):
+    """Canonical summaries: ``(idx_occ, idx_minfree, idx_maxfree)``.
+
+    The maintenance in :mod:`repro.core.timeline` applies exactly this
+    to the post-update rows (a handful of fused popcount/reduce ops at
+    practical tile counts), asserted by the property suite in
+    ``tests/test_availindex.py``.
+    """
+    S, W = occ.shape
+    T = ispec.tile
+    NT = ispec.n_tiles(S)
+    units = jnp.asarray(ispec.units, jnp.int32)
+    occ3 = occ.reshape(NT, T, W)
+    idx_occ = jax.lax.reduce(
+        occ3, np.uint32(0), jax.lax.bitwise_or, (1,))       # [NT, W]
+    idx_minfree = units[None, :] - plane_counts(idx_occ, ispec)
+    row_free = units[None, :] - plane_counts(occ, ispec)    # [S, R]
+    idx_maxfree = jnp.max(row_free.reshape(NT, T, ispec.R), axis=1)
+    return idx_occ, idx_minfree, idx_maxfree
+
+
+def empty_summaries(capacity: int, ispec: IndexSpec):
+    """Summaries of an all-free timeline (every row is padding)."""
+    NT = ispec.n_tiles(capacity)
+    units = jnp.asarray(ispec.units, jnp.int32)
+    return (jnp.zeros((NT, ispec.total_words), jnp.uint32),
+            jnp.broadcast_to(units[None, :], (NT, ispec.R)),
+            jnp.broadcast_to(units[None, :], (NT, ispec.R)))
+
+
+def plane_deficit(ispec: IndexSpec,
+                  valid_mask: Optional[jax.Array]) -> jax.Array:
+    """int32[R]: nominal units minus this lane's schedulable units.
+
+    Summaries store *nominal* free counts (``units[r]`` minus busy
+    bits); the search-side free counts are relative to the lane's
+    ``valid_mask``.  Occupancy is always a subset of the valid mask
+    (timeline invariant), so the two differ by exactly this constant
+    per plane, and summary bounds adjust by subtracting it.
+    """
+    units = jnp.asarray(ispec.units, jnp.int32)
+    if valid_mask is None:
+        return jnp.zeros_like(units)
+    return units - plane_counts(valid_mask, ispec)
+
+
+# Zero-leaf pytree registration (the ResourceSpec idiom): the spec is
+# its own aux data, so it lives in the treedef — static under jit,
+# invisible to tree_map / donation / sharding.
+jax.tree_util.register_pytree_node(
+    IndexSpec,
+    lambda s: ((), s),
+    lambda aux, _: aux,
+)

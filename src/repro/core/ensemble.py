@@ -38,7 +38,8 @@ def init_ensemble(n_ensemble: int, capacity: int, n_pe: int,
                   pending_capacity: int = 256,
                   park_capacity: int = 0,
                   tenants=None, rspec=None,
-                  machine_units=None) -> SchedulerState:
+                  machine_units=None,
+                  index_tile=None) -> SchedulerState:
     """E fresh all-free lanes as one stacked state pytree.
 
     ``tenants`` is an optional single-lane
@@ -50,10 +51,14 @@ def init_ensemble(n_ensemble: int, capacity: int, n_pe: int,
     ``machine_units`` — one live-unit tuple per lane — then shrinks
     each lane's valid mask for heterogeneous machine sizes, all lanes
     keeping the same padded word shape.
+
+    ``index_tile`` attaches the hierarchical availability index
+    (DESIGN.md §12) to every lane; the summary leaves broadcast and
+    shard like any other timeline leaf.
     """
     one = tl_lib.init_state(capacity, n_pe, pending_capacity,
                             park_capacity, tenants=tenants,
-                            rspec=rspec)
+                            rspec=rspec, index_tile=index_tile)
     out = jax.tree_util.tree_map(
         lambda x: jnp.broadcast_to(x, (n_ensemble,) + x.shape), one)
     if machine_units is not None:

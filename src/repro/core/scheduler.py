@@ -43,7 +43,8 @@ class DeviceEngine:
     def __init__(self, n_pe: int, capacity: int = 256,
                  use_kernel: bool = False, bucketing: bool = True,
                  pending_capacity: int = 256, park_capacity: int = 0,
-                 tenants=None, rspec=None, live_units=None):
+                 tenants=None, rspec=None, live_units=None,
+                 index_tile: Optional[int] = None):
         self.n_pe = n_pe
         self.use_kernel = use_kernel
         # §Perf iteration A3: the dense search costs O(P*S*n_pe) at the
@@ -62,7 +63,8 @@ class DeviceEngine:
         self.state = tl_lib.init_state(capacity, n_pe, pending_capacity,
                                        park_capacity, tenants=table,
                                        rspec=rspec,
-                                       live_units=live_units)
+                                       live_units=live_units,
+                                       index_tile=index_tile)
 
     # -- helpers -------------------------------------------------------
     @property
@@ -107,6 +109,20 @@ class DeviceEngine:
         while k < self._n_valid:
             k *= 2
         k = min(k, self.tl.capacity)
+        ispec = self.tl.ispec
+        if ispec is not None and k % ispec.tile == 0:
+            # prefix tiles summarize the identical prefix rows, so the
+            # sliced index is the exact index of the sliced timeline
+            nt = k // ispec.tile
+            return tl_lib.Timeline(
+                times=self.tl.times[:k], occ=self.tl.occ[:k],
+                idx_occ=self.tl.idx_occ[:nt],
+                idx_minfree=self.tl.idx_minfree[:nt],
+                idx_maxfree=self.tl.idx_maxfree[:nt],
+                ispec=ispec)
+        # tile larger than the bucket: search the bucket index-free
+        # (conservative pruning means decisions are identical either
+        # way; each bucket size compiles its own graph regardless)
         return tl_lib.Timeline(times=self.tl.times[:k],
                                occ=self.tl.occ[:k])
 

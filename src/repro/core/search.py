@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import availindex as idx_lib
 from repro.core import policies as policies_lib
 from repro.core import timeline as tl_lib
 from repro.core.timeline import Timeline
@@ -91,6 +92,88 @@ def candidate_starts(tl: Timeline, t_r: jax.Array, t_du: jax.Array,
     dest = jnp.where(keep, jnp.cumsum(keep) - 1, P)
     return jnp.full((P + 1,), T_INF, jnp.int32).at[dest].set(
         jnp.where(keep, cand, T_INF))[:P]
+
+
+def _index_demand(ispec, n_req: jax.Array,
+                  demand_tail: Optional[jax.Array]) -> jax.Array:
+    """int32[R] full per-plane demand vector for index bounds."""
+    head = jnp.asarray(n_req, jnp.int32)[None]
+    if ispec.R == 1 or demand_tail is None:
+        return jnp.concatenate(
+            [head, jnp.zeros((ispec.R - 1,), jnp.int32)])
+    return jnp.concatenate(
+        [head, jnp.asarray(demand_tail, jnp.int32)])
+
+
+def summary_reject(tl: Timeline, t_r: jax.Array, t_du: jax.Array,
+                   t_dl: jax.Array, demand: jax.Array,
+                   deficit: jax.Array) -> jax.Array:
+    """Conservative whole-request infeasibility proof (DESIGN.md §12).
+
+    True only when *no* window ``[s, s + t_du)`` with ``s`` in
+    ``[t_r, t_dl - t_du]`` can be feasible, so the caller may skip the
+    full search and emit the exact rejected result.  Two proofs:
+
+    1. capacity: some plane demands more units than the lane has;
+    2. tile max-free: with ``t_r >= times[0]``, every window start
+       lands inside some record's interval, that record's tile
+       intersects the span ``[t_r, t_dl)``, and a window's free count
+       never exceeds a covering row's — so if *every* tile
+       intersecting the span proves ``maxfree - deficit < demand`` on
+       some plane, every window is infeasible.
+
+    An empty timeline (``times[0] == T_INF``) or a window reaching
+    past the last record (whose all-free row summarises to
+    ``maxfree == units``) never rejects — conservativeness needs no
+    special cases.
+    """
+    ispec = tl.ispec
+    S, T = tl.capacity, ispec.tile
+    NT = S // T
+    units = jnp.asarray(ispec.units, jnp.int32)
+    lo = jnp.asarray(t_r, jnp.int32)
+    hi = jnp.asarray(t_dl, jnp.int32) - jnp.asarray(t_du, jnp.int32)
+    cap_reject = jnp.any(demand > units - deficit)
+    tile_t0 = tl.times.reshape(NT, T)[:, 0]
+    tile_end = jnp.concatenate(
+        [tile_t0[1:], jnp.array([T_INF], jnp.int32)])
+    intersect = (tile_t0 < jnp.asarray(t_dl, jnp.int32)) \
+        & (tile_end > lo)
+    bad = jnp.any(tl.idx_maxfree - deficit[None, :]
+                  < demand[None, :], axis=1)              # [NT]
+    guard = (hi >= lo) & (tl.times[0] <= lo)
+    tile_reject = (guard & jnp.any(intersect)
+                   & jnp.all(~intersect | bad))
+    return cap_reject | tile_reject
+
+
+def prune_candidates(tl: Timeline, starts: jax.Array, t_du: jax.Array,
+                     demand: jax.Array,
+                     deficit: jax.Array) -> jax.Array:
+    """Mask summary-infeasible candidates to the ``T_INF`` sentinel.
+
+    A candidate window fully containing tile ``k`` unions at least
+    ``idx_occ[k]`` into its busy mask, so its free count is bounded by
+    ``idx_minfree[k] - deficit`` per plane; any contained tile proving
+    ``< demand`` makes the candidate truly infeasible.  Conservative:
+    pruned candidates could never win selection, so decisions are
+    bit-identical — and candidate 0 (the all-infeasible fallback the
+    rejected-decision fields report) is never pruned.
+    """
+    ispec = tl.ispec
+    S, T = tl.capacity, ispec.tile
+    NT = S // T
+    a = jnp.minimum(starts, T_INF - t_du)
+    b = a + t_du
+    tile_last = tl.times.reshape(NT, T)[:, -1]
+    tile_nxt0 = tl_lib.next_times(tl).reshape(NT, T)[:, 0]
+    contained = (tile_last[None, :] < b[:, None]) \
+        & (tile_nxt0[None, :] > a[:, None])               # [P, NT]
+    bad = jnp.any(tl.idx_minfree - deficit[None, :]
+                  < demand[None, :], axis=1)              # [NT]
+    prune = jnp.any(contained & bad[None, :], axis=1)
+    keep0 = jnp.arange(starts.shape[0]) > 0
+    return jnp.where(prune & keep0, T_INF, starts)
 
 
 def availability_rectangles(
@@ -245,14 +328,97 @@ def search(
     keep scoring the plane-0 ``n_free``, and the winning mask spans
     all planes.  ``valid_mask`` (default: the spec's full layout)
     carries per-lane machine sizes.
+
+    An indexed timeline (``tl.ispec`` set, DESIGN.md §12) adds two
+    conservative fast paths: a whole-search early-reject ``lax.cond``
+    that proves no feasible window exists and emits the exact
+    rejected result without enumerating candidates (the dominant win
+    on saturated streams — and, vmapped, the fleet probe's lane
+    prefilter), and — on the kernel path only — summary pruning that
+    masks provably-infeasible candidates to the ``T_INF`` sentinel so
+    the availscan kernels' data-driven tile skip drops their tiles
+    (the jnp reference path evaluates every candidate slot at fixed
+    shape, so pruning there saves nothing).  Both are conservative
+    (summary-infeasible implies truly infeasible), so every result
+    stays bit-identical to the index-free search.
     """
-    starts = candidate_starts(tl, t_r, t_du, t_dl)
     if rspec is not None:
         if valid_mask is None:
             valid_mask = jnp.asarray(rspec.valid_mask_np())
         if demand_tail is None:
             demand_tail = jnp.zeros((rspec.R - 1,), jnp.int32)
         demand_tail = jnp.asarray(demand_tail, jnp.int32)
+    if tl.ispec is not None:
+        demand_vec = _index_demand(tl.ispec, n_req, demand_tail)
+        deficit = idx_lib.plane_deficit(tl.ispec, valid_mask)
+        reject = summary_reject(tl, t_r, t_du, t_dl, demand_vec,
+                                deficit)
+
+        def _rejected(_):
+            # bit-exact cheap branch: selection over an all-infeasible
+            # candidate set falls back to index 0, whose start is the
+            # minimum live candidate — min(t_r, t_dl - t_du) — and the
+            # rejected Decision reports that candidate's rectangle
+            starts0 = jnp.minimum(
+                jnp.asarray(t_r, jnp.int32),
+                jnp.asarray(t_dl, jnp.int32)
+                - jnp.asarray(t_du, jnp.int32))[None]
+            rects = availability_rectangles(
+                tl, starts0, t_du, t_now, n_pe, rspec=rspec,
+                valid_mask=valid_mask)
+            return SearchResult(
+                found=jnp.asarray(False),
+                t_s=starts0[0],
+                t_e=starts0[0] + jnp.asarray(t_du, jnp.int32),
+                pe_mask=jnp.zeros((tl.words,), jnp.uint32),
+                n_free=rects.n_free[0],
+                t_begin=rects.t_begin[0],
+                t_end=rects.t_end[0],
+            )
+
+        def _full(_):
+            return _search_full(
+                tl, t_r, t_du, t_dl, n_req, policy_id, t_now,
+                n_pe=n_pe, use_kernel=use_kernel, rspec=rspec,
+                demand_tail=demand_tail, valid_mask=valid_mask,
+                demand_vec=demand_vec, deficit=deficit)
+
+        return jax.lax.cond(reject, _rejected, _full, 0)
+    return _search_full(
+        tl, t_r, t_du, t_dl, n_req, policy_id, t_now, n_pe=n_pe,
+        use_kernel=use_kernel, rspec=rspec, demand_tail=demand_tail,
+        valid_mask=valid_mask, demand_vec=None, deficit=None)
+
+
+def _search_full(
+    tl: Timeline,
+    t_r: jax.Array,
+    t_du: jax.Array,
+    t_dl: jax.Array,
+    n_req: jax.Array,
+    policy_id: jax.Array,
+    t_now: jax.Array,
+    *,
+    n_pe: int,
+    use_kernel: bool,
+    rspec,
+    demand_tail: Optional[jax.Array],
+    valid_mask: Optional[jax.Array],
+    demand_vec: Optional[jax.Array],
+    deficit: Optional[jax.Array],
+) -> SearchResult:
+    """The candidate enumeration half of :func:`search` (see there)."""
+    starts = candidate_starts(tl, t_r, t_du, t_dl)
+    if tl.ispec is not None and use_kernel:
+        # summary pruning feeds the availscan kernels' data-driven
+        # tile skip: a pruned start becomes T_INF padding, so its
+        # tile never loads.  The jnp reference path evaluates every
+        # candidate slot at fixed shape regardless, so pruning there
+        # is pure per-request cost — the mask changes nothing the
+        # where-select downstream wouldn't (pruned candidates are
+        # truly infeasible and could never win selection either way).
+        starts = prune_candidates(tl, starts, t_du, demand_vec,
+                                  deficit)
     if use_kernel:
         from repro.kernels import ops as kernel_ops
         # fused path: rectangles + policy selection in one kernel —

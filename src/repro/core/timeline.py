@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import availindex as idx_lib
 from repro.core.types import T_INF
 
 _WORD = 32
@@ -52,10 +53,25 @@ def next_pow2(n: int) -> int:
 
 
 class Timeline(NamedTuple):
-    """Fixed-capacity availability timeline (a JAX pytree)."""
+    """Fixed-capacity availability timeline (a JAX pytree).
+
+    The optional hierarchical availability index (DESIGN.md §12) rides
+    along as three summary arrays plus the static zero-leaf
+    :class:`~repro.core.availindex.IndexSpec`; all default ``None``,
+    so index-free timelines keep their legacy leaf set and compiled
+    graphs.  When present, every update refreshes the summaries from
+    the post-update rows, so they always equal
+    :func:`~repro.core.availindex.build_summaries` of the current
+    timeline (see :func:`_reindex` for why the refresh is a plain
+    recompute rather than a dirty-tile select).
+    """
 
     times: jax.Array  # int32[S]
     occ: jax.Array    # uint32[S, W]
+    idx_occ: Optional[jax.Array] = None      # uint32[S/T, W]
+    idx_minfree: Optional[jax.Array] = None  # int32[S/T, R]
+    idx_maxfree: Optional[jax.Array] = None  # int32[S/T, R]
+    ispec: Optional[Any] = None              # static IndexSpec
 
     @property
     def capacity(self) -> int:
@@ -70,13 +86,46 @@ class Timeline(NamedTuple):
 
 
 def empty(capacity: int, n_pe: int,
-          words: Optional[int] = None) -> Timeline:
+          words: Optional[int] = None,
+          ispec: Optional[Any] = None) -> Timeline:
     """All-free timeline; ``words`` overrides the single-plane width
-    (multi-resource layouts pass ``rspec.total_words``)."""
+    (multi-resource layouts pass ``rspec.total_words``).  ``ispec``
+    attaches the hierarchical availability index (DESIGN.md §12)."""
     W = n_words(n_pe) if words is None else int(words)
-    return Timeline(
+    out = Timeline(
         times=jnp.full((capacity,), T_INF, dtype=jnp.int32),
         occ=jnp.zeros((capacity, W), dtype=jnp.uint32),
+    )
+    if ispec is not None:
+        if ispec.total_words != W:
+            raise ValueError(
+                f"ispec covers {ispec.total_words} words, timeline "
+                f"has {W}")
+        i_occ, i_min, i_max = idx_lib.empty_summaries(capacity, ispec)
+        out = out._replace(idx_occ=i_occ, idx_minfree=i_min,
+                           idx_maxfree=i_max, ispec=ispec)
+    return out
+
+
+def _reindex(new_tl: Timeline, ispec) -> Timeline:
+    """Index maintenance after an update (DESIGN.md §12).
+
+    Recomputes the tile summaries from the post-update rows.  An
+    earlier incremental variant kept the old summaries for tiles
+    wholly before the first changed row via a dirty-from where-select;
+    the select chain (searchsorted + iota + three broadcast selects)
+    measured *slower* on CPU than the handful of fused popcount/reduce
+    ops it reuses, and the recompute is bit-identical on clean tiles
+    anyway (their rows are unchanged and the summaries are
+    deterministic), so the simple form is canonical — the property
+    suite pins it against :func:`~repro.core.availindex.build_summaries`
+    either way.
+    """
+    f_occ, f_min, f_max = idx_lib.build_summaries(
+        new_tl.times, new_tl.occ, ispec)
+    return new_tl._replace(
+        idx_occ=f_occ, idx_minfree=f_min, idx_maxfree=f_max,
+        ispec=ispec,
     )
 
 
@@ -165,7 +214,8 @@ def init_state(capacity: int, n_pe: int,
                park_capacity: int = 0,
                tenants: Optional[Any] = None,
                rspec: Optional[Any] = None,
-               live_units=None) -> SchedulerState:
+               live_units=None,
+               index_tile: Optional[int] = None) -> SchedulerState:
     """Fresh all-free scheduler state.
 
     ``park_capacity`` sizes the backfilling deferral queue; the default
@@ -181,12 +231,22 @@ def init_state(capacity: int, n_pe: int,
     requests persist in ``park_dem``, and ``live_units`` optionally
     shrinks this lane's schedulable units per plane (heterogeneous
     machine sizes; ``live_units[0] <= n_pe``).
+
+    ``index_tile`` (a power of two dividing ``capacity``) attaches the
+    hierarchical availability index (DESIGN.md §12): per-tile timeline
+    summaries refreshed by every update, consumed for conservative
+    candidate pruning and early-reject admission.  The
+    default ``None`` keeps the index-free legacy treedef and graphs.
     """
     if rspec is not None and rspec.n_pe != n_pe:
         raise ValueError(
             f"rspec.units[0]={rspec.n_pe} must equal n_pe={n_pe}")
     if live_units is not None and rspec is None:
         raise ValueError("live_units requires rspec")
+    ispec = None
+    if index_tile is not None:
+        ispec = idx_lib.make_index_spec(index_tile, n_pe, rspec)
+        ispec.n_tiles(capacity)   # validates divisibility
     words = n_words(n_pe) if rspec is None else rspec.total_words
     park_dem = None
     if rspec is not None and rspec.R > 1 and park_capacity > 0:
@@ -195,7 +255,7 @@ def init_state(capacity: int, n_pe: int,
     if rspec is not None:
         lane_valid = jnp.asarray(rspec.valid_mask_np(live_units))
     return SchedulerState(
-        tl=empty(capacity, n_pe, words=words),
+        tl=empty(capacity, n_pe, words=words, ispec=ispec),
         pend_ts=jnp.full((pending_capacity,), T_INF, jnp.int32),
         pend_te=jnp.full((pending_capacity,), T_INF, jnp.int32),
         pend_mask=jnp.zeros((pending_capacity, words),
@@ -428,6 +488,8 @@ def update(tl: Timeline, t_s: jax.Array, t_e: jax.Array,
     ext_o = jnp.where(in_range[:, None], upd, ext_o)
     # 4.-5. merge + scatter-compact back to capacity S.
     out, overflow, n_keep = _merge_compact(ext_t, ext_o, S, tl.words)
+    if tl.ispec is not None:
+        out = _reindex(out, tl.ispec)
     if with_count:
         return out, overflow, n_keep
     return out, overflow
@@ -468,6 +530,8 @@ def update_lexsort(tl: Timeline, t_s: jax.Array, t_e: jax.Array,
     ext_o = jnp.where(in_range[:, None], upd, ext_o)
     # 4.-5. merge + scatter-compact back to capacity S.
     out, overflow, n_keep = _merge_compact(ext_t, ext_o, S, tl.words)
+    if tl.ispec is not None:
+        out = _reindex(out, tl.ispec)
     if with_count:
         return out, overflow, n_keep
     return out, overflow
@@ -542,6 +606,8 @@ def update_many(tl: Timeline, t_s: jax.Array, t_e: jax.Array,
         ext_o = ext_o & ~union
     # 4.-5. merge + scatter-compact back to capacity S.
     out, overflow, n_keep = _merge_compact(ext_t, ext_o, S, W)
+    if tl.ispec is not None:
+        out = _reindex(out, tl.ispec)
     if with_count:
         return out, overflow, n_keep
     return out, overflow
@@ -557,15 +623,27 @@ def window_busy(tl: Timeline, a: jax.Array, b: jax.Array) -> jax.Array:
 
 
 def grow(tl: Timeline, new_capacity: int) -> Timeline:
-    """Host-side capacity growth (static shape change; not jitted)."""
+    """Host-side capacity growth (static shape change; not jitted).
+
+    An attached index is re-materialised at the new tile count (the
+    old tiles' values are unchanged — padding rows summarise to the
+    all-free sentinel — but the arrays change shape, so a fresh build
+    is the simplest bit-exact form).
+    """
     assert new_capacity >= tl.capacity
     pad = new_capacity - tl.capacity
-    return Timeline(
+    out = Timeline(
         times=jnp.concatenate(
             [tl.times, jnp.full((pad,), T_INF, jnp.int32)]),
         occ=jnp.concatenate(
             [tl.occ, jnp.zeros((pad, tl.words), jnp.uint32)]),
     )
+    if tl.ispec is not None:
+        i_occ, i_min, i_max = idx_lib.build_summaries(
+            out.times, out.occ, tl.ispec)
+        out = out._replace(idx_occ=i_occ, idx_minfree=i_min,
+                           idx_maxfree=i_max, ispec=tl.ispec)
+    return out
 
 
 def from_host(times: np.ndarray, occ64: np.ndarray, n_pe: int,

@@ -15,13 +15,17 @@ candidate tile — the TPU analogue of the paper's "organise availability
 for efficient search".  All comparisons stay in exact int32; only the
 0/1 contraction operands are f32 (counts < 2**24, exact).
 
-Occupancy awareness (DESIGN.md §7): the candidate array arrives
+Occupancy awareness (DESIGN.md §7, §12): the candidate array arrives
 deduplicated and compacted (live starts first, ``T_INF`` tail — see
-``search.candidate_starts``), and the *live candidate count* rides in
-as a scalar-prefetch operand.  Tiles past the live prefix are skipped
-with ``pl.when``: they write sentinel outputs without touching the
-MXU, so per-search cost tracks live boundaries instead of the static
-capacity ``S``.
+``search.candidate_starts``), and *per-tile live candidate counts*
+ride in as a scalar-prefetch operand.  Tiles whose count is zero are
+skipped with ``pl.when``: they write sentinel outputs without touching
+the MXU.  The counts are data-driven rather than prefix-driven: the
+hierarchical availability index prunes summary-infeasible candidates
+to ``T_INF`` *holes* mid-array (``search.prune_candidates``), and a
+tile is skippable exactly when every one of its candidates is padding
+or pruned — on an unpruned compacted array this degenerates to the
+PR 5 live-prefix skip bit-for-bit.
 
 :func:`availscan_select` additionally fuses the policy selection
 (``policies.select``) into the kernel epilogue: each tile reduces its
@@ -99,10 +103,16 @@ def _tile_rects_mr(a, b, times, nxt, occ, psel):
     return nfree_planes, tb, te
 
 
-def _availscan_kernel(nlive_ref, a_ref, b_ref, times_ref, nxt_ref,
+def _tile_live(live: jax.Array, P_pad: int, pt: int) -> jax.Array:
+    """i32[P_pad/pt] live-candidate count per tile (0 = skippable)."""
+    lv = _pad_to(live.astype(jnp.int32), P_pad, 0)
+    return jnp.sum(lv.reshape(P_pad // pt, pt), axis=1)
+
+
+def _availscan_kernel(tlive_ref, a_ref, b_ref, times_ref, nxt_ref,
                       occ_ref, nfree_ref, tb_ref, te_ref, *, pt):
     i = pl.program_id(0)
-    live = i * pt < nlive_ref[0]
+    live = tlive_ref[i] > 0
 
     @pl.when(live)
     def _():
@@ -139,18 +149,20 @@ def availscan(
     nxt: jax.Array,        # i32[S]
     a: jax.Array,          # i32[P] window starts (overflow-clamped)
     b: jax.Array,          # i32[P] window ends
-    n_live: jax.Array,     # i32 scalar: live (compacted) candidates
+    live: jax.Array,       # bool/i32[P]: candidate is live (not
+    #                        T_INF padding, not summary-pruned)
     *,
     pt: int = DEFAULT_PT,
     interpret: bool = True,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Tiled scan over candidates, skipping all-padding tiles.
+    """Tiled scan over candidates, skipping all-dead tiles.
 
     Returns raw ``(n_free, t_begin_raw, t_end_raw)`` — ``n_free`` still
     counts PE-axis padding (caller subtracts) and the bounds carry
     ``-T_INF`` / ``T_INF`` sentinels when unblocked (caller clamps).
-    ``n_live`` is a scalar-prefetch operand: tiles whose candidates
-    are all ``T_INF`` padding skip both contractions.
+    ``live`` reduces to per-tile counts in the scalar-prefetch operand:
+    tiles with no live candidate (all padding or all summary-pruned)
+    skip both contractions.
     """
     S, n_pe_p = occ_bits.shape
     assert S % _LANE == 0 and n_pe_p % _LANE == 0, (S, n_pe_p)
@@ -158,6 +170,7 @@ def availscan(
     P_pad = -(-P // pt) * pt
     a_p = _pad_to(a, P_pad, T_INF - 1)[:, None]
     b_p = _pad_to(b, P_pad, T_INF)[:, None]
+    tlive = _tile_live(live, P_pad, pt)
     grid = (P_pad // pt,)
     nfree, tb, te = pl.pallas_call(
         functools.partial(_availscan_kernel, pt=pt),
@@ -183,16 +196,16 @@ def availscan(
             jax.ShapeDtypeStruct((P_pad, 1), jnp.int32),
         ],
         interpret=interpret,
-    )(jnp.reshape(n_live, (1,)).astype(jnp.int32), a_p, b_p,
+    )(tlive, a_p, b_p,
       times[None, :], nxt[None, :], occ_bits)
     return nfree[:P, 0], tb[:P, 0], te[:P, 0]
 
 
-def _availscan_kernel_mr(nlive_ref, a_ref, b_ref, times_ref, nxt_ref,
+def _availscan_kernel_mr(tlive_ref, a_ref, b_ref, times_ref, nxt_ref,
                          occ_ref, psel_ref, nfp_ref, tb_ref, te_ref,
                          *, pt):
     i = pl.program_id(0)
-    live = i * pt < nlive_ref[0]
+    live = tlive_ref[i] > 0
 
     @pl.when(live)
     def _():
@@ -219,7 +232,7 @@ def availscan_mr(
     nxt: jax.Array,        # i32[S]
     a: jax.Array,          # i32[P] window starts (overflow-clamped)
     b: jax.Array,          # i32[P] window ends
-    n_live: jax.Array,     # i32 scalar: live (compacted) candidates
+    live: jax.Array,       # bool/i32[P]: candidate is live
     *,
     pt: int = DEFAULT_PT,
     interpret: bool = True,
@@ -235,6 +248,7 @@ def availscan_mr(
     P_pad = -(-P // pt) * pt
     a_p = _pad_to(a, P_pad, T_INF - 1)[:, None]
     b_p = _pad_to(b, P_pad, T_INF)[:, None]
+    tlive = _tile_live(live, P_pad, pt)
     grid = (P_pad // pt,)
     nfp, tb, te = pl.pallas_call(
         functools.partial(_availscan_kernel_mr, pt=pt),
@@ -262,7 +276,7 @@ def availscan_mr(
             jax.ShapeDtypeStruct((P_pad, 1), jnp.int32),
         ],
         interpret=interpret,
-    )(jnp.reshape(n_live, (1,)).astype(jnp.int32), a_p, b_p,
+    )(tlive, a_p, b_p,
       times[None, :], nxt[None, :], occ_bits, psel)
     return nfp[:P, :], tb[:P, 0], te[:P, 0]
 
@@ -289,15 +303,14 @@ def _integer_keys_tile(policy_id, n_free, duration):
     return key1, key2
 
 
-def _availscan_select_kernel(scal_ref, starts_ref, a_ref, b_ref,
-                             times_ref, nxt_ref, occ_ref, acc_ref, *,
-                             pt):
+def _availscan_select_kernel(scal_ref, tlive_ref, starts_ref, a_ref,
+                             b_ref, times_ref, nxt_ref, occ_ref,
+                             acc_ref, *, pt):
     i = pl.program_id(0)
-    n_live = scal_ref[0]
-    policy_id = scal_ref[1]
-    n_req = scal_ref[2]
-    t_now = scal_ref[3]
-    pad_corr = scal_ref[4]
+    policy_id = scal_ref[0]
+    n_req = scal_ref[1]
+    t_now = scal_ref[2]
+    pad_corr = scal_ref[3]
 
     @pl.when(i == 0)
     def _():
@@ -307,7 +320,7 @@ def _availscan_select_kernel(scal_ref, starts_ref, a_ref, b_ref,
         lane = jax.lax.iota(jnp.int32, 8)
         acc_ref[0, :] = jnp.where(lane < 4, _BIG, 0)
 
-    @pl.when(i * pt < n_live)
+    @pl.when(tlive_ref[i] > 0)
     def _():
         starts = starts_ref[:, 0]
         a = a_ref[:, 0]
@@ -364,7 +377,8 @@ def availscan_select(
     starts: jax.Array,     # i32[P] candidate starts (T_INF padded)
     a: jax.Array,          # i32[P] window starts (overflow-clamped)
     b: jax.Array,          # i32[P] window ends
-    scalars: jax.Array,    # i32[5]: n_live, policy, n_req, t_now, pad
+    scalars: jax.Array,    # i32[4]: policy, n_req, t_now, pad
+    live: jax.Array,       # bool[P] live (unpruned) candidate mask
     *,
     pt: int = DEFAULT_PT,
     interpret: bool = True,
@@ -375,11 +389,16 @@ def availscan_select(
     t_end, feasible`` of the winning candidate — post-processed values
     (pad-corrected ``n_free``, clamped ``t_begin``), bit-identical to
     the jnp ``availability_rectangles`` + ``policies.select`` chain.
+    Tiles whose per-tile live count is zero are skipped entirely; on
+    compacted (prefix-live) inputs this degenerates to the old
+    ``i*pt < n_live`` prefix skip, and index pruning punches holes
+    without ever skipping a tile that still holds a live candidate.
     """
     S, n_pe_p = occ_bits.shape
     assert S % _LANE == 0 and n_pe_p % _LANE == 0, (S, n_pe_p)
     P = a.shape[0]
     P_pad = -(-P // pt) * pt
+    tlive = _tile_live(live, P_pad, pt)
     starts_p = _pad_to(starts, P_pad, T_INF)[:, None]
     a_p = _pad_to(a, P_pad, T_INF - 1)[:, None]
     b_p = _pad_to(b, P_pad, T_INF)[:, None]
@@ -387,40 +406,40 @@ def availscan_select(
     acc = pl.pallas_call(
         functools.partial(_availscan_select_kernel, pt=pt),
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
+            num_scalar_prefetch=2,
             grid=grid,
             in_specs=[
-                pl.BlockSpec((pt, 1), lambda i, s: (i, 0)),      # starts
-                pl.BlockSpec((pt, 1), lambda i, s: (i, 0)),      # a
-                pl.BlockSpec((pt, 1), lambda i, s: (i, 0)),      # b
-                pl.BlockSpec((1, S), lambda i, s: (0, 0)),       # times
-                pl.BlockSpec((1, S), lambda i, s: (0, 0)),       # nxt
-                pl.BlockSpec((S, n_pe_p), lambda i, s: (0, 0)),  # occ
+                pl.BlockSpec((pt, 1), lambda i, s, t: (i, 0)),   # starts
+                pl.BlockSpec((pt, 1), lambda i, s, t: (i, 0)),   # a
+                pl.BlockSpec((pt, 1), lambda i, s, t: (i, 0)),   # b
+                pl.BlockSpec((1, S), lambda i, s, t: (0, 0)),    # times
+                pl.BlockSpec((1, S), lambda i, s, t: (0, 0)),    # nxt
+                pl.BlockSpec((S, n_pe_p),
+                             lambda i, s, t: (0, 0)),            # occ
             ],
-            out_specs=pl.BlockSpec((1, 8), lambda i, s: (0, 0)),
+            out_specs=pl.BlockSpec((1, 8), lambda i, s, t: (0, 0)),
         ),
         out_shape=jax.ShapeDtypeStruct((1, 8), jnp.int32),
         interpret=interpret,
-    )(scalars.astype(jnp.int32), starts_p, a_p, b_p, times[None, :],
-      nxt[None, :], occ_bits)
+    )(scalars.astype(jnp.int32), tlive, starts_p, a_p, b_p,
+      times[None, :], nxt[None, :], occ_bits)
     return acc[0]
 
 
-def _availscan_select_kernel_mr(scal_ref, starts_ref, a_ref, b_ref,
-                                times_ref, nxt_ref, occ_ref, psel_ref,
-                                acc_ref, *, pt, n_res):
+def _availscan_select_kernel_mr(scal_ref, tlive_ref, starts_ref, a_ref,
+                                b_ref, times_ref, nxt_ref, occ_ref,
+                                psel_ref, acc_ref, *, pt, n_res):
     i = pl.program_id(0)
-    n_live = scal_ref[0]
-    policy_id = scal_ref[1]
-    n_req = scal_ref[2]
-    t_now = scal_ref[3]
+    policy_id = scal_ref[0]
+    n_req = scal_ref[1]
+    t_now = scal_ref[2]
 
     @pl.when(i == 0)
     def _():
         lane = jax.lax.iota(jnp.int32, 8)
         acc_ref[0, :] = jnp.where(lane < 4, _BIG, 0)
 
-    @pl.when(i * pt < n_live)
+    @pl.when(tlive_ref[i] > 0)
     def _():
         starts = starts_ref[:, 0]
         a = a_ref[:, 0]
@@ -441,7 +460,7 @@ def _availscan_select_kernel_mr(scal_ref, starts_ref, a_ref, b_ref,
         # static, so this loop unrolls at trace time)
         feasible = valid & (n_free >= n_req)
         for r in range(1, n_res):
-            feasible = feasible & (nfp_raw[:, r] >= scal_ref[3 + r])
+            feasible = feasible & (nfp_raw[:, r] >= scal_ref[2 + r])
         key1, key2 = _integer_keys_tile(policy_id, n_free,
                                         t_end - t_begin)
         key1 = jnp.where(feasible, key1, _BIG)
@@ -480,8 +499,9 @@ def availscan_select_mr(
     starts: jax.Array,     # i32[P] candidate starts (T_INF padded)
     a: jax.Array,          # i32[P] window starts (overflow-clamped)
     b: jax.Array,          # i32[P] window ends
-    scalars: jax.Array,    # i32[3+n_res]: n_live, policy, n_req,
-    #                        t_now, demand[1..n_res-1]
+    scalars: jax.Array,    # i32[2+n_res]: policy, n_req, t_now,
+    #                        demand[1..n_res-1]
+    live: jax.Array,       # bool[P] live (unpruned) candidate mask
     *,
     pt: int = DEFAULT_PT,
     n_res: int = 1,
@@ -498,9 +518,10 @@ def availscan_select_mr(
     """
     S, n_bits_p = occ_bits.shape
     assert S % _LANE == 0 and n_bits_p % _LANE == 0, (S, n_bits_p)
-    assert scalars.shape[0] == 3 + n_res, (scalars.shape, n_res)
+    assert scalars.shape[0] == 2 + n_res, (scalars.shape, n_res)
     P = a.shape[0]
     P_pad = -(-P // pt) * pt
+    tlive = _tile_live(live, P_pad, pt)
     starts_p = _pad_to(starts, P_pad, T_INF)[:, None]
     a_p = _pad_to(a, P_pad, T_INF - 1)[:, None]
     b_p = _pad_to(b, P_pad, T_INF)[:, None]
@@ -509,22 +530,23 @@ def availscan_select_mr(
         functools.partial(_availscan_select_kernel_mr, pt=pt,
                           n_res=n_res),
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
+            num_scalar_prefetch=2,
             grid=grid,
             in_specs=[
-                pl.BlockSpec((pt, 1), lambda i, s: (i, 0)),      # starts
-                pl.BlockSpec((pt, 1), lambda i, s: (i, 0)),      # a
-                pl.BlockSpec((pt, 1), lambda i, s: (i, 0)),      # b
-                pl.BlockSpec((1, S), lambda i, s: (0, 0)),       # times
-                pl.BlockSpec((1, S), lambda i, s: (0, 0)),       # nxt
-                pl.BlockSpec((S, n_bits_p), lambda i, s: (0, 0)),  # occ
+                pl.BlockSpec((pt, 1), lambda i, s, t: (i, 0)),   # starts
+                pl.BlockSpec((pt, 1), lambda i, s, t: (i, 0)),   # a
+                pl.BlockSpec((pt, 1), lambda i, s, t: (i, 0)),   # b
+                pl.BlockSpec((1, S), lambda i, s, t: (0, 0)),    # times
+                pl.BlockSpec((1, S), lambda i, s, t: (0, 0)),    # nxt
+                pl.BlockSpec((S, n_bits_p),
+                             lambda i, s, t: (0, 0)),            # occ
                 pl.BlockSpec((n_bits_p, _LANE),
-                             lambda i, s: (0, 0)),               # psel
+                             lambda i, s, t: (0, 0)),            # psel
             ],
-            out_specs=pl.BlockSpec((1, 8), lambda i, s: (0, 0)),
+            out_specs=pl.BlockSpec((1, 8), lambda i, s, t: (0, 0)),
         ),
         out_shape=jax.ShapeDtypeStruct((1, 8), jnp.int32),
         interpret=interpret,
-    )(scalars.astype(jnp.int32), starts_p, a_p, b_p, times[None, :],
-      nxt[None, :], occ_bits, psel)
+    )(scalars.astype(jnp.int32), tlive, starts_p, a_p, b_p,
+      times[None, :], nxt[None, :], occ_bits, psel)
     return acc[0]

@@ -5,12 +5,13 @@ Prepares the dense operands from a :class:`~repro.core.timeline.Timeline`
 the raw tile outputs back into the exact semantics of the pure-jnp
 reference (:func:`repro.core.search.availability_rectangles`).
 
-Occupancy awareness (DESIGN.md §7): the live candidate count — the
-number of non-``T_INF`` entries in the deduplicated, compacted
-candidate array — is threaded into the kernel as a scalar-prefetch
-operand so all-padding tiles are skipped, and the invalid tail is
-masked to the same sentinels the reference produces, keeping the two
-paths element-identical.
+Occupancy awareness (DESIGN.md §7, §12): the live candidate mask — the
+non-``T_INF`` entries of the deduplicated, compacted (and possibly
+index-pruned) candidate array — is reduced to per-tile live counts and
+threaded into the kernel as a scalar-prefetch operand so dead tiles
+are skipped wherever they sit (prefix padding or pruned holes), and
+the invalid tail is masked to the same sentinels the reference
+produces, keeping the two paths element-identical.
 
 :func:`search_select` exposes the fused availscan + policy-selection
 kernel (the per-candidate vectors never leave the kernel); the
@@ -113,11 +114,10 @@ def availability_rectangles(
                 valid_mask=valid_mask)
         occ_bits, times, nxt, psel = ops
         valid = starts < T_INF
-        n_live = jnp.sum(valid).astype(jnp.int32)
         a = jnp.minimum(starts, T_INF - t_du)
         b = a + t_du
         nfp_raw, tb_raw, te_raw = _k.availscan_mr(
-            occ_bits, psel, times, nxt, a, b, n_live,
+            occ_bits, psel, times, nxt, a, b, valid,
             interpret=_interpret_mode())
         zero = jnp.int32(0)
         t_begin = jnp.minimum(jnp.maximum(tb_raw, t_now), a)
@@ -136,12 +136,11 @@ def availability_rectangles(
     occ_bits, times, nxt, n_pe_pad = ops
 
     valid = starts < T_INF
-    n_live = jnp.sum(valid).astype(jnp.int32)
     a = jnp.minimum(starts, T_INF - t_du)   # avoid int32 overflow
     b = a + t_du
 
     nfree_raw, tb_raw, te_raw = _k.availscan(
-        occ_bits, times, nxt, a, b, n_live,
+        occ_bits, times, nxt, a, b, valid,
         interpret=_interpret_mode())
 
     zero = jnp.int32(0)
@@ -180,18 +179,18 @@ def search_select(
         if ops is None:
             return None
         occ_bits, times, nxt, psel = ops
-        n_live = jnp.sum(starts < T_INF).astype(jnp.int32)
+        live = starts < T_INF
         a = jnp.minimum(starts, T_INF - t_du)
         b = a + t_du
         if demand_tail is None:
             demand_tail = jnp.zeros((rspec.R - 1,), jnp.int32)
         scalars = jnp.concatenate([
-            jnp.stack([n_live, jnp.asarray(policy_id, jnp.int32),
+            jnp.stack([jnp.asarray(policy_id, jnp.int32),
                        jnp.asarray(n_req, jnp.int32),
                        jnp.asarray(t_now, jnp.int32)]),
             jnp.asarray(demand_tail, jnp.int32)])
         acc = _k.availscan_select_mr(
-            occ_bits, psel, times, nxt, starts, a, b, scalars,
+            occ_bits, psel, times, nxt, starts, a, b, scalars, live,
             n_res=rspec.R, interpret=_interpret_mode())
         return dict(found=acc[7] > 0, best=acc[3], n_free=acc[4],
                     t_begin=acc[5], t_end=acc[6])
@@ -199,15 +198,15 @@ def search_select(
     if ops is None:
         return None
     occ_bits, times, nxt, n_pe_pad = ops
-    n_live = jnp.sum(starts < T_INF).astype(jnp.int32)
+    live = starts < T_INF
     a = jnp.minimum(starts, T_INF - t_du)
     b = a + t_du
     scalars = jnp.stack([
-        n_live, jnp.asarray(policy_id, jnp.int32),
+        jnp.asarray(policy_id, jnp.int32),
         jnp.asarray(n_req, jnp.int32), jnp.asarray(t_now, jnp.int32),
         jnp.int32(n_pe_pad - n_pe)])
     acc = _k.availscan_select(
-        occ_bits, times, nxt, starts, a, b, scalars,
+        occ_bits, times, nxt, starts, a, b, scalars, live,
         interpret=_interpret_mode())
     return dict(found=acc[7] > 0, best=acc[3], n_free=acc[4],
                 t_begin=acc[5], t_end=acc[6])

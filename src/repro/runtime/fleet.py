@@ -262,7 +262,8 @@ class PartitionedCore:
                  use_kernel: bool = False, placement="auto",
                  park_capacity: int = 0, backfill: str = "none",
                  auto_release: bool = False,
-                 match_rounds: Optional[int] = None):
+                 match_rounds: Optional[int] = None,
+                 index_tile: Optional[int] = None):
         if n_partitions < 1 or n_chips % n_partitions:
             raise ValueError(
                 f"n_chips={n_chips} not divisible into "
@@ -297,9 +298,14 @@ class PartitionedCore:
             match_rounds = self.match_max_rounds if probe_parallel \
                 else 0
         self.match_max_rounds = int(match_rounds)
+        # index_tile attaches the hierarchical availability index
+        # (DESIGN.md §12) to every partition lane: the [N, E] probe's
+        # vmapped search early-rejects summary-infeasible lanes to the
+        # same sentinels a full contraction would produce, prefiltering
+        # the match rounds without changing a single routing decision
         self.states = self._put(ens_lib.init_ensemble(
             n_partitions, capacity, self.chips_per_part,
-            pending_capacity, park_capacity))
+            pending_capacity, park_capacity, index_tile=index_tile))
         self._backfills = ens_lib.backfill_ids(backfill, n_partitions)
         # committed PE-seconds per partition (least-loaded routing):
         # authoritative float32 host ledger + an async device copy so
@@ -710,7 +716,8 @@ class FleetScheduler:
                  restart_overhead: int = 120,
                  n_partitions: int = 1,
                  routing: str = "round_robin",
-                 use_kernel: bool = False):
+                 use_kernel: bool = False,
+                 index_tile: Optional[int] = None):
         self.n_chips = n_chips
         self.policy = policy
         if n_partitions > 1:
@@ -722,14 +729,16 @@ class FleetScheduler:
                 n_pe=n_chips, engine="device", policy=policy,
                 n_partitions=n_partitions, routing=routing,
                 use_kernel=use_kernel, auto_release=False,
-                chunk_size=None)
+                chunk_size=None, index_tile=index_tile)
         else:
+            if index_tile is not None and (engine or "host") != "device":
+                raise ValueError("index_tile needs the device engine")
             cfg = ServiceConfig.from_engine_kwargs(
                 n_chips, engine or "host",
                 **({"use_kernel": use_kernel}
                    if (engine or "host") == "device" else {})
             ).replace(policy=policy, auto_release=False,
-                      chunk_size=None)
+                      chunk_size=None, index_tile=index_tile)
         self.service = ReservationService(cfg)
         self.session = self.service.session()
         self.core = self.session.engine

@@ -87,6 +87,7 @@ def simulate_batched(
     pending_capacity: int = 256,
     cross_check: bool = False,
     cross_check_engine: str = "host",
+    index_tile: "int | None" = None,
 ) -> SimResult:
     """On-device fast path: admit the whole stream with one ``lax.scan``.
 
@@ -101,7 +102,9 @@ def simulate_batched(
     With ``cross_check=True`` the host-loop simulator is run on the
     same workload and the per-job accept/reject decisions, start times
     and metrics are asserted identical (the acceptance gate for the
-    batched path).
+    batched path).  ``index_tile`` attaches the hierarchical
+    availability index (DESIGN.md §12) — decisions stay identical,
+    rejection-heavy streams admit faster.
     """
     jobs = sorted(jobs, key=lambda j: j.t_a)
     result = SimResult(policy=policy.value, n_jobs=len(jobs),
@@ -112,7 +115,8 @@ def simulate_batched(
     batch = batch_lib.requests_to_batch(jobs)
     session = ReservationService(ServiceConfig(
         n_pe=n_pe, policy=policy, capacity=capacity,
-        pending_capacity=pending_capacity, chunk_size=None)).session()
+        pending_capacity=pending_capacity, chunk_size=None,
+        index_tile=index_tile)).session()
     t0 = _time.perf_counter()
     res = session.offer(batch)
     accepted = np.asarray(res.decision.accepted)       # device sync

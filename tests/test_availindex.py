@@ -1,0 +1,564 @@
+"""Hierarchical availability index (DESIGN.md §12).
+
+Three invariants anchor this suite:
+
+1. **Exact incremental consistency** — after *any* sequence of
+   ``update`` / ``update_many`` / ``cancel_many`` / ``grow`` mutations
+   (duplicate boundaries, T_INF clamps, R > 1 planes included), the
+   incrementally-maintained tile summaries equal a from-scratch
+   :func:`repro.core.availindex.build_summaries` bit-for-bit.
+2. **Conservativeness** — :func:`repro.core.search.summary_reject` and
+   :func:`repro.core.search.prune_candidates` only ever prove
+   infeasibility the exact contraction would also find: a rejected
+   request has no feasible candidate, and a pruned candidate fails its
+   own availability rectangle.
+3. **Pruned-vs-unpruned parity** — streams admitted with the index on
+   produce bit-identical :class:`~repro.core.batch.Decision` fields to
+   the index-free path across policies, backfill modes, kernel/jnp
+   search, multi-resource layouts and bucketed engines; and
+   ``index_tile=None`` keeps the exact index-free treedef (zero new
+   leaves).
+
+Hypothesis variants fuzz the same properties where hypothesis is
+installed; the exhaustive mirrors below run everywhere.
+"""
+import random
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import availindex as ai
+from repro.core import batch as batch_lib
+from repro.core import search as search_lib
+from repro.core import timeline as tl_lib
+from repro.core.resources import ResourceSpec
+from repro.core.scheduler import DeviceEngine
+from repro.core.types import ALL_POLICIES, ARRequest, Policy, T_INF
+
+
+def _assert_summaries_exact(tl):
+    assert tl.ispec is not None
+    ref = ai.build_summaries(tl.times, tl.occ, tl.ispec)
+    for name, got, want in zip(
+            ("idx_occ", "idx_minfree", "idx_maxfree"),
+            (tl.idx_occ, tl.idx_minfree, tl.idx_maxfree), ref):
+        np.testing.assert_array_equal(
+            np.asarray(got), np.asarray(want), err_msg=name)
+
+
+def _random_jobs(n, n_pe, seed=0, rspec=None, du_max=30, slack_max=40):
+    rng = random.Random(seed)
+    jobs, t = [], 0
+    for _ in range(n):
+        t += rng.randint(0, 5)
+        tr = t + rng.randint(0, 3)
+        du = rng.randint(1, du_max)
+        npe = rng.randint(1, n_pe)
+        kw = {}
+        if rspec is not None:
+            kw["demand"] = (npe,) + tuple(
+                rng.randint(0, u) for u in rspec.units[1:])
+        jobs.append(ARRequest(
+            t_a=t, t_r=tr, t_du=du, t_dl=tr + du + rng.randint(
+                0, slack_max), n_pe=npe, **kw))
+    return jobs
+
+
+# ---------------------------------------------------------------------------
+# IndexSpec layout
+# ---------------------------------------------------------------------------
+
+
+def test_index_spec_layout():
+    spec = ai.IndexSpec(tile=8, units=(33, 4), words_per=(2, 1))
+    assert spec.R == 2 and spec.total_words == 3
+    assert spec.word_offsets == (0, 2)
+    assert spec.plane_slice(1) == slice(2, 3)
+    assert spec.n_tiles(32) == 4
+    with pytest.raises(ValueError):
+        spec.n_tiles(36)                      # not divisible
+    with pytest.raises(ValueError):
+        ai.IndexSpec(tile=6, units=(8,), words_per=(1,))  # not pow2
+    with pytest.raises(ValueError):
+        ai.IndexSpec(tile=0, units=(8,), words_per=(1,))
+    with pytest.raises(ValueError):
+        ai.IndexSpec(tile=8, units=(8, 4), words_per=(1,))
+
+
+def test_index_spec_zero_leaf_pytree():
+    spec = ai.make_index_spec(16, 64)
+    leaves, treedef = jax.tree_util.tree_flatten(spec)
+    assert leaves == []
+    assert jax.tree_util.tree_unflatten(treedef, []) == spec
+
+
+def test_make_index_spec_from_rspec():
+    rs = ResourceSpec((64, 4, 8))
+    spec = ai.make_index_spec(8, 64, rs)
+    assert spec.units == (64, 4, 8)
+    assert spec.words_per == rs.words_per
+    s1 = ai.make_index_spec(8, 48)
+    assert s1.units == (48,) and s1.words_per == (2,)
+
+
+def test_empty_summaries_are_all_free():
+    spec = ai.make_index_spec(8, 40)
+    occ, minfree, maxfree = ai.empty_summaries(32, spec)
+    assert occ.shape == (4, 2) and not np.asarray(occ).any()
+    assert (np.asarray(minfree) == 40).all()
+    assert (np.asarray(maxfree) == 40).all()
+
+
+def test_init_state_validates_tile():
+    with pytest.raises(ValueError):
+        tl_lib.init_state(100, 8, 16, index_tile=8)   # 100 % 8 != 0
+    with pytest.raises(ValueError):
+        tl_lib.init_state(64, 8, 16, index_tile=6)    # not pow2
+    st = tl_lib.init_state(64, 8, 16, index_tile=16)
+    assert st.tl.ispec.tile == 16
+    assert st.tl.idx_occ.shape == (4, 1)
+
+
+def test_plane_deficit_matches_mask():
+    rs = ResourceSpec((8, 4))
+    spec = ai.make_index_spec(8, 8, rs)
+    full = jnp.asarray(rs.valid_mask_np())
+    np.testing.assert_array_equal(
+        np.asarray(ai.plane_deficit(spec, full)), [0, 0])
+    shrunk = jnp.asarray(rs.valid_mask_np((5, 2)))
+    np.testing.assert_array_equal(
+        np.asarray(ai.plane_deficit(spec, shrunk)), [3, 2])
+    np.testing.assert_array_equal(
+        np.asarray(ai.plane_deficit(spec, None)), [0, 0])
+
+
+# ---------------------------------------------------------------------------
+# exact incremental consistency
+# ---------------------------------------------------------------------------
+
+
+def _ops_sequence(seed, n_pe=8, capacity=64, tile=8, rspec=None,
+                  n_ops=50):
+    """Random add/delete/update_many/grow walk asserting exactness."""
+    rng = random.Random(seed)
+    spec = ai.make_index_spec(tile, n_pe, rspec)
+    words = spec.total_words
+    tl = tl_lib.empty(capacity, n_pe, words=words if rspec else None,
+                      ispec=spec)
+    added = []
+    n_bits = words * 32
+    for i in range(n_ops):
+        r = rng.random()
+        if added and r < 0.25:
+            s, e, m = added.pop(rng.randrange(len(added)))
+            tl, ovf = tl_lib.update(tl, s, e, m, is_add=False)
+            assert not bool(ovf)
+        elif r < 0.40 and len(added) >= 2:
+            # batched same-direction deletes incl. inactive rows
+            k = min(len(added), rng.randint(2, 4))
+            picks = [added.pop(rng.randrange(len(added)))
+                     for _ in range(k)]
+            ts = jnp.asarray([p[0] for p in picks] + [0], jnp.int32)
+            te = jnp.asarray([p[1] for p in picks] + [T_INF], jnp.int32)
+            ms = jnp.stack([p[2] for p in picks] +
+                           [jnp.zeros((words,), jnp.uint32)])
+            act = jnp.asarray([True] * k + [False])
+            tl, ovf = tl_lib.update_many(tl, ts, te, ms, act,
+                                         is_add=False)
+            assert not bool(ovf)
+        else:
+            # duplicate boundaries on purpose: coarse time grid
+            s = rng.randrange(0, 200, 5)
+            e = s + rng.randrange(5, 60, 5)
+            ids = sorted(rng.sample(range(min(n_bits, n_pe)),
+                                    rng.randint(1, min(4, n_pe))))
+            m = tl_lib.ids_to_mask32(ids, words)
+            t2, ovf = tl_lib.update(tl, s, e, m, is_add=True)
+            if bool(ovf):
+                tl = tl_lib.grow(tl, 2 * tl.capacity)
+                _assert_summaries_exact(tl)
+                t2, ovf = tl_lib.update(tl, s, e, m, is_add=True)
+                assert not bool(ovf)
+            tl = t2
+            added.append((s, e, m))
+        _assert_summaries_exact(tl)
+    return tl
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_incremental_consistency_walk(seed):
+    _ops_sequence(seed)
+
+
+def test_incremental_consistency_multires():
+    rs = ResourceSpec((8, 4, 3))
+    _ops_sequence(7, n_pe=8, tile=4, capacity=32, rspec=rs, n_ops=35)
+
+
+def test_incremental_consistency_tile_one_and_full():
+    # degenerate tiles: one record per tile, and one tile per timeline
+    _ops_sequence(11, tile=1, capacity=32, n_ops=25)
+    _ops_sequence(12, tile=32, capacity=32, n_ops=25)
+
+
+def test_tinf_clamp_is_noop_for_index():
+    spec = ai.make_index_spec(8, 8)
+    tl = tl_lib.empty(32, 8, ispec=spec)
+    m = tl_lib.ids_to_mask32([0, 1], tl.words)
+    tl, _ = tl_lib.update(tl, 5, 20, m, is_add=True)
+    before = jax.tree_util.tree_map(np.asarray, tl)
+    # t_e past the sentinel deactivates the interval (the no-op clamp)
+    tl2, ovf = tl_lib.update(tl, 3, T_INF, m, is_add=True)
+    assert not bool(ovf)
+    _assert_summaries_exact(tl2)
+    for a, b in zip(jax.tree_util.tree_leaves(before),
+                    jax.tree_util.tree_leaves(
+                        jax.tree_util.tree_map(np.asarray, tl2))):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_update_many_all_inactive_keeps_summaries():
+    spec = ai.make_index_spec(8, 8)
+    tl = tl_lib.empty(32, 8, ispec=spec)
+    m = tl_lib.ids_to_mask32([2], tl.words)
+    tl, _ = tl_lib.update(tl, 10, 30, m, is_add=True)
+    ts = jnp.zeros((3,), jnp.int32)
+    te = jnp.full((3,), 5, jnp.int32)
+    ms = jnp.broadcast_to(m, (3,) + m.shape)
+    tl2, ovf = tl_lib.update_many(
+        tl, ts, te, ms, jnp.zeros((3,), bool), is_add=True)
+    assert not bool(ovf)
+    _assert_summaries_exact(tl2)
+    np.testing.assert_array_equal(np.asarray(tl.idx_occ),
+                                  np.asarray(tl2.idx_occ))
+
+
+def test_grow_state_rebuilds_index():
+    st = tl_lib.init_state(16, 8, 16, index_tile=8)
+    m = tl_lib.ids_to_mask32([0, 3], st.tl.words)
+    tl, _ = tl_lib.update(st.tl, 5, 25, m, is_add=True)
+    st = st._replace(tl=tl)
+    grown = tl_lib.grow_state(st, new_capacity=64)
+    assert grown.tl.ispec == st.tl.ispec
+    assert grown.tl.idx_occ.shape[0] == 8
+    _assert_summaries_exact(grown.tl)
+
+
+def test_cancel_many_keeps_index_exact():
+    st = tl_lib.init_state(64, 8, 32, index_tile=8)
+    jobs = _random_jobs(20, 8, seed=5)
+    st, dec = batch_lib.admit_stream_grow(
+        st, batch_lib.requests_to_batch(jobs), Policy.PE_W, n_pe=8,
+        auto_release=False)
+    acc = np.asarray(dec.accepted)
+    triples = [
+        (int(t), int(e), np.asarray(dec.pe_mask)[i])
+        for i, (t, e) in enumerate(zip(np.asarray(dec.t_s),
+                                       np.asarray(dec.t_e)))
+        if acc[i]]
+    st, done = batch_lib.cancel_many(st, triples[::2],
+                                     require_pending=False)
+    assert all(bool(d) for d in np.asarray(done))
+    _assert_summaries_exact(st.tl)
+
+
+# ---------------------------------------------------------------------------
+# conservativeness of the two query-side bounds
+# ---------------------------------------------------------------------------
+
+
+def _busy_timeline(seed, n_pe=8, capacity=64, tile=8):
+    rng = random.Random(seed)
+    spec = ai.make_index_spec(tile, n_pe)
+    tl = tl_lib.empty(capacity, n_pe, ispec=spec)
+    for _ in range(14):
+        s = rng.randint(0, 150)
+        e = s + rng.randint(1, 40)
+        ids = sorted(rng.sample(range(n_pe), rng.randint(1, n_pe)))
+        m = tl_lib.ids_to_mask32(ids, tl.words)
+        tl, ovf = tl_lib.update(tl, s, e, m, is_add=True)
+        assert not bool(ovf)
+    return tl
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_summary_reject_is_conservative(seed):
+    n_pe = 8
+    tl = _busy_timeline(seed, n_pe=n_pe)
+    bare = tl_lib.Timeline(times=tl.times, occ=tl.occ)
+    rng = random.Random(100 + seed)
+    deficit = jnp.zeros((1,), jnp.int32)
+    n_rej = 0
+    for _ in range(60):
+        tr = rng.randint(0, 200)
+        du = rng.randint(1, 50)
+        dl = tr + du + rng.randint(0, 30)
+        dem = jnp.asarray([rng.randint(1, n_pe)], jnp.int32)
+        rej = bool(search_lib.summary_reject(
+            tl, jnp.int32(tr), jnp.int32(du), jnp.int32(dl), dem,
+            deficit))
+        res = search_lib.search(
+            bare, jnp.int32(tr), jnp.int32(du), jnp.int32(dl),
+            dem[0], jnp.int32(0), jnp.int32(tr), n_pe=n_pe,
+            use_kernel=False)
+        if rej:
+            n_rej += 1
+            assert not bool(res.found), (seed, tr, du, dl, int(dem[0]))
+
+
+def _saturated_timeline(n_pe=8, capacity=128, tile=8):
+    """64 distinct rows each leaving exactly one free unit.
+
+    Rotating the free unit keeps consecutive rows different (no merge
+    collapse), so every tile over ``[0, 256)`` has ``maxfree == 1`` —
+    the regime where the early-reject bound can actually prove
+    ``demand >= 2`` requests infeasible.
+    """
+    spec = ai.make_index_spec(tile, n_pe)
+    tl = tl_lib.empty(capacity, n_pe, ispec=spec)
+    for k in range(64):
+        ids = [i for i in range(n_pe) if i != k % n_pe]
+        m = tl_lib.ids_to_mask32(ids, tl.words)
+        tl, ovf = tl_lib.update(tl, 4 * k, 4 * k + 4, m, is_add=True)
+        assert not bool(ovf)
+    _assert_summaries_exact(tl)
+    return tl
+
+
+def test_summary_reject_fires_when_saturated():
+    n_pe = 8
+    tl = _saturated_timeline(n_pe=n_pe)
+    bare = tl_lib.Timeline(times=tl.times, occ=tl.occ)
+    deficit = jnp.zeros((1,), jnp.int32)
+    n_rej = n_total = 0
+    for tr in range(10, 180, 7):
+        for du, slack, dem in ((3, 2, 2), (8, 5, 4), (5, 0, 8),
+                               (4, 3, 1)):
+            dl = tr + du + slack
+            demand = jnp.asarray([dem], jnp.int32)
+            rej = bool(search_lib.summary_reject(
+                tl, jnp.int32(tr), jnp.int32(du), jnp.int32(dl),
+                demand, deficit))
+            res = search_lib.search(
+                bare, jnp.int32(tr), jnp.int32(du), jnp.int32(dl),
+                demand[0], jnp.int32(0), jnp.int32(tr), n_pe=n_pe,
+                use_kernel=False)
+            n_total += 1
+            if rej:
+                n_rej += 1
+                assert not bool(res.found), (tr, du, dl, dem)
+            if dem == 1:
+                # maxfree == 1 can never prove a 1-unit demand out
+                assert not rej
+    # every demand >= 2 window inside the saturated span must reject
+    assert n_rej >= n_total // 2, (n_rej, n_total)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_prune_candidates_is_conservative(seed):
+    n_pe = 8
+    tl = _busy_timeline(seed, n_pe=n_pe)
+    bare = tl_lib.Timeline(times=tl.times, occ=tl.occ)
+    rng = random.Random(200 + seed)
+    deficit = jnp.zeros((1,), jnp.int32)
+    for _ in range(25):
+        tr = rng.randint(0, 180)
+        du = rng.randint(1, 40)
+        dl = tr + du + rng.randint(0, 60)
+        starts = search_lib.candidate_starts(
+            bare, jnp.int32(tr), jnp.int32(du), jnp.int32(dl))
+        dem = jnp.asarray([rng.randint(1, n_pe)], jnp.int32)
+        pruned = search_lib.prune_candidates(
+            tl, starts, jnp.int32(du), dem, deficit)
+        rects = search_lib.availability_rectangles(
+            bare, starts, jnp.int32(du), jnp.int32(tr), n_pe)
+        s_np, p_np = np.asarray(starts), np.asarray(pruned)
+        nf = np.asarray(rects.n_free)
+        # candidate 0 is never pruned (the rejected-Decision anchor)
+        assert p_np[0] == s_np[0]
+        for i in range(len(s_np)):
+            if p_np[i] == T_INF and s_np[i] != T_INF:
+                assert nf[i] < int(dem[0]), (seed, i, s_np[i])
+
+
+def test_prune_fires_when_saturated():
+    # a 40-unit window fully contains at least one 32-unit tile span
+    # whose OR-union leaves zero common free units -> pruned
+    n_pe = 8
+    tl = _saturated_timeline(n_pe=n_pe)
+    du = jnp.int32(40)
+    starts = search_lib.candidate_starts(
+        tl_lib.Timeline(times=tl.times, occ=tl.occ),
+        jnp.int32(0), du, jnp.int32(220))
+    pruned = search_lib.prune_candidates(
+        tl, starts, du, jnp.asarray([1], jnp.int32),
+        jnp.zeros((1,), jnp.int32))
+    s_np, p_np = np.asarray(starts), np.asarray(pruned)
+    newly = ((p_np == T_INF) & (s_np != T_INF)).sum()
+    assert newly > 0, "pruning never fired on a saturated timeline"
+
+
+# ---------------------------------------------------------------------------
+# pruned-vs-unpruned decision parity
+# ---------------------------------------------------------------------------
+
+_DEC_FIELDS = ("accepted", "t_s", "t_e", "pe_mask", "n_free",
+               "t_begin", "t_end", "parked")
+
+
+def _assert_decisions_equal(d0, d1, ctx=""):
+    for f in _DEC_FIELDS:
+        a, b = np.asarray(getattr(d0, f)), np.asarray(getattr(d1, f))
+        np.testing.assert_array_equal(a, b, err_msg=f"{ctx}:{f}")
+
+
+def _stream(jobs, policy, mode, *, index_tile, use_kernel=False,
+            n_pe=16, rspec=None, capacity=128):
+    xd = rspec.R - 1 if rspec is not None else 0
+    st = tl_lib.init_state(capacity, n_pe, 256, park_capacity=8,
+                           rspec=rspec, index_tile=index_tile)
+    st, dec = batch_lib.admit_stream_grow(
+        st, batch_lib.requests_to_batch(jobs, extra_demand=xd),
+        policy, backfill=batch_lib.as_backfill_id(mode), n_pe=n_pe,
+        use_kernel=use_kernel)
+    if index_tile is not None:
+        _assert_summaries_exact(st.tl)
+    return dec
+
+
+@pytest.mark.parametrize("policy", [Policy.FF, Policy.PE_W,
+                                    Policy.PEDU_B])
+@pytest.mark.parametrize("mode", ["none", "conservative", "easy"])
+def test_stream_parity_policies_modes(policy, mode):
+    jobs = _random_jobs(90, 16, seed=hash((policy, mode)) % 1000)
+    d0 = _stream(jobs, policy, mode, index_tile=None)
+    d1 = _stream(jobs, policy, mode, index_tile=16)
+    _assert_decisions_equal(d0, d1, f"{policy}/{mode}")
+
+
+@pytest.mark.parametrize("tile", [8, 32, 128])
+def test_stream_parity_tile_sizes(tile):
+    jobs = _random_jobs(80, 16, seed=tile)
+    d0 = _stream(jobs, Policy.PE_W, "none", index_tile=None)
+    d1 = _stream(jobs, Policy.PE_W, "none", index_tile=tile)
+    _assert_decisions_equal(d0, d1, f"tile={tile}")
+
+
+def test_stream_parity_kernel_path():
+    jobs = _random_jobs(70, 16, seed=42)
+    d0 = _stream(jobs, Policy.PEDU_W, "none", index_tile=None,
+                 use_kernel=True)
+    d1 = _stream(jobs, Policy.PEDU_W, "none", index_tile=16,
+                 use_kernel=True)
+    _assert_decisions_equal(d0, d1, "kernel")
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_stream_parity_multires(use_kernel):
+    rs = ResourceSpec((16, 4, 6))
+    jobs = _random_jobs(60, 16, seed=9, rspec=rs)
+    d0 = _stream(jobs, Policy.PE_B, "none", index_tile=None, rspec=rs,
+                 use_kernel=use_kernel)
+    d1 = _stream(jobs, Policy.PE_B, "none", index_tile=8, rspec=rs,
+                 use_kernel=use_kernel)
+    _assert_decisions_equal(d0, d1, f"mr/kernel={use_kernel}")
+
+
+def test_stream_parity_saturated_rejections():
+    # the early-reject showcase: a dense fill phase then full-machine
+    # requests whose windows sit inside the busy horizon — most steps
+    # take the summary_reject branch, and every Decision field (the
+    # unconditional n_free/t_begin/t_end included) must still match
+    rng = random.Random(13)
+    jobs, t = [], 0
+    for _ in range(60):
+        t += rng.randint(0, 2)
+        du = rng.randint(20, 60)
+        jobs.append(ARRequest(t_a=t, t_r=t, t_du=du, t_dl=t + du + 5,
+                              n_pe=rng.randint(10, 16)))
+    for _ in range(60):
+        t += rng.randint(0, 2)
+        du = rng.randint(5, 15)
+        jobs.append(ARRequest(t_a=t, t_r=t, t_du=du, t_dl=t + du + 2,
+                              n_pe=16))
+    d0 = _stream(jobs, Policy.FF, "none", index_tile=None)
+    d1 = _stream(jobs, Policy.FF, "none", index_tile=16)
+    _assert_decisions_equal(d0, d1, "saturated")
+    acc = np.asarray(d0.accepted)
+    assert (~acc).sum() > 20       # genuinely rejection-heavy
+
+
+def test_engine_bucketing_parity():
+    # bucketed views slice the index when the bucket divides the tile
+    # grid and drop it otherwise — decisions match the unbucketed
+    # engine either way
+    jobs = _random_jobs(50, 16, seed=21)
+    base = DeviceEngine(16, capacity=256, bucketing=False)
+    for tile in (8, 64):
+        eng = DeviceEngine(16, capacity=256, bucketing=True,
+                           index_tile=tile)
+        for req in jobs[:25]:
+            a0 = base.find_allocation(req, Policy.PE_W) \
+                if tile == 8 else None
+            a1 = eng.find_allocation(req, Policy.PE_W)
+            if tile == 8:
+                assert (a0 is None) == (a1 is None)
+                if a0 is not None:
+                    assert (a0.t_s, a0.t_e) == (a1.t_s, a1.t_e)
+
+
+def test_index_none_treedef_is_legacy():
+    s0 = tl_lib.init_state(64, 8, 16)
+    s1 = tl_lib.init_state(64, 8, 16, index_tile=None)
+    assert jax.tree_util.tree_structure(s0) == \
+        jax.tree_util.tree_structure(s1)
+    on = tl_lib.init_state(64, 8, 16, index_tile=8)
+    assert len(jax.tree_util.tree_leaves(on)) == \
+        len(jax.tree_util.tree_leaves(s0)) + 3
+
+
+@pytest.mark.slow
+def test_slow_full_matrix_parity():
+    """The 1000-job x 7-policy x 3-backfill pruned-vs-unpruned gate."""
+    jobs = _random_jobs(1000, 16, seed=77, du_max=40, slack_max=60)
+    for policy in ALL_POLICIES:
+        for mode in ("none", "conservative", "easy"):
+            d0 = _stream(jobs, policy, mode, index_tile=None,
+                         capacity=256)
+            d1 = _stream(jobs, policy, mode, index_tile=32,
+                         capacity=256)
+            _assert_decisions_equal(d0, d1, f"{policy}/{mode}")
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis fuzz (runs where hypothesis is installed)
+# ---------------------------------------------------------------------------
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                           # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 10_000))
+    def test_hypothesis_incremental_consistency(seed):
+        _ops_sequence(seed, n_ops=25)
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.data())
+    def test_hypothesis_stream_parity(data):
+        seed = data.draw(st.integers(0, 10_000))
+        policy = data.draw(st.sampled_from(list(ALL_POLICIES)))
+        mode = data.draw(st.sampled_from(
+            ["none", "conservative", "easy"]))
+        tile = data.draw(st.sampled_from([8, 16, 64]))
+        jobs = _random_jobs(40, 16, seed=seed)
+        d0 = _stream(jobs, policy, mode, index_tile=None)
+        d1 = _stream(jobs, policy, mode, index_tile=tile)
+        _assert_decisions_equal(d0, d1)
